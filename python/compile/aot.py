@@ -1,0 +1,106 @@
+"""AOT compile path: lower every task-type model to XLA HLO *text*.
+
+This is the only place python touches the artifact boundary. `make
+artifacts` runs it once; afterwards the rust coordinator is self-contained
+(runtime/client.rs loads artifacts/*.hlo.txt via HloModuleProto::from_text_file).
+
+HLO TEXT, not serialized proto: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. Lowering goes through StableHLO and converts with
+return_tuple=True, so every executable returns a 1-tuple the rust side
+unwraps with to_tuple1(). (See /opt/xla-example/README.md.)
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Emits:  <out-dir>/<task>.hlo.txt  per task type
+        <out-dir>/manifest.json   interface metadata for the rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import TASK_TYPE_ORDER, build_all
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    big literals as `constant({...})`, which the rust-side HLO text parser
+    cannot reconstruct — the baked model weights would be lost.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax >= 0.7 emits source_end_line/… metadata attributes that the
+    # xla_extension 0.5.1 text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided a constant; artifact unusable")
+    return text
+
+
+def lower_model(model) -> str:
+    spec = jax.ShapeDtypeStruct(model.input_shape, jnp.float32)
+    return to_hlo_text(jax.jit(model.fn).lower(spec))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated task names (default: all)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    models = build_all()
+    wanted = args.only.split(",") if args.only else TASK_TYPE_ORDER
+
+    manifest = {"format": "hlo-text/return-tuple-1", "task_types": []}
+    for idx, name in enumerate(TASK_TYPE_ORDER):
+        m = models[name]
+        entry = {
+            "id": idx,
+            "name": m.name,
+            "description": m.description,
+            "file": f"{m.name}.hlo.txt",
+            "input_shape": list(m.input_shape),
+            "input_dtype": "f32",
+            "output_shape": list(m.output_shape),
+            "param_count": m.param_count,
+            "flops_estimate": m.flops,
+        }
+        if name in wanted:
+            text = lower_model(m)
+            path = os.path.join(args.out_dir, entry["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            entry["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+            entry["hlo_bytes"] = len(text)
+            print(f"[aot] {name}: {len(text)} chars -> {path}", file=sys.stderr)
+        manifest["task_types"].append(entry)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"[aot] manifest -> {mpath}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

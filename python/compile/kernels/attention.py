@@ -1,0 +1,70 @@
+"""Single-head scaled-dot-product attention Pallas kernel (L1).
+
+Used by the `text_rec` task-type model (SmartSight's text-recognition
+service, paper SI): a small sequence model whose hot loop is
+softmax(QK^T/sqrt(d))V.
+
+TPU mental model: for the sequence lengths the edge models use (<= 256)
+a whole (S, S) score tile fits comfortably in VMEM (256^2 f32 = 256 KiB),
+so the kernel processes row-blocks of queries against the full K/V —
+a FlashAttention-style streaming schedule is unnecessary at this size and
+would only add grid overhead. Row-blocks keep the VMEM footprint
+bounded: bq*d (Q) + S*d (K, V) + bq*S (scores) floats per step.
+
+interpret=True as everywhere in this repo: the AOT path targets the CPU
+PJRT plugin (no Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...].astype(jnp.float32)          # [bq, d]
+    k = k_ref[...].astype(jnp.float32)          # [S, d]
+    v = v_ref[...].astype(jnp.float32)          # [S, d]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)  # [bq, S]
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@jax.jit
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """softmax(q @ k.T / sqrt(d)) @ v.
+
+    q: [Sq, d], k: [Sk, d], v: [Sk, d] -> [Sq, d]. Query rows are tiled in
+    blocks of BLOCK_Q; K/V stay whole per block (see module docstring).
+    """
+    sq, d = q.shape
+    sk, dk = k.shape
+    if dk != d or v.shape != (sk, d):
+        raise ValueError(f"shape mismatch: q{q.shape} k{k.shape} v{v.shape}")
+    scale = 1.0 / (d ** 0.5)
+
+    bq = min(BLOCK_Q, sq)
+    rem = (-sq) % bq
+    qp = jnp.pad(q, ((0, rem), (0, 0))) if rem else q
+    grid = (qp.shape[0] // bq,)
+
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], d), q.dtype),
+        interpret=True,
+    )(qp, k, v)
+    return out[:sq]

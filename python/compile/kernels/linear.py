@@ -1,0 +1,111 @@
+"""Tiled linear (matmul + bias + activation) Pallas kernel — the L1 hot-spot.
+
+The four FELARE task-type models (python/compile/model.py) are
+matmul-dominated, so this is the kernel the whole stack leans on.
+
+TPU mental model (see DESIGN.md §8):
+  * grid = (M/bm, N/bn, K/bk); each (i, j) output tile is revisited across
+    the k axis, accumulating in the output ref which stays VMEM-resident
+    (output revisiting is the standard Pallas accumulation idiom).
+  * block shapes default to 128 so a full tile feeds the 128x128 MXU; VMEM
+    per step is bm*bk + bk*bn + bm*bn f32 = 192 KiB at 128^3, far below the
+    ~16 MiB VMEM budget, leaving room for double-buffered prefetch.
+  * bias-add and activation are fused into the last k step (epilogue), so
+    the tile never round-trips to HBM between matmul and activation.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the whole repo's AOT path (python -> HLO text -> rust
+PJRT CPU client) requires plain-HLO lowering. Real-TPU performance is
+estimated analytically in DESIGN.md, not measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: MXU-shaped tiles. Shapes smaller than a block are padded by
+# the wrapper below, so the kernel itself only ever sees full tiles.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, activation: str):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j], fused epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of input dtype (matches ref.linear_ref):
+    # the output ref is always f32 (see `linear` below), so partial sums
+    # never round through a narrow dtype between k steps.
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation == "tanh":
+            y = jnp.tanh(y)
+        o_ref[...] = y
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           activation: str = "none") -> jnp.ndarray:
+    """y = act(x @ w + b) via the tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]. Arbitrary shapes are padded up
+    to the block grid and the result is sliced back, so callers never have
+    to think about tile alignment.
+    """
+    if activation not in ("none", "relu", "tanh"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm, bn, bk = min(BLOCK_M, m), min(BLOCK_N, n), min(BLOCK_K, k)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU plain-HLO lowering; see module docstring
+    )(xp, wp, bp)
+    return out[:m, :n].astype(x.dtype)

@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer-1 correctness).
+
+Every Pallas kernel in this package has an entry here with the *same
+signature and semantics*; pytest/hypothesis sweeps assert allclose between
+the two (see python/tests/test_kernels.py). Keep these boring and obviously
+correct — they are the spec.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               activation: str = "none") -> jnp.ndarray:
+    """y = act(x @ w + b).
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]. activation in {none, relu, tanh}.
+    Accumulation is f32 regardless of input dtype (matches the kernel).
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc.astype(x.dtype)
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable row softmax over the last axis. x: [M, N]."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp((x - m).astype(jnp.float32))
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """softmax(q @ k.T / sqrt(d)) @ v. q: [Sq, d], k/v: [Sk, d]."""
+    d = q.shape[-1]
+    scores = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    p = softmax_ref(scores)
+    return jnp.matmul(p.astype(jnp.float32),
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Row LayerNorm over the last axis. x: [M, N], gamma/beta: [N]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    y = y * gamma.astype(jnp.float32)[None, :] + beta.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype)

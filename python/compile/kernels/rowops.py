@@ -1,0 +1,85 @@
+"""Row-wise Pallas kernels: softmax and LayerNorm (L1 epilogue ops).
+
+These are VPU-bound (elementwise + row reductions), so the tiling story is
+simpler than linear.py: the grid walks row blocks, each block holding the
+full feature axis in VMEM (all model feature dims are <= 1024 f32 = 4 KiB
+per row — trivially VMEM-resident).
+
+interpret=True for the same reason as linear.py: the AOT path targets the
+CPU PJRT plugin, which cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. Feature axis is never tiled (see module docstring).
+BLOCK_ROWS = 128
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) / jnp.sqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pad_rows(x: jnp.ndarray, bm: int) -> jnp.ndarray:
+    rem = (-x.shape[0]) % bm
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, rem), (0, 0)))
+
+
+@jax.jit
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Row softmax over the last axis via Pallas. x: [M, N]."""
+    m, n = x.shape
+    bm = min(BLOCK_ROWS, m)
+    xp = _pad_rows(x, bm)
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    """Row LayerNorm over the last axis via Pallas. x: [M, N]."""
+    m, n = x.shape
+    if gamma.shape != (n,) or beta.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} gamma{gamma.shape}")
+    bm = min(BLOCK_ROWS, m)
+    xp = _pad_rows(x, bm)
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:m]

@@ -1,0 +1,246 @@
+"""Layer-2: JAX inference models for the four FELARE ML task types.
+
+The paper's HEC system serves a fixed, pre-known set of ML applications
+("task types"): in SmartSight these are object detection, motion detection,
+face recognition, text/speech recognition; the AWS evaluation (paper SVI)
+uses face recognition (MTCNN+FaceNet+SVM) and speech recognition
+(DeepSpeech2). We build four *structurally analogous but
+orders-of-magnitude smaller* models — what matters to the scheduler is that
+each task type has a distinct execution-time row in the EET matrix and a
+realistic matmul-dominated compute profile, not the absolute model size
+(DESIGN.md SSubstitutions).
+
+Every model is a pure function  x -> (y,)  with:
+  * weights baked in as constants (drawn once from a seeded PRNG at trace
+    time), so the AOT'd HLO needs only the input tensor at runtime;
+  * all heavy compute routed through the L1 Pallas kernels
+    (kernels.linear / kernels.rowops), so the kernels lower into the same
+    HLO module the rust PJRT client executes;
+  * a 1-tuple return, matching the  return_tuple=True  lowering contract
+    the rust side unwraps with  to_tuple1().
+
+Relative cost ordering (FLOPs) is deliberately heterogeneous, mirroring the
+paper's observation that e.g. motion detection is long-running while object
+detection is short: motion_det > face_rec > speech_rec > obj_det.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention
+from .kernels.linear import linear
+from .kernels.rowops import layernorm, softmax
+
+# ---------------------------------------------------------------------------
+# Weight initialisation (build-time constants)
+# ---------------------------------------------------------------------------
+
+
+class _Params:
+    """Deterministic weight factory: every draw is a baked-in constant."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+        self.count = 0
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, k: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """He-scaled weight [k, n] and zero bias [n], as numpy constants."""
+        w = jax.random.normal(self._next(), (k, n), jnp.float32)
+        w = w * np.sqrt(2.0 / k).astype(np.float32)
+        self.count += k * n + n
+        return np.asarray(w), np.zeros((n,), np.float32)
+
+    def norm(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        self.count += 2 * n
+        return np.ones((n,), np.float32), np.zeros((n,), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Model definitions
+# ---------------------------------------------------------------------------
+
+
+def _build_face_rec():
+    """FaceNet-style embedding head: [1, 512] image features -> [1, 128]
+    L2-normalised embedding. Analogue of the paper's MTCNN+FaceNet+SVM
+    pipeline tail (the SVM margin is a final dense layer here)."""
+    p = _Params(seed=101)
+    w1, b1 = p.dense(512, 512)
+    g1, be1 = p.norm(512)
+    w2, b2 = p.dense(512, 256)
+    w3, b3 = p.dense(256, 128)
+
+    def fwd(x):
+        h = linear(x, w1, b1, "relu")
+        h = layernorm(h, g1, be1)
+        h = linear(h, w2, b2, "relu")
+        h = linear(h, w3, b3, "none")
+        emb = h / jnp.sqrt(jnp.sum(h * h, axis=-1, keepdims=True) + 1e-8)
+        return (emb,)
+
+    return fwd, (1, 512), (1, 128), p.count
+
+
+def _build_speech_rec():
+    """DeepSpeech-style recurrent decoder: [32, 128] spectrogram frames ->
+    [32, 32] per-frame character logits (softmax). A tanh-RNN scan stands in
+    for DeepSpeech2's GRU stack."""
+    p = _Params(seed=202)
+    w_in, b_in = p.dense(128, 256)
+    w_x, b_x = p.dense(256, 128)
+    w_h, _ = p.dense(128, 128)
+    g, be = p.norm(128)
+    w_out, b_out = p.dense(128, 32)
+
+    def fwd(x):
+        feats = linear(x, w_in, b_in, "relu")  # [32, 256]
+
+        def step(h, f_t):
+            # h: [1, 128]; f_t: [256]
+            xt = linear(f_t[None, :], w_x, b_x, "none")
+            h = jnp.tanh(xt + h @ w_h)
+            return h, h[0]
+
+        h0 = jnp.zeros((1, 128), jnp.float32)
+        _, hs = jax.lax.scan(step, h0, feats)  # [32, 128]
+        hs = layernorm(hs, g, be)
+        logits = linear(hs, w_out, b_out, "none")
+        return (softmax(logits),)
+
+    return fwd, (32, 128), (32, 32), p.count
+
+
+def _build_obj_det():
+    """Patch-mixer detector head: [64, 128] patch features -> [1, 128]
+    class probabilities. The shortest task type (paper: object detection
+    tasks are short)."""
+    p = _Params(seed=303)
+    w1, b1 = p.dense(128, 256)
+    g1, be1 = p.norm(256)
+    w2, b2 = p.dense(256, 256)
+    w3, b3 = p.dense(256, 128)
+
+    def fwd(x):
+        h = linear(x, w1, b1, "relu")       # [64, 256]
+        h = layernorm(h, g1, be1)
+        h = linear(h, w2, b2, "relu")       # [64, 256]
+        pooled = jnp.mean(h, axis=0, keepdims=True)  # [1, 256]
+        logits = linear(pooled, w3, b3, "none")      # [1, 128]
+        return (softmax(logits),)
+
+    return fwd, (64, 128), (1, 128), p.count
+
+
+def _build_motion_det():
+    """Frame-difference motion classifier: [8, 512] stacked frame deltas ->
+    [1, 64] motion-class probabilities. The heaviest task type (paper:
+    motion detection has long execution times)."""
+    p = _Params(seed=404)
+    w1, b1 = p.dense(512, 768)
+    g1, be1 = p.norm(768)
+    w2, b2 = p.dense(768, 768)
+    w3, b3 = p.dense(768, 512)
+    g2, be2 = p.norm(512)
+    w4, b4 = p.dense(512, 64)
+
+    def fwd(x):
+        h = linear(x, w1, b1, "relu")        # [8, 768]
+        h = layernorm(h, g1, be1)
+        h = linear(h, w2, b2, "relu")        # [8, 768]
+        h = linear(h, w3, b3, "tanh")        # [8, 512]
+        h = layernorm(h, g2, be2)
+        pooled = jnp.mean(h, axis=0, keepdims=True)  # [1, 512]
+        logits = linear(pooled, w4, b4, "none")      # [1, 64]
+        return (softmax(logits),)
+
+    return fwd, (8, 512), (1, 64), p.count
+
+
+def _build_text_rec():
+    """Attention-based OCR head: [48, 128] glyph-patch features ->
+    [48, 64] per-position character probabilities. SmartSight's fifth
+    service (text recognition); exercises the L1 attention kernel."""
+    p = _Params(seed=505)
+    w_q, b_q = p.dense(128, 128)
+    w_k, b_k = p.dense(128, 128)
+    w_v, b_v = p.dense(128, 128)
+    g1, be1 = p.norm(128)
+    w_ff, b_ff = p.dense(128, 256)
+    w_out, b_out = p.dense(256, 64)
+
+    def fwd(x):
+        q = linear(x, w_q, b_q, "none")
+        k = linear(x, w_k, b_k, "none")
+        v = linear(x, w_v, b_v, "none")
+        h = attention(q, k, v)                   # [48, 128]
+        h = layernorm(h + x, g1, be1)            # residual + norm
+        h = linear(h, w_ff, b_ff, "relu")        # [48, 256]
+        logits = linear(h, w_out, b_out, "none") # [48, 64]
+        return (softmax(logits),)
+
+    return fwd, (48, 128), (48, 64), p.count
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskModel:
+    """One ML task type: its jitted forward fn and interface metadata."""
+
+    name: str
+    description: str
+    fn: Callable
+    input_shape: Tuple[int, ...]
+    output_shape: Tuple[int, ...]
+    param_count: int
+
+    @property
+    def flops(self) -> int:
+        """Rough dense-FLOP estimate: 2 x params touched per inference,
+        scaled by batch rows of the input."""
+        return 2 * self.param_count * max(1, self.input_shape[0] // 8)
+
+
+_BUILDERS = {
+    "obj_det": ("object detection head (shortest)", _build_obj_det),
+    "speech_rec": ("speech recognition RNN decoder", _build_speech_rec),
+    "face_rec": ("face recognition embedding head", _build_face_rec),
+    "motion_det": ("motion detection classifier (heaviest)", _build_motion_det),
+    "text_rec": ("text recognition attention head", _build_text_rec),
+}
+
+# Stable ordering: index here == TaskTypeId on the rust side (T1..T5).
+TASK_TYPE_ORDER = ["obj_det", "speech_rec", "face_rec", "motion_det", "text_rec"]
+
+
+def build_all() -> Dict[str, TaskModel]:
+    """Construct every task-type model (weights baked, fn not yet traced)."""
+    out = {}
+    for name in TASK_TYPE_ORDER:
+        desc, builder = _BUILDERS[name]
+        fn, in_shape, out_shape, params = builder()
+        out[name] = TaskModel(
+            name=name, description=desc, fn=fn,
+            input_shape=in_shape, output_shape=out_shape, param_count=params,
+        )
+    return out
+
+
+def example_input(model: TaskModel, seed: int = 0) -> jnp.ndarray:
+    """Synthetic input with the model's shape (inputs never affect control
+    flow, so synthetic data preserves scheduler-relevant behaviour)."""
+    return jax.random.normal(jax.random.PRNGKey(seed), model.input_shape,
+                             jnp.float32)

@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE numeric signal for the whole stack — the AOT'd HLO the
+rust coordinator executes is exactly what these kernels lower to. Hypothesis
+sweeps shapes and dtypes; fixed seeds keep runs reproducible.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.linear import linear
+from compile.kernels.rowops import layernorm, softmax
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=300)
+ACTS = st.sampled_from(["none", "relu", "tanh"])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+class TestLinear:
+    @settings(max_examples=40, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=ACTS, seed=SEEDS)
+    def test_matches_ref_f32(self, m, k, n, act, seed):
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x, w, b = _rand(k0, (m, k)), _rand(k1, (k, n)), _rand(k2, (n,))
+        got = linear(x, w, b, act)
+        want = ref.linear_ref(x, w, b, act)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(1, 64), k=st.integers(1, 160), n=st.integers(1, 160),
+           seed=SEEDS)
+    def test_matches_ref_bf16(self, m, k, n, seed):
+        # bf16 inputs, f32 accumulation: kernel and ref must agree bitwise
+        # because both accumulate in f32 and round once on the way out.
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(k0, (m, k), jnp.bfloat16)
+        w = _rand(k1, (k, n), jnp.bfloat16)
+        b = _rand(k2, (n,), jnp.bfloat16)
+        got = linear(x, w, b, "none").astype(jnp.float32)
+        want = ref.linear_ref(x, w, b, "none").astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+    def test_exact_block_multiple(self):
+        # 128-aligned shapes take the unpadded fast path.
+        key = jax.random.PRNGKey(7)
+        x, w, b = _rand(key, (256, 128)), _rand(key, (128, 384)), _rand(key, (384,))
+        np.testing.assert_allclose(
+            linear(x, w, b, "relu"), ref.linear_ref(x, w, b, "relu"),
+            rtol=3e-5, atol=3e-5)
+
+    def test_single_element(self):
+        x = jnp.array([[2.0]]); w = jnp.array([[3.0]]); b = jnp.array([1.0])
+        assert float(linear(x, w, b)[0, 0]) == pytest.approx(7.0)
+
+    def test_relu_clamps(self):
+        x = jnp.array([[1.0, -1.0]])
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros(2)
+        out = np.asarray(linear(x, w, b, "relu"))
+        assert out[0, 0] == 1.0 and out[0, 1] == 0.0
+
+    def test_bias_broadcast(self):
+        x = jnp.zeros((5, 3)); w = jnp.zeros((3, 4)); b = jnp.arange(4.0)
+        out = np.asarray(linear(x, w, b))
+        for r in out:
+            np.testing.assert_array_equal(r, np.arange(4.0))
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            linear(jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros(5))
+
+    def test_unknown_activation_raises(self):
+        with pytest.raises(ValueError):
+            linear(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros(2), "gelu")
+
+    def test_jit_cache_stable(self):
+        # Two calls with identical shapes must agree (no retrace drift).
+        key = jax.random.PRNGKey(3)
+        x, w, b = _rand(key, (33, 65)), _rand(key, (65, 17)), _rand(key, (17,))
+        np.testing.assert_array_equal(linear(x, w, b), linear(x, w, b))
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+
+class TestSoftmax:
+    @settings(max_examples=30, deadline=None)
+    @given(m=DIMS, n=DIMS, seed=SEEDS)
+    def test_matches_ref(self, m, n, seed):
+        x = _rand(jax.random.PRNGKey(seed), (m, n), scale=4.0)
+        np.testing.assert_allclose(softmax(x), ref.softmax_ref(x),
+                                   rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(1, 64), n=st.integers(1, 64), seed=SEEDS)
+    def test_rows_sum_to_one(self, m, n, seed):
+        x = _rand(jax.random.PRNGKey(seed), (m, n), scale=10.0)
+        sums = np.asarray(jnp.sum(softmax(x), axis=-1))
+        np.testing.assert_allclose(sums, np.ones(m), rtol=1e-5)
+
+    def test_large_magnitudes_stable(self):
+        x = jnp.array([[1e4, 1e4 + 1.0], [-1e4, -1e4 - 1.0]])
+        out = np.asarray(softmax(x))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out.sum(axis=-1), [1.0, 1.0], rtol=1e-5)
+
+    def test_uniform_input(self):
+        out = np.asarray(softmax(jnp.zeros((3, 8))))
+        np.testing.assert_allclose(out, np.full((3, 8), 1 / 8), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(sq=st.integers(1, 200), sk=st.integers(1, 200),
+           d=st.integers(1, 96), seed=SEEDS)
+    def test_matches_ref(self, sq, sk, d, seed):
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = _rand(k0, (sq, d)), _rand(k1, (sk, d)), _rand(k2, (sk, d))
+        got = attention(q, k, v)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(2, 64), d=st.integers(2, 64), seed=SEEDS)
+    def test_output_is_convex_combination(self, s, d, seed):
+        # each output row lies inside the convex hull of v's rows:
+        # min(v) <= out <= max(v) columnwise
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = _rand(k0, (s, d)), _rand(k1, (s, d)), _rand(k2, (s, d))
+        out = np.asarray(attention(q, k, v))
+        vmin = np.asarray(v).min(axis=0) - 1e-4
+        vmax = np.asarray(v).max(axis=0) + 1e-4
+        assert np.all(out >= vmin[None, :]) and np.all(out <= vmax[None, :])
+
+    def test_uniform_scores_average_values(self):
+        # q ⟂ k (zeros) ⇒ uniform attention ⇒ output = mean of v rows
+        q = jnp.zeros((3, 8))
+        k = jnp.zeros((5, 8))
+        v = jnp.arange(40, dtype=jnp.float32).reshape(5, 8)
+        out = np.asarray(attention(q, k, v))
+        want = np.asarray(v).mean(axis=0)
+        for row in out:
+            np.testing.assert_allclose(row, want, rtol=1e-5)
+
+    def test_single_key_returns_its_value(self):
+        q = jnp.ones((4, 16))
+        k = jnp.ones((1, 16))
+        v = jnp.full((1, 16), 7.0)
+        out = np.asarray(attention(q, k, v))
+        np.testing.assert_allclose(out, np.full((4, 16), 7.0), rtol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            attention(jnp.zeros((2, 4)), jnp.zeros((3, 5)), jnp.zeros((3, 5)))
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+class TestLayerNorm:
+    @settings(max_examples=30, deadline=None)
+    @given(m=DIMS, n=st.integers(2, 300), seed=SEEDS)
+    def test_matches_ref(self, m, n, seed):
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(k0, (m, n), scale=3.0)
+        g, b = _rand(k1, (n,)), _rand(k2, (n,))
+        np.testing.assert_allclose(layernorm(x, g, b),
+                                   ref.layernorm_ref(x, g, b),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(1, 32), n=st.integers(2, 128), seed=SEEDS)
+    def test_unit_gamma_zero_beta_standardizes(self, m, n, seed):
+        x = _rand(jax.random.PRNGKey(seed), (m, n), scale=5.0)
+        y = np.asarray(layernorm(x, jnp.ones(n), jnp.zeros(n)))
+        np.testing.assert_allclose(y.mean(axis=-1), np.zeros(m), atol=1e-4)
+        np.testing.assert_allclose(y.std(axis=-1), np.ones(m), atol=1e-2)
+
+    def test_constant_rows_finite(self):
+        # zero variance exercises the eps guard
+        y = np.asarray(layernorm(jnp.full((2, 4), 3.0), jnp.ones(4), jnp.zeros(4)))
+        assert np.all(np.isfinite(y))
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            layernorm(jnp.zeros((2, 4)), jnp.ones(3), jnp.zeros(3))

@@ -1,0 +1,88 @@
+"""L2 model contract tests: shapes, determinism, numeric sanity.
+
+The rust runtime trusts manifest.json's shapes; these tests pin that
+contract on the python side before artifacts are ever built.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import TASK_TYPE_ORDER, build_all, example_input
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_all()
+
+
+def test_registry_order_and_names(models):
+    assert TASK_TYPE_ORDER == [
+        "obj_det", "speech_rec", "face_rec", "motion_det", "text_rec",
+    ]
+    assert set(models) == set(TASK_TYPE_ORDER)
+
+
+@pytest.mark.parametrize("name", TASK_TYPE_ORDER)
+def test_output_shape_matches_metadata(models, name):
+    m = models[name]
+    (y,) = m.fn(example_input(m))
+    assert tuple(y.shape) == m.output_shape
+    assert y.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", TASK_TYPE_ORDER)
+def test_outputs_finite(models, name):
+    m = models[name]
+    for seed in (0, 1, 2):
+        (y,) = m.fn(example_input(m, seed))
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("name", TASK_TYPE_ORDER)
+def test_deterministic_rebuild(name):
+    """Weights are seeded constants: two independent builds agree exactly."""
+    a, b = build_all()[name], build_all()[name]
+    x = example_input(a)
+    (ya,), (yb,) = a.fn(x), b.fn(x)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+
+
+@pytest.mark.parametrize("name", ["obj_det", "motion_det", "text_rec"])
+def test_probability_heads_sum_to_one(models, name):
+    m = models[name]
+    (y,) = m.fn(example_input(m))
+    np.testing.assert_allclose(np.asarray(jnp.sum(y, axis=-1)),
+                               np.ones(y.shape[0]), rtol=1e-5)
+
+
+def test_speech_rec_rows_are_distributions(models):
+    m = models["speech_rec"]
+    (y,) = m.fn(example_input(m))
+    np.testing.assert_allclose(np.asarray(jnp.sum(y, axis=-1)),
+                               np.ones(32), rtol=1e-5)
+
+
+def test_face_rec_embedding_unit_norm(models):
+    m = models["face_rec"]
+    (y,) = m.fn(example_input(m))
+    assert float(jnp.linalg.norm(y)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_flops_ordering_is_heterogeneous(models):
+    """The EET heterogeneity story rests on distinct per-type costs."""
+    flops = {n: models[n].flops for n in TASK_TYPE_ORDER}
+    assert flops["motion_det"] > flops["face_rec"]
+    assert len(set(flops.values())) == len(flops)
+
+
+def test_inputs_do_not_change_shapes(models):
+    """Different inputs: same output shape (no data-dependent control flow)."""
+    m = models["obj_det"]
+    (a,) = m.fn(example_input(m, 0))
+    (b,) = m.fn(example_input(m, 99))
+    assert a.shape == b.shape
+    assert not np.array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,50 @@
+//! Figure-regeneration benches: one entry per paper table/figure, timing a
+//! miniature (trace-reduced) regeneration of each experiment end to end.
+//! These bound how long `felare exp all` costs and catch regressions in
+//! the sweep machinery. Absolute paper-scale runs use 30×2000; here each
+//! point uses 2×300 so a full suite pass stays in seconds.
+
+use std::time::Duration;
+
+use felare::exp::sweep::{run_sweep, SweepSpec};
+use felare::model::Scenario;
+use felare::sched::registry::ALL_HEURISTICS;
+use felare::util::bench::{Bencher, Suite};
+
+fn mini(heuristics: &[&str], rates: &[f64]) -> SweepSpec {
+    let mut spec = SweepSpec::paper_default(heuristics, rates);
+    spec.traces = 2;
+    spec.tasks = 300;
+    spec
+}
+
+fn main() {
+    let mut suite = Suite::new("figures");
+    let one = |name: &str, spec: SweepSpec| {
+        Bencher::new(name)
+            .samples(5)
+            .warmup(Duration::from_millis(100))
+            .measure_time(Duration::from_millis(1500))
+            .run(move || run_sweep(&spec).len())
+    };
+
+    // Table I is covered in bench_workload (cvb/generate-4x4).
+    suite.add(one("fig3/pareto-mini", mini(&ALL_HEURISTICS, &[1.0, 5.0, 100.0])));
+    suite.add(one("fig4/wasted-mini", mini(&ALL_HEURISTICS, &[3.0, 4.0, 5.0])));
+    suite.add(one("fig6/split-mini", mini(&["mm", "elare"], &[3.0, 5.0])));
+    suite.add(one("fig7/fairness-mini", mini(&ALL_HEURISTICS, &[5.0])));
+    suite.add(one("headline-mini", mini(&["mm", "elare", "felare"], &[3.0, 4.0])));
+
+    // fig5/fig8 shape without PJRT profiling (placeholder EET): exercises
+    // the AWS scenario path deterministically even without artifacts.
+    let aws = Scenario::aws_two_app();
+    let mut spec = SweepSpec::paper_default(&["mm", "elare"], &[]);
+    spec.scenario = aws.clone();
+    let cap = aws.n_machines() as f64 / aws.eet.grand_mean();
+    spec.rates = vec![0.8 * cap, 1.2 * cap];
+    spec.traces = 2;
+    spec.tasks = 300;
+    suite.add(one("fig5+8/aws-mini", spec));
+
+    suite.write_json().expect("write bench json");
+}

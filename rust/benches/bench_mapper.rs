@@ -1,0 +1,68 @@
+//! Mapper hot-path bench: one mapping event per heuristic across arriving
+//! queue sizes — the paper's "lightweight, no significant overhead" claim,
+//! measured (paper §I; `felare exp overhead` gives the in-situ numbers).
+
+use felare::model::eet::paper_table1;
+use felare::model::machine::paper_machines;
+use felare::model::task::{Task, TaskTypeId};
+use felare::sched::fairness::FairnessSnapshot;
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::{MachineSnapshot, SchedView};
+use felare::util::bench::{Bencher, Suite};
+
+fn tasks(n: usize) -> Vec<Task> {
+    (0..n)
+        .map(|i| Task {
+            id: i as u64,
+            type_id: TaskTypeId(i % 4),
+            arrival: 0.0,
+            deadline: 1.0 + (i % 7) as f64,
+            size_factor: 1.0,
+        })
+        .collect()
+}
+
+fn snapshots(slots: usize) -> Vec<MachineSnapshot> {
+    paper_machines()
+        .into_iter()
+        .map(|spec| MachineSnapshot {
+            dyn_power: spec.dyn_power,
+            avail: 0.0,
+            free_slots: slots,
+            queued: vec![],
+        })
+        .collect()
+}
+
+fn main() {
+    let eet = paper_table1();
+    let mut suite = Suite::new("mapper");
+    let scenario = felare::model::Scenario::paper_synthetic();
+    let rates = FairnessSnapshot {
+        rates: vec![Some(0.2), Some(0.6), Some(0.15), Some(0.45)],
+        fairness_factor: 1.0,
+    };
+
+    for &n in &[1usize, 8, 32, 128] {
+        let ts = tasks(n);
+        for name in ALL_HEURISTICS {
+            let mut h = heuristic_by_name(name, &scenario).unwrap();
+            let needs_rates = h.wants_fairness();
+            let r = Bencher::new(&format!("map/{name}/queue={n}"))
+                .throughput_items(n as u64)
+                .run(|| {
+                    let mut view = SchedView::new(
+                        0.0,
+                        &eet,
+                        snapshots(2),
+                        &ts,
+                        needs_rates.then_some(&rates),
+                    );
+                    h.map(&mut view);
+                    view.actions().len()
+                });
+            suite.add(r);
+        }
+    }
+    suite.write_json().expect("write bench json");
+}

@@ -1,0 +1,36 @@
+//! PJRT runtime bench: per-model inference latency through the compiled
+//! artifacts — the real hot path the serving coordinator pays per request.
+//! Skips (with a note) when artifacts aren't built.
+
+use std::time::Duration;
+
+use felare::runtime::{default_artifact_dir, Executor, Runtime};
+use felare::util::bench::{Bencher, Suite};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_runtime: artifacts/ not built — skipping (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("load artifacts");
+    let mut suite = Suite::new("runtime");
+
+    for ty in 0..rt.n_task_types() {
+        let name = rt.model(ty).unwrap().meta.name.clone();
+        let flops = rt.model(ty).unwrap().meta.flops_estimate;
+        let mut exec = Executor::new(&rt, 4, 42);
+        let r = Bencher::new(&format!("pjrt/{name}"))
+            .samples(12)
+            .warmup(Duration::from_millis(300))
+            .measure_time(Duration::from_millis(1200))
+            .run(|| exec.run(ty).unwrap().wall);
+        eprintln!(
+            "  {name}: ~{:.1} MFLOP/inference → {:.2} GFLOP/s apparent",
+            flops as f64 / 1e6,
+            flops as f64 / r.mean_ns
+        );
+        suite.add(r);
+    }
+    suite.write_json().expect("write bench json");
+}

@@ -1,0 +1,30 @@
+//! Simulator end-to-end bench: full traces through the DES engine per
+//! heuristic — the substrate every figure regeneration stands on. Reports
+//! tasks/second of simulated throughput.
+
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sim::Simulation;
+use felare::util::bench::{Bencher, Suite};
+use felare::util::rng::Pcg64;
+
+fn main() {
+    let scenario = Scenario::paper_synthetic();
+    let mut suite = Suite::new("sim");
+
+    for &(rate, n) in &[(5.0, 2000usize), (10.0, 2000), (100.0, 2000)] {
+        let params = WorkloadParams { n_tasks: n, arrival_rate: rate, ..Default::default() };
+        let trace = Trace::generate(&params, &scenario.eet, &mut Pcg64::new(1));
+        for name in ALL_HEURISTICS {
+            let r = Bencher::new(&format!("sim/{name}/λ={rate}/n={n}"))
+                .samples(10)
+                .throughput_items(n as u64)
+                .run(|| {
+                    let h = heuristic_by_name(name, &scenario).unwrap();
+                    Simulation::new(&scenario, h).run(&trace).total_completed()
+                });
+            suite.add(r);
+        }
+    }
+    suite.write_json().expect("write bench json");
+}

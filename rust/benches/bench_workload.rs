@@ -1,0 +1,65 @@
+//! Workload-substrate bench (Table I path): CVB EET synthesis, trace
+//! generation, RNG distribution sampling and JSON round-trips.
+
+use felare::model::cvb::{generate, CvbParams};
+use felare::model::eet::paper_table1;
+use felare::model::{Trace, WorkloadParams};
+use felare::util::bench::{Bencher, Suite};
+use felare::util::json::Json;
+use felare::util::rng::{Gamma, Pcg64, Poisson};
+
+fn main() {
+    let mut suite = Suite::new("workload");
+
+    let mut rng = Pcg64::new(3);
+    suite.add(
+        Bencher::new("rng/pcg64/u64")
+            .throughput_items(1)
+            .run(|| rng.next_u64()),
+    );
+
+    let mut g = Gamma::from_mean_cv(2.3, 0.6);
+    let mut rng2 = Pcg64::new(4);
+    suite.add(
+        Bencher::new("rng/gamma/sample")
+            .throughput_items(1)
+            .run(|| g.sample(&mut rng2)),
+    );
+
+    let p = Poisson::new(50.0);
+    let mut rng3 = Pcg64::new(5);
+    suite.add(
+        Bencher::new("rng/poisson50/sample")
+            .throughput_items(1)
+            .run(|| p.sample(&mut rng3)),
+    );
+
+    let params = CvbParams::default();
+    let mut rng4 = Pcg64::new(6);
+    suite.add(
+        Bencher::new("cvb/generate-4x4 (Table I)")
+            .throughput_items(16)
+            .run(|| generate(&params, &mut rng4)),
+    );
+
+    let eet = paper_table1();
+    let wl = WorkloadParams { n_tasks: 2000, arrival_rate: 5.0, ..Default::default() };
+    let mut rng5 = Pcg64::new(7);
+    suite.add(
+        Bencher::new("trace/generate-2000")
+            .samples(15)
+            .throughput_items(2000)
+            .run(|| Trace::generate(&wl, &eet, &mut rng5).tasks.len()),
+    );
+
+    let trace = Trace::generate(&wl, &eet, &mut Pcg64::new(8));
+    let json_text = trace.to_json().to_string_compact();
+    suite.add(
+        Bencher::new("trace/json-parse-2000")
+            .samples(15)
+            .throughput_items(2000)
+            .run(|| Json::parse(&json_text).unwrap()),
+    );
+
+    suite.write_json().expect("write bench json");
+}

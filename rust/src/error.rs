@@ -1,0 +1,32 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("experiment error: {0}")]
+    Experiment(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Config(s)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

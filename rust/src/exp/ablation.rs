@@ -1,0 +1,157 @@
+//! Experiment AB — ablations over the design choices DESIGN.md calls out,
+//! plus the §VIII future-work adaptive switcher:
+//!
+//!  * fairness factor f (Eq. 3 aggressiveness): jain vs collective rate;
+//!  * FELARE victim dropping on/off (`felare-novd`);
+//!  * local-queue slots (the paper leaves the size unspecified);
+//!  * completion-rate window: cumulative vs sliding;
+//!  * adaptive (ELARE↔FELARE switching) vs its endpoints across rates.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::sweep::{run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+use crate::model::scenario::RateWindow;
+use crate::model::Scenario;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    fairness_factor_sweep(opts)?;
+    victim_dropping_ablation(opts)?;
+    queue_slots_sweep(opts)?;
+    rate_window_ablation(opts)?;
+    adaptive_vs_endpoints(opts)?;
+    Ok(())
+}
+
+fn sweep_one(scenario: Scenario, heuristics: &[&str], rates: &[f64], opts: &ExpOpts) -> Vec<crate::exp::sweep::SweepPoint> {
+    let spec = SweepSpec {
+        scenario,
+        heuristics: heuristics.iter().map(|s| s.to_string()).collect(),
+        rates: rates.to_vec(),
+        traces: opts.traces().min(12), // ablations are many cells; cap traces
+        tasks: opts.tasks(),
+        seed: opts.seed,
+    };
+    run_sweep(&spec)
+}
+
+/// Eq. 3: larger f ⇒ less aggressive fairness ⇒ FELARE → ELARE.
+fn fairness_factor_sweep(opts: &ExpOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Ablation — fairness factor f at λ=5 (f→∞ disables fairness, §V)",
+        &["f", "collective %", "jain", "victim drops/1k", "σ %"],
+    );
+    for &f in &[0.0, 0.25, 0.5, 1.0, 1.5, 2.5, 10.0] {
+        let mut sc = Scenario::paper_synthetic();
+        sc.fairness_factor = f;
+        let points = sweep_one(sc, &["felare"], &[5.0], opts);
+        let p = &points[0];
+        let (_, sigma) = crate::util::stats::mean_std(&p.per_type_rates);
+        t.row(vec![
+            fmt_f(f, 2),
+            fmt_f(100.0 * p.completion_rate, 1),
+            fmt_f(p.jain, 3),
+            fmt_f(p.victim_drops_per_k, 1),
+            fmt_f(100.0 * sigma, 1),
+        ]);
+    }
+    t.emit("ablation_fairness_factor")?;
+    Ok(())
+}
+
+fn victim_dropping_ablation(opts: &ExpOpts) -> Result<()> {
+    let points = sweep_one(
+        Scenario::paper_synthetic(),
+        &["elare", "felare-novd", "felare"],
+        &[3.0, 5.0, 8.0],
+        opts,
+    );
+    let mut t = Table::new(
+        "Ablation — FELARE victim dropping (priority-only vs full §V)",
+        &["heuristic", "λ", "collective %", "jain", "victim drops/1k"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.heuristic.clone(),
+            fmt_f(p.arrival_rate, 1),
+            fmt_f(100.0 * p.completion_rate, 1),
+            fmt_f(p.jain, 3),
+            fmt_f(p.victim_drops_per_k, 1),
+        ]);
+    }
+    t.emit("ablation_victim_dropping")?;
+    Ok(())
+}
+
+/// The paper says local queues are "limited" but never sizes them.
+fn queue_slots_sweep(opts: &ExpOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Ablation — local-queue slots (paper: 'limited', unspecified) at λ=5",
+        &["slots", "heuristic", "collective %", "wasted %", "jain"],
+    );
+    for &slots in &[1usize, 2, 4, 8] {
+        let mut sc = Scenario::paper_synthetic();
+        sc.queue_slots = slots;
+        for p in sweep_one(sc, &["mm", "elare", "felare"], &[5.0], opts) {
+            t.row(vec![
+                format!("{slots}"),
+                p.heuristic.clone(),
+                fmt_f(100.0 * p.completion_rate, 1),
+                fmt_f(p.wasted_energy_pct, 2),
+                fmt_f(p.jain, 3),
+            ]);
+        }
+    }
+    t.emit("ablation_queue_slots")?;
+    Ok(())
+}
+
+fn rate_window_ablation(opts: &ExpOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Ablation — completion-rate window (cumulative vs sliding) at λ=5",
+        &["window", "collective %", "jain"],
+    );
+    for (label, window) in [
+        ("cumulative", RateWindow::Cumulative),
+        ("sliding:50", RateWindow::Sliding(50)),
+        ("sliding:200", RateWindow::Sliding(200)),
+        ("sliding:1000", RateWindow::Sliding(1000)),
+    ] {
+        let mut sc = Scenario::paper_synthetic();
+        sc.rate_window = window;
+        let points = sweep_one(sc, &["felare"], &[5.0], opts);
+        let p = &points[0];
+        t.row(vec![
+            label.to_string(),
+            fmt_f(100.0 * p.completion_rate, 1),
+            fmt_f(p.jain, 3),
+        ]);
+    }
+    t.emit("ablation_rate_window")?;
+    Ok(())
+}
+
+/// §VIII future work: heterogeneity/pressure-driven heuristic switching.
+fn adaptive_vs_endpoints(opts: &ExpOpts) -> Result<()> {
+    let points = sweep_one(
+        Scenario::paper_synthetic(),
+        &["elare", "felare", "adaptive"],
+        &[1.0, 3.0, 5.0, 8.0],
+        opts,
+    );
+    let mut t = Table::new(
+        "Extension — adaptive ELARE↔FELARE switching (paper §VIII)",
+        &["heuristic", "λ", "collective %", "jain", "wasted %"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.heuristic.clone(),
+            fmt_f(p.arrival_rate, 1),
+            fmt_f(100.0 * p.completion_rate, 1),
+            fmt_f(p.jain, 3),
+            fmt_f(p.wasted_energy_pct, 2),
+        ]);
+    }
+    t.emit("extension_adaptive")?;
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Experiment F3 — Fig. 3: the energy/latency trade-off.
+//!
+//! Every heuristic traces a curve over arrival rates in the
+//! (energy consumed, deadline-miss rate) plane; points not dominated by
+//! any other belong to the Pareto front. The paper's claim: ELARE and
+//! FELARE are non-dominated at low-to-moderate rates, and everything
+//! converges when the system oversubscribes.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::sweep::{pareto_front, run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+use crate::sched::registry::ALL_HEURISTICS;
+
+pub const RATES: [f64; 9] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 100.0];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut spec = SweepSpec::paper_default(&ALL_HEURISTICS, &RATES);
+    spec.traces = opts.traces();
+    spec.tasks = opts.tasks();
+    spec.seed = opts.seed;
+    let points = run_sweep(&spec);
+
+    // Pareto front over all (energy, miss) points
+    let coords: Vec<(f64, f64)> = points
+        .iter()
+        .map(|p| (p.total_energy, p.miss_rate))
+        .collect();
+    let front: std::collections::HashSet<usize> =
+        pareto_front(&coords).into_iter().collect();
+
+    let mut t = Table::new(
+        "Fig. 3 — energy vs deadline-miss rate (● = Pareto front)",
+        &["heuristic", "λ", "energy", "miss_rate", "front"],
+    );
+    for (i, p) in points.iter().enumerate() {
+        t.row(vec![
+            p.heuristic.clone(),
+            fmt_f(p.arrival_rate, 1),
+            fmt_f(p.total_energy, 1),
+            fmt_f(p.miss_rate, 3),
+            if front.contains(&i) { "●".into() } else { "".into() },
+        ]);
+    }
+    t.emit("fig3_pareto")?;
+
+    // Shape check echoed for EXPERIMENTS.md: who owns the front at λ ≤ 6?
+    let low_front: Vec<&str> = points
+        .iter()
+        .enumerate()
+        .filter(|(i, p)| front.contains(i) && p.arrival_rate <= 6.0)
+        .map(|(_, p)| p.heuristic.as_str())
+        .collect();
+    let ours = low_front
+        .iter()
+        .filter(|h| **h == "elare" || **h == "felare")
+        .count();
+    println!(
+        "Pareto front at λ≤6: {:?}  (ELARE/FELARE own {}/{})",
+        low_front,
+        ours,
+        low_front.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Experiment F6 — Fig. 6: the unsuccessful-task split, MM vs ELARE.
+//!
+//! Unsuccessful = cancelled (never assigned — dropped from the arriving
+//! queue) + missed (assigned but deadline violated). The paper's shape:
+//! ELARE's unsuccessful tasks are almost all *cancelled* (proactive, no
+//! energy spent) while MM's are mostly *missed* (reactive, energy burnt),
+//! with ELARE ~8.9% fewer unsuccessful at λ=3.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::sweep::{run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+
+pub const RATES: [f64; 8] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut spec = SweepSpec::paper_default(&["mm", "elare"], &RATES);
+    spec.traces = opts.traces();
+    spec.tasks = opts.tasks();
+    spec.seed = opts.seed;
+    let points = run_sweep(&spec);
+
+    let mut t = Table::new(
+        "Fig. 6 — unsuccessful tasks (% of arrivals), split cancelled/missed",
+        &["λ", "MM cancelled", "MM missed", "MM total", "EL cancelled", "EL missed", "EL total"],
+    );
+    for &rate in &RATES {
+        let p = |h: &str| {
+            points
+                .iter()
+                .find(|p| p.heuristic == h && p.arrival_rate == rate)
+                .unwrap()
+        };
+        let (mm, el) = (p("mm"), p("elare"));
+        t.row(vec![
+            fmt_f(rate, 1),
+            fmt_f(100.0 * mm.cancelled_frac, 1),
+            fmt_f(100.0 * mm.missed_frac, 1),
+            fmt_f(100.0 * (mm.cancelled_frac + mm.missed_frac), 1),
+            fmt_f(100.0 * el.cancelled_frac, 1),
+            fmt_f(100.0 * el.missed_frac, 1),
+            fmt_f(100.0 * (el.cancelled_frac + el.missed_frac), 1),
+        ]);
+    }
+    t.emit("fig6_unsuccessful_split")?;
+
+    let at3 = |h: &str| {
+        let p = points
+            .iter()
+            .find(|p| p.heuristic == h && p.arrival_rate == 3.0)
+            .unwrap();
+        100.0 * (p.cancelled_frac + p.missed_frac)
+    };
+    println!(
+        "unsuccessful at λ=3: MM {:.1}% vs ELARE {:.1}% → ELARE reduces by {:.1} pp (paper: 8.9%)",
+        at3("mm"),
+        at3("elare"),
+        at3("mm") - at3("elare")
+    );
+    Ok(())
+}

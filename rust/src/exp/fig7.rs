@@ -1,0 +1,60 @@
+//! Experiment F7 — Fig. 7: fairness across task types at λ=5.
+//!
+//! Per-type completion rates (left axis bars) and the collective rate
+//! (right-axis red dots) for all five heuristics, 30 traces × 2000 tasks.
+//! Paper shape: ELARE is biased toward T3, MM toward T1/T3; FELARE evens
+//! the bars at negligible collective cost.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::sweep::{run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+use crate::sched::registry::ALL_HEURISTICS;
+use crate::util::stats::mean_std;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    run_at_rate(opts, 5.0, "fig7_fairness_synthetic", "Fig. 7 — fairness at λ=5 (synthetic)")
+}
+
+pub(crate) fn run_at_rate(opts: &ExpOpts, rate: f64, stem: &str, title: &str) -> Result<()> {
+    let mut spec = SweepSpec::paper_default(&ALL_HEURISTICS, &[rate]);
+    spec.traces = opts.traces();
+    spec.tasks = opts.tasks();
+    spec.seed = opts.seed;
+    run_spec(spec, stem, title)
+}
+
+pub(crate) fn run_spec(spec: SweepSpec, stem: &str, title: &str) -> Result<()> {
+    let n_types = spec.scenario.n_types();
+    let points = run_sweep(&spec);
+    let mut cols: Vec<String> = vec!["heuristic".into()];
+    cols.extend((1..=n_types).map(|i| format!("cr{i} %")));
+    cols.push("collective %".into());
+    cols.push("σ".into());
+    cols.push("jain".into());
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &cols_ref);
+    for p in &points {
+        let (_, sigma) = mean_std(&p.per_type_rates);
+        let mut cells = vec![p.heuristic.clone()];
+        cells.extend(p.per_type_rates.iter().map(|r| fmt_f(100.0 * r, 1)));
+        cells.push(format!(
+            "{}±{}",
+            fmt_f(100.0 * p.completion_rate, 1),
+            fmt_f(100.0 * p.completion_ci95, 1)
+        ));
+        cells.push(fmt_f(100.0 * sigma, 1));
+        cells.push(fmt_f(p.jain, 3));
+        t.row(cells);
+    }
+    t.emit(stem)?;
+
+    let jain = |h: &str| points.iter().find(|p| p.heuristic == h).unwrap().jain;
+    println!(
+        "fairness (jain): felare {:.3} vs elare {:.3} vs mm {:.3}",
+        jain("felare"),
+        jain("elare"),
+        jain("mm")
+    );
+    Ok(())
+}

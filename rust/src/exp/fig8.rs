@@ -1,0 +1,36 @@
+//! Experiment F8 — Fig. 8: fairness on the AWS two-app scenario at λ=2
+//! (face recognition vs speech recognition), all five heuristics, with the
+//! PJRT-profiled EET.
+
+use crate::error::Result;
+use crate::exp::fig5::rate_for_load;
+use crate::exp::sweep::SweepSpec;
+use crate::exp::{aws_scenario_profiled, fig7, ExpOpts};
+use crate::sched::registry::ALL_HEURISTICS;
+
+/// The paper's λ=2 on real FaceNet/DeepSpeech2 is a moderate-contention
+/// point; with our smaller profiled models we pin the same *offered load*
+/// (≈1.2× capacity — where fairness differences are visible) instead of
+/// the absolute rate (see fig5.rs on rate normalisation).
+pub const LOAD: f64 = 1.2;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let (scenario, profiled) = aws_scenario_profiled()?;
+    if !profiled {
+        crate::log_warn!("fig8 running on placeholder EET");
+    }
+    let rate = rate_for_load(&scenario, LOAD);
+    let spec = SweepSpec {
+        scenario,
+        heuristics: ALL_HEURISTICS.iter().map(|s| s.to_string()).collect(),
+        rates: vec![rate],
+        traces: opts.traces(),
+        tasks: opts.tasks(),
+        seed: opts.seed,
+    };
+    fig7::run_spec(
+        spec,
+        "fig8_fairness_aws",
+        &format!("Fig. 8 — fairness on AWS scenario at load {LOAD} (λ={rate:.1}/s)"),
+    )
+}

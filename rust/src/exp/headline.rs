@@ -1,0 +1,62 @@
+//! Experiment H1 — the paper's two headline numbers (§I, §VII):
+//!
+//! * "We observed 8.9% improvement in on-time task completion rate" —
+//!   ELARE vs MM unsuccessful tasks at λ=3 (Fig. 6 text);
+//! * "and 12.6% in energy-saving" — ELARE vs MM wasted energy at λ=4
+//!   (Fig. 4 text);
+//! * "without imposing any significant overhead" — see `exp overhead`.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, improvement_pct, Table};
+use crate::exp::sweep::{run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut spec = SweepSpec::paper_default(&["mm", "elare", "felare"], &[3.0, 4.0]);
+    spec.traces = opts.traces();
+    spec.tasks = opts.tasks();
+    spec.seed = opts.seed;
+    let points = run_sweep(&spec);
+    let p = |h: &str, r: f64| {
+        points
+            .iter()
+            .find(|p| p.heuristic == h && p.arrival_rate == r)
+            .unwrap()
+    };
+
+    // headline 1: on-time completion at λ=3 (pp and relative)
+    let mm3 = p("mm", 3.0).completion_rate;
+    let el3 = p("elare", 3.0).completion_rate;
+    // headline 2: wasted energy at λ=4
+    let mm4 = p("mm", 4.0).wasted_energy_pct;
+    let el4 = p("elare", 4.0).wasted_energy_pct;
+
+    let mut t = Table::new(
+        "Headline — ELARE vs MM (paper: +8.9% on-time @λ=3, −12.6% wasted @λ=4)",
+        &["metric", "MM", "ELARE", "delta", "paper"],
+    );
+    t.row(vec![
+        "on-time completion %, λ=3".into(),
+        fmt_f(100.0 * mm3, 1),
+        fmt_f(100.0 * el3, 1),
+        format!("+{} pp", fmt_f(100.0 * (el3 - mm3), 1)),
+        "+8.9%".into(),
+    ]);
+    t.row(vec![
+        "wasted energy %, λ=4".into(),
+        fmt_f(mm4, 3),
+        fmt_f(el4, 3),
+        format!("−{}%", fmt_f(improvement_pct(mm4, el4), 1)),
+        "−12.6%".into(),
+    ]);
+    let fe3 = p("felare", 3.0).completion_rate;
+    t.row(vec![
+        "FELARE on-time %, λ=3 (fairness cost)".into(),
+        fmt_f(100.0 * mm3, 1),
+        fmt_f(100.0 * fe3, 1),
+        format!("{} pp vs ELARE", fmt_f(100.0 * (fe3 - el3), 1)),
+        "negligible".into(),
+    ]);
+    t.emit("headline_numbers")?;
+    Ok(())
+}

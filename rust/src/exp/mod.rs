@@ -1,0 +1,152 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §3).
+//!
+//! `felare exp <id>` regenerates the artifact; `felare exp all` runs the
+//! whole evaluation. Outputs go to `results/*.csv` plus rendered console
+//! tables. `--quick` shrinks traces/tasks for smoke runs.
+
+pub mod ablation;
+pub mod cloud;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod headline;
+pub mod output;
+pub mod overhead;
+pub mod sweep;
+pub mod table1;
+
+use crate::error::{Error, Result};
+use crate::model::Scenario;
+
+/// Options shared by every experiment.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Shrink traces/tasks for a fast smoke run.
+    pub quick: bool,
+    /// Override the number of traces per point (paper: 30).
+    pub traces: Option<usize>,
+    /// Override tasks per trace (paper: 2000).
+    pub tasks: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self { quick: false, traces: None, tasks: None, seed: 0x5EED }
+    }
+}
+
+impl ExpOpts {
+    pub fn traces(&self) -> usize {
+        self.traces.unwrap_or(if self.quick { 6 } else { 30 })
+    }
+
+    pub fn tasks(&self) -> usize {
+        self.tasks.unwrap_or(if self.quick { 500 } else { 2000 })
+    }
+}
+
+/// (id, description, runner)
+pub type Runner = fn(&ExpOpts) -> Result<()>;
+
+pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
+    ("table1", "EET matrix: paper Table I + a fresh CVB draw", table1::run),
+    ("fig2", "fairness-limit walkthrough (suffered types; σ shrinks)", fig2::run),
+    ("fig3", "energy vs deadline-miss Pareto across arrival rates", fig3::run),
+    ("fig4", "wasted energy % vs arrival rate, all heuristics", fig4::run),
+    ("fig5", "wasted energy on the AWS two-app scenario (MM vs ELARE)", fig5::run),
+    ("fig6", "unsuccessful-task split (cancelled vs missed), MM vs ELARE", fig6::run),
+    ("fig7", "per-type fairness at λ=5, all heuristics", fig7::run),
+    ("fig8", "per-type fairness on the AWS scenario at λ=2", fig8::run),
+    ("headline", "paper headline numbers: +8.9% on-time, −12.6% wasted", headline::run),
+    ("overhead", "mapper overhead per event (lightweight claim)", overhead::run),
+    ("ablation", "design-choice ablations + §VIII adaptive extension", ablation::run),
+    ("cloud", "edge-to-cloud continuum RTT sweep (§VIII future work)", cloud::run),
+];
+
+pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {
+    if name == "all" {
+        for (id, desc, runner) in EXPERIMENTS {
+            println!("\n════ exp {id}: {desc} ════");
+            runner(opts)?;
+        }
+        return Ok(());
+    }
+    for (id, _, runner) in EXPERIMENTS {
+        if *id == name {
+            return runner(opts);
+        }
+    }
+    Err(Error::Experiment(format!(
+        "unknown experiment '{name}' (one of: {}, all)",
+        EXPERIMENTS.iter().map(|(id, _, _)| *id).collect::<Vec<_>>().join(", ")
+    )))
+}
+
+/// The AWS two-app scenario, with the EET profiled through PJRT when the
+/// artifacts are built (the real pipeline), falling back to the scenario's
+/// placeholder EET otherwise. Face/speech recognition map to our
+/// `face_rec`/`speech_rec` AOT models (manifest ids 2 and 1).
+pub fn aws_scenario_profiled() -> Result<(Scenario, bool)> {
+    let base = Scenario::aws_two_app();
+    let dir = crate::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        crate::log_warn!("artifacts/ not built; using placeholder AWS EET");
+        return Ok((base, false));
+    }
+    let rt = crate::runtime::Runtime::load(&dir)?;
+    let report = crate::runtime::profile_eet(&rt, &base.machines, 7)?;
+    // full profile covers all 4 models; select face_rec (2), speech_rec (1)
+    let face = 2;
+    let speech = 1;
+    let n_m = base.machines.len();
+    let mut data = Vec::with_capacity(2 * n_m);
+    for ty in [face, speech] {
+        for j in 0..n_m {
+            data.push(
+                report
+                    .eet
+                    .get(crate::model::TaskTypeId(ty), crate::model::MachineId(j)),
+            );
+        }
+    }
+    let eet = crate::model::EetMatrix::new(2, n_m, data);
+    Ok((base.with_eet(eet), true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_known() {
+        let mut ids: Vec<&str> = EXPERIMENTS.iter().map(|(id, _, _)| *id).collect();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        assert!(ids.contains(&"fig4"));
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let err = run_by_name("nope", &ExpOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn quick_opts_shrink() {
+        let q = ExpOpts { quick: true, ..Default::default() };
+        assert!(q.traces() < 30 && q.tasks() < 2000);
+        let full = ExpOpts::default();
+        assert_eq!(full.traces(), 30);
+        assert_eq!(full.tasks(), 2000);
+        let ovr = ExpOpts { traces: Some(3), tasks: Some(100), ..Default::default() };
+        assert_eq!(ovr.traces(), 3);
+        assert_eq!(ovr.tasks(), 100);
+    }
+}

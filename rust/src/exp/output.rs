@@ -1,0 +1,158 @@
+//! Experiment output: CSV + markdown writers into `results/`, and aligned
+//! console tables so `felare exp <id>` reads like the paper's figures.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+/// Destination directory for experiment outputs.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(std::env::var("FELARE_RESULTS").unwrap_or_else(|_| "results".into()))
+}
+
+/// A rectangular table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+
+    /// Console rendering with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "── {} ──", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", line(&self.columns, &widths));
+        let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", line(r, &widths));
+        }
+        s
+    }
+
+    /// Write CSV under results/ and echo the rendered table to stdout.
+    pub fn emit(&self, file_stem: &str) -> Result<PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{file_stem}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        println!("{}", self.render());
+        println!("  → {}\n", path.display());
+        Ok(path)
+    }
+}
+
+/// Write arbitrary text (markdown, notes) under results/.
+pub fn write_text(file_name: &str, text: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(file_name);
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.digits$}")
+    }
+}
+
+/// Relative improvement of `ours` over `baseline` in percent (positive =
+/// ours smaller/better for cost-like metrics).
+pub fn improvement_pct(baseline: f64, ours: f64) -> f64 {
+    if baseline == 0.0 {
+        return 0.0;
+    }
+    100.0 * (baseline - ours) / baseline
+}
+
+#[allow(unused)]
+fn _path_is_send(p: &Path) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escaping_and_shape() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.row(vec!["2".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["heuristic", "rate"]);
+        t.row(vec!["mm".into(), "0.5".into()]);
+        t.row(vec!["felare".into(), "0.25".into()]);
+        let out = t.render();
+        assert!(out.contains("demo"));
+        assert!(out.contains("felare"));
+    }
+
+    #[test]
+    fn fmt_and_improvement() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+        assert_eq!(fmt_f(f64::NAN, 2), "-");
+        assert!((improvement_pct(10.0, 8.74) - 12.6).abs() < 0.01);
+        assert_eq!(improvement_pct(0.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment OV — the "lightweight" claim (§I): per-mapping-event mapper
+//! latency for every heuristic, against the mean inter-arrival gap.
+//!
+//! The paper requires that the resource-allocation method "should be
+//! lightweight, and its incurred overhead should not worsen the system
+//! performance" — i.e. mapper time ≪ 1/λ.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::ExpOpts;
+use crate::model::{Scenario, Trace, WorkloadParams};
+use crate::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use crate::sim::Simulation;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let sc = Scenario::paper_synthetic();
+    let rate = 5.0;
+    let params = WorkloadParams {
+        n_tasks: opts.tasks(),
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(opts.seed));
+
+    let mut t = Table::new(
+        &format!(
+            "Mapper overhead per event at λ={rate} (inter-arrival {:.0} µs mean)",
+            1e6 / rate
+        ),
+        &["heuristic", "mean µs", "p50 µs", "p99 µs", "max µs", "events", "% of gap"],
+    );
+    for h in ALL_HEURISTICS {
+        let mut sim = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap());
+        sim.record_overhead_samples = true;
+        let res = sim.run(&trace);
+        let s = Summary::of(
+            &sim.overhead_samples.iter().map(|x| x * 1e6).collect::<Vec<_>>(),
+        );
+        t.row(vec![
+            h.to_string(),
+            fmt_f(s.mean, 2),
+            fmt_f(s.median(), 2),
+            fmt_f(s.percentile(99.0), 2),
+            fmt_f(s.max, 2),
+            format!("{}", res.mapping_events),
+            fmt_f(100.0 * s.mean / (1e6 / rate), 3),
+        ]);
+    }
+    t.emit("overhead_mapper")?;
+    Ok(())
+}

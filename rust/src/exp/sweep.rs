@@ -1,0 +1,213 @@
+//! Shared sweep machinery for the experiment harness: run (heuristic ×
+//! arrival-rate × trace) grids in parallel and aggregate per-point means,
+//! exactly the way the paper aggregates "30 synthesized workload traces".
+
+use crate::model::{Scenario, Trace, WorkloadParams};
+use crate::sched::registry::heuristic_by_name;
+use crate::sim::{SimResult, Simulation};
+use crate::util::parallel::{default_jobs, par_map};
+use crate::util::stats::Summary;
+
+/// One aggregated sweep point: a heuristic at an arrival rate, averaged
+/// over `traces` independent workloads.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub heuristic: String,
+    pub arrival_rate: f64,
+    pub traces: usize,
+    /// Means over traces.
+    pub completion_rate: f64,
+    pub miss_rate: f64,
+    pub cancelled_frac: f64,
+    pub missed_frac: f64,
+    pub total_energy: f64,
+    pub wasted_energy: f64,
+    pub wasted_energy_pct: f64,
+    pub jain: f64,
+    /// Per-type completion-rate means.
+    pub per_type_rates: Vec<f64>,
+    /// 95% CI half-width on the collective completion rate.
+    pub completion_ci95: f64,
+    pub wasted_pct_ci95: f64,
+    pub mapper_overhead_us: f64,
+    /// FELARE victim evictions per 1000 arrivals (0 for other heuristics).
+    pub victim_drops_per_k: f64,
+}
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub scenario: Scenario,
+    pub heuristics: Vec<String>,
+    pub rates: Vec<f64>,
+    pub traces: usize,
+    pub tasks: usize,
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    pub fn paper_default(heuristics: &[&str], rates: &[f64]) -> Self {
+        Self {
+            scenario: Scenario::paper_synthetic(),
+            heuristics: heuristics.iter().map(|s| s.to_string()).collect(),
+            rates: rates.to_vec(),
+            traces: 30,
+            tasks: 2000,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Shrink for quick/CI runs.
+    pub fn quick(mut self) -> Self {
+        self.traces = self.traces.min(6);
+        self.tasks = self.tasks.min(500);
+        self
+    }
+}
+
+/// Run one (heuristic, rate, trace-seed) cell.
+pub fn run_cell(scenario: &Scenario, heuristic: &str, rate: f64, tasks: usize, seed: u64) -> SimResult {
+    let params = WorkloadParams {
+        n_tasks: tasks,
+        arrival_rate: rate,
+        cv_exec: scenario.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let mut rng = crate::util::rng::Pcg64::seed_from(seed, 0x7ACE);
+    let trace = Trace::generate(&params, &scenario.eet, &mut rng);
+    let h = heuristic_by_name(heuristic, scenario).expect("bad heuristic name");
+    Simulation::new(scenario, h).run(&trace)
+}
+
+/// Execute the whole grid; returns points ordered by (heuristic, rate).
+pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
+    // Work items: every (heuristic, rate, trace) cell.
+    let mut cells = Vec::new();
+    for h in &spec.heuristics {
+        for &rate in &spec.rates {
+            for trace_i in 0..spec.traces {
+                cells.push((h.clone(), rate, trace_i));
+            }
+        }
+    }
+    let scenario = &spec.scenario;
+    let tasks = spec.tasks;
+    let seed0 = spec.seed;
+    let results = par_map(cells, default_jobs(), |(h, rate, trace_i)| {
+        // the trace seed is shared across heuristics so comparisons are
+        // paired (same workloads for every heuristic, like the paper)
+        let seed = seed0 ^ (trace_i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ ((rate * 1000.0) as u64);
+        let r = run_cell(scenario, &h, rate, tasks, seed);
+        (h, rate, r)
+    });
+
+    // group back into points
+    let mut points = Vec::new();
+    for h in &spec.heuristics {
+        for &rate in &spec.rates {
+            let group: Vec<&SimResult> = results
+                .iter()
+                .filter(|(rh, rr, _)| rh == h && *rr == rate)
+                .map(|(_, _, r)| r)
+                .collect();
+            points.push(aggregate(h, rate, &group));
+        }
+    }
+    points
+}
+
+fn aggregate(heuristic: &str, rate: f64, rs: &[&SimResult]) -> SweepPoint {
+    let n = rs.len().max(1) as f64;
+    let mean = |f: &dyn Fn(&SimResult) -> f64| rs.iter().map(|r| f(r)).sum::<f64>() / n;
+    let completion = Summary::of(&rs.iter().map(|r| r.collective_completion_rate()).collect::<Vec<_>>());
+    let wasted_pct = Summary::of(&rs.iter().map(|r| r.wasted_energy_pct()).collect::<Vec<_>>());
+    let n_types = rs.first().map(|r| r.n_types()).unwrap_or(0);
+    let per_type_rates = (0..n_types)
+        .map(|ty| {
+            let xs: Vec<f64> = rs
+                .iter()
+                .map(|r| r.completion_rates()[ty])
+                .filter(|x| x.is_finite())
+                .collect();
+            xs.iter().sum::<f64>() / xs.len().max(1) as f64
+        })
+        .collect();
+    SweepPoint {
+        heuristic: heuristic.to_string(),
+        arrival_rate: rate,
+        traces: rs.len(),
+        completion_rate: completion.mean,
+        miss_rate: mean(&|r| r.miss_rate()),
+        cancelled_frac: mean(&|r| r.unsuccessful_split().0),
+        missed_frac: mean(&|r| r.unsuccessful_split().1),
+        total_energy: mean(&|r| r.total_energy()),
+        wasted_energy: mean(&|r| r.wasted_energy()),
+        wasted_energy_pct: wasted_pct.mean,
+        jain: mean(&|r| r.jain()),
+        per_type_rates,
+        completion_ci95: completion.ci95(),
+        wasted_pct_ci95: wasted_pct.ci95(),
+        mapper_overhead_us: mean(&|r| r.mapper_overhead_us()),
+        victim_drops_per_k: mean(&|r| {
+            1000.0 * r.cancelled_victim as f64 / r.total_arrived().max(1) as f64
+        }),
+    }
+}
+
+/// Pareto front over (energy, miss-rate) points — both minimised (Fig. 3).
+/// Returns indices of non-dominated points.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, &(ei, mi)) in points.iter().enumerate() {
+        for (j, &(ej, mj)) in points.iter().enumerate() {
+            if i != j && ej <= ei && mj <= mi && (ej < ei || mj < mi) {
+                continue 'outer; // dominated
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_and_aggregates() {
+        let mut spec = SweepSpec::paper_default(&["mm", "elare"], &[5.0]);
+        spec.traces = 3;
+        spec.tasks = 200;
+        let points = run_sweep(&spec);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert_eq!(p.traces, 3);
+            assert!(p.completion_rate > 0.0 && p.completion_rate <= 1.0);
+            assert!(p.wasted_energy_pct >= 0.0);
+            assert_eq!(p.per_type_rates.len(), 4);
+        }
+    }
+
+    #[test]
+    fn paired_traces_across_heuristics() {
+        // Same seeds per trace index ⇒ identical arrived counts per cell.
+        let sc = Scenario::paper_synthetic();
+        let a = run_cell(&sc, "mm", 5.0, 300, 123);
+        let b = run_cell(&sc, "felare", 5.0, 300, 123);
+        assert_eq!(a.arrived, b.arrived, "same workload for both heuristics");
+    }
+
+    #[test]
+    fn pareto_front_basics() {
+        let pts = vec![(1.0, 5.0), (2.0, 2.0), (3.0, 3.0), (5.0, 1.0)];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![0, 1, 3], "(3,3) dominated by (2,2)");
+    }
+
+    #[test]
+    fn pareto_front_all_equal() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0)];
+        assert_eq!(pareto_front(&pts).len(), 2);
+    }
+}

@@ -1,0 +1,43 @@
+//! Experiment T1 — Table I: the EET matrix.
+//!
+//! Prints the paper's published matrix (pinned in `model::eet`) and a
+//! fresh CVB draw with the same dimensions, demonstrating the generator
+//! that produced it (Ali et al.'s CVB method, §VI-A).
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::ExpOpts;
+use crate::model::cvb::{generate, CvbParams};
+use crate::model::eet::paper_table1;
+use crate::util::rng::Pcg64;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let eet = paper_table1();
+    let mut t = Table::new(
+        "Table I — paper EET matrix (seconds)",
+        &["type", "m1", "m2", "m3", "m4"],
+    );
+    for (i, row) in eet.rows().enumerate() {
+        let mut cells = vec![format!("T{}", i + 1)];
+        cells.extend(row.iter().map(|x| fmt_f(*x, 3)));
+        t.row(cells);
+    }
+    t.emit("table1_paper_eet")?;
+
+    let params = CvbParams::default();
+    let fresh = generate(&params, &mut Pcg64::new(opts.seed));
+    let mut t2 = Table::new(
+        &format!(
+            "Table I (regenerated) — CVB draw, V_task={} V_mach={} mean={}s",
+            params.v_task, params.v_mach, params.mean_task
+        ),
+        &["type", "m1", "m2", "m3", "m4"],
+    );
+    for (i, row) in fresh.rows().enumerate() {
+        let mut cells = vec![format!("T{}", i + 1)];
+        cells.extend(row.iter().map(|x| fmt_f(*x, 3)));
+        t2.row(cells);
+    }
+    t2.emit("table1_cvb_regenerated")?;
+    Ok(())
+}

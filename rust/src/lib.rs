@@ -1,0 +1,45 @@
+//! # FELARE — fair, energy- and latency-aware scheduling on heterogeneous edge
+//!
+//! Production-quality reproduction of *“FELARE: Fair Scheduling of Machine
+//! Learning Tasks on Heterogeneous Edge Systems”* (Mokhtari et al., 2022)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the HEC coordinator: the ELARE/FELARE
+//!   mapping heuristics and their MM/MSD/MMU baselines ([`sched`]), a
+//!   discrete-event simulator equivalent to the paper's E2C-Sim ([`sim`]),
+//!   a real-time serving coordinator ([`serve`]), and the experiment
+//!   harness that regenerates every paper table/figure ([`exp`]).
+//! * **Layer 2** — JAX inference models for the ML task types
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) those models
+//!   are built from, verified against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the serving hot path never touches Python.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use felare::model::{Scenario, WorkloadParams, Trace};
+//! use felare::sched::registry::heuristic_by_name;
+//! use felare::sim::engine::Simulation;
+//! use felare::util::rng::Pcg64;
+//!
+//! let scenario = Scenario::paper_synthetic();
+//! let mut rng = Pcg64::new(42);
+//! let trace = Trace::generate(&WorkloadParams::default(), &scenario.eet, &mut rng);
+//! let heuristic = heuristic_by_name("felare", &scenario).unwrap();
+//! let result = Simulation::new(&scenario, heuristic).run(&trace);
+//! println!("on-time completion: {:.1}%", 100.0 * result.collective_completion_rate());
+//! ```
+
+pub mod error;
+pub mod exp;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod serve;
+pub mod sim;
+pub mod util;
+
+pub use error::Error;

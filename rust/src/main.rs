@@ -1,0 +1,254 @@
+//! `felare` — command-line entry to the FELARE reproduction.
+//!
+//! Subcommands:
+//!   simulate   run one heuristic on one scenario/trace (discrete-event)
+//!   serve      live serving with real PJRT inference (needs artifacts)
+//!   profile    profile artifacts → EET matrix
+//!   exp        regenerate paper tables/figures (`exp all`)
+//!   gen-trace  synthesize a workload trace to JSON
+//!   list       enumerate heuristics and experiments
+
+use anyhow::{anyhow, Result};
+
+use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
+use felare::model::machine::aws_machines;
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::runtime::{profile_eet, Runtime};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::serve::{serve, ServeConfig};
+use felare::sim::Simulation;
+use felare::util::cli::Args;
+use felare::util::rng::Pcg64;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            let msg = e.to_string();
+            if let Some(help) = msg.strip_prefix("__help__") {
+                println!("{help}");
+                0
+            } else {
+                eprintln!("error: {msg}");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "felare — fair energy- & latency-aware scheduling on heterogeneous edge (paper reproduction)\n\n\
+         Usage: felare <command> [options]\n\nCommands:\n",
+    );
+    for (cmd, about) in [
+        ("simulate", "discrete-event simulation of one heuristic"),
+        ("serve", "live serving with real PJRT inference (needs `make artifacts`)"),
+        ("profile", "profile AOT artifacts into an EET matrix"),
+        ("exp", "regenerate paper tables/figures: felare exp <id>|all [--quick]"),
+        ("gen-trace", "synthesize a workload trace to JSON"),
+        ("list", "list heuristics and experiments"),
+    ] {
+        s.push_str(&format!("  {cmd:<10} {about}\n"));
+    }
+    s.push_str("\nRun `felare <command> --help` for options.\n");
+    s
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        return Err(anyhow!("__help__{}", usage()));
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "profile" => cmd_profile(rest),
+        "exp" => cmd_exp(rest),
+        "gen-trace" => cmd_gen_trace(rest),
+        "list" => cmd_list(),
+        "--help" | "-h" | "help" => Err(anyhow!("__help__{}", usage())),
+        other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
+    }
+}
+
+fn parse(spec: Args, raw: &[String]) -> Result<Args> {
+    spec.parse(raw).map_err(|help| anyhow!("__help__{help}"))
+}
+
+fn load_scenario(args: &Args) -> Result<Scenario> {
+    match args.get("scenario") {
+        Some("paper") | None => Ok(Scenario::paper_synthetic()),
+        Some("aws") => Ok(Scenario::aws_two_app()),
+        Some(path) => Scenario::load(path).map_err(|e| anyhow!(e)),
+    }
+}
+
+fn cmd_simulate(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare simulate", "discrete-event simulation")
+            .opt("heuristic", "felare", "mm | msd | mmu | elare | felare")
+            .opt("rate", "5.0", "arrival rate λ (tasks/s)")
+            .opt("tasks", "2000", "tasks per trace")
+            .opt("seed", "42", "PRNG seed")
+            .opt_optional("scenario", "paper | aws | path/to/scenario.json")
+            .flag("json", "emit the result as JSON"),
+        raw,
+    )?;
+    let sc = load_scenario(&args)?;
+    let params = WorkloadParams {
+        n_tasks: args.usize("tasks").map_err(|e| anyhow!(e))?,
+        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let seed = args.u64("seed").map_err(|e| anyhow!(e))?;
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+    let h = heuristic_by_name(&args.str("heuristic"), &sc).map_err(|e| anyhow!(e))?;
+    let result = Simulation::new(&sc, h).run(&trace);
+    if args.is_set("json") {
+        println!("{}", result.to_json().to_string_pretty());
+    } else {
+        println!(
+            "sim[{}] λ={} tasks={}  completion {:.1}%  miss {:.1}%  wasted-energy {:.3}% of battery",
+            result.heuristic,
+            result.arrival_rate,
+            result.total_arrived(),
+            100.0 * result.collective_completion_rate(),
+            100.0 * result.miss_rate(),
+            result.wasted_energy_pct(),
+        );
+        println!(
+            "  per-type completion: {}",
+            result
+                .completion_rates()
+                .iter()
+                .map(|r| format!("{:.1}%", 100.0 * r))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        println!(
+            "  jain {:.3}  mapper {:.1} µs/event ({} events)  makespan {:.1}s",
+            result.jain(),
+            result.mapper_overhead_us(),
+            result.mapping_events,
+            result.makespan
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare serve", "live serving with real PJRT inference")
+            .opt("heuristic", "felare", "mapping heuristic")
+            .opt("rate", "20.0", "arrival rate (req/s)")
+            .opt("requests", "200", "total requests")
+            .opt("queue-slots", "2", "local queue slots per machine")
+            .opt("deadline-scale", "1.0", "scales Eq. 4 deadlines")
+            .opt("seed", "42", "PRNG seed")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .flag("json", "emit the report as JSON"),
+        raw,
+    )?;
+    let config = ServeConfig {
+        artifact_dir: args.str("artifacts").into(),
+        heuristic: args.str("heuristic"),
+        machines: aws_machines(),
+        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
+        n_requests: args.usize("requests").map_err(|e| anyhow!(e))?,
+        queue_slots: args.usize("queue-slots").map_err(|e| anyhow!(e))?,
+        deadline_scale: args.f64("deadline-scale").map_err(|e| anyhow!(e))?,
+        seed: args.u64("seed").map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let report = serve(&config)?;
+    if args.is_set("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn cmd_profile(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare profile", "profile artifacts into an EET matrix")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("reps", "9", "repetitions per task type"),
+        raw,
+    )?;
+    let rt = Runtime::load(args.str("artifacts"))?;
+    println!("platform: {}  models: {}", rt.platform(), rt.n_task_types());
+    let machines = aws_machines();
+    let report = profile_eet(&rt, &machines, args.usize("reps").map_err(|e| anyhow!(e))?)?;
+    println!(
+        "\nEET (rows = task types, cols = {:?}):",
+        machines.iter().map(|m| m.name.clone()).collect::<Vec<_>>()
+    );
+    println!("{}", report.eet.to_markdown());
+    Ok(())
+}
+
+fn cmd_exp(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare exp", "regenerate paper tables/figures")
+            .flag("quick", "small traces/tasks for a fast smoke run")
+            .opt_optional("traces", "traces per point (paper: 30)")
+            .opt_optional("tasks", "tasks per trace (paper: 2000)")
+            .opt("seed", "24397", "sweep base seed"),
+        raw,
+    )?;
+    let name = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let opts = ExpOpts {
+        quick: args.is_set("quick"),
+        traces: args.get("traces").and_then(|s| s.parse().ok()),
+        tasks: args.get("tasks").and_then(|s| s.parse().ok()),
+        seed: args.u64("seed").map_err(|e| anyhow!(e))?,
+    };
+    run_by_name(&name, &opts)?;
+    Ok(())
+}
+
+fn cmd_gen_trace(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare gen-trace", "synthesize a workload trace")
+            .opt("rate", "5.0", "arrival rate λ")
+            .opt("tasks", "2000", "number of tasks")
+            .opt("seed", "42", "PRNG seed")
+            .opt("out", "trace.json", "output path")
+            .opt_optional("scenario", "paper | aws | path.json"),
+        raw,
+    )?;
+    let sc = load_scenario(&args)?;
+    let params = WorkloadParams {
+        n_tasks: args.usize("tasks").map_err(|e| anyhow!(e))?,
+        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let seed = args.u64("seed").map_err(|e| anyhow!(e))?;
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+    let out = args.str("out");
+    std::fs::write(&out, trace.to_json().to_string_pretty())?;
+    println!("wrote {} tasks to {out}", trace.tasks.len());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("heuristics:");
+    for h in ALL_HEURISTICS {
+        println!("  {h}");
+    }
+    println!("\nexperiments (felare exp <id>):");
+    for (id, desc, _) in EXPERIMENTS {
+        println!("  {id:<9} {desc}");
+    }
+    Ok(())
+}

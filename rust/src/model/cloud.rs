@@ -1,0 +1,155 @@
+//! Edge-to-cloud continuum (paper §VIII, future work #1): "the trade-off
+//! between network transfer time and the energy consumption due to local
+//! processing of the tasks needs to be investigated".
+//!
+//! A cloud tier is representable inside the existing machinery as one more
+//! *inconsistently heterogeneous* machine column:
+//!
+//! * **execution time** on the cloud machine = network round-trip +
+//!   payload-transfer time + remote execution — entered into the EET row
+//!   as `rtt + bytes/bandwidth + exec_remote`. Remote compute is fast, so
+//!   short tasks are dominated by the constant RTT (bad for tight
+//!   deadlines) while long tasks amortise it — exactly the continuum
+//!   trade-off the paper sketches;
+//! * **energy** charged to the battery is only the radio: the device
+//!   draws `radio_power` during the transfer window and (approximately)
+//!   idles while the cloud computes. Our engine charges one dyn power
+//!   over the whole EET entry, so the column's `dyn_power` is the
+//!   *time-weighted average* `radio_power · transfer_frac` — documented
+//!   approximation, exact when exec_remote ≫ transfer or vice versa.
+
+use crate::model::eet::EetMatrix;
+use crate::model::machine::MachineSpec;
+use crate::model::scenario::Scenario;
+use crate::model::task::TaskTypeId;
+
+/// Parameters of the cloud tier attachment.
+#[derive(Clone, Copy, Debug)]
+pub struct CloudParams {
+    /// Network round-trip latency (seconds).
+    pub rtt: f64,
+    /// Payload transfer time per task (seconds) — size/bandwidth.
+    pub transfer: f64,
+    /// Cloud speedup over the *fastest* edge machine for each task type.
+    pub speedup: f64,
+    /// Radio power while transferring (battery side; the cloud's own
+    /// compute energy is not the edge device's problem).
+    pub radio_power: f64,
+}
+
+impl Default for CloudParams {
+    fn default() -> Self {
+        // LTE-ish numbers scaled to the paper's seconds-scale EETs.
+        Self { rtt: 0.30, transfer: 0.40, speedup: 8.0, radio_power: 1.2 }
+    }
+}
+
+/// Extend a scenario with one cloud machine appended as the last column.
+pub fn attach_cloud(base: &Scenario, params: &CloudParams) -> Scenario {
+    let n_types = base.n_types();
+    let n_machines = base.n_machines();
+
+    // Cloud EET entry per type: rtt + transfer + best-edge-time / speedup.
+    let mut data = Vec::with_capacity(n_types * (n_machines + 1));
+    let mut cloud_col = Vec::with_capacity(n_types);
+    for i in 0..n_types {
+        let ty = TaskTypeId(i);
+        let best_edge = base.eet.get(ty, base.eet.best_machine(ty));
+        let exec_remote = best_edge / params.speedup;
+        cloud_col.push(params.rtt + params.transfer + exec_remote);
+    }
+    for (i, row) in base.eet.rows().enumerate() {
+        data.extend_from_slice(row);
+        data.push(cloud_col[i]);
+    }
+    let eet = EetMatrix::new(n_types, n_machines + 1, data);
+
+    // Battery-side power of the cloud column: radio only, time-weighted
+    // over the transfer fraction of the average entry.
+    let avg_cloud_entry = cloud_col.iter().sum::<f64>() / n_types as f64;
+    let transfer_frac = (params.transfer / avg_cloud_entry).clamp(0.0, 1.0);
+    let cloud_dyn = (params.radio_power * transfer_frac).max(1e-3);
+
+    let mut machines = base.machines.clone();
+    machines.push(
+        MachineSpec::new(n_machines, "cloud", cloud_dyn, 0.01), // idle: keep-alive
+    );
+
+    let mut sc = base.clone();
+    sc.name = format!("{}+cloud", base.name);
+    sc.machines = machines;
+    sc.eet = eet;
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::MachineId;
+
+    #[test]
+    fn cloud_column_appended() {
+        let base = Scenario::paper_synthetic();
+        let sc = attach_cloud(&base, &CloudParams::default());
+        assert_eq!(sc.n_machines(), 5);
+        assert_eq!(sc.n_types(), 4);
+        assert_eq!(sc.machines[4].name, "cloud");
+        sc.validate().unwrap();
+        // edge columns unchanged
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(
+                    sc.eet.get(TaskTypeId(i), MachineId(j)),
+                    base.eet.get(TaskTypeId(i), MachineId(j))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cloud_entry_structure() {
+        let base = Scenario::paper_synthetic();
+        let p = CloudParams { rtt: 0.5, transfer: 0.25, speedup: 10.0, radio_power: 1.0 };
+        let sc = attach_cloud(&base, &p);
+        for i in 0..4 {
+            let ty = TaskTypeId(i);
+            let best_edge = base.eet.get(ty, base.eet.best_machine(ty));
+            let want = 0.5 + 0.25 + best_edge / 10.0;
+            assert!((sc.eet.get(ty, MachineId(4)) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cloud_energy_is_radio_scaled() {
+        let base = Scenario::paper_synthetic();
+        let sc = attach_cloud(&base, &CloudParams::default());
+        let cloud = &sc.machines[4];
+        // radio-only power: well under any edge machine's dynamic power
+        assert!(cloud.dyn_power < 1.5, "cloud dyn {}", cloud.dyn_power);
+        assert!(cloud.dyn_power > 0.0);
+    }
+
+    #[test]
+    fn long_rtt_makes_cloud_useless_for_tight_deadlines() {
+        // tight deadline < rtt ⇒ cloud never feasible, edge still is
+        let base = Scenario::paper_synthetic();
+        let p = CloudParams { rtt: 100.0, ..Default::default() };
+        let sc = attach_cloud(&base, &p);
+        for i in 0..4 {
+            let ty = TaskTypeId(i);
+            assert_ne!(sc.eet.best_machine(ty), MachineId(4));
+        }
+    }
+
+    #[test]
+    fn fast_cheap_cloud_attracts_elare() {
+        // near-zero rtt & transfer: cloud is both fastest and cheapest ⇒
+        // it becomes the best machine for every type
+        let base = Scenario::paper_synthetic();
+        let p = CloudParams { rtt: 1e-4, transfer: 1e-4, speedup: 50.0, radio_power: 0.5 };
+        let sc = attach_cloud(&base, &p);
+        for i in 0..4 {
+            assert_eq!(sc.eet.best_machine(TaskTypeId(i)), MachineId(4));
+        }
+    }
+}

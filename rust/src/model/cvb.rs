@@ -1,0 +1,115 @@
+//! Coefficient-of-Variation-Based EET synthesis (paper §VI-A, citing
+//! Ali, Siegel, Maheswaran, Hensgen — "Representing task and machine
+//! heterogeneities for heterogeneous computing systems", 2000).
+//!
+//! CVB models heterogeneity with two coefficients of variation:
+//! * V_task — spread of baseline task sizes;
+//! * V_mach — spread across machines for a given task.
+//!
+//! For each task type i, draw a baseline q_i ~ Gamma(α_task, β_task) with
+//! mean = `mean_task`; then each entry EET[i][j] ~ Gamma(α_mach, β_mach(i))
+//! with mean = q_i. Shapes α = 1/V², scales β = mean·V² (mean-CV
+//! parameterisation). Larger V ⇒ more heterogeneous system.
+
+use crate::model::eet::EetMatrix;
+use crate::util::rng::{Gamma, Pcg64};
+
+/// Parameters of the CVB generator.
+#[derive(Clone, Copy, Debug)]
+pub struct CvbParams {
+    pub n_types: usize,
+    pub n_machines: usize,
+    /// Mean baseline execution time (seconds).
+    pub mean_task: f64,
+    /// Task heterogeneity CV (paper-scale: ~0.1 low … 0.6+ high).
+    pub v_task: f64,
+    /// Machine heterogeneity CV.
+    pub v_mach: f64,
+}
+
+impl Default for CvbParams {
+    fn default() -> Self {
+        // Chosen so generated matrices resemble Table I's scale (entries
+        // roughly 0.7–5 s around a ~2.3 s mean with visible spread).
+        Self { n_types: 4, n_machines: 4, mean_task: 2.3, v_task: 0.1, v_mach: 0.6 }
+    }
+}
+
+/// Generate an EET matrix via the CVB method.
+pub fn generate(params: &CvbParams, rng: &mut Pcg64) -> EetMatrix {
+    assert!(params.n_types > 0 && params.n_machines > 0);
+    let mut task_gamma = Gamma::from_mean_cv(params.mean_task, params.v_task);
+    let mut data = Vec::with_capacity(params.n_types * params.n_machines);
+    for _ in 0..params.n_types {
+        let q_i = task_gamma.sample(rng).max(1e-9);
+        let mut mach_gamma = Gamma::from_mean_cv(q_i, params.v_mach);
+        for _ in 0..params.n_machines {
+            data.push(mach_gamma.sample(rng).max(1e-9));
+        }
+    }
+    EetMatrix::new(params.n_types, params.n_machines, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::task::TaskTypeId;
+    use crate::util::stats::mean_std;
+
+    #[test]
+    fn shape_and_positivity() {
+        let mut rng = Pcg64::new(1);
+        let eet = generate(&CvbParams::default(), &mut rng);
+        assert_eq!(eet.n_types(), 4);
+        assert_eq!(eet.n_machines(), 4);
+        assert!(eet.flat().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&CvbParams::default(), &mut Pcg64::new(7));
+        let b = generate(&CvbParams::default(), &mut Pcg64::new(7));
+        assert_eq!(a.flat(), b.flat());
+        let c = generate(&CvbParams::default(), &mut Pcg64::new(8));
+        assert_ne!(a.flat(), c.flat());
+    }
+
+    #[test]
+    fn mean_tracks_mean_task() {
+        let params = CvbParams { n_types: 40, n_machines: 40, ..Default::default() };
+        let mut rng = Pcg64::new(3);
+        let eet = generate(&params, &mut rng);
+        let (m, _) = mean_std(eet.flat());
+        assert!((m - params.mean_task).abs() / params.mean_task < 0.15,
+                "grand mean {m} vs {}", params.mean_task);
+    }
+
+    #[test]
+    fn higher_v_mach_spreads_rows() {
+        let lo = CvbParams { v_mach: 0.05, n_types: 30, n_machines: 30, ..Default::default() };
+        let hi = CvbParams { v_mach: 0.9, n_types: 30, n_machines: 30, ..Default::default() };
+        let row_cv = |eet: &EetMatrix| -> f64 {
+            let mut cvs = Vec::new();
+            for (i, row) in eet.rows().enumerate() {
+                let (m, s) = mean_std(row);
+                let _ = i;
+                cvs.push(s / m);
+            }
+            cvs.iter().sum::<f64>() / cvs.len() as f64
+        };
+        let cv_lo = row_cv(&generate(&lo, &mut Pcg64::new(5)));
+        let cv_hi = row_cv(&generate(&hi, &mut Pcg64::new(5)));
+        assert!(cv_hi > cv_lo * 3.0, "lo={cv_lo} hi={cv_hi}");
+    }
+
+    #[test]
+    fn inconsistent_heterogeneity_emerges() {
+        // With high machine CV the per-row best machine should not be the
+        // same column for every row (inconsistent heterogeneity, §I).
+        let params = CvbParams { n_types: 12, n_machines: 6, v_mach: 0.8, ..Default::default() };
+        let eet = generate(&params, &mut Pcg64::new(11));
+        let best: Vec<usize> = (0..12).map(|i| eet.best_machine(TaskTypeId(i)).0).collect();
+        let first = best[0];
+        assert!(best.iter().any(|&b| b != first), "best machines: {best:?}");
+    }
+}

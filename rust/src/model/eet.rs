@@ -1,0 +1,195 @@
+//! Expected Execution Time matrix (paper §III, Table I).
+//!
+//! EET[i][j] = expected seconds for task type i on machine type j, obtained
+//! either from Table I (the paper's published CVB draw), from the CVB
+//! generator (cvb.rs), or from PJRT profiling (runtime/profiler.rs). The
+//! deadline rule (Eq. 4) lives here because it is a pure function of the
+//! matrix: δ_i(k) = arr_k + ē_i + ē.
+
+use crate::model::machine::MachineId;
+use crate::model::task::{TaskTypeId, Time};
+
+/// Row-major n_types × n_machines matrix of expected execution times.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EetMatrix {
+    n_types: usize,
+    n_machines: usize,
+    data: Vec<f64>,
+    /// Cached per-type mean over machines (ē_i, Eq. 4).
+    row_means: Vec<f64>,
+    /// Cached mean of row means (ē, Eq. 4).
+    grand_mean: f64,
+}
+
+impl EetMatrix {
+    pub fn new(n_types: usize, n_machines: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n_types * n_machines, "EET shape mismatch");
+        assert!(data.iter().all(|&x| x > 0.0 && x.is_finite()),
+                "EET entries must be positive finite");
+        let row_means: Vec<f64> = (0..n_types)
+            .map(|i| data[i * n_machines..(i + 1) * n_machines].iter().sum::<f64>()
+                / n_machines as f64)
+            .collect();
+        let grand_mean = row_means.iter().sum::<f64>() / n_types as f64;
+        Self { n_types, n_machines, data, row_means, grand_mean }
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.n_types
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.n_machines
+    }
+
+    /// Expected execution time of task type i on machine j (e_ij).
+    #[inline]
+    pub fn get(&self, i: TaskTypeId, j: MachineId) -> f64 {
+        self.data[i.0 * self.n_machines + j.0]
+    }
+
+    /// ē_i — the mean execution time of type i across machine types.
+    pub fn row_mean(&self, i: TaskTypeId) -> f64 {
+        self.row_means[i.0]
+    }
+
+    /// ē — the collective mean over all types and machines (Eq. 4).
+    pub fn grand_mean(&self) -> f64 {
+        self.grand_mean
+    }
+
+    /// Eq. 4: δ_i(k) = arr_k + ē_i + ē.
+    pub fn deadline(&self, i: TaskTypeId, arrival: Time) -> Time {
+        arrival + self.row_mean(i) + self.grand_mean
+    }
+
+    /// Machine with the smallest e_ij for type i ("best-matching" machine,
+    /// used by FELARE's victim-dropping step).
+    pub fn best_machine(&self, i: TaskTypeId) -> MachineId {
+        let row = &self.data[i.0 * self.n_machines..(i.0 + 1) * self.n_machines];
+        let (j, _) = row
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        MachineId(j)
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks(self.n_machines)
+    }
+
+    /// Flat copy for serialization.
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Render as the paper's Table I layout (markdown).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from("| Tasks\\Machines |");
+        for j in 0..self.n_machines {
+            s.push_str(&format!(" m{} |", j + 1));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in 0..self.n_machines {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (i, row) in self.rows().enumerate() {
+            s.push_str(&format!("| T{} |", i + 1));
+            for x in row {
+                s.push_str(&format!(" {x:.3} |"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The paper's Table I — the exact published EET for the 4×4 synthetic
+/// scenario. Every synthetic experiment defaults to this matrix so our
+/// curves are comparable with the paper's.
+pub fn paper_table1() -> EetMatrix {
+    EetMatrix::new(
+        4,
+        4,
+        vec![
+            2.238, 1.696, 4.359, 0.736, // T1
+            2.256, 1.828, 4.377, 0.868, // T2
+            2.076, 1.531, 5.096, 0.865, // T3
+            2.092, 1.622, 4.388, 0.913, // T4
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_pinned() {
+        let eet = paper_table1();
+        assert_eq!(eet.n_types(), 4);
+        assert_eq!(eet.n_machines(), 4);
+        assert_eq!(eet.get(TaskTypeId(0), MachineId(0)), 2.238);
+        assert_eq!(eet.get(TaskTypeId(2), MachineId(2)), 5.096);
+        assert_eq!(eet.get(TaskTypeId(3), MachineId(3)), 0.913);
+    }
+
+    #[test]
+    fn row_and_grand_means() {
+        let eet = paper_table1();
+        let e1 = (2.238 + 1.696 + 4.359 + 0.736) / 4.0;
+        assert!((eet.row_mean(TaskTypeId(0)) - e1).abs() < 1e-12);
+        let grand: f64 = (0..4)
+            .map(|i| eet.row_mean(TaskTypeId(i)))
+            .sum::<f64>() / 4.0;
+        assert!((eet.grand_mean() - grand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_eq4() {
+        let eet = paper_table1();
+        let d = eet.deadline(TaskTypeId(1), 10.0);
+        assert!((d - (10.0 + eet.row_mean(TaskTypeId(1)) + eet.grand_mean())).abs() < 1e-12);
+        assert!(d > 10.0);
+    }
+
+    #[test]
+    fn best_machine_is_m4_for_all_table1_rows() {
+        // Table I: column m4 dominates (0.736..0.913 vs everything else).
+        let eet = paper_table1();
+        for i in 0..4 {
+            assert_eq!(eet.best_machine(TaskTypeId(i)), MachineId(3));
+        }
+    }
+
+    #[test]
+    fn inconsistent_heterogeneity_possible() {
+        // A matrix where machine orderings differ per type.
+        let eet = EetMatrix::new(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert_eq!(eet.best_machine(TaskTypeId(0)), MachineId(0));
+        assert_eq!(eet.best_machine(TaskTypeId(1)), MachineId(1));
+    }
+
+    #[test]
+    fn markdown_contains_all_entries() {
+        let md = paper_table1().to_markdown();
+        assert!(md.contains("2.238"));
+        assert!(md.contains("| T4 |"));
+        assert!(md.contains("m4"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_shape() {
+        let _ = EetMatrix::new(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_entries() {
+        let _ = EetMatrix::new(1, 2, vec![1.0, 0.0]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Machines and machine types (paper §III).
+//!
+//! Machines are *inconsistently heterogeneous*: each type has its own
+//! column in the EET matrix, and the ordering of machines by speed differs
+//! across task types. Energy follows the paper's two-component model: a
+//! machine draws `dyn_power` while executing and `idle_power` otherwise.
+
+use std::fmt;
+
+/// Index into the scenario's machine table (column of the EET matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MachineId(pub usize);
+
+impl fmt::Display for MachineId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.0 + 1) // paper numbering m1..m4
+    }
+}
+
+/// Static description of one machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineSpec {
+    pub id: MachineId,
+    pub name: String,
+    /// Power while executing a task, in units of the paper's symbolic `p`
+    /// (synthetic scenario) or watts (AWS scenario: 120 W / 300 W TDP).
+    pub dyn_power: f64,
+    /// Power while idle (paper: 0.05·p for all four synthetic machines).
+    pub idle_power: f64,
+    /// Execution-time multiplier for the PJRT real-execution mode: actual
+    /// wall time of an inference × speed = modeled time on this machine.
+    /// 1.0 for the synthetic scenario (EET comes from Table I instead).
+    pub speed: f64,
+}
+
+impl MachineSpec {
+    pub fn new(id: usize, name: &str, dyn_power: f64, idle_power: f64) -> Self {
+        assert!(dyn_power > 0.0 && idle_power >= 0.0, "powers must be sane");
+        Self { id: MachineId(id), name: name.to_string(), dyn_power, idle_power, speed: 1.0 }
+    }
+
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        assert!(speed > 0.0);
+        self.speed = speed;
+        self
+    }
+
+    /// Energy burnt executing for `dt` seconds.
+    pub fn dyn_energy(&self, dt: f64) -> f64 {
+        self.dyn_power * dt.max(0.0)
+    }
+
+    /// Energy burnt idling for `dt` seconds.
+    pub fn idle_energy(&self, dt: f64) -> f64 {
+        self.idle_power * dt.max(0.0)
+    }
+}
+
+/// The paper's four synthetic machines (§VI-A): dynamic powers
+/// {1.6, 3.0, 1.8, 1.5}·p, idle power 0.05·p, with unit power p = 1.
+pub fn paper_machines() -> Vec<MachineSpec> {
+    [1.6, 3.0, 1.8, 1.5]
+        .iter()
+        .enumerate()
+        .map(|(i, &dp)| MachineSpec::new(i, &format!("m{}", i + 1), dp, 0.05))
+        .collect()
+}
+
+/// The paper's AWS evaluation machines (§VI-A): t2.xlarge (Haswell Xeon,
+/// TDP 120 W) and g3s.xlarge (Tesla M60, TDP 300 W). The GPU runs the ML
+/// inferences faster (speed < 1 relative to the profiled CPU base) but
+/// burns 2.5× the power — exactly the energy/latency tension the paper
+/// studies. Idle ≈ 10% of TDP.
+pub fn aws_machines() -> Vec<MachineSpec> {
+    vec![
+        MachineSpec::new(0, "t2.xlarge", 120.0, 12.0).with_speed(1.0),
+        MachineSpec::new(1, "g3s.xlarge", 300.0, 30.0).with_speed(0.35),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_machines_match_section_vi() {
+        let ms = paper_machines();
+        assert_eq!(ms.len(), 4);
+        assert_eq!(ms[0].dyn_power, 1.6);
+        assert_eq!(ms[1].dyn_power, 3.0);
+        assert_eq!(ms[2].dyn_power, 1.8);
+        assert_eq!(ms[3].dyn_power, 1.5);
+        assert!(ms.iter().all(|m| m.idle_power == 0.05));
+        assert!(ms.iter().all(|m| m.speed == 1.0));
+    }
+
+    #[test]
+    fn aws_machines_powers() {
+        let ms = aws_machines();
+        assert_eq!(ms[0].dyn_power, 120.0);
+        assert_eq!(ms[1].dyn_power, 300.0);
+        assert!(ms[1].speed < ms[0].speed, "GPU is faster");
+    }
+
+    #[test]
+    fn energy_helpers() {
+        let m = MachineSpec::new(0, "x", 2.0, 0.1);
+        assert_eq!(m.dyn_energy(3.0), 6.0);
+        assert_eq!(m.idle_energy(10.0), 1.0);
+        assert_eq!(m.dyn_energy(-1.0), 0.0, "negative dt clamps");
+    }
+
+    #[test]
+    fn display_numbering() {
+        assert_eq!(MachineId(0).to_string(), "m1");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_dyn_power() {
+        let _ = MachineSpec::new(0, "bad", 0.0, 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Domain model: tasks, machines, EET matrices, workloads, scenarios
+//! (paper §III and §VI-A).
+
+pub mod cloud;
+pub mod cvb;
+pub mod eet;
+pub mod machine;
+pub mod scenario;
+pub mod task;
+pub mod workload;
+
+pub use eet::EetMatrix;
+pub use machine::{MachineId, MachineSpec};
+pub use scenario::Scenario;
+pub use task::{CancelReason, Outcome, Task, TaskTypeId, Time};
+pub use workload::{Trace, WorkloadParams};

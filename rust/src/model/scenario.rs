@@ -1,0 +1,325 @@
+//! Scenario = the full static description of one HEC system under test:
+//! machines, task types, EET matrix, queue capacity, fairness knobs and
+//! battery capacity. This is the config-system entry point — scenarios are
+//! JSON files (`felare simulate --scenario path.json`) with two built-in
+//! presets matching the paper's evaluation setups.
+
+use crate::model::eet::{paper_table1, EetMatrix};
+use crate::model::machine::{aws_machines, paper_machines, MachineSpec};
+use crate::util::json::Json;
+
+/// Completion-rate monitoring mode for the fairness tracker (§V).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateWindow {
+    /// cr_i over everything since t=0 (paper default reading).
+    Cumulative,
+    /// cr_i over the last `n` arrivals of each type (adaptivity knob).
+    Sliding(usize),
+}
+
+/// Full system description.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub machines: Vec<MachineSpec>,
+    pub task_type_names: Vec<String>,
+    pub eet: EetMatrix,
+    /// Local-queue slots per machine (paper: "limited", unspecified; we
+    /// default to 2 — see DESIGN.md interpretation table).
+    pub queue_slots: usize,
+    /// Fairness factor f in Eq. 3 (0 ≤ f ≤ μ/σ; larger = less aggressive).
+    pub fairness_factor: f64,
+    /// Minimum arrivals of a type before its cr_i participates in Eq. 3.
+    pub fairness_min_samples: u64,
+    pub rate_window: RateWindow,
+    /// CV of per-task execution-time factors.
+    pub cv_exec: f64,
+    /// Initial battery energy E0. `None` ⇒ auto: 2 · Σ_j p_j^dyn · T_trace
+    /// at run time (DESIGN.md); wasted-energy percentages divide by this.
+    pub battery: Option<f64>,
+}
+
+impl Scenario {
+    /// Paper §VI synthetic preset: 4 machines {1.6,3.0,1.8,1.5}p dyn /
+    /// 0.05p idle, Table I EET, 4 task types.
+    pub fn paper_synthetic() -> Scenario {
+        Scenario {
+            name: "paper-synthetic".into(),
+            machines: paper_machines(),
+            task_type_names: (1..=4).map(|i| format!("T{i}")).collect(),
+            eet: paper_table1(),
+            queue_slots: 2,
+            fairness_factor: 1.0,
+            fairness_min_samples: 10,
+            rate_window: RateWindow::Cumulative,
+            cv_exec: 0.1,
+            battery: None,
+        }
+    }
+
+    /// Paper §VI AWS preset: t2.xlarge + g3s.xlarge serving face and
+    /// speech recognition. The EET here is a placeholder scale — the real
+    /// pipeline replaces it with PJRT-profiled times
+    /// (runtime::profiler::profile_eet) before running, mirroring the
+    /// paper's "EET via profiling".
+    pub fn aws_two_app() -> Scenario {
+        Scenario {
+            name: "aws-two-app".into(),
+            machines: aws_machines(),
+            task_type_names: vec!["face_rec".into(), "speech_rec".into()],
+            // rows: face_rec, speech_rec; cols: t2.xlarge, g3s.xlarge.
+            // Placeholder means (seconds) in the shape the paper reports:
+            // GPU substantially faster on both DNNs.
+            eet: EetMatrix::new(2, 2, vec![0.45, 0.16, 0.35, 0.12]),
+            queue_slots: 2,
+            fairness_factor: 1.0,
+            fairness_min_samples: 10,
+            rate_window: RateWindow::Cumulative,
+            cv_exec: 0.1,
+            battery: None,
+        }
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.eet.n_types()
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// Battery capacity for a workload spanning `horizon` seconds.
+    pub fn battery_for(&self, horizon: f64) -> f64 {
+        match self.battery {
+            Some(e0) => e0,
+            None => {
+                let total_dyn: f64 = self.machines.iter().map(|m| m.dyn_power).sum();
+                2.0 * total_dyn * horizon.max(1.0)
+            }
+        }
+    }
+
+    /// Swap in a different EET (CVB draw or profiled) keeping everything else.
+    pub fn with_eet(mut self, eet: EetMatrix) -> Scenario {
+        assert_eq!(eet.n_types(), self.task_type_names.len());
+        assert_eq!(eet.n_machines(), self.machines.len());
+        self.eet = eet;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.machines.is_empty() {
+            return Err("scenario has no machines".into());
+        }
+        if self.task_type_names.is_empty() {
+            return Err("scenario has no task types".into());
+        }
+        if self.eet.n_types() != self.task_type_names.len() {
+            return Err("EET rows != task types".into());
+        }
+        if self.eet.n_machines() != self.machines.len() {
+            return Err("EET cols != machines".into());
+        }
+        if self.queue_slots == 0 {
+            return Err("queue_slots must be >= 1".into());
+        }
+        if self.fairness_factor < 0.0 {
+            return Err("fairness_factor must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    // ---- JSON ----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let machines: Vec<Json> = self
+            .machines
+            .iter()
+            .map(|m| {
+                Json::object()
+                    .set("name", m.name.as_str())
+                    .set("dyn_power", m.dyn_power)
+                    .set("idle_power", m.idle_power)
+                    .set("speed", m.speed)
+            })
+            .collect();
+        let mut j = Json::object()
+            .set("name", self.name.as_str())
+            .set("machines", Json::Array(machines))
+            .set("task_types", self.task_type_names.clone())
+            .set("eet", self.eet.flat().to_vec())
+            .set("queue_slots", self.queue_slots)
+            .set("fairness_factor", self.fairness_factor)
+            .set("fairness_min_samples", self.fairness_min_samples)
+            .set("cv_exec", self.cv_exec);
+        j = match self.rate_window {
+            RateWindow::Cumulative => j.set("rate_window", "cumulative"),
+            RateWindow::Sliding(n) => j.set("rate_window", format!("sliding:{n}")),
+        };
+        if let Some(b) = self.battery {
+            j = j.set("battery", b);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        let name = j.req_str("name")?.to_string();
+        let machines_json = j.req("machines")?.as_array().ok_or("machines not array")?;
+        let mut machines = Vec::new();
+        for (i, mj) in machines_json.iter().enumerate() {
+            let mut spec = MachineSpec::new(
+                i,
+                mj.req_str("name")?,
+                mj.req_f64("dyn_power")?,
+                mj.req_f64("idle_power")?,
+            );
+            if let Some(s) = mj.get("speed").and_then(|v| v.as_f64()) {
+                spec = spec.with_speed(s);
+            }
+            machines.push(spec);
+        }
+        let task_type_names: Vec<String> = j
+            .req("task_types")?
+            .as_array()
+            .ok_or("task_types not array")?
+            .iter()
+            .map(|v| v.as_str().map(String::from).ok_or("task type not string"))
+            .collect::<Result<_, _>>()?;
+        let flat: Vec<f64> = j
+            .req("eet")?
+            .as_array()
+            .ok_or("eet not array")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("eet entry not number"))
+            .collect::<Result<_, _>>()?;
+        let eet = EetMatrix::new(task_type_names.len(), machines.len(), flat);
+        let rate_window = match j.get("rate_window").and_then(|v| v.as_str()) {
+            None | Some("cumulative") => RateWindow::Cumulative,
+            Some(s) if s.starts_with("sliding:") => {
+                let n = s["sliding:".len()..]
+                    .parse()
+                    .map_err(|_| "bad sliding window size")?;
+                RateWindow::Sliding(n)
+            }
+            Some(other) => return Err(format!("unknown rate_window '{other}'")),
+        };
+        let sc = Scenario {
+            name,
+            machines,
+            task_type_names,
+            eet,
+            queue_slots: j.req_f64("queue_slots")? as usize,
+            fairness_factor: j.req_f64("fairness_factor")?,
+            fairness_min_samples: j
+                .get("fairness_min_samples")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(10),
+            rate_window,
+            cv_exec: j.get("cv_exec").and_then(|v| v.as_f64()).unwrap_or(0.1),
+            battery: j.get("battery").and_then(|v| v.as_f64()),
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn load(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Scenario::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        assert!(Scenario::paper_synthetic().validate().is_ok());
+        assert!(Scenario::aws_two_app().validate().is_ok());
+    }
+
+    #[test]
+    fn paper_preset_shape() {
+        let s = Scenario::paper_synthetic();
+        assert_eq!(s.n_types(), 4);
+        assert_eq!(s.n_machines(), 4);
+        assert_eq!(s.queue_slots, 2);
+        assert_eq!(s.fairness_factor, 1.0);
+    }
+
+    #[test]
+    fn battery_auto_scales_with_horizon() {
+        let s = Scenario::paper_synthetic();
+        let e400 = s.battery_for(400.0);
+        let e800 = s.battery_for(800.0);
+        assert!((e800 / e400 - 2.0).abs() < 1e-12);
+        // explicit battery wins
+        let mut s2 = s;
+        s2.battery = Some(123.0);
+        assert_eq!(s2.battery_for(1e6), 123.0);
+    }
+
+    #[test]
+    fn json_roundtrip_synthetic() {
+        let s = Scenario::paper_synthetic();
+        let j = s.to_json();
+        let back = Scenario::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.machines, s.machines);
+        assert_eq!(back.task_type_names, s.task_type_names);
+        assert_eq!(back.eet.flat(), s.eet.flat());
+        assert_eq!(back.rate_window, s.rate_window);
+    }
+
+    #[test]
+    fn json_roundtrip_sliding_window() {
+        let mut s = Scenario::aws_two_app();
+        s.rate_window = RateWindow::Sliding(64);
+        s.battery = Some(5e4);
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.rate_window, RateWindow::Sliding(64));
+        assert_eq!(back.battery, Some(5e4));
+    }
+
+    #[test]
+    fn with_eet_replaces_matrix() {
+        let s = Scenario::aws_two_app();
+        let new = EetMatrix::new(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let s2 = s.with_eet(new.clone());
+        assert_eq!(s2.eet.flat(), new.flat());
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_eet_rejects_wrong_shape() {
+        let s = Scenario::paper_synthetic();
+        let _ = s.with_eet(EetMatrix::new(2, 2, vec![1.0; 4]));
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut s = Scenario::paper_synthetic();
+        s.queue_slots = 0;
+        assert!(s.validate().is_err());
+        let mut s = Scenario::paper_synthetic();
+        s.task_type_names.pop();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let s = Scenario::paper_synthetic();
+        let path = std::env::temp_dir().join("felare_scenario_test.json");
+        let path = path.to_str().unwrap();
+        s.save(path).unwrap();
+        let back = Scenario::load(path).unwrap();
+        assert_eq!(back.name, s.name);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,124 @@
+//! Tasks and task types (paper §III).
+//!
+//! A *task type* is one of the pre-known ML applications hosted by the HEC
+//! system (object detection, speech recognition, …). A *task* is one user
+//! request: it arrives dynamically, carries a hard deadline (Eq. 4), and is
+//! independent of all other tasks. Task types share a single priority —
+//! fairness (§V) is defined over their completion rates, not over weights.
+
+use std::fmt;
+
+/// Index into the scenario's task-type table (row of the EET matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskTypeId(pub usize);
+
+impl fmt::Display for TaskTypeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "T{}", self.0 + 1) // paper numbering T1..T4
+    }
+}
+
+/// Simulation time in seconds (real-serving mode uses the same unit).
+pub type Time = f64;
+
+/// One request to an ML application.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Unique, monotonically increasing with arrival order.
+    pub id: u64,
+    pub type_id: TaskTypeId,
+    pub arrival: Time,
+    /// Hard deadline (absolute). Completing after it has zero value.
+    pub deadline: Time,
+    /// Multiplicative execution-time factor for this individual task:
+    /// actual exec on machine j = EET[type][j] · size_factor (paper §VI:
+    /// per-task times sampled from a Gamma around the EET entry).
+    pub size_factor: f64,
+}
+
+impl Task {
+    /// Remaining time to the deadline; negative once it has passed.
+    pub fn slack_at(&self, now: Time) -> Time {
+        self.deadline - now
+    }
+
+    pub fn expired_at(&self, now: Time) -> bool {
+        now >= self.deadline
+    }
+}
+
+/// Why a task ultimately did not complete on time (paper Fig. 6 splits
+/// "unsuccessful" into cancelled-before-assignment vs. missed-deadline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Mapper proactively dropped it from the arriving queue (ELARE
+    /// Algorithm 1: infeasible task whose deadline already passed).
+    MapperDropped,
+    /// FELARE victim-dropping: evicted from a local queue to make room for
+    /// a suffered task (paper §V).
+    VictimDropped,
+    /// Deadline passed while waiting (deferred) in the arriving queue.
+    DeadlineExpired,
+}
+
+/// Terminal state of a task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Outcome {
+    /// Finished before its deadline on `machine`.
+    Completed { machine: usize, finish: Time },
+    /// Started (or was queued) on `machine` but the deadline passed; the
+    /// machine aborts it at the deadline (Eq. 1 middle case) having burnt
+    /// `wasted_energy` for nothing.
+    Missed { machine: usize, at: Time },
+    /// Never ran to completion on any machine.
+    Cancelled { reason: CancelReason, at: Time },
+}
+
+impl Outcome {
+    pub fn is_completed(&self) -> bool {
+        matches!(self, Outcome::Completed { .. })
+    }
+
+    pub fn is_missed(&self) -> bool {
+        matches!(self, Outcome::Missed { .. })
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, Outcome::Cancelled { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> Task {
+        Task { id: 1, type_id: TaskTypeId(0), arrival: 1.0, deadline: 3.0, size_factor: 1.0 }
+    }
+
+    #[test]
+    fn display_uses_paper_numbering() {
+        assert_eq!(TaskTypeId(0).to_string(), "T1");
+        assert_eq!(TaskTypeId(3).to_string(), "T4");
+    }
+
+    #[test]
+    fn slack_and_expiry() {
+        let t = task();
+        assert_eq!(t.slack_at(1.0), 2.0);
+        assert_eq!(t.slack_at(4.0), -1.0);
+        assert!(!t.expired_at(2.999));
+        assert!(t.expired_at(3.0)); // deadline instant counts as expired
+        assert!(t.expired_at(5.0));
+    }
+
+    #[test]
+    fn outcome_predicates() {
+        let c = Outcome::Completed { machine: 0, finish: 2.0 };
+        let m = Outcome::Missed { machine: 1, at: 3.0 };
+        let x = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at: 2.5 };
+        assert!(c.is_completed() && !c.is_missed() && !c.is_cancelled());
+        assert!(m.is_missed());
+        assert!(x.is_cancelled());
+    }
+}

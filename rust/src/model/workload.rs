@@ -1,0 +1,235 @@
+//! Workload traces (paper §VI): Poisson arrivals over a fixed task count,
+//! uniformly mixed task types, per-task Gamma service-time factors.
+//!
+//! A `Trace` is the unit of experimentation — the paper uses "30
+//! synthesized workload traces with different arrival rates where each
+//! workload trace included 2,000 tasks". Traces serialize to JSON so runs
+//! are replayable and shareable across the sim and serve paths.
+
+use crate::model::eet::EetMatrix;
+use crate::model::task::{Task, TaskTypeId, Time};
+use crate::util::json::Json;
+use crate::util::rng::{Exponential, Gamma, Pcg64};
+
+/// Trace generation parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadParams {
+    /// Total tasks in the trace (paper: 2000).
+    pub n_tasks: usize,
+    /// Aggregate arrival rate λ in tasks/second (Poisson process).
+    pub arrival_rate: f64,
+    /// CV of the per-task execution-time factor (Gamma with mean 1).
+    pub cv_exec: f64,
+    /// Optional per-type mix weights; uniform if empty.
+    pub type_weights: Vec<f64>,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        Self { n_tasks: 2000, arrival_rate: 5.0, cv_exec: 0.1, type_weights: Vec::new() }
+    }
+}
+
+/// A fully materialised workload: tasks sorted by arrival, deadlines from
+/// Eq. 4, per-task size factors already drawn.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub tasks: Vec<Task>,
+    pub arrival_rate: f64,
+}
+
+impl Trace {
+    /// Generate a trace against an EET matrix (deadlines need ē_i and ē).
+    pub fn generate(
+        params: &WorkloadParams,
+        eet: &EetMatrix,
+        rng: &mut Pcg64,
+    ) -> Trace {
+        assert!(params.n_tasks > 0);
+        assert!(params.arrival_rate > 0.0);
+        let n_types = eet.n_types();
+        let weights = if params.type_weights.is_empty() {
+            vec![1.0; n_types]
+        } else {
+            assert_eq!(params.type_weights.len(), n_types, "weights/types mismatch");
+            params.type_weights.clone()
+        };
+        let total_w: f64 = weights.iter().sum();
+        let inter = Exponential::new(params.arrival_rate);
+        let mut size_gamma = Gamma::from_mean_cv(1.0, params.cv_exec.max(1e-6));
+
+        let mut tasks = Vec::with_capacity(params.n_tasks);
+        let mut now: Time = 0.0;
+        for id in 0..params.n_tasks {
+            now += inter.sample(rng);
+            // weighted type draw
+            let mut u = rng.f64() * total_w;
+            let mut ty = 0;
+            for (k, w) in weights.iter().enumerate() {
+                if u < *w {
+                    ty = k;
+                    break;
+                }
+                u -= *w;
+            }
+            let type_id = TaskTypeId(ty);
+            let size_factor = if params.cv_exec <= 0.0 { 1.0 } else { size_gamma.sample(rng) };
+            tasks.push(Task {
+                id: id as u64,
+                type_id,
+                arrival: now,
+                deadline: eet.deadline(type_id, now),
+                size_factor,
+            });
+        }
+        Trace { tasks, arrival_rate: params.arrival_rate }
+    }
+
+    /// Number of tasks per type (for completion-rate denominators).
+    pub fn arrivals_per_type(&self, n_types: usize) -> Vec<u64> {
+        let mut counts = vec![0u64; n_types];
+        for t in &self.tasks {
+            counts[t.type_id.0] += 1;
+        }
+        counts
+    }
+
+    /// Time of the last arrival.
+    pub fn horizon(&self) -> Time {
+        self.tasks.last().map(|t| t.arrival).unwrap_or(0.0)
+    }
+
+    // ---- serialization ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                Json::object()
+                    .set("id", t.id)
+                    .set("type", t.type_id.0)
+                    .set("arrival", t.arrival)
+                    .set("deadline", t.deadline)
+                    .set("size_factor", t.size_factor)
+            })
+            .collect();
+        Json::object()
+            .set("arrival_rate", self.arrival_rate)
+            .set("tasks", Json::Array(tasks))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let rate = j.req_f64("arrival_rate")?;
+        let arr = j
+            .req("tasks")?
+            .as_array()
+            .ok_or("'tasks' is not an array")?;
+        let mut tasks = Vec::with_capacity(arr.len());
+        for tj in arr {
+            tasks.push(Task {
+                id: tj.req_f64("id")? as u64,
+                type_id: TaskTypeId(tj.req_f64("type")? as usize),
+                arrival: tj.req_f64("arrival")?,
+                deadline: tj.req_f64("deadline")?,
+                size_factor: tj.req_f64("size_factor")?,
+            });
+        }
+        Ok(Trace { tasks, arrival_rate: rate })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+
+    fn gen(rate: f64, n: usize, seed: u64) -> Trace {
+        let params = WorkloadParams { n_tasks: n, arrival_rate: rate, ..Default::default() };
+        Trace::generate(&params, &paper_table1(), &mut Pcg64::new(seed))
+    }
+
+    #[test]
+    fn arrivals_sorted_and_sized() {
+        let tr = gen(5.0, 500, 1);
+        assert_eq!(tr.tasks.len(), 500);
+        for w in tr.tasks.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_respected() {
+        let tr = gen(10.0, 5000, 2);
+        let measured = tr.tasks.len() as f64 / tr.horizon();
+        assert!((measured - 10.0).abs() < 0.6, "rate {measured}");
+    }
+
+    #[test]
+    fn deadlines_follow_eq4() {
+        let eet = paper_table1();
+        let tr = gen(3.0, 100, 3);
+        for t in &tr.tasks {
+            let expect = t.arrival + eet.row_mean(t.type_id) + eet.grand_mean();
+            assert!((t.deadline - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn type_mix_roughly_uniform() {
+        let tr = gen(5.0, 8000, 4);
+        let counts = tr.arrivals_per_type(4);
+        for &c in &counts {
+            assert!((c as f64 - 2000.0).abs() < 200.0, "{counts:?}");
+        }
+        assert_eq!(counts.iter().sum::<u64>(), 8000);
+    }
+
+    #[test]
+    fn weighted_mix() {
+        let params = WorkloadParams {
+            n_tasks: 6000,
+            arrival_rate: 5.0,
+            cv_exec: 0.1,
+            type_weights: vec![3.0, 1.0, 1.0, 1.0],
+        };
+        let tr = Trace::generate(&params, &paper_table1(), &mut Pcg64::new(5));
+        let counts = tr.arrivals_per_type(4);
+        assert!(counts[0] > 2 * counts[1], "{counts:?}");
+    }
+
+    #[test]
+    fn size_factors_near_one() {
+        let tr = gen(5.0, 4000, 6);
+        let mean = tr.tasks.iter().map(|t| t.size_factor).sum::<f64>() / 4000.0;
+        assert!((mean - 1.0).abs() < 0.02, "mean factor {mean}");
+        assert!(tr.tasks.iter().all(|t| t.size_factor > 0.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(5.0, 100, 42);
+        let b = gen(5.0, 100, 42);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.type_id, y.type_id);
+            assert_eq!(x.size_factor, y.size_factor);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let tr = gen(4.0, 50, 7);
+        let j = tr.to_json();
+        let back = Trace::from_json(&Json::parse(&j.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(back.tasks.len(), tr.tasks.len());
+        assert_eq!(back.arrival_rate, tr.arrival_rate);
+        for (x, y) in tr.tasks.iter().zip(&back.tasks) {
+            assert!((x.arrival - y.arrival).abs() < 1e-9);
+            assert!((x.deadline - y.deadline).abs() < 1e-9);
+            assert_eq!(x.type_id, y.type_id);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT artifact loader: HLO text → compiled executables (the AOT bridge).
+//!
+//! `make artifacts` (python, build-time only) lowers each ML task-type
+//! model to `artifacts/<name>.hlo.txt` plus a `manifest.json` describing
+//! shapes. This module loads the manifest, parses the HLO text with XLA's
+//! own parser (`HloModuleProto::from_text_file` — text, never serialized
+//! protos; jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects) and compiles one PJRT executable per task type on the CPU
+//! client. After construction the serving hot path is pure rust + PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Manifest entry for one task-type model (mirrors aot.py's output).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub id: usize,
+    pub name: String,
+    pub description: String,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub param_count: u64,
+    pub flops_estimate: u64,
+}
+
+impl ModelMeta {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ModelMeta> {
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            Ok(j.req(key)?
+                .as_array()
+                .ok_or_else(|| Error::Artifact(format!("{key} not an array")))?
+                .iter()
+                .map(|v| v.as_u64().unwrap_or(0) as usize)
+                .collect())
+        };
+        Ok(ModelMeta {
+            id: j.req_f64("id").map_err(Error::Artifact)? as usize,
+            name: j.req_str("name").map_err(Error::Artifact)?.to_string(),
+            description: j
+                .get("description")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            file: j.req_str("file").map_err(Error::Artifact)?.to_string(),
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            param_count: j.get("param_count").and_then(|v| v.as_u64()).unwrap_or(0),
+            flops_estimate: j.get("flops_estimate").and_then(|v| v.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+/// Parse `manifest.json` (shared by the loader and by tools that only need
+/// metadata).
+pub fn load_manifest(dir: &Path) -> Result<Vec<ModelMeta>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Artifact(format!("reading {}: {e}", path.display())))?;
+    let j = Json::parse(&text).map_err(Error::Artifact)?;
+    let fmt = j.req_str("format").map_err(Error::Artifact)?;
+    if fmt != "hlo-text/return-tuple-1" {
+        return Err(Error::Artifact(format!("unsupported artifact format '{fmt}'")));
+    }
+    let types = j
+        .req("task_types")
+        .map_err(Error::Artifact)?
+        .as_array()
+        .ok_or_else(|| Error::Artifact("task_types not an array".into()))?;
+    let mut metas = Vec::with_capacity(types.len());
+    for (i, tj) in types.iter().enumerate() {
+        let meta = ModelMeta::from_json(tj)?;
+        if meta.id != i {
+            return Err(Error::Artifact(format!(
+                "manifest ids out of order: entry {i} has id {}",
+                meta.id
+            )));
+        }
+        metas.push(meta);
+    }
+    if metas.is_empty() {
+        return Err(Error::Artifact("manifest lists no task types".into()));
+    }
+    Ok(metas)
+}
+
+/// A compiled task-type model on the PJRT CPU client.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run one inference; returns the flat f32 output.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.meta.input_len() {
+            return Err(Error::Runtime(format!(
+                "{}: input length {} != expected {}",
+                self.meta.name,
+                input.len(),
+                self.meta.input_len()
+            )));
+        }
+        let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.meta.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("tuple unwrap: {e}")))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+        if values.len() != self.meta.output_len() {
+            return Err(Error::Runtime(format!(
+                "{}: output length {} != manifest {}",
+                self.meta.name,
+                values.len(),
+                self.meta.output_len()
+            )));
+        }
+        Ok(values)
+    }
+}
+
+/// The PJRT runtime: CPU client + one compiled executable per task type.
+pub struct Runtime {
+    pub models: Vec<LoadedModel>,
+    platform: String,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let metas = load_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        let platform = client.platform_name();
+        let mut models = Vec::with_capacity(metas.len());
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Artifact(format!("{}: parse: {e}", meta.file)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("{}: compile: {e}", meta.file)))?;
+            crate::log_debug!("compiled {} ({} params)", meta.name, meta.param_count);
+            models.push(LoadedModel { meta, exe });
+        }
+        Ok(Runtime { models, platform, dir: dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn n_task_types(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn model(&self, type_idx: usize) -> Result<&LoadedModel> {
+        self.models
+            .get(type_idx)
+            .ok_or_else(|| Error::Runtime(format!("no model for task type {type_idx}")))
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.iter().find(|m| m.meta.name == name)
+    }
+}
+
+/// Default artifact location relative to the repo root.
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("FELARE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        // integration tests run from the workspace root
+        let dir = default_artifact_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_parses_when_built() {
+        let Some(dir) = artifacts() else { return };
+        let metas = load_manifest(&dir).unwrap();
+        assert_eq!(metas.len(), 5);
+        assert_eq!(metas[0].name, "obj_det");
+        assert_eq!(metas[2].name, "face_rec");
+        assert!(metas.iter().all(|m| m.input_len() > 0 && m.output_len() > 0));
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = load_manifest(Path::new("/nonexistent-felare")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        let dir = std::env::temp_dir().join("felare_badfmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "protobuf", "task_types": []}"#,
+        )
+        .unwrap();
+        let err = load_manifest(&dir).unwrap_err();
+        assert!(err.to_string().contains("unsupported"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Full load+execute coverage lives in rust/tests/runtime_integration.rs
+    // (needs the PJRT client; kept out of the unit cycle for speed).
+}

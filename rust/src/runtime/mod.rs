@@ -1,0 +1,11 @@
+//! PJRT runtime (Layer-3 ↔ Layer-2 bridge): load AOT'd HLO-text artifacts,
+//! compile them on the PJRT CPU client, execute and profile them. Python
+//! never appears on this path — artifacts are plain files.
+
+pub mod client;
+pub mod executor;
+pub mod profiler;
+
+pub use client::{default_artifact_dir, load_manifest, ModelMeta, Runtime};
+pub use executor::{ExecRecord, Executor};
+pub use profiler::{profile_eet, ProfileReport};

@@ -1,0 +1,71 @@
+//! EET-by-profiling (paper §III: "we assume that the EET matrix is
+//! available via leveraging task profiling data of the HEC system").
+//!
+//! Each task type's artifact is executed `reps` times on the real PJRT
+//! CPU client; the median wall time is the *base* execution time, and the
+//! modeled machines scale it by their `speed` multiplier (the image has
+//! one physical CPU — heterogeneity is modeled exactly the way the paper's
+//! simulator models it, DESIGN.md §Hardware-adaptation).
+
+use crate::error::Result;
+use crate::model::machine::MachineSpec;
+use crate::model::EetMatrix;
+use crate::runtime::executor::Executor;
+use crate::runtime::Runtime;
+use crate::util::stats::Summary;
+
+/// Profile report: per-type base times + the derived EET.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    /// Median PJRT wall seconds per task type (the profiling base).
+    pub base_times: Vec<f64>,
+    /// p99 per type (tail visibility).
+    pub p99_times: Vec<f64>,
+    pub eet: EetMatrix,
+}
+
+/// Profile every task type and derive the EET matrix for `machines`.
+pub fn profile_eet(
+    runtime: &Runtime,
+    machines: &[MachineSpec],
+    reps: usize,
+) -> Result<ProfileReport> {
+    assert!(reps >= 3, "need a few reps for a stable median");
+    let mut exec = Executor::new(runtime, 4, 0xBA5E);
+    let n_types = runtime.n_task_types();
+    let mut base_times = Vec::with_capacity(n_types);
+    let mut p99_times = Vec::with_capacity(n_types);
+    for ty in 0..n_types {
+        // warmup: first execution pays compile/cache effects
+        exec.run(ty)?;
+        let mut walls = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            walls.push(exec.run(ty)?.wall);
+        }
+        let s = Summary::of(&walls);
+        base_times.push(s.median());
+        p99_times.push(s.percentile(99.0));
+        crate::log_info!(
+            "profiled {}: median {:.3} ms, p99 {:.3} ms",
+            runtime.model(ty)?.meta.name,
+            s.median() * 1e3,
+            s.percentile(99.0) * 1e3
+        );
+    }
+    let mut data = Vec::with_capacity(n_types * machines.len());
+    for base in &base_times {
+        for m in machines {
+            data.push(base * m.speed);
+        }
+    }
+    Ok(ProfileReport {
+        base_times,
+        p99_times,
+        eet: EetMatrix::new(n_types, machines.len(), data),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised by rust/tests/runtime_integration.rs (needs artifacts).
+}

@@ -1,0 +1,179 @@
+//! Adaptive meta-heuristic — the paper's second future-work item (§VIII):
+//! "measure the heterogeneity degree of the HEC system and leverage it to
+//! dynamically apply various mapping heuristics, such that the energy and
+//! latency objectives are met."
+//!
+//! Two signals drive the switch, both computable from the mapping-event
+//! view in O(machines + tasks):
+//!
+//! * **heterogeneity degree** — the mean per-row coefficient of variation
+//!   of the EET matrix (how differently machines treat a task type). In a
+//!   near-homogeneous system energy-greedy choices cost little latency, so
+//!   ELARE is safe even under pressure.
+//! * **pressure** — queued work relative to capacity: (arriving tasks +
+//!   occupied local-queue slots) / total slots. Under low pressure every
+//!   task finds a feasible efficient machine (ELARE ≡ best); as pressure
+//!   rises, contention creates the starvation FELARE exists to fix.
+//!
+//! Policy: FELARE when `pressure ≥ threshold / max(heterogeneity, ε)`,
+//! ELARE otherwise — i.e. the more heterogeneous the system, the earlier
+//! fairness protection kicks in. Both inner heuristics are stateless, so
+//! switching per event is sound.
+
+use crate::model::EetMatrix;
+use crate::sched::elare::Elare;
+use crate::sched::felare::Felare;
+use crate::sched::{MappingHeuristic, SchedView};
+use crate::util::stats::mean_std;
+
+/// Mean per-row CV of the EET matrix — the "heterogeneity degree".
+pub fn heterogeneity_degree(eet: &EetMatrix) -> f64 {
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for row in eet.rows() {
+        let (mu, sigma) = mean_std(row);
+        if mu > 0.0 {
+            acc += sigma / mu;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Instantaneous pressure on the system at a mapping event.
+pub fn pressure(view: &SchedView) -> f64 {
+    let total_slots: usize = view
+        .machines
+        .iter()
+        .map(|m| m.free_slots + m.queued.len())
+        .sum();
+    if total_slots == 0 {
+        return f64::INFINITY;
+    }
+    let occupied: usize = view.machines.iter().map(|m| m.queued.len()).sum();
+    let waiting = view.unconsumed().count();
+    (occupied + waiting) as f64 / total_slots as f64
+}
+
+#[derive(Debug)]
+pub struct Adaptive {
+    elare: Elare,
+    felare: Felare,
+    /// Pressure threshold at heterogeneity 1.0 (scaled by 1/heterogeneity).
+    pub threshold: f64,
+    /// Mapping events routed to each inner heuristic (diagnostics).
+    pub elare_events: u64,
+    pub felare_events: u64,
+}
+
+impl Default for Adaptive {
+    fn default() -> Self {
+        Self {
+            elare: Elare,
+            felare: Felare::default(),
+            threshold: 0.35,
+            elare_events: 0,
+            felare_events: 0,
+        }
+    }
+}
+
+impl MappingHeuristic for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn wants_fairness(&self) -> bool {
+        true // the FELARE arm needs completion rates
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        let h = heterogeneity_degree(view.eet).max(1e-3);
+        let cutoff = self.threshold / h;
+        if pressure(view) >= cutoff {
+            self.felare_events += 1;
+            self.felare.map(view);
+        } else {
+            self.elare_events += 1;
+            self.elare.map(view);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    #[test]
+    fn heterogeneity_of_table1() {
+        // Table I rows have strong spread (0.736…4.359) — CV well above 0.5
+        let h = heterogeneity_degree(&paper_table1());
+        assert!(h > 0.5 && h < 1.0, "h={h}");
+    }
+
+    #[test]
+    fn homogeneous_matrix_has_zero_degree() {
+        let eet = crate::model::EetMatrix::new(2, 3, vec![2.0; 6]);
+        assert_eq!(heterogeneity_degree(&eet), 0.0);
+    }
+
+    #[test]
+    fn pressure_counts_waiting_and_queued() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0), mk_task(1, 1, 0.0, 10.0)];
+        let v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        // 8 slots, 0 occupied, 2 waiting
+        assert!((pressure(&v) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_pressure_routes_to_elare() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 4), &tasks, None);
+        let mut a = Adaptive::default();
+        a.map(&mut v);
+        assert_eq!(a.elare_events, 1);
+        assert_eq!(a.felare_events, 0);
+        assert!(matches!(v.actions()[0], Action::Assign { .. }));
+    }
+
+    #[test]
+    fn high_pressure_routes_to_felare() {
+        let eet = paper_table1();
+        let tasks: Vec<_> = (0..16).map(|i| mk_task(i, (i % 4) as usize, 0.0, 10.0)).collect();
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        let mut a = Adaptive::default();
+        a.map(&mut v);
+        assert_eq!(a.felare_events, 1);
+        assert_eq!(a.elare_events, 0);
+    }
+
+    #[test]
+    fn threshold_scales_with_heterogeneity() {
+        // same pressure, homogeneous system → stays on ELARE longer
+        let eet = crate::model::EetMatrix::new(4, 4, vec![2.0; 16]);
+        let tasks: Vec<_> = (0..4).map(|i| mk_task(i, (i % 4) as usize, 0.0, 10.0)).collect();
+        let snaps: Vec<_> = crate::model::machine::paper_machines()
+            .into_iter()
+            .map(|spec| crate::sched::MachineSnapshot {
+                dyn_power: spec.dyn_power,
+                avail: 0.0,
+                free_slots: 2,
+                queued: vec![],
+            })
+            .collect();
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let mut a = Adaptive::default();
+        a.map(&mut v);
+        // heterogeneity ~0 ⇒ cutoff huge ⇒ ELARE
+        assert_eq!(a.elare_events, 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! ELARE — Energy- and Latency-Aware Resource allocation (paper §IV,
+//! Algorithms 1–3).
+//!
+//! Phase-I (Algorithm 2): per arriving task, the feasible machine with the
+//! minimum expected energy consumption (Eq. 2). Tasks with no feasible
+//! machine are *deferred* to a later mapping event while their deadline is
+//! still ahead, and *dropped* once it passes (Algorithm 1's prose —
+//! lines 9–12 of the paper's pseudocode have the branch inverted; see
+//! DESIGN.md §Pseudocode-erratum).
+//!
+//! Phase-II (Algorithm 3): each machine with nominees receives the one
+//! with minimum expected energy. Rounds repeat to a fixpoint, so one
+//! mapping event can fill several slots while feasibility is re-evaluated
+//! against the updated availability estimates.
+
+use crate::sched::feasibility::{assign_winners_per_machine, feasible_efficient_pairs};
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug, Default)]
+pub struct Elare;
+
+/// One ELARE phase-I + phase-II fixpoint over the view; shared with FELARE
+/// (which runs it after its high-priority pass).
+pub(crate) fn elare_rounds(view: &mut SchedView) {
+    loop {
+        let (pairs, _infeasible) = feasible_efficient_pairs(view);
+        if pairs.is_empty() {
+            break;
+        }
+        let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
+            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+        });
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+/// Algorithm 1 lines 8–12 (corrected): drop infeasible tasks whose
+/// deadline has passed; defer the rest (no action — they stay queued).
+pub(crate) fn drop_or_defer_infeasible(view: &mut SchedView) {
+    let expired: Vec<usize> = view
+        .unconsumed()
+        .filter(|(_, t)| t.expired_at(view.now))
+        .map(|(i, _)| i)
+        .collect();
+    let deferred = view.unconsumed().count() - expired.len();
+    for idx in expired {
+        view.drop_task(idx);
+    }
+    view.deferrals += deferred as u64;
+}
+
+impl MappingHeuristic for Elare {
+    fn name(&self) -> &'static str {
+        "elare"
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        elare_rounds(view);
+        drop_or_defer_infeasible(view);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    fn assigns(v: &SchedView) -> Vec<(usize, usize)> {
+        v.actions()
+            .iter()
+            .filter_map(|a| match a {
+                Action::Assign { task_idx, machine } => Some((*task_idx, machine.0)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn drops(v: &SchedView) -> Vec<usize> {
+        v.actions()
+            .iter()
+            .filter_map(|a| match a {
+                Action::Drop { task_idx } => Some(*task_idx),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn picks_min_energy_feasible_machine() {
+        let eet = paper_table1();
+        // T1 energies: m1 3.58, m2 5.09, m3 7.85, m4 1.10 → m4
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        assert_eq!(assigns(&v), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn energy_choice_vs_mm_differs_under_contention() {
+        // Two T1 tasks. m4 takes one; for the second, m4's queue pushes its
+        // start to 0.736 (still feasible for deadline 100) — ELARE puts it
+        // on m4 again (m4 energy 1.10 still minimal). Now with deadline
+        // tight enough that queued m4 start is infeasible, ELARE must pick
+        // the cheapest *feasible* alternative: m1 (3.58) over m2 (5.09).
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 1.0), mk_task(1, 0, 0.0, 1.0)];
+        // deadline 1.0: m4 idle feasible (0.736); m4 after one queued task
+        // starts at 0.736 → 1.472 > 1.0 infeasible; m1 needs 2.238 infeasible
+        // → second task must be deferred (not dropped: deadline ahead).
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        assert_eq!(assigns(&v), vec![(0, 3)]);
+        assert!(drops(&v).is_empty(), "deadline ahead ⇒ defer, not drop");
+        assert_eq!(v.deferrals, 1);
+    }
+
+    #[test]
+    fn defers_infeasible_future_deadline() {
+        let eet = paper_table1();
+        // infeasible everywhere (0.5 < 0.736 min) but deadline not passed
+        let tasks = vec![mk_task(0, 0, 0.0, 0.5)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        assert!(assigns(&v).is_empty());
+        assert!(drops(&v).is_empty());
+        assert_eq!(v.deferrals, 1);
+    }
+
+    #[test]
+    fn drops_expired_tasks() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 2.0)];
+        // mapping event at t=3 > deadline 2
+        let mut v = SchedView::new(3.0, &eet, idle_snapshots(3.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        assert_eq!(drops(&v), vec![0]);
+        assert_eq!(v.deferrals, 0);
+    }
+
+    #[test]
+    fn never_assigns_infeasible_pairs() {
+        let eet = paper_table1();
+        // mix: one feasible task, one hopeless
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0), mk_task(1, 2, 0.0, 0.1)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        let a = assigns(&v);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].0, 0);
+        assert_eq!(v.deferrals, 1, "hopeless-but-unexpired task deferred");
+    }
+
+    #[test]
+    fn phase2_one_task_per_machine_per_round() {
+        let eet = paper_table1();
+        // Three T3 tasks with a deadline that only m4 can meet (T3 row:
+        // m1 2.076, m2 1.531, m3 5.096, m4 0.865; deadline 1.0 → only m4).
+        let tasks = vec![
+            mk_task(0, 2, 0.0, 1.0),
+            mk_task(1, 2, 0.0, 1.0),
+            mk_task(2, 2, 0.0, 1.0),
+        ];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        // round 1: one of them on m4; round 2: start 0.865 ⇒ 1.73 > 1.0 ⇒
+        // infeasible ⇒ others deferred
+        assert_eq!(assigns(&v).len(), 1);
+        assert_eq!(v.deferrals, 2);
+    }
+
+    #[test]
+    fn respects_queue_capacity() {
+        let eet = paper_table1();
+        let tasks: Vec<_> = (0..20).map(|i| mk_task(i, 0, 0.0, 1000.0)).collect();
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Elare.map(&mut v);
+        assert!(assigns(&v).len() <= 8, "4 machines × 2 slots");
+        for m in &v.machines {
+            assert!(m.queued.len() <= 2);
+        }
+    }
+}

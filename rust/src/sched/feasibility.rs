@@ -1,0 +1,309 @@
+//! Equations 1–2 (paper §IV-B): expected completion time, expected energy
+//! consumption, feasibility — plus the shared phase-1 computations every
+//! two-phase heuristic builds on.
+
+use crate::model::machine::MachineId;
+use crate::model::task::{Task, Time};
+use crate::sched::SchedView;
+
+/// Eq. 1 — expected completion time of a task started at `s` with expected
+/// execution `e` and deadline `d`:
+///
+/// * `s + e ≤ d`  → completes at `s + e` (feasible);
+/// * `s < d < s+e` → aborted at the deadline, `c = d`;
+/// * `s ≥ d`      → never starts, `c = s`.
+pub fn completion_time(s: Time, e: f64, d: Time) -> Time {
+    if s + e <= d {
+        s + e
+    } else if s < d {
+        d
+    } else {
+        s
+    }
+}
+
+/// Eq. 2 — expected energy a machine with dynamic power `p_dyn` spends on
+/// the task (wasted in full if the deadline interrupts it):
+///
+/// * success (`s + e ≤ d`): `p_dyn · e`;
+/// * aborted mid-run (`s < d < s+e`): `p_dyn · (d − s)` — all wasted;
+/// * never starts (`s ≥ d`): `0`.
+pub fn expected_energy(p_dyn: f64, s: Time, e: f64, d: Time) -> f64 {
+    if s + e <= d {
+        p_dyn * e
+    } else if s < d {
+        p_dyn * (d - s)
+    } else {
+        0.0
+    }
+}
+
+/// A [task, machine] pair is feasible iff the task is expected to complete
+/// by its deadline (Eq. 1 first case).
+pub fn is_feasible(s: Time, e: f64, d: Time) -> bool {
+    s + e <= d
+}
+
+/// One phase-1 nomination: task `task_idx` matched to `machine`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pair {
+    pub task_idx: usize,
+    pub machine: MachineId,
+    /// Expected completion time c_ij (Eq. 1).
+    pub completion: Time,
+    /// Expected energy consumption ec_ij (Eq. 2).
+    pub energy: f64,
+}
+
+/// Per-task expected values on one machine, from the current view state.
+pub fn pair_for(view: &SchedView, task: &Task, j: MachineId) -> Pair {
+    let s = view.start_time(j);
+    let e = view.eet.get(task.type_id, j);
+    let d = task.deadline;
+    Pair {
+        task_idx: usize::MAX, // caller fills
+        machine: j,
+        completion: completion_time(s, e, d),
+        energy: expected_energy(view.machines[j.0].dyn_power, s, e, d),
+    }
+}
+
+/// ELARE Phase-I (Algorithm 2): for every unconsumed task, the feasible
+/// machine with minimum expected energy. Returns the feasible-efficient
+/// pairs and the indices of infeasible tasks (no machine with a free slot
+/// can complete them on time).
+pub fn feasible_efficient_pairs(view: &SchedView) -> (Vec<Pair>, Vec<usize>) {
+    let mut pairs = Vec::new();
+    let mut infeasible = Vec::new();
+    for (idx, task) in view.unconsumed() {
+        let mut best: Option<Pair> = None;
+        for j in 0..view.machines.len() {
+            let j = MachineId(j);
+            if !view.has_free_slot(j) {
+                continue;
+            }
+            let s = view.start_time(j);
+            let e = view.eet.get(task.type_id, j);
+            if !is_feasible(s, e, task.deadline) {
+                continue;
+            }
+            let ec = expected_energy(view.machines[j.0].dyn_power, s, e, task.deadline);
+            let c = completion_time(s, e, task.deadline);
+            let cand = Pair { task_idx: idx, machine: j, completion: c, energy: ec };
+            if best.map_or(true, |b| ec < b.energy) {
+                best = Some(cand);
+            }
+        }
+        match best {
+            Some(p) => pairs.push(p),
+            None => infeasible.push(idx),
+        }
+    }
+    (pairs, infeasible)
+}
+
+/// Baselines' Phase-1 (paper §VI-B): for every unconsumed task, the
+/// machine (with a free slot) offering minimum expected completion time —
+/// regardless of feasibility (MM/MSD/MMU never proactively drop).
+pub fn min_completion_pairs(view: &SchedView) -> Vec<Pair> {
+    let mut pairs = Vec::new();
+    for (idx, task) in view.unconsumed() {
+        let mut best: Option<Pair> = None;
+        for j in 0..view.machines.len() {
+            let j = MachineId(j);
+            if !view.has_free_slot(j) {
+                continue;
+            }
+            let s = view.start_time(j);
+            let e = view.eet.get(task.type_id, j);
+            let c = completion_time(s, e, task.deadline);
+            let ec = expected_energy(view.machines[j.0].dyn_power, s, e, task.deadline);
+            let cand = Pair { task_idx: idx, machine: j, completion: c, energy: ec };
+            // tie-break on energy to keep selection deterministic
+            if best.map_or(true, |b| {
+                c < b.completion || (c == b.completion && ec < b.energy)
+            }) {
+                best = Some(cand);
+            }
+        }
+        if let Some(p) = best {
+            pairs.push(p);
+        }
+    }
+    pairs
+}
+
+/// Phase-2 helper: group phase-1 pairs per machine and pick one winner per
+/// machine by `better(a, b) == true` when `a` beats `b`. Winners are
+/// assigned to the view; returns how many assignments were made.
+pub fn assign_winners_per_machine(
+    view: &mut SchedView,
+    pairs: &[Pair],
+    better: impl Fn(&Pair, &Pair, &SchedView) -> bool,
+) -> usize {
+    let n_machines = view.machines.len();
+    let mut winner: Vec<Option<Pair>> = vec![None; n_machines];
+    for p in pairs {
+        let slot = &mut winner[p.machine.0];
+        if slot.map_or(true, |w| better(p, &w, view)) {
+            *slot = Some(*p);
+        }
+    }
+    let mut assigned = 0;
+    for w in winner.into_iter().flatten() {
+        // The view may have changed since phase-1 (earlier machine in this
+        // loop consumed the task? no — one winner per machine and tasks are
+        // distinct by construction in phase-1 output), but guard anyway.
+        if !view.is_consumed(w.task_idx) && view.has_free_slot(w.machine) {
+            view.assign(w.task_idx, w.machine);
+            assigned += 1;
+        }
+    }
+    assigned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+
+    // ---- Eq. 1 --------------------------------------------------------------
+
+    #[test]
+    fn eq1_three_cases() {
+        // feasible
+        assert_eq!(completion_time(1.0, 2.0, 5.0), 3.0);
+        // aborted mid-run at deadline
+        assert_eq!(completion_time(1.0, 10.0, 5.0), 5.0);
+        // never starts
+        assert_eq!(completion_time(6.0, 1.0, 5.0), 6.0);
+        // boundary: exactly on deadline counts as feasible
+        assert_eq!(completion_time(1.0, 4.0, 5.0), 5.0);
+        assert!(is_feasible(1.0, 4.0, 5.0));
+    }
+
+    // ---- Eq. 2 --------------------------------------------------------------
+
+    #[test]
+    fn eq2_three_cases() {
+        // success: p·e
+        assert_eq!(expected_energy(2.0, 1.0, 2.0, 5.0), 4.0);
+        // aborted: p·(d−s), fully wasted
+        assert_eq!(expected_energy(2.0, 1.0, 10.0, 5.0), 8.0);
+        // never starts: 0
+        assert_eq!(expected_energy(2.0, 6.0, 1.0, 5.0), 0.0);
+    }
+
+    // ---- Phase-1 helpers ------------------------------------------------------
+
+    #[test]
+    fn efficient_pair_prefers_min_energy_not_min_time() {
+        // T1 row of Table I: e = [2.238, 1.696, 4.359, 0.736]
+        // powers:               [1.6,   3.0,   1.8,   1.5]
+        // energy:               [3.581, 5.088, 7.846, 1.104]
+        // min energy = m4 (also fastest here)
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        let (pairs, inf) = feasible_efficient_pairs(&v);
+        assert!(inf.is_empty());
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].machine, MachineId(3));
+        assert!((pairs[0].energy - 1.5 * 0.736).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficient_pair_diverges_from_fastest_when_deadline_allows() {
+        // Synthetic: m1 slow+cheap, m2 fast+hungry.
+        // e = [4.0, 1.0], p = [1.6, 3.0] → energies [6.4, 3.0] → m2 wins on
+        // energy here; flip powers to make the slow machine cheaper:
+        let eet = crate::model::EetMatrix::new(1, 2, vec![4.0, 1.0]);
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps.truncate(2);
+        snaps[0].dyn_power = 0.5; // slow machine, cheap: 0.5·4 = 2.0
+        snaps[1].dyn_power = 3.0; // fast machine, dear: 3.0·1 = 3.0
+        let v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let (pairs, _) = feasible_efficient_pairs(&v);
+        assert_eq!(pairs[0].machine, MachineId(0), "energy-optimal, not fastest");
+
+        // tighten the deadline so only the fast machine is feasible
+        let tasks = vec![mk_task(0, 0, 0.0, 2.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps.truncate(2);
+        snaps[0].dyn_power = 0.5;
+        snaps[1].dyn_power = 3.0;
+        let v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let (pairs, _) = feasible_efficient_pairs(&v);
+        assert_eq!(pairs[0].machine, MachineId(1), "deadline forces the fast machine");
+    }
+
+    #[test]
+    fn infeasible_when_no_machine_can_make_deadline() {
+        let eet = paper_table1();
+        // deadline 0.5 < min EET row T1 (0.736)
+        let tasks = vec![mk_task(0, 0, 0.0, 0.5)];
+        let v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        let (pairs, inf) = feasible_efficient_pairs(&v);
+        assert!(pairs.is_empty());
+        assert_eq!(inf, vec![0]);
+    }
+
+    #[test]
+    fn full_queues_make_tasks_infeasible() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut snaps = idle_snapshots(0.0, 0); // zero free slots anywhere
+        for s in &mut snaps {
+            s.free_slots = 0;
+        }
+        let v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let (pairs, inf) = feasible_efficient_pairs(&v);
+        assert!(pairs.is_empty());
+        assert_eq!(inf, vec![0]);
+    }
+
+    #[test]
+    fn min_completion_ignores_feasibility() {
+        let eet = paper_table1();
+        // hopeless deadline — MM still nominates the fastest machine
+        let tasks = vec![mk_task(0, 2, 0.0, 0.1)];
+        let v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        let pairs = min_completion_pairs(&v);
+        assert_eq!(pairs.len(), 1);
+        // T3 fastest machine is m4 (0.865); completion clamps to deadline
+        assert_eq!(pairs[0].machine, MachineId(3));
+        assert_eq!(pairs[0].completion, 0.1);
+    }
+
+    #[test]
+    fn min_completion_accounts_for_queue_backlog() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        // m4 is nominally fastest for T1 (0.736) but has 5s of backlog;
+        // m2 (1.696, idle) should win on completion time.
+        snaps[3].avail = 5.0;
+        let v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let pairs = min_completion_pairs(&v);
+        assert_eq!(pairs[0].machine, MachineId(1));
+    }
+
+    #[test]
+    fn winners_per_machine_assigns_at_most_one_each() {
+        let eet = paper_table1();
+        // three T1 tasks, all of which nominate m4
+        let tasks = vec![
+            mk_task(0, 0, 0.0, 10.0),
+            mk_task(1, 0, 0.0, 10.0),
+            mk_task(2, 0, 0.0, 10.0),
+        ];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        let pairs = min_completion_pairs(&v);
+        assert!(pairs.iter().all(|p| p.machine == MachineId(3)));
+        let n = assign_winners_per_machine(&mut v, &pairs, |a, b, _| a.completion < b.completion);
+        assert_eq!(n, 1, "one winner per machine per round");
+        assert_eq!(v.unconsumed().count(), 2);
+    }
+}

@@ -1,0 +1,319 @@
+//! FELARE — Fair Energy- and Latency-aware Resource allocation (paper §V).
+//!
+//! Extends ELARE with two fairness mechanisms driven by the suffered-type
+//! detector (Algorithm 4, `fairness.rs`):
+//!
+//! 1. **Priority**: each mapping event first runs ELARE's two phases
+//!    restricted to *high-priority pairs* — feasible efficient pairs whose
+//!    task type is suffered — so suffered types grab machine slots before
+//!    anyone else.
+//! 2. **Victim dropping**: a suffered task that is infeasible has pending
+//!    tasks of non-suffered types evicted one-at-a-time from the local
+//!    queue of its best-matching (fastest) machine until it becomes
+//!    feasible there. Evicted tasks are cancelled (they never started, so
+//!    no dynamic energy was spent on them).
+//!
+//! With no suffered types observed, FELARE degrades to exactly ELARE —
+//! which is also what a large fairness factor f achieves (Eq. 3).
+
+use crate::model::task::TaskTypeId;
+use crate::sched::elare::{drop_or_defer_infeasible, elare_rounds};
+use crate::sched::feasibility::{
+    assign_winners_per_machine, feasible_efficient_pairs, is_feasible,
+};
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug)]
+pub struct Felare {
+    /// Enable §V's queue-eviction mechanism (the `felare-novd` ablation
+    /// variant turns it off, keeping only suffered-type prioritisation).
+    pub victim_dropping: bool,
+}
+
+impl Default for Felare {
+    fn default() -> Self {
+        Self { victim_dropping: true }
+    }
+}
+
+impl Felare {
+    pub fn without_victim_dropping() -> Self {
+        Self { victim_dropping: false }
+    }
+}
+
+impl MappingHeuristic for Felare {
+    fn name(&self) -> &'static str {
+        if self.victim_dropping {
+            "felare"
+        } else {
+            "felare-novd"
+        }
+    }
+
+    fn wants_fairness(&self) -> bool {
+        true
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        // a plain Vec beats a HashSet at edge scale (≤ a handful of types)
+        let suffered: Vec<TaskTypeId> =
+            view.rates.map(|r| r.suffered()).unwrap_or_default();
+
+        if !suffered.is_empty() {
+            high_priority_rounds(view, &suffered);
+            if self.victim_dropping {
+                victim_dropping(view, &suffered);
+            }
+        }
+        // Remaining capacity goes to everyone else (ELARE semantics);
+        // suffered leftovers participate here too in case victim-dropping
+        // opened unrelated capacity.
+        elare_rounds(view);
+        drop_or_defer_infeasible(view);
+    }
+}
+
+/// Phase-II over high-priority pairs only (suffered task types).
+fn high_priority_rounds(view: &mut SchedView, suffered: &[TaskTypeId]) {
+    loop {
+        let (pairs, _) = feasible_efficient_pairs(view);
+        let hp: Vec<_> = pairs
+            .into_iter()
+            .filter(|p| suffered.contains(&view.task(p.task_idx).type_id))
+            .collect();
+        if hp.is_empty() {
+            break;
+        }
+        let n = assign_winners_per_machine(view, &hp, |a, b, _| {
+            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+        });
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+/// Paper §V: "for a suffered task that is infeasible, the pending tasks in
+/// the local queue of the fastest (best-matching) machine are dropped
+/// one-at-a-time, until the suffered task becomes feasible on that
+/// machine". Only non-suffered victims are evicted, from the queue tail
+/// (newest first), and the running task is untouchable.
+fn victim_dropping(view: &mut SchedView, suffered: &[TaskTypeId]) {
+    let candidates: Vec<usize> = view
+        .unconsumed()
+        .filter(|(_, t)| suffered.contains(&t.type_id) && !t.expired_at(view.now))
+        .map(|(i, _)| i)
+        .collect();
+
+    for idx in candidates {
+        if view.is_consumed(idx) {
+            continue;
+        }
+        let task = view.task(idx).clone();
+        let j = view.eet.best_machine(task.type_id);
+        let e = view.eet.get(task.type_id, j);
+        loop {
+            let s = view.start_time(j);
+            if is_feasible(s, e, task.deadline) && view.has_free_slot(j) {
+                view.assign(idx, j);
+                break;
+            }
+            let evicted = view.victim_drop(j, |q| !suffered.contains(&q.type_id));
+            if evicted.is_none() {
+                break; // nothing left to evict; task stays deferred
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::model::machine::MachineId;
+    use crate::sched::fairness::FairnessSnapshot;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::{Action, QueuedInfo};
+
+    fn snap(rates: &[f64]) -> FairnessSnapshot {
+        FairnessSnapshot {
+            rates: rates.iter().map(|&r| Some(r)).collect(),
+            fairness_factor: 1.0,
+        }
+    }
+
+    fn assigns(v: &SchedView) -> Vec<(usize, usize)> {
+        v.actions()
+            .iter()
+            .filter_map(|a| match a {
+                Action::Assign { task_idx, machine } => Some((*task_idx, machine.0)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn victim_drops(v: &SchedView) -> Vec<u64> {
+        v.actions()
+            .iter()
+            .filter_map(|a| match a {
+                Action::VictimDrop { task_id, .. } => Some(*task_id),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn without_fairness_signal_equals_elare() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut v1 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Felare::default().map(&mut v1);
+        let mut v2 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        crate::sched::elare::Elare.map(&mut v2);
+        assert_eq!(v1.actions(), v2.actions());
+    }
+
+    #[test]
+    fn uniform_rates_equals_elare() {
+        let eet = paper_table1();
+        let rates = snap(&[0.5, 0.5, 0.5, 0.5]);
+        let tasks = vec![mk_task(0, 1, 0.0, 100.0), mk_task(1, 3, 0.0, 100.0)];
+        let mut v1 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, Some(&rates));
+        Felare::default().map(&mut v1);
+        let mut v2 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        crate::sched::elare::Elare.map(&mut v2);
+        assert_eq!(v1.actions(), v2.actions());
+    }
+
+    #[test]
+    fn suffered_type_wins_contended_slot() {
+        let eet = paper_table1();
+        // T3 suffered (paper Fig. 2 rates). One T1 task and one T3 task
+        // contend; with only one slot on every machine and a deadline only
+        // m4 can meet for both, the suffered T3 must take m4.
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]);
+        let tasks = vec![mk_task(0, 0, 0.0, 1.0), mk_task(1, 2, 0.0, 1.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        let a = assigns(&v);
+        assert!(a.contains(&(1, 3)), "suffered T3 got m4: {a:?}");
+        // T1 got nothing feasible afterwards (m4 queue busy, others too slow)
+        assert!(!a.iter().any(|&(t, _)| t == 0));
+    }
+
+    #[test]
+    fn victim_dropping_frees_best_machine() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        // m4 (best for T3, 0.865) is fully queued with T1-type work so a
+        // T3 task with a 1.0s deadline is infeasible — until the queued
+        // victims are evicted.
+        let tasks = vec![mk_task(10, 2, 0.0, 1.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].queued = vec![
+            QueuedInfo { task_id: 1, type_id: TaskTypeId(0), expected_exec: 0.736 },
+            QueuedInfo { task_id: 2, type_id: TaskTypeId(0), expected_exec: 0.736 },
+        ];
+        snaps[3].avail = 1.472;
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        let a = assigns(&v);
+        assert!(a.contains(&(0, 3)), "suffered task assigned to m4: {a:?}");
+        let vd = victim_drops(&v);
+        assert_eq!(vd, vec![2, 1], "both victims evicted, tail first");
+    }
+
+    #[test]
+    fn victim_dropping_stops_when_enough() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]);
+        // one queued victim of 0.7s; dropping it makes the T3 task feasible
+        let tasks = vec![mk_task(10, 2, 0.0, 1.2)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].queued = vec![
+            QueuedInfo { task_id: 1, type_id: TaskTypeId(0), expected_exec: 0.7 },
+            QueuedInfo { task_id: 2, type_id: TaskTypeId(0), expected_exec: 0.7 },
+        ];
+        snaps[3].avail = 1.4;
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        // after evicting task 2 (tail): avail 0.7, 0.7+0.865 = 1.565 > 1.2 →
+        // still infeasible; evict task 1: avail 0 → 0.865 ≤ 1.2 feasible.
+        assert_eq!(victim_drops(&v).len(), 2);
+        assert!(assigns(&v).contains(&(0, 3)));
+    }
+
+    #[test]
+    fn never_evicts_suffered_types() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        // m4's queue holds only T3-type work; a new suffered T3 task that
+        // is infeasible must NOT evict fellow T3s.
+        let tasks = vec![mk_task(10, 2, 0.0, 1.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].queued = vec![QueuedInfo {
+            task_id: 7,
+            type_id: TaskTypeId(2),
+            expected_exec: 0.865,
+        }];
+        snaps[3].avail = 0.865;
+        snaps[3].free_slots = 1;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        assert!(victim_drops(&v).is_empty());
+        assert!(!assigns(&v).contains(&(0, 3)), "stays deferred");
+        assert_eq!(v.deferrals, 1);
+    }
+
+    #[test]
+    fn expired_suffered_tasks_do_not_trigger_eviction() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]);
+        let tasks = vec![mk_task(10, 2, 0.0, 1.0)]; // deadline 1.0
+        let mut snaps = idle_snapshots(2.0, 2); // now = 2.0 > deadline
+        snaps[3].queued = vec![QueuedInfo {
+            task_id: 1,
+            type_id: TaskTypeId(0),
+            expected_exec: 0.7,
+        }];
+        snaps[3].avail = 2.7;
+        snaps[3].free_slots = 1;
+        let mut v = SchedView::new(2.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        assert!(victim_drops(&v).is_empty());
+        // expired ⇒ proactively dropped (ELARE tail)
+        assert!(v.actions().iter().any(|a| matches!(a, Action::Drop { task_idx: 0 })));
+    }
+
+    #[test]
+    fn non_suffered_still_mapped_with_leftover_capacity() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        let tasks = vec![mk_task(0, 2, 0.0, 100.0), mk_task(1, 1, 0.0, 100.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        let a = assigns(&v);
+        assert_eq!(a.len(), 2, "both mapped: {a:?}");
+        // suffered T3 mapped to its efficient machine m4 first
+        assert!(a.contains(&(0, 3)));
+    }
+
+    #[test]
+    fn wants_fairness_tracking() {
+        assert!(Felare::default().wants_fairness());
+        assert!(!crate::sched::elare::Elare.wants_fairness());
+    }
+
+    const _: () = {
+        // compile-time check: Felare is Send (engine moves it across threads)
+        const fn assert_send<T: Send>() {}
+        assert_send::<Felare>();
+    };
+
+    // silence unused import in some cfg combinations
+    #[allow(unused)]
+    fn _use(m: MachineId) {}
+}

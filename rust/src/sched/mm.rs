@@ -1,0 +1,105 @@
+//! MM — Minimum-Completion-Time / Minimum-Completion-Time (min-min), the
+//! classic two-phase baseline (paper §VI-B).
+//!
+//! Phase-1 nominates, per task, the free-slot machine with minimum expected
+//! completion time; phase-2 gives each machine the nominee with minimum
+//! completion time. Rounds repeat until a fixpoint (no assignment), so a
+//! single mapping event can fill several queue slots. MM never proactively
+//! drops — infeasible tasks are queued anyway and burn energy when they
+//! miss (exactly the wastage ELARE attacks).
+
+use crate::sched::feasibility::{assign_winners_per_machine, min_completion_pairs};
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug, Default)]
+pub struct Mm;
+
+impl MappingHeuristic for Mm {
+    fn name(&self) -> &'static str {
+        "mm"
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        loop {
+            let pairs = min_completion_pairs(view);
+            if pairs.is_empty() {
+                break;
+            }
+            let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
+                a.completion < b.completion
+                    || (a.completion == b.completion && a.energy < b.energy)
+            });
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::model::machine::MachineId;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    #[test]
+    fn assigns_min_completion_machine() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Mm.map(&mut v);
+        assert_eq!(
+            v.actions(),
+            &[Action::Assign { task_idx: 0, machine: MachineId(3) }],
+            "T1 is fastest on m4 (0.736)"
+        );
+    }
+
+    #[test]
+    fn spreads_across_machines_in_rounds() {
+        let eet = paper_table1();
+        // six identical T1 tasks, 2 slots each on 4 machines — all get mapped
+        let tasks: Vec<_> = (0..6).map(|i| mk_task(i, 0, 0.0, 100.0)).collect();
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Mm.map(&mut v);
+        let assigns = v
+            .actions()
+            .iter()
+            .filter(|a| matches!(a, Action::Assign { .. }))
+            .count();
+        assert_eq!(assigns, 6, "rounds continue past one-per-machine");
+    }
+
+    #[test]
+    fn stops_when_queues_full() {
+        let eet = paper_table1();
+        let tasks: Vec<_> = (0..20).map(|i| mk_task(i, 0, 0.0, 100.0)).collect();
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        Mm.map(&mut v);
+        let assigns = v.actions().len();
+        assert_eq!(assigns, 4, "one slot per machine");
+        assert_eq!(v.unconsumed().count(), 16, "rest remain in arriving queue");
+    }
+
+    #[test]
+    fn maps_hopeless_tasks_anyway() {
+        // MM has no feasibility filter — this is its energy-wasting flaw.
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 0.01)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Mm.map(&mut v);
+        assert_eq!(v.actions().len(), 1);
+        assert!(matches!(v.actions()[0], Action::Assign { .. }));
+    }
+
+    #[test]
+    fn no_tasks_no_actions() {
+        let eet = paper_table1();
+        let tasks: Vec<_> = vec![];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Mm.map(&mut v);
+        assert!(v.actions().is_empty());
+    }
+}

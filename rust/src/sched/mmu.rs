@@ -1,0 +1,101 @@
+//! MMU — Minimum-Completion-Time / Maximum-Urgency (paper §VI-B).
+//!
+//! Same phase-1 as MM; phase-2 gives each machine the nominee with maximum
+//! urgency. The paper defines urgency as `1/(δ_i(k) − e_ij)`; we read the
+//! denominator as the remaining slack were the task started now
+//! (`δ − now − e_ij`), with non-positive slack mapping to +∞ urgency
+//! (DESIGN.md interpretation table).
+
+use crate::sched::feasibility::{assign_winners_per_machine, min_completion_pairs, Pair};
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug, Default)]
+pub struct Mmu;
+
+fn urgency(view: &SchedView, p: &Pair) -> f64 {
+    let task = view.task(p.task_idx);
+    let e = view.eet.get(task.type_id, p.machine);
+    let slack = task.deadline - view.now - e;
+    if slack <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / slack
+    }
+}
+
+impl MappingHeuristic for Mmu {
+    fn name(&self) -> &'static str {
+        "mmu"
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        loop {
+            let pairs = min_completion_pairs(view);
+            if pairs.is_empty() {
+                break;
+            }
+            let n = assign_winners_per_machine(view, &pairs, |a, b, v| {
+                let (ua, ub) = (urgency(v, a), urgency(v, b));
+                ua > ub || (ua == ub && a.completion < b.completion)
+            });
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    #[test]
+    fn urgent_task_wins_the_contended_slot() {
+        let eet = paper_table1();
+        // both T1; task 1 has much less slack
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0), mk_task(1, 0, 0.0, 1.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        Mmu.map(&mut v);
+        let first = v
+            .actions()
+            .iter()
+            .find_map(|a| match a {
+                Action::Assign { task_idx, .. } => Some(*task_idx),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first, 1);
+    }
+
+    #[test]
+    fn negative_slack_is_infinitely_urgent() {
+        let eet = paper_table1();
+        // deadline already hopeless on every machine → still most urgent
+        let tasks = vec![mk_task(0, 0, 0.0, 50.0), mk_task(1, 0, 0.0, 0.2)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        Mmu.map(&mut v);
+        let first = v
+            .actions()
+            .iter()
+            .find_map(|a| match a {
+                Action::Assign { task_idx, .. } => Some(*task_idx),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first, 1, "MMU burns a slot on the doomed task (no feasibility filter)");
+    }
+
+    #[test]
+    fn urgency_formula() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let v = SchedView::new(2.0, &eet, idle_snapshots(2.0, 1), &tasks, None);
+        let pairs = min_completion_pairs(&v);
+        // T1 on m4: e=0.736, slack = 10 − 2 − 0.736 = 7.264
+        let u = urgency(&v, &pairs[0]);
+        assert!((u - 1.0 / 7.264).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,313 @@
+//! The mapper (paper §III–§V): mapping-event machinery shared by every
+//! heuristic, plus the heuristics themselves.
+//!
+//! A *mapping event* fires on each task arrival and each task completion.
+//! The engine (sim or serve) builds a [`SchedView`] — an isolated planning
+//! context over the arriving queue and per-machine snapshots — and hands
+//! it to a [`MappingHeuristic`]. The heuristic records [`Action`]s
+//! (assign / proactive-drop / victim-drop) against the view; the engine
+//! then applies them to the authoritative state. The view keeps its own
+//! availability estimates up to date as actions are recorded, so
+//! multi-round two-phase heuristics see the consequences of their earlier
+//! picks within the same event.
+
+pub mod adaptive;
+pub mod elare;
+pub mod fairness;
+pub mod feasibility;
+pub mod felare;
+pub mod mm;
+pub mod mmu;
+pub mod msd;
+pub mod registry;
+
+use crate::model::machine::MachineId;
+use crate::model::task::{Task, TaskTypeId, Time};
+use crate::model::EetMatrix;
+use fairness::FairnessSnapshot;
+
+/// One entry of a machine's bounded FCFS local queue, as the mapper sees it.
+#[derive(Clone, Debug)]
+pub struct QueuedInfo {
+    pub task_id: u64,
+    pub type_id: TaskTypeId,
+    /// Expected execution time on this machine (EET entry; the mapper
+    /// never sees actual service times).
+    pub expected_exec: f64,
+}
+
+/// Mapper-visible snapshot of one machine at a mapping event.
+///
+/// Carries only the fields heuristics read (notably `dyn_power` for
+/// Eq. 2) — not a full `MachineSpec` clone, whose `name: String` would
+/// cost a heap allocation per machine per mapping event (see
+/// EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+pub struct MachineSnapshot {
+    /// Dynamic power of the machine (Eq. 2's p_dyn).
+    pub dyn_power: f64,
+    /// Absolute time at which new work is *expected* to start: expected
+    /// completion of the running task plus the expected execution of
+    /// everything already queued.
+    pub avail: Time,
+    /// Remaining local-queue slots.
+    pub free_slots: usize,
+    /// Queued (not yet running) tasks, FCFS order (tail = newest).
+    pub queued: Vec<QueuedInfo>,
+}
+
+/// A decision recorded by a heuristic during one mapping event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Put arriving-queue task `task_idx` at the tail of `machine`'s queue.
+    Assign { task_idx: usize, machine: MachineId },
+    /// Proactively drop arriving-queue task `task_idx` (ELARE: infeasible
+    /// and past its deadline — executing it could only waste energy).
+    Drop { task_idx: usize },
+    /// Evict the queued (never-started) task `task_id` from `machine`'s
+    /// local queue (FELARE victim-dropping for suffered types).
+    VictimDrop { machine: MachineId, task_id: u64 },
+}
+
+/// Planning context for one mapping event.
+pub struct SchedView<'a> {
+    pub now: Time,
+    pub eet: &'a EetMatrix,
+    pub machines: Vec<MachineSnapshot>,
+    tasks: &'a [Task],
+    /// Per-type completion rates; `None` when the engine does not track
+    /// fairness (plain ELARE / baselines don't read it).
+    pub rates: Option<&'a FairnessSnapshot>,
+    consumed: Vec<bool>,
+    actions: Vec<Action>,
+    /// Count of tasks left unassigned-but-feasible-later (deferred), for
+    /// the overhead/diagnostic metrics.
+    pub deferrals: u64,
+}
+
+impl<'a> SchedView<'a> {
+    pub fn new(
+        now: Time,
+        eet: &'a EetMatrix,
+        machines: Vec<MachineSnapshot>,
+        tasks: &'a [Task],
+        rates: Option<&'a FairnessSnapshot>,
+    ) -> Self {
+        let consumed = vec![false; tasks.len()];
+        Self { now, eet, machines, tasks, rates, consumed, actions: Vec::new(), deferrals: 0 }
+    }
+
+    /// Arriving-queue tasks not yet assigned/dropped in this event.
+    pub fn unconsumed(&self) -> impl Iterator<Item = (usize, &Task)> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter(move |(i, _)| !self.consumed[*i])
+    }
+
+    pub fn task(&self, idx: usize) -> &Task {
+        &self.tasks[idx]
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_consumed(&self, idx: usize) -> bool {
+        self.consumed[idx]
+    }
+
+    /// Expected start time for NEW work on machine j (Eq. 1's s_ij for the
+    /// tail queue slot).
+    pub fn start_time(&self, j: MachineId) -> Time {
+        self.machines[j.0].avail.max(self.now)
+    }
+
+    pub fn has_free_slot(&self, j: MachineId) -> bool {
+        self.machines[j.0].free_slots > 0
+    }
+
+    /// Record an assignment and update planning state.
+    pub fn assign(&mut self, task_idx: usize, j: MachineId) {
+        debug_assert!(!self.consumed[task_idx], "task consumed twice");
+        debug_assert!(self.has_free_slot(j), "assigning to a full queue");
+        let task = &self.tasks[task_idx];
+        let e = self.eet.get(task.type_id, j) * 1.0; // expected (EET) time
+        let m = &mut self.machines[j.0];
+        m.avail = m.avail.max(self.now) + e;
+        m.free_slots -= 1;
+        m.queued.push(QueuedInfo {
+            task_id: task.id,
+            type_id: task.type_id,
+            expected_exec: e,
+        });
+        self.consumed[task_idx] = true;
+        self.actions.push(Action::Assign { task_idx, machine: j });
+    }
+
+    /// Record a proactive drop.
+    pub fn drop_task(&mut self, task_idx: usize) {
+        debug_assert!(!self.consumed[task_idx], "task consumed twice");
+        self.consumed[task_idx] = true;
+        self.actions.push(Action::Drop { task_idx });
+    }
+
+    /// Evict the tail-most queued victim on `j` matching `pred`; returns
+    /// the evicted entry. Updates availability so subsequent feasibility
+    /// checks see the freed time.
+    pub fn victim_drop(
+        &mut self,
+        j: MachineId,
+        pred: impl Fn(&QueuedInfo) -> bool,
+    ) -> Option<QueuedInfo> {
+        let m = &mut self.machines[j.0];
+        let pos = m.queued.iter().rposition(pred)?;
+        let victim = m.queued.remove(pos);
+        m.avail -= victim.expected_exec;
+        m.free_slots += 1;
+        self.actions.push(Action::VictimDrop { machine: j, task_id: victim.task_id });
+        Some(victim)
+    }
+
+    pub fn actions(&self) -> &[Action] {
+        &self.actions
+    }
+
+    pub fn into_actions(self) -> Vec<Action> {
+        self.actions
+    }
+
+    /// Decompose into (actions, machine snapshots) so engines can recycle
+    /// the snapshot buffers (and their inner `queued` capacity) across
+    /// mapping events instead of reallocating per event (§Perf).
+    pub fn into_parts(self) -> (Vec<Action>, Vec<MachineSnapshot>) {
+        (self.actions, self.machines)
+    }
+}
+
+/// A mapping heuristic: reads the view, records actions.
+///
+/// Implementations must be deterministic functions of the view (plus any
+/// internal state they carry), so simulation runs are replayable.
+pub trait MappingHeuristic: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether the engine should maintain a fairness tracker for this
+    /// heuristic (only FELARE reads it; tracking costs a little time).
+    fn wants_fairness(&self) -> bool {
+        false
+    }
+
+    /// Execute one mapping event against the planning view.
+    fn map(&mut self, view: &mut SchedView);
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::model::machine::paper_machines;
+
+    /// Build a view over Table-I machines with the given arriving tasks.
+    /// Machines are all idle with `slots` free queue slots.
+    pub fn idle_snapshots(now: Time, slots: usize) -> Vec<MachineSnapshot> {
+        paper_machines()
+            .into_iter()
+            .map(|spec| MachineSnapshot {
+                dyn_power: spec.dyn_power,
+                avail: now,
+                free_slots: slots,
+                queued: vec![],
+            })
+            .collect()
+    }
+
+    pub fn mk_task(id: u64, ty: usize, arrival: Time, deadline: Time) -> Task {
+        Task {
+            id,
+            type_id: TaskTypeId(ty),
+            arrival,
+            deadline,
+            size_factor: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::model::eet::paper_table1;
+
+    #[test]
+    fn view_assign_updates_planning_state() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0), mk_task(1, 0, 0.0, 10.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        assert_eq!(v.unconsumed().count(), 2);
+        v.assign(0, MachineId(3));
+        // T1 on m4: EET 0.736
+        assert!((v.start_time(MachineId(3)) - 0.736).abs() < 1e-12);
+        assert_eq!(v.machines[3].free_slots, 1);
+        assert_eq!(v.unconsumed().count(), 1);
+        v.assign(1, MachineId(3));
+        assert!((v.start_time(MachineId(3)) - 1.472).abs() < 1e-12);
+        assert!(!v.has_free_slot(MachineId(3)));
+        assert_eq!(v.actions().len(), 2);
+    }
+
+    #[test]
+    fn view_drop_consumes() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        v.drop_task(0);
+        assert_eq!(v.unconsumed().count(), 0);
+        assert_eq!(v.actions(), &[Action::Drop { task_idx: 0 }]);
+    }
+
+    #[test]
+    fn victim_drop_frees_time_and_slot() {
+        let eet = paper_table1();
+        let tasks = vec![mk_task(5, 1, 0.0, 10.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[0].queued.push(QueuedInfo { task_id: 9, type_id: TaskTypeId(2), expected_exec: 2.0 });
+        snaps[0].avail = 2.0;
+        snaps[0].free_slots = 1;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let victim = v.victim_drop(MachineId(0), |q| q.type_id == TaskTypeId(2)).unwrap();
+        assert_eq!(victim.task_id, 9);
+        assert_eq!(v.machines[0].free_slots, 2);
+        assert!((v.machines[0].avail - 0.0).abs() < 1e-12);
+        // no second victim matches
+        assert!(v.victim_drop(MachineId(0), |q| q.type_id == TaskTypeId(2)).is_none());
+    }
+
+    #[test]
+    fn victim_drop_takes_tail_first() {
+        let eet = paper_table1();
+        let tasks: Vec<Task> = vec![];
+        let mut snaps = idle_snapshots(0.0, 4);
+        for (id, ty) in [(1u64, 2usize), (2, 0), (3, 2)] {
+            snaps[1].queued.push(QueuedInfo {
+                task_id: id,
+                type_id: TaskTypeId(ty),
+                expected_exec: 1.0,
+            });
+        }
+        snaps[1].avail = 3.0;
+        snaps[1].free_slots = 1;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        let victim = v.victim_drop(MachineId(1), |q| q.type_id == TaskTypeId(2)).unwrap();
+        assert_eq!(victim.task_id, 3, "tail-most matching entry evicted first");
+    }
+
+    #[test]
+    fn start_time_respects_now() {
+        let eet = paper_table1();
+        let tasks: Vec<Task> = vec![];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[0].avail = 0.5; // machine became available in the past
+        let v = SchedView::new(2.0, &eet, snaps, &tasks, None);
+        assert_eq!(v.start_time(MachineId(0)), 2.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! MSD — Minimum-Completion-Time / Soonest-Deadline (paper §VI-B).
+//!
+//! Same phase-1 as MM; phase-2 gives each machine the nominee with the
+//! earliest deadline (ties broken by minimum expected completion time).
+
+use crate::sched::feasibility::{assign_winners_per_machine, min_completion_pairs};
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug, Default)]
+pub struct Msd;
+
+impl MappingHeuristic for Msd {
+    fn name(&self) -> &'static str {
+        "msd"
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        loop {
+            let pairs = min_completion_pairs(view);
+            if pairs.is_empty() {
+                break;
+            }
+            let n = assign_winners_per_machine(view, &pairs, |a, b, v| {
+                let da = v.task(a.task_idx).deadline;
+                let db = v.task(b.task_idx).deadline;
+                da < db || (da == db && a.completion < b.completion)
+            });
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::model::machine::MachineId;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    #[test]
+    fn prefers_soonest_deadline_per_machine() {
+        let eet = paper_table1();
+        // two T1 tasks contending for m4; the later-id one has the sooner
+        // deadline and must win the slot.
+        let tasks = vec![mk_task(0, 0, 0.0, 50.0), mk_task(1, 0, 0.0, 5.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        Msd.map(&mut v);
+        // first assignment in the round must be task 1 on m4
+        let first = v
+            .actions()
+            .iter()
+            .find_map(|a| match a {
+                Action::Assign { task_idx, machine } => Some((*task_idx, *machine)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first, (1, MachineId(3)));
+    }
+
+    #[test]
+    fn deadline_tie_breaks_on_completion() {
+        let eet = paper_table1();
+        // same deadline; T1 on m4 completes sooner (0.736) than T3 (0.865)
+        let tasks = vec![mk_task(0, 2, 0.0, 10.0), mk_task(1, 0, 0.0, 10.0)];
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, None);
+        Msd.map(&mut v);
+        let first = v
+            .actions()
+            .iter()
+            .find_map(|a| match a {
+                Action::Assign { task_idx, machine } => Some((*task_idx, *machine)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first.1, MachineId(3));
+        assert_eq!(first.0, 1, "faster-completing task wins the tie");
+    }
+
+    #[test]
+    fn fills_all_capacity() {
+        let eet = paper_table1();
+        let tasks: Vec<_> = (0..8).map(|i| mk_task(i, (i % 4) as usize, 0.0, 100.0)).collect();
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        Msd.map(&mut v);
+        assert_eq!(v.actions().len(), 8);
+    }
+}

@@ -1,0 +1,94 @@
+//! Heuristic registry: by-name construction for the CLI, experiment
+//! harness and benches.
+
+use crate::model::Scenario;
+use crate::sched::adaptive::Adaptive;
+use crate::sched::elare::Elare;
+use crate::sched::felare::Felare;
+use crate::sched::mm::Mm;
+use crate::sched::mmu::Mmu;
+use crate::sched::msd::Msd;
+use crate::sched::MappingHeuristic;
+
+/// The paper's heuristics, in its presentation order (Figs. 3–8 run these).
+pub const ALL_HEURISTICS: [&str; 5] = ["mm", "msd", "mmu", "elare", "felare"];
+
+/// Extension heuristics beyond the paper's evaluation: the §VIII
+/// future-work adaptive switcher and the victim-dropping ablation variant.
+pub const EXTENDED_HEURISTICS: [&str; 2] = ["adaptive", "felare-novd"];
+
+/// Build a heuristic by name. `scenario` is accepted for future
+/// heuristics that need static configuration; the current seven don't.
+pub fn heuristic_by_name(
+    name: &str,
+    _scenario: &Scenario,
+) -> Result<Box<dyn MappingHeuristic>, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "mm" | "min-min" => Ok(Box::new(Mm)),
+        "msd" => Ok(Box::new(Msd)),
+        "mmu" => Ok(Box::new(Mmu)),
+        "elare" | "ee" => Ok(Box::new(Elare)), // paper's figures label ELARE "EE"
+        "felare" => Ok(Box::new(Felare::default())),
+        "felare-novd" => Ok(Box::new(Felare::without_victim_dropping())),
+        "adaptive" => Ok(Box::new(Adaptive::default())),
+        other => Err(format!(
+            "unknown heuristic '{other}' (expected one of {}, {})",
+            ALL_HEURISTICS.join(", "),
+            EXTENDED_HEURISTICS.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        let sc = Scenario::paper_synthetic();
+        for name in ALL_HEURISTICS {
+            let h = heuristic_by_name(name, &sc).unwrap();
+            assert_eq!(h.name(), name);
+        }
+    }
+
+    #[test]
+    fn aliases() {
+        let sc = Scenario::paper_synthetic();
+        assert_eq!(heuristic_by_name("EE", &sc).unwrap().name(), "elare");
+        assert_eq!(heuristic_by_name("Min-Min", &sc).unwrap().name(), "mm");
+        assert_eq!(heuristic_by_name("FELARE", &sc).unwrap().name(), "felare");
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        let sc = Scenario::paper_synthetic();
+        let err = match heuristic_by_name("bogus", &sc) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("bogus"));
+        assert!(err.contains("felare"));
+    }
+
+    #[test]
+    fn fairness_tracking_wanted_exactly_where_needed() {
+        let sc = Scenario::paper_synthetic();
+        for name in ALL_HEURISTICS {
+            let h = heuristic_by_name(name, &sc).unwrap();
+            assert_eq!(h.wants_fairness(), name == "felare", "{name}");
+        }
+        for name in EXTENDED_HEURISTICS {
+            let h = heuristic_by_name(name, &sc).unwrap();
+            assert!(h.wants_fairness(), "{name} builds on FELARE");
+        }
+    }
+
+    #[test]
+    fn extended_names_resolve() {
+        let sc = Scenario::paper_synthetic();
+        for name in EXTENDED_HEURISTICS {
+            assert_eq!(heuristic_by_name(name, &sc).unwrap().name(), name);
+        }
+    }
+}

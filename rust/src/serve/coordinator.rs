@@ -1,0 +1,446 @@
+//! Real-time serving coordinator: the paper's HEC system running live.
+//!
+//! This is the online counterpart of `sim::engine` — same mapping-event
+//! semantics, but with wall-clock time, an open-loop Poisson request
+//! generator, per-machine worker threads, and *real ML inference* on the
+//! request path (each execution runs the task type's AOT-compiled PJRT
+//! executable; python is never involved).
+//!
+//! Heterogeneity is modeled exactly as the paper's simulator models it
+//! (DESIGN.md §Hardware-adaptation): machine speeds are normalised so the
+//! fastest machine is the profiled PJRT base (speed 1.0) and slower
+//! machines pad the real inference with sleep up to `wall × speed`. A
+//! running task whose padded finish would cross its deadline is released
+//! at the deadline and counted missed — mirroring Eq. 1's abort.
+//!
+//! Threading: `PjRtClient` is `Rc`-based (not `Send`), so every worker
+//! owns a thread-local `Runtime` compiled from the same artifacts.
+//! Coordinator state (arriving queue, local queues, fairness tracker, the
+//! mapping heuristic) lives behind one mutex + condvar; mapping events run
+//! under the lock (they are microseconds — see the overhead experiment),
+//! inference runs outside it.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::model::machine::MachineSpec;
+use crate::model::scenario::RateWindow;
+use crate::model::task::{Task, TaskTypeId, Time};
+use crate::model::EetMatrix;
+use crate::runtime::{profile_eet, Executor, Runtime};
+use crate::sched::fairness::FairnessTracker;
+use crate::sched::registry::heuristic_by_name;
+use crate::sched::{Action, MachineSnapshot, MappingHeuristic, QueuedInfo, SchedView};
+use crate::serve::report::ServeReport;
+use crate::util::rng::{Exponential, Pcg64};
+
+/// Serving-run configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifact_dir: PathBuf,
+    pub heuristic: String,
+    /// Machines (speeds are normalised internally so min speed = 1.0).
+    pub machines: Vec<MachineSpec>,
+    pub arrival_rate: f64,
+    pub n_requests: usize,
+    pub queue_slots: usize,
+    pub fairness_factor: f64,
+    pub fairness_min_samples: u64,
+    /// Scales Eq. 4 deadlines (1.0 = paper rule; <1 tightens).
+    pub deadline_scale: f64,
+    pub seed: u64,
+    /// Profiling repetitions for the startup EET measurement.
+    pub profile_reps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            heuristic: "felare".into(),
+            machines: crate::model::machine::aws_machines(),
+            arrival_rate: 20.0,
+            n_requests: 200,
+            queue_slots: 2,
+            fairness_factor: 1.0,
+            fairness_min_samples: 10,
+            deadline_scale: 1.0,
+            seed: 42,
+            profile_reps: 7,
+        }
+    }
+}
+
+struct SharedState {
+    arriving: Vec<Task>,
+    queues: Vec<VecDeque<Task>>,
+    /// Expected (EET-based) end of the currently running task per machine.
+    running_expected_end: Vec<Option<Time>>,
+    heuristic: Box<dyn MappingHeuristic>,
+    tracker: FairnessTracker,
+    eet: EetMatrix,
+    specs: Vec<MachineSpec>,
+    queue_slots: usize,
+    // terminal accounting
+    arrived: Vec<u64>,
+    completed: Vec<u64>,
+    missed: Vec<u64>,
+    cancelled: Vec<u64>,
+    latencies: Vec<f64>,
+    terminal: usize,
+    total_expected: usize,
+    done_generating: bool,
+    mapper_events: u64,
+    mapper_time_total: f64,
+    inferences: u64,
+    /// Workers that finished compiling their thread-local runtime; the
+    /// arrival generator gates on this so startup compilation doesn't eat
+    /// the first requests' deadlines.
+    workers_ready: usize,
+}
+
+impl SharedState {
+    fn all_done(&self) -> bool {
+        self.done_generating && self.terminal == self.total_expected
+    }
+
+    fn record_terminal(&mut self, ty: TaskTypeId, kind: Terminal, latency: Option<f64>) {
+        match kind {
+            Terminal::Completed => {
+                self.completed[ty.0] += 1;
+                self.tracker.on_terminal(ty, true);
+                if let Some(l) = latency {
+                    self.latencies.push(l);
+                }
+            }
+            Terminal::Missed => {
+                self.missed[ty.0] += 1;
+                self.tracker.on_terminal(ty, false);
+            }
+            Terminal::Cancelled => {
+                self.cancelled[ty.0] += 1;
+                self.tracker.on_terminal(ty, false);
+            }
+        }
+        self.terminal += 1;
+    }
+
+    /// One mapping event (same semantics as the simulator's).
+    fn coordinate(&mut self, now: Time) {
+        // expire waiting tasks
+        let mut expired: Vec<Task> = Vec::new();
+        self.arriving.retain(|t| {
+            if t.expired_at(now) {
+                expired.push(t.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for t in expired {
+            self.record_terminal(t.type_id, Terminal::Cancelled, None);
+        }
+
+        let snapshots: Vec<MachineSnapshot> = (0..self.specs.len())
+            .map(|m| {
+                let mut avail = self.running_expected_end[m].unwrap_or(now).max(now);
+                let queued: Vec<QueuedInfo> = self.queues[m]
+                    .iter()
+                    .map(|t| {
+                        let e = self.eet.get(t.type_id, crate::model::MachineId(m));
+                        avail += e;
+                        QueuedInfo { task_id: t.id, type_id: t.type_id, expected_exec: e }
+                    })
+                    .collect();
+                MachineSnapshot {
+                    dyn_power: self.specs[m].dyn_power,
+                    avail,
+                    free_slots: self.queue_slots.saturating_sub(queued.len()),
+                    queued,
+                }
+            })
+            .collect();
+
+        let fair = self.heuristic.wants_fairness().then(|| self.tracker.snapshot());
+        let arriving = std::mem::take(&mut self.arriving);
+        let mut view = SchedView::new(now, &self.eet, snapshots, &arriving, fair.as_ref());
+        let t0 = Instant::now();
+        self.heuristic.map(&mut view);
+        self.mapper_time_total += t0.elapsed().as_secs_f64();
+        self.mapper_events += 1;
+        let actions = view.into_actions();
+
+        let mut consumed = vec![false; arriving.len()];
+        for a in &actions {
+            match a {
+                Action::Assign { task_idx, machine } => {
+                    consumed[*task_idx] = true;
+                    self.queues[machine.0].push_back(arriving[*task_idx].clone());
+                }
+                Action::Drop { task_idx } => {
+                    consumed[*task_idx] = true;
+                    let ty = arriving[*task_idx].type_id;
+                    self.record_terminal(ty, Terminal::Cancelled, None);
+                }
+                Action::VictimDrop { machine, task_id } => {
+                    let q = &mut self.queues[machine.0];
+                    if let Some(pos) = q.iter().position(|t| t.id == *task_id) {
+                        let victim = q.remove(pos).unwrap();
+                        self.record_terminal(victim.type_id, Terminal::Cancelled, None);
+                    }
+                }
+            }
+        }
+        self.arriving = arriving
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, t)| (!consumed[i]).then_some(t))
+            .collect();
+    }
+}
+
+enum Terminal {
+    Completed,
+    Missed,
+    Cancelled,
+}
+
+struct WorkerEnergy {
+    busy: f64,
+    wasted_busy: f64,
+}
+
+/// Run a full serving session; blocks until every request is terminal.
+pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
+    if config.machines.is_empty() || config.n_requests == 0 {
+        return Err(Error::Config("serve needs machines and requests".into()));
+    }
+    // ---- startup: profile EET on the real PJRT runtime -------------------
+    let runtime = Runtime::load(&config.artifact_dir)?;
+    let n_types = runtime.n_task_types();
+
+    // normalise speeds: fastest machine == PJRT base
+    let min_speed = config
+        .machines
+        .iter()
+        .map(|m| m.speed)
+        .fold(f64::INFINITY, f64::min);
+    let mut specs = config.machines.clone();
+    for s in &mut specs {
+        s.speed /= min_speed;
+    }
+    let profile = profile_eet(&runtime, &specs, config.profile_reps)?;
+    let eet = profile.eet.clone();
+    drop(runtime); // workers build their own (PjRtClient is not Send)
+
+    let heuristic = heuristic_by_name(&config.heuristic, &crate::model::Scenario::paper_synthetic())
+        .map_err(Error::Config)?;
+
+    let state = Arc::new((
+        Mutex::new(SharedState {
+            arriving: Vec::new(),
+            queues: vec![VecDeque::new(); specs.len()],
+            running_expected_end: vec![None; specs.len()],
+            heuristic,
+            tracker: FairnessTracker::new(
+                n_types,
+                config.fairness_factor,
+                config.fairness_min_samples,
+                RateWindow::Cumulative,
+            ),
+            eet: eet.clone(),
+            specs: specs.clone(),
+            queue_slots: config.queue_slots,
+            arrived: vec![0; n_types],
+            completed: vec![0; n_types],
+            missed: vec![0; n_types],
+            cancelled: vec![0; n_types],
+            latencies: Vec::new(),
+            terminal: 0,
+            total_expected: config.n_requests,
+            done_generating: false,
+            mapper_events: 0,
+            mapper_time_total: 0.0,
+            inferences: 0,
+            workers_ready: 0,
+        }),
+        Condvar::new(),
+    ));
+    let epoch = Instant::now();
+    let now = move || epoch.elapsed().as_secs_f64();
+
+    // ---- workers ----------------------------------------------------------
+    let mut handles = Vec::new();
+    for (m, spec) in specs.iter().enumerate() {
+        let state = Arc::clone(&state);
+        let spec = spec.clone();
+        let dir = config.artifact_dir.clone();
+        let seed = config.seed ^ (m as u64) << 8;
+        let handle = std::thread::Builder::new()
+            .name(format!("worker-{}", spec.name))
+            .spawn(move || -> Result<WorkerEnergy> {
+                let rt = Runtime::load(&dir)?;
+                let mut exec = Executor::new(&rt, 4, seed);
+                let mut energy = WorkerEnergy { busy: 0.0, wasted_busy: 0.0 };
+                let (lock, cv) = &*state;
+                {
+                    let mut st = lock.lock().unwrap();
+                    st.workers_ready += 1;
+                    cv.notify_all();
+                }
+                loop {
+                    // fetch next task for this machine (or exit)
+                    let task = {
+                        let mut st = lock.lock().unwrap();
+                        loop {
+                            if let Some(t) = st.queues[m].pop_front() {
+                                let e = st.eet.get(t.type_id, crate::model::MachineId(m));
+                                st.running_expected_end[m] = Some(now() + e);
+                                break Some(t);
+                            }
+                            if st.all_done() {
+                                break None;
+                            }
+                            let (guard, _timeout) = cv
+                                .wait_timeout(st, Duration::from_millis(20))
+                                .unwrap();
+                            st = guard;
+                        }
+                    };
+                    let Some(task) = task else { return Ok(energy) };
+
+                    let start = now();
+                    let outcome = if start >= task.deadline {
+                        // queued past its deadline: dropped at start, no energy
+                        (Terminal::Missed, None, 0.0)
+                    } else {
+                        let rec = exec.run(task.type_id.0)?;
+                        let modeled = rec.wall * spec.speed;
+                        let budget = task.deadline - start;
+                        if modeled <= budget {
+                            // pad the real inference up to the modeled time
+                            let pad = modeled - rec.wall;
+                            if pad > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(pad));
+                            }
+                            let fin = now();
+                            energy.busy += modeled;
+                            (Terminal::Completed, Some(fin - task.arrival), modeled)
+                        } else {
+                            // deadline interrupts the (modeled) execution —
+                            // abort at the deadline, energy wasted (Eq. 1/2)
+                            let pad = (budget - rec.wall).max(0.0);
+                            if pad > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(pad));
+                            }
+                            energy.busy += budget;
+                            energy.wasted_busy += budget;
+                            (Terminal::Missed, None, budget)
+                        }
+                    };
+
+                    let mut st = lock.lock().unwrap();
+                    if !matches!(outcome.0, Terminal::Missed if outcome.2 == 0.0) {
+                        st.inferences += 1;
+                    }
+                    st.running_expected_end[m] = None;
+                    st.record_terminal(task.type_id, outcome.0, outcome.1);
+                    let t = now();
+                    st.coordinate(t); // completion-triggered mapping event
+                    cv.notify_all();
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
+        handles.push(handle);
+    }
+
+    // ---- open-loop Poisson arrival generator ------------------------------
+    let mut rng = Pcg64::seed_from(config.seed, 0xA881);
+    let inter = Exponential::new(config.arrival_rate);
+    {
+        let (lock, cv) = &*state;
+        // wait for every worker's thread-local runtime to finish compiling
+        {
+            let mut st = lock.lock().unwrap();
+            while st.workers_ready < specs.len() {
+                let (guard, _) = cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                st = guard;
+            }
+        }
+        for i in 0..config.n_requests {
+            std::thread::sleep(Duration::from_secs_f64(inter.sample(&mut rng)));
+            let ty = TaskTypeId(rng.index(n_types));
+            let t_arr = now();
+            let deadline = t_arr
+                + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
+            let task = Task {
+                id: i as u64,
+                type_id: ty,
+                arrival: t_arr,
+                deadline,
+                size_factor: 1.0, // real service time comes from real execution
+            };
+            let mut st = lock.lock().unwrap();
+            st.arrived[ty.0] += 1;
+            st.tracker.on_arrival(ty);
+            st.arriving.push(task);
+            st.coordinate(t_arr); // arrival-triggered mapping event
+            cv.notify_all();
+        }
+        // drain: periodically fire mapping events until everything terminal
+        let mut st = lock.lock().unwrap();
+        st.done_generating = true;
+        while st.terminal < st.total_expected {
+            let t = now();
+            st.coordinate(t);
+            cv.notify_all();
+            let (guard, _) = cv.wait_timeout(st, Duration::from_millis(10)).unwrap();
+            st = guard;
+        }
+        cv.notify_all();
+    }
+
+    // ---- teardown + report -------------------------------------------------
+    let duration = now();
+    let mut dyn_energy = Vec::new();
+    let mut idle_energy = Vec::new();
+    let mut wasted_energy = Vec::new();
+    for (h, spec) in handles.into_iter().zip(&specs) {
+        let e = h
+            .join()
+            .map_err(|_| Error::Runtime("worker panicked".into()))??;
+        dyn_energy.push(spec.dyn_power * e.busy);
+        wasted_energy.push(spec.dyn_power * e.wasted_busy);
+        idle_energy.push(spec.idle_power * (duration - e.busy).max(0.0));
+    }
+
+    let st = state.0.lock().unwrap();
+    let report = ServeReport {
+        heuristic: config.heuristic.clone(),
+        arrival_rate: config.arrival_rate,
+        n_requests: config.n_requests,
+        duration,
+        arrived: st.arrived.clone(),
+        completed: st.completed.clone(),
+        missed: st.missed.clone(),
+        cancelled: st.cancelled.clone(),
+        latencies: st.latencies.clone(),
+        dyn_energy,
+        idle_energy,
+        wasted_energy,
+        mapper_events: st.mapper_events,
+        mapper_time_total: st.mapper_time_total,
+        inferences: st.inferences,
+    };
+    report.check_conservation().map_err(Error::Runtime)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    // Live serving needs artifacts + threads + wall-clock; covered by
+    // rust/tests/serve_integration.rs and examples/smartsight.rs.
+}

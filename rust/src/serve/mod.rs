@@ -1,0 +1,8 @@
+//! Real-time serving coordinator: the live (wall-clock, threaded,
+//! PJRT-executing) counterpart of the discrete-event simulator.
+
+pub mod coordinator;
+pub mod report;
+
+pub use coordinator::{serve, ServeConfig};
+pub use report::ServeReport;

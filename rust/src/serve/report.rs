@@ -1,0 +1,208 @@
+//! Serving-mode metrics: what the end-to-end driver reports (latency,
+//! throughput, completion, energy) — the serving analogue of SimResult.
+
+use crate::util::json::Json;
+use crate::util::stats::{jain_index, Summary};
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub heuristic: String,
+    pub arrival_rate: f64,
+    pub n_requests: usize,
+    /// Wall-clock duration of the run (seconds).
+    pub duration: f64,
+    /// Per-type terminal counters.
+    pub arrived: Vec<u64>,
+    pub completed: Vec<u64>,
+    pub missed: Vec<u64>,
+    pub cancelled: Vec<u64>,
+    /// Sojourn times (arrival → completion) of completed requests, seconds.
+    pub latencies: Vec<f64>,
+    /// Modeled per-machine energy (dyn over busy time; idle over the rest).
+    pub dyn_energy: Vec<f64>,
+    pub idle_energy: Vec<f64>,
+    pub wasted_energy: Vec<f64>,
+    /// Mapper overhead per mapping event (seconds).
+    pub mapper_events: u64,
+    pub mapper_time_total: f64,
+    /// Number of PJRT inferences actually executed.
+    pub inferences: u64,
+}
+
+impl ServeReport {
+    pub fn completion_rates(&self) -> Vec<f64> {
+        self.arrived
+            .iter()
+            .zip(&self.completed)
+            .map(|(&a, &c)| if a == 0 { f64::NAN } else { c as f64 / a as f64 })
+            .collect()
+    }
+
+    pub fn collective_completion_rate(&self) -> f64 {
+        let a: u64 = self.arrived.iter().sum();
+        if a == 0 {
+            return f64::NAN;
+        }
+        self.completed.iter().sum::<u64>() as f64 / a as f64
+    }
+
+    pub fn jain(&self) -> f64 {
+        jain_index(
+            &self
+                .completion_rates()
+                .into_iter()
+                .filter(|r| r.is_finite())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        self.completed.iter().sum::<u64>() as f64 / self.duration
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies)
+    }
+
+    pub fn mapper_overhead_us(&self) -> f64 {
+        if self.mapper_events == 0 {
+            return 0.0;
+        }
+        1e6 * self.mapper_time_total / self.mapper_events as f64
+    }
+
+    pub fn total_wasted_energy(&self) -> f64 {
+        self.wasted_energy.iter().sum()
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.dyn_energy.iter().sum::<f64>() + self.idle_energy.iter().sum::<f64>()
+    }
+
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for i in 0..self.arrived.len() {
+            let sum = self.completed[i] + self.missed[i] + self.cancelled[i];
+            if sum != self.arrived[i] {
+                return Err(format!(
+                    "type {i}: {}+{}+{} != {}",
+                    self.completed[i], self.missed[i], self.cancelled[i], self.arrived[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lat = self.latency_summary();
+        Json::object()
+            .set("heuristic", self.heuristic.as_str())
+            .set("arrival_rate", self.arrival_rate)
+            .set("n_requests", self.n_requests)
+            .set("duration_s", self.duration)
+            .set("collective_completion_rate", self.collective_completion_rate())
+            .set("completion_rates", self.completion_rates())
+            .set("throughput_rps", self.throughput())
+            .set("latency_p50_ms", lat.median() * 1e3)
+            .set("latency_p99_ms", lat.percentile(99.0) * 1e3)
+            .set("latency_mean_ms", lat.mean * 1e3)
+            .set("jain", self.jain())
+            .set("mapper_overhead_us", self.mapper_overhead_us())
+            .set("total_energy", self.total_energy())
+            .set("wasted_energy", self.total_wasted_energy())
+            .set("inferences", self.inferences)
+    }
+
+    pub fn render(&self) -> String {
+        let lat = self.latency_summary();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "serve[{}] λ={}/s  {} requests in {:.1}s  ({:.1} completed/s)\n",
+            self.heuristic,
+            self.arrival_rate,
+            self.n_requests,
+            self.duration,
+            self.throughput()
+        ));
+        s.push_str(&format!(
+            "  completion {:.1}%  (per-type: {})  jain {:.3}\n",
+            100.0 * self.collective_completion_rate(),
+            self.completion_rates()
+                .iter()
+                .map(|r| format!("{:.1}%", 100.0 * r))
+                .collect::<Vec<_>>()
+                .join(" "),
+            self.jain()
+        ));
+        s.push_str(&format!(
+            "  latency p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms   ({} PJRT inferences)\n",
+            lat.median() * 1e3,
+            lat.percentile(99.0) * 1e3,
+            lat.mean * 1e3,
+            self.inferences
+        ));
+        s.push_str(&format!(
+            "  energy {:.1} J total, {:.1} J wasted   mapper overhead {:.1} µs/event\n",
+            self.total_energy(),
+            self.total_wasted_energy(),
+            self.mapper_overhead_us()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeReport {
+        ServeReport {
+            heuristic: "felare".into(),
+            arrival_rate: 10.0,
+            n_requests: 20,
+            duration: 2.0,
+            arrived: vec![10, 10],
+            completed: vec![9, 7],
+            missed: vec![1, 2],
+            cancelled: vec![0, 1],
+            latencies: vec![0.010, 0.020, 0.030, 0.040],
+            dyn_energy: vec![5.0, 10.0],
+            idle_energy: vec![1.0, 2.0],
+            wasted_energy: vec![0.5, 1.0],
+            mapper_events: 10,
+            mapper_time_total: 50e-6,
+            inferences: 16,
+        }
+    }
+
+    #[test]
+    fn rates_and_throughput() {
+        let r = sample();
+        assert_eq!(r.completion_rates(), vec![0.9, 0.7]);
+        assert!((r.collective_completion_rate() - 0.8).abs() < 1e-12);
+        assert!((r.throughput() - 8.0).abs() < 1e-12);
+        assert!((r.mapper_overhead_us() - 5.0).abs() < 1e-9);
+        assert_eq!(r.total_energy(), 18.0);
+        assert_eq!(r.total_wasted_energy(), 1.5);
+    }
+
+    #[test]
+    fn conservation() {
+        sample().check_conservation().unwrap();
+        let mut bad = sample();
+        bad.completed[0] += 1;
+        assert!(bad.check_conservation().is_err());
+    }
+
+    #[test]
+    fn render_and_json() {
+        let r = sample();
+        let text = r.render();
+        assert!(text.contains("80.0%"));
+        assert!(text.contains("felare"));
+        let j = r.to_json();
+        assert!(j.req_f64("latency_p99_ms").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,504 @@
+//! The discrete-event HEC simulator (our E2C-Sim equivalent; paper §VI).
+//!
+//! Semantics implemented exactly as the paper describes the system model
+//! (§III):
+//!
+//! * tasks arrive dynamically and wait in the *arriving queue*;
+//! * a mapping event fires on every arrival and every completion; the
+//!   mapper (any [`MappingHeuristic`]) assigns tasks to bounded FCFS
+//!   per-machine local queues, or defers/drops them;
+//! * mapped tasks cannot be remapped or preempted;
+//! * a running task whose deadline passes is aborted at the deadline
+//!   (Eq. 1 middle case) — its dynamic energy is wasted;
+//! * a queued task whose deadline passes before it starts is dropped at
+//!   start with no dynamic energy spent (Eq. 1 last case);
+//! * energy = Σ dynamic power · busy time + idle power · idle time.
+//!
+//! The mapper sees only *expected* execution times (the EET matrix);
+//! actual service times are EET · size_factor, revealed only as
+//! completions happen — the paper's execution-time uncertainty.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::model::machine::MachineSpec;
+use crate::model::task::{CancelReason, Outcome, Task, Time};
+use crate::model::{Scenario, Trace};
+use crate::sched::fairness::FairnessTracker;
+use crate::sched::{Action, MachineSnapshot, MappingHeuristic, SchedView};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::result::{MachineEnergy, SimResult};
+
+struct Queued {
+    task: Task,
+    expected_exec: f64,
+    actual_exec: f64,
+}
+
+struct Running {
+    task: Task,
+    start: Time,
+    /// Scheduled end = min(actual finish, deadline).
+    end: Time,
+    /// True finish had it been allowed to run to completion.
+    actual_end: Time,
+    /// What the mapper believes: start + EET entry.
+    expected_end: Time,
+}
+
+struct MachState {
+    spec: MachineSpec,
+    running: Option<Running>,
+    queue: VecDeque<Queued>,
+    energy: MachineEnergy,
+}
+
+/// One simulation run: scenario + heuristic, consumed per trace.
+pub struct Simulation {
+    scenario: Scenario,
+    heuristic: Box<dyn MappingHeuristic>,
+    /// Collect per-event mapper latencies (used by the overhead study;
+    /// off by default — the aggregate total/max are always collected).
+    pub record_overhead_samples: bool,
+    pub overhead_samples: Vec<f64>,
+}
+
+impl Simulation {
+    pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>) -> Self {
+        scenario.validate().expect("invalid scenario");
+        Self {
+            scenario: scenario.clone(),
+            heuristic,
+            record_overhead_samples: false,
+            overhead_samples: Vec::new(),
+        }
+    }
+
+    /// Run the full trace to completion and report. `&mut self` so callers
+    /// can read `overhead_samples` afterwards; the five paper heuristics
+    /// are stateless, so back-to-back runs are independent.
+    pub fn run(&mut self, trace: &Trace) -> SimResult {
+        let sc = &self.scenario;
+        let n_types = sc.n_types();
+        let n_machines = sc.n_machines();
+        let mut result =
+            SimResult::empty(self.heuristic.name(), trace.arrival_rate, n_types, n_machines);
+        result.arrived = trace.arrivals_per_type(n_types);
+
+        let mut machines: Vec<MachState> = sc
+            .machines
+            .iter()
+            .map(|spec| MachState {
+                spec: spec.clone(),
+                running: None,
+                queue: VecDeque::with_capacity(sc.queue_slots),
+                energy: MachineEnergy::default(),
+            })
+            .collect();
+
+        let mut tracker = FairnessTracker::new(
+            n_types,
+            sc.fairness_factor,
+            sc.fairness_min_samples,
+            sc.rate_window,
+        );
+        let track_for_mapper = self.heuristic.wants_fairness();
+
+        let mut events = EventQueue::new();
+        for (i, t) in trace.tasks.iter().enumerate() {
+            events.push(t.arrival, Event::Arrival { trace_idx: i });
+        }
+
+        let mut arriving: Vec<Task> = Vec::new();
+        let mut now: Time = 0.0;
+        let mut fair_buf = crate::sched::fairness::FairnessSnapshot {
+            rates: Vec::with_capacity(n_types),
+            fairness_factor: sc.fairness_factor,
+        };
+
+        // scratch buffers recycled across mapping events (§Perf: the view
+        // hands them back via into_parts, so neither the snapshot vec nor
+        // the inner queued vecs reallocate in the hot loop)
+        let mut snapshots: Vec<MachineSnapshot> = (0..n_machines)
+            .map(|_| MachineSnapshot {
+                dyn_power: 0.0,
+                avail: 0.0,
+                free_slots: 0,
+                queued: Vec::with_capacity(sc.queue_slots),
+            })
+            .collect();
+
+        while let Some((t, ev)) = events.pop() {
+            now = t;
+            match ev {
+                Event::Arrival { trace_idx } => {
+                    let task = trace.tasks[trace_idx].clone();
+                    tracker.on_arrival(task.type_id);
+                    arriving.push(task);
+                }
+                Event::Finish { machine_idx } => {
+                    finish_running(
+                        &mut machines[machine_idx],
+                        machine_idx,
+                        now,
+                        &mut result,
+                        &mut tracker,
+                    );
+                }
+            }
+
+            // start queued work freed by the completion (before mapping so
+            // availability estimates are current)
+            for (mi, m) in machines.iter_mut().enumerate() {
+                try_start(m, mi, now, &mut events, &mut result, &mut tracker);
+            }
+
+            // engine-level expiry: tasks that died waiting in the arriving
+            // queue are cancelled for every heuristic alike
+            expire_arriving(&mut arriving, now, &mut result, &mut tracker);
+
+            // ---- the mapping event -------------------------------------
+            for (snap, m) in snapshots.iter_mut().zip(&machines) {
+                fill_snapshot(snap, m, now, sc.queue_slots);
+            }
+            let fair_snap = if track_for_mapper {
+                tracker.snapshot_into(&mut fair_buf);
+                Some(&fair_buf)
+            } else {
+                None
+            };
+            let mut view = SchedView::new(
+                now,
+                &sc.eet,
+                std::mem::take(&mut snapshots),
+                &arriving,
+                fair_snap,
+            );
+            let t0 = Instant::now();
+            self.heuristic.map(&mut view);
+            let dt = t0.elapsed().as_secs_f64();
+            result.mapping_events += 1;
+            result.mapper_time_total += dt;
+            result.mapper_time_max = result.mapper_time_max.max(dt);
+            result.deferrals += view.deferrals;
+            if self.record_overhead_samples {
+                self.overhead_samples.push(dt);
+            }
+
+            // ---- apply the mapper's actions -----------------------------
+            let (actions, recycled) = view.into_parts();
+            snapshots = recycled;
+            let mut consumed = vec![false; arriving.len()];
+            for action in actions {
+                match action {
+                    Action::Assign { task_idx, machine } => {
+                        let task = arriving[task_idx].clone();
+                        debug_assert!(!consumed[task_idx]);
+                        consumed[task_idx] = true;
+                        let e = sc.eet.get(task.type_id, machine);
+                        let m = &mut machines[machine.0];
+                        debug_assert!(m.queue.len() < sc.queue_slots, "queue overflow");
+                        m.queue.push_back(Queued {
+                            actual_exec: e * task.size_factor,
+                            expected_exec: e,
+                            task,
+                        });
+                    }
+                    Action::Drop { task_idx } => {
+                        debug_assert!(!consumed[task_idx]);
+                        consumed[task_idx] = true;
+                        let task = &arriving[task_idx];
+                        let out =
+                            Outcome::Cancelled { reason: CancelReason::MapperDropped, at: now };
+                        result.record(task.type_id.0, &out);
+                        tracker.on_terminal(task.type_id, false);
+                    }
+                    Action::VictimDrop { machine, task_id } => {
+                        let m = &mut machines[machine.0];
+                        let pos = m
+                            .queue
+                            .iter()
+                            .position(|q| q.task.id == task_id)
+                            .expect("victim not in queue");
+                        let victim = m.queue.remove(pos).unwrap();
+                        let out =
+                            Outcome::Cancelled { reason: CancelReason::VictimDropped, at: now };
+                        result.record(victim.task.type_id.0, &out);
+                        tracker.on_terminal(victim.task.type_id, false);
+                    }
+                }
+            }
+            // compact the arriving queue
+            if consumed.iter().any(|&c| c) {
+                let mut keep = Vec::with_capacity(arriving.len());
+                for (i, task) in arriving.drain(..).enumerate() {
+                    if !consumed[i] {
+                        keep.push(task);
+                    }
+                }
+                arriving = keep;
+            }
+
+            // idle machines may now have work
+            for (mi, m) in machines.iter_mut().enumerate() {
+                try_start(m, mi, now, &mut events, &mut result, &mut tracker);
+            }
+        }
+
+        // Anything still waiting dies at its own deadline.
+        for task in arriving.drain(..) {
+            let out = Outcome::Cancelled {
+                reason: CancelReason::DeadlineExpired,
+                at: task.deadline.max(now),
+            };
+            result.record(task.type_id.0, &out);
+            tracker.on_terminal(task.type_id, false);
+        }
+
+        result.makespan = now;
+        result.battery = sc.battery_for(now);
+        for (mi, m) in machines.iter().enumerate() {
+            debug_assert!(m.running.is_none(), "machine {mi} still running at drain");
+            debug_assert!(m.queue.is_empty(), "machine {mi} queue not drained");
+            let mut e = m.energy.clone();
+            e.idle = m.spec.idle_energy(now - e.busy_time);
+            result.energy[mi] = e;
+        }
+        debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
+        result
+    }
+}
+
+/// Refresh one recycled mapper-visible snapshot (expected availability).
+fn fill_snapshot(snap: &mut MachineSnapshot, m: &MachState, now: Time, queue_slots: usize) {
+    let mut avail = match &m.running {
+        // optimistic clamp: a task running past its expected end is
+        // estimated to finish "now"
+        Some(r) => r.expected_end.max(now),
+        None => now,
+    };
+    snap.queued.clear();
+    for q in &m.queue {
+        avail += q.expected_exec;
+        snap.queued.push(crate::sched::QueuedInfo {
+            task_id: q.task.id,
+            type_id: q.task.type_id,
+            expected_exec: q.expected_exec,
+        });
+    }
+    snap.dyn_power = m.spec.dyn_power;
+    snap.avail = avail;
+    snap.free_slots = queue_slots.saturating_sub(snap.queued.len());
+}
+
+/// Account the finished/aborted running task.
+fn finish_running(
+    m: &mut MachState,
+    machine_idx: usize,
+    now: Time,
+    result: &mut SimResult,
+    tracker: &mut FairnessTracker,
+) {
+    let r = m.running.take().expect("finish event with no running task");
+    debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
+    let busy = r.end - r.start;
+    let e = m.spec.dyn_energy(busy);
+    m.energy.dynamic += e;
+    m.energy.busy_time += busy;
+    let ty = r.task.type_id;
+    if r.actual_end <= r.task.deadline {
+        result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
+        tracker.on_terminal(ty, true);
+    } else {
+        // aborted at the deadline; everything it burnt is wasted
+        m.energy.wasted += e;
+        result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
+        tracker.on_terminal(ty, false);
+    }
+}
+
+/// Start the next queued task if the machine is idle. Tasks whose deadline
+/// already passed are dropped at start (Eq. 1 last case, zero energy).
+fn try_start(
+    m: &mut MachState,
+    machine_idx: usize,
+    now: Time,
+    events: &mut EventQueue,
+    result: &mut SimResult,
+    tracker: &mut FairnessTracker,
+) {
+    if m.running.is_some() {
+        return;
+    }
+    while let Some(q) = m.queue.pop_front() {
+        if q.task.expired_at(now) {
+            // assigned but never started: Missed with no dynamic energy
+            result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
+            tracker.on_terminal(q.task.type_id, false);
+            continue;
+        }
+        let actual_end = now + q.actual_exec;
+        let end = actual_end.min(q.task.deadline);
+        let expected_end = now + q.expected_exec;
+        events.push(end, Event::Finish { machine_idx });
+        m.running = Some(Running { task: q.task, start: now, end, actual_end, expected_end });
+        return;
+    }
+}
+
+/// Cancel arriving-queue tasks whose deadline has passed.
+fn expire_arriving(
+    arriving: &mut Vec<Task>,
+    now: Time,
+    result: &mut SimResult,
+    tracker: &mut FairnessTracker,
+) {
+    arriving.retain(|task| {
+        if task.expired_at(now) {
+            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at: now };
+            result.record(task.type_id.0, &out);
+            tracker.on_terminal(task.type_id, false);
+            false
+        } else {
+            true
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::WorkloadParams;
+    use crate::sched::registry::heuristic_by_name;
+    use crate::util::rng::Pcg64;
+
+    fn run(heuristic: &str, rate: f64, n: usize, seed: u64) -> SimResult {
+        let sc = Scenario::paper_synthetic();
+        let params = WorkloadParams { n_tasks: n, arrival_rate: rate, ..Default::default() };
+        let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+        Simulation::new(&sc, heuristic_by_name(heuristic, &sc).unwrap()).run(&trace)
+    }
+
+    #[test]
+    fn conservation_all_heuristics() {
+        for h in crate::sched::registry::ALL_HEURISTICS {
+            let r = run(h, 5.0, 400, 1);
+            r.check_conservation().unwrap_or_else(|e| panic!("{h}: {e}"));
+            assert_eq!(r.total_arrived(), 400);
+        }
+    }
+
+    #[test]
+    fn low_rate_mostly_completes() {
+        // 0.5 tasks/s over 4 machines with ~2s tasks: hardly any contention.
+        for h in crate::sched::registry::ALL_HEURISTICS {
+            let r = run(h, 0.5, 300, 2);
+            assert!(
+                r.collective_completion_rate() > 0.95,
+                "{h}: rate {}",
+                r.collective_completion_rate()
+            );
+        }
+    }
+
+    #[test]
+    fn oversubscription_degrades_everyone() {
+        // paper Fig. 3: at very high arrival rates all heuristics converge
+        // to high miss rates.
+        for h in crate::sched::registry::ALL_HEURISTICS {
+            let r = run(h, 100.0, 800, 3);
+            assert!(r.miss_rate() > 0.7, "{h}: miss {}", r.miss_rate());
+        }
+    }
+
+    #[test]
+    fn elare_wastes_less_energy_than_mm_at_moderate_rate() {
+        // paper Fig. 4: the headline qualitative claim.
+        let mm = run("mm", 4.0, 2000, 4);
+        let el = run("elare", 4.0, 2000, 4);
+        assert!(
+            el.wasted_energy() < mm.wasted_energy(),
+            "elare {} vs mm {}",
+            el.wasted_energy(),
+            mm.wasted_energy()
+        );
+    }
+
+    #[test]
+    fn elare_cancels_mm_misses() {
+        // paper Fig. 6: ELARE's unsuccessful tasks are mostly cancelled
+        // (proactive), MM's mostly missed (reactive).
+        let mm = run("mm", 6.0, 1500, 5);
+        let el = run("elare", 6.0, 1500, 5);
+        let (mm_c, mm_m) = mm.unsuccessful_split();
+        let (el_c, el_m) = el.unsuccessful_split();
+        assert!(mm_m > mm_c, "MM mostly misses: c={mm_c} m={mm_m}");
+        assert!(el_c > el_m, "ELARE mostly cancels: c={el_c} m={el_m}");
+    }
+
+    #[test]
+    fn felare_fairer_than_elare_at_contention() {
+        // paper Fig. 7 at λ=5: FELARE evens per-type rates.
+        let el = run("elare", 5.0, 2000, 6);
+        let fe = run("felare", 5.0, 2000, 6);
+        assert!(
+            fe.jain() >= el.jain(),
+            "felare jain {} < elare jain {}",
+            fe.jain(),
+            el.jain()
+        );
+    }
+
+    #[test]
+    fn energy_decomposition_sane() {
+        let r = run("mm", 5.0, 500, 7);
+        assert!(r.dynamic_energy() > 0.0);
+        assert!(r.idle_energy() > 0.0);
+        assert!(r.wasted_energy() <= r.dynamic_energy() + 1e-9);
+        assert!(r.total_energy() > r.dynamic_energy());
+        assert!(r.battery > 0.0);
+        assert!(r.wasted_energy_pct() >= 0.0 && r.wasted_energy_pct() <= 100.0);
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_trace() {
+        let a = run("felare", 5.0, 500, 8);
+        let b = run("felare", 5.0, 500, 8);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.missed, b.missed);
+        assert_eq!(a.cancelled, b.cancelled);
+        assert!((a.wasted_energy() - b.wasted_energy()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn victim_drops_only_under_felare() {
+        for h in ["mm", "msd", "mmu", "elare"] {
+            let r = run(h, 6.0, 1000, 9);
+            assert_eq!(r.cancelled_victim, 0, "{h}");
+        }
+    }
+
+    #[test]
+    fn mapper_overhead_recorded() {
+        let r = run("felare", 5.0, 300, 10);
+        assert!(r.mapping_events >= 300, "≥ one event per arrival");
+        assert!(r.mapper_time_total > 0.0);
+        assert!(r.mapper_overhead_us() > 0.0);
+    }
+
+    #[test]
+    fn single_machine_single_slot_scenario() {
+        // degenerate system still conserves and completes something
+        let mut sc = Scenario::paper_synthetic();
+        sc.machines.truncate(1);
+        sc.task_type_names.truncate(1);
+        sc.eet = crate::model::EetMatrix::new(1, 1, vec![1.0]);
+        sc.queue_slots = 1;
+        let params = WorkloadParams { n_tasks: 50, arrival_rate: 0.2, ..Default::default() };
+        let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(11));
+        let r = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&trace);
+        r.check_conservation().unwrap();
+        assert!(r.collective_completion_rate() > 0.9);
+    }
+}

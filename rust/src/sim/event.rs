@@ -1,0 +1,138 @@
+//! Discrete-event queue: a time-ordered min-heap with deterministic
+//! tie-breaking (sequence numbers), so equal-time events process in
+//! insertion order and runs are exactly replayable.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::model::task::Time;
+
+/// Simulator events. Mapping events are *derived* (paper §III: mapping on
+/// task arrival and task completion), not scheduled separately.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// Task `trace_idx` arrives at the HEC system.
+    Arrival { trace_idx: usize },
+    /// The task running on machine `machine_idx` reaches its scheduled end
+    /// (actual finish, or deadline abort — engine decides which).
+    Finish { machine_idx: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    time: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Time, event: Event) {
+        debug_assert!(time.is_finite(), "event time must be finite");
+        self.heap.push(Entry { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::Finish { machine_idx: 0 });
+        q.push(1.0, Event::Arrival { trace_idx: 0 });
+        q.push(2.0, Event::Arrival { trace_idx: 1 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(5.0, Event::Arrival { trace_idx: i });
+        }
+        for i in 0..10 {
+            match q.pop().unwrap().1 {
+                Event::Arrival { trace_idx } => assert_eq!(trace_idx, i),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::Arrival { trace_idx: 0 });
+        assert_eq!(q.peek_time(), Some(2.0));
+        q.push(1.0, Event::Arrival { trace_idx: 1 });
+        assert_eq!(q.peek_time(), Some(1.0));
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 1.0);
+        q.push(0.5, Event::Finish { machine_idx: 2 });
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::Arrival { trace_idx: 0 });
+    }
+}

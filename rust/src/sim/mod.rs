@@ -1,0 +1,10 @@
+//! Discrete-event simulator of the HEC system — the substrate behind the
+//! paper's evaluation (their E2C-Sim, rebuilt in rust; see DESIGN.md
+//! §Substitutions).
+
+pub mod engine;
+pub mod event;
+pub mod result;
+
+pub use engine::Simulation;
+pub use result::SimResult;

@@ -1,0 +1,322 @@
+//! Simulation outputs: everything the paper's evaluation section reports,
+//! from one struct (per-type completion rates, energy decomposition,
+//! wasted energy, unsuccessful-task split, mapper overhead).
+
+use crate::model::task::{CancelReason, Outcome};
+use crate::util::json::Json;
+use crate::util::stats::jain_index;
+
+/// Per-machine energy decomposition.
+#[derive(Clone, Debug, Default)]
+pub struct MachineEnergy {
+    /// Dynamic energy over all executions (successful + aborted).
+    pub dynamic: f64,
+    /// Dynamic energy spent on tasks that missed their deadline — the
+    /// paper's "wasted energy" (Fig. 4/5 numerator).
+    pub wasted: f64,
+    /// Idle energy over the whole run.
+    pub idle: f64,
+    /// Seconds spent executing.
+    pub busy_time: f64,
+}
+
+/// Outcome of one simulated trace.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub heuristic: String,
+    pub arrival_rate: f64,
+    /// Per-type counters, index = TaskTypeId.
+    pub arrived: Vec<u64>,
+    pub completed: Vec<u64>,
+    pub missed: Vec<u64>,
+    pub cancelled: Vec<u64>,
+    /// Cancellation split by reason (aggregated over types).
+    pub cancelled_mapper: u64,
+    pub cancelled_victim: u64,
+    pub cancelled_expired: u64,
+    /// Per-machine energy.
+    pub energy: Vec<MachineEnergy>,
+    /// Battery capacity E0 used as the wasted-% denominator.
+    pub battery: f64,
+    /// End of simulation (last event time).
+    pub makespan: f64,
+    /// Mapper-overhead statistics (seconds).
+    pub mapping_events: u64,
+    pub mapper_time_total: f64,
+    pub mapper_time_max: f64,
+    /// Tasks deferred at least once (diagnostic).
+    pub deferrals: u64,
+}
+
+impl SimResult {
+    pub fn n_types(&self) -> usize {
+        self.arrived.len()
+    }
+
+    pub fn total_arrived(&self) -> u64 {
+        self.arrived.iter().sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.completed.iter().sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.missed.iter().sum()
+    }
+
+    pub fn total_cancelled(&self) -> u64 {
+        self.cancelled.iter().sum()
+    }
+
+    /// cr_i per type (NaN where no arrivals).
+    pub fn completion_rates(&self) -> Vec<f64> {
+        self.arrived
+            .iter()
+            .zip(&self.completed)
+            .map(|(&a, &c)| if a == 0 { f64::NAN } else { c as f64 / a as f64 })
+            .collect()
+    }
+
+    /// The paper's "collective completion rate" (Fig. 7/8 right axis).
+    pub fn collective_completion_rate(&self) -> f64 {
+        let a = self.total_arrived();
+        if a == 0 {
+            return f64::NAN;
+        }
+        self.total_completed() as f64 / a as f64
+    }
+
+    /// Deadline-miss rate over all arrivals (Fig. 3 y-axis):
+    /// unsuccessful = missed + cancelled.
+    pub fn miss_rate(&self) -> f64 {
+        let a = self.total_arrived();
+        if a == 0 {
+            return f64::NAN;
+        }
+        (self.total_missed() + self.total_cancelled()) as f64 / a as f64
+    }
+
+    /// Fraction of unsuccessful tasks that were missed after assignment
+    /// (vs. cancelled before), Fig. 6's split.
+    pub fn unsuccessful_split(&self) -> (f64, f64) {
+        let a = self.total_arrived() as f64;
+        if a == 0.0 {
+            return (0.0, 0.0);
+        }
+        (
+            self.total_cancelled() as f64 / a,
+            self.total_missed() as f64 / a,
+        )
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.energy.iter().map(|e| e.dynamic + e.idle).sum()
+    }
+
+    pub fn dynamic_energy(&self) -> f64 {
+        self.energy.iter().map(|e| e.dynamic).sum()
+    }
+
+    pub fn idle_energy(&self) -> f64 {
+        self.energy.iter().map(|e| e.idle).sum()
+    }
+
+    /// Energy consumed by machines processing missed tasks (Fig. 4/5
+    /// numerator).
+    pub fn wasted_energy(&self) -> f64 {
+        self.energy.iter().map(|e| e.wasted).sum()
+    }
+
+    /// Wasted energy as % of the initial available energy (Fig. 4/5 y-axis).
+    pub fn wasted_energy_pct(&self) -> f64 {
+        100.0 * self.wasted_energy() / self.battery
+    }
+
+    /// Jain fairness index over per-type completion rates.
+    pub fn jain(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .completion_rates()
+            .into_iter()
+            .filter(|r| r.is_finite())
+            .collect();
+        jain_index(&rates)
+    }
+
+    /// Mean mapper overhead per mapping event, in microseconds (the
+    /// paper's "lightweight / no significant overhead" claim).
+    pub fn mapper_overhead_us(&self) -> f64 {
+        if self.mapping_events == 0 {
+            return 0.0;
+        }
+        1e6 * self.mapper_time_total / self.mapping_events as f64
+    }
+
+    /// Invariant: every arrival is accounted for exactly once.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for i in 0..self.n_types() {
+            let sum = self.completed[i] + self.missed[i] + self.cancelled[i];
+            if sum != self.arrived[i] {
+                return Err(format!(
+                    "type {i}: completed {} + missed {} + cancelled {} != arrived {}",
+                    self.completed[i], self.missed[i], self.cancelled[i], self.arrived[i]
+                ));
+            }
+        }
+        let split = self.cancelled_mapper + self.cancelled_victim + self.cancelled_expired;
+        if split != self.total_cancelled() {
+            return Err(format!(
+                "cancel-reason split {split} != total cancelled {}",
+                self.total_cancelled()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Record one outcome into the counters (engine helper).
+    pub fn record(&mut self, type_idx: usize, outcome: &Outcome) {
+        match outcome {
+            Outcome::Completed { .. } => self.completed[type_idx] += 1,
+            Outcome::Missed { .. } => self.missed[type_idx] += 1,
+            Outcome::Cancelled { reason, .. } => {
+                self.cancelled[type_idx] += 1;
+                match reason {
+                    CancelReason::MapperDropped => self.cancelled_mapper += 1,
+                    CancelReason::VictimDropped => self.cancelled_victim += 1,
+                    CancelReason::DeadlineExpired => self.cancelled_expired += 1,
+                }
+            }
+        }
+    }
+
+    pub fn empty(heuristic: &str, arrival_rate: f64, n_types: usize, n_machines: usize) -> Self {
+        Self {
+            heuristic: heuristic.to_string(),
+            arrival_rate,
+            arrived: vec![0; n_types],
+            completed: vec![0; n_types],
+            missed: vec![0; n_types],
+            cancelled: vec![0; n_types],
+            cancelled_mapper: 0,
+            cancelled_victim: 0,
+            cancelled_expired: 0,
+            energy: vec![MachineEnergy::default(); n_machines],
+            battery: 1.0,
+            makespan: 0.0,
+            mapping_events: 0,
+            mapper_time_total: 0.0,
+            mapper_time_max: 0.0,
+            deferrals: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object()
+            .set("heuristic", self.heuristic.as_str())
+            .set("arrival_rate", self.arrival_rate)
+            .set("arrived", self.arrived.iter().map(|&x| x as f64).collect::<Vec<_>>())
+            .set("completed", self.completed.iter().map(|&x| x as f64).collect::<Vec<_>>())
+            .set("missed", self.missed.iter().map(|&x| x as f64).collect::<Vec<_>>())
+            .set("cancelled", self.cancelled.iter().map(|&x| x as f64).collect::<Vec<_>>())
+            .set("collective_completion_rate", self.collective_completion_rate())
+            .set("miss_rate", self.miss_rate())
+            .set("total_energy", self.total_energy())
+            .set("wasted_energy", self.wasted_energy())
+            .set("wasted_energy_pct", self.wasted_energy_pct())
+            .set("battery", self.battery)
+            .set("jain", self.jain())
+            .set("makespan", self.makespan)
+            .set("mapper_overhead_us", self.mapper_overhead_us())
+            .set("deferrals", self.deferrals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::task::CancelReason;
+
+    fn sample() -> SimResult {
+        let mut r = SimResult::empty("test", 5.0, 2, 2);
+        r.arrived = vec![10, 10];
+        r.record(0, &Outcome::Completed { machine: 0, finish: 1.0 });
+        for _ in 0..7 {
+            r.record(0, &Outcome::Completed { machine: 0, finish: 1.0 });
+        }
+        r.record(0, &Outcome::Missed { machine: 1, at: 2.0 });
+        r.record(0, &Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at: 3.0 });
+        for _ in 0..4 {
+            r.record(1, &Outcome::Completed { machine: 1, finish: 1.0 });
+        }
+        for _ in 0..3 {
+            r.record(1, &Outcome::Missed { machine: 0, at: 2.0 });
+        }
+        r.record(1, &Outcome::Cancelled { reason: CancelReason::MapperDropped, at: 1.0 });
+        r.record(1, &Outcome::Cancelled { reason: CancelReason::VictimDropped, at: 1.5 });
+        r.record(1, &Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at: 4.0 });
+        r.energy[0] = MachineEnergy { dynamic: 10.0, wasted: 2.0, idle: 1.0, busy_time: 5.0 };
+        r.energy[1] = MachineEnergy { dynamic: 20.0, wasted: 6.0, idle: 2.0, busy_time: 8.0 };
+        r.battery = 200.0;
+        r
+    }
+
+    #[test]
+    fn counters_and_rates() {
+        let r = sample();
+        assert_eq!(r.total_arrived(), 20);
+        assert_eq!(r.total_completed(), 12);
+        assert_eq!(r.total_missed(), 4);
+        assert_eq!(r.total_cancelled(), 4);
+        assert_eq!(r.completion_rates(), vec![0.8, 0.4]);
+        assert!((r.collective_completion_rate() - 0.6).abs() < 1e-12);
+        assert!((r.miss_rate() - 0.4).abs() < 1e-12);
+        let (cancelled, missed) = r.unsuccessful_split();
+        assert!((cancelled - 0.2).abs() < 1e-12);
+        assert!((missed - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conservation_holds() {
+        sample().check_conservation().unwrap();
+    }
+
+    #[test]
+    fn conservation_catches_mismatch() {
+        let mut r = sample();
+        r.arrived[0] += 1;
+        assert!(r.check_conservation().is_err());
+    }
+
+    #[test]
+    fn energy_accounting() {
+        let r = sample();
+        assert_eq!(r.dynamic_energy(), 30.0);
+        assert_eq!(r.idle_energy(), 3.0);
+        assert_eq!(r.total_energy(), 33.0);
+        assert_eq!(r.wasted_energy(), 8.0);
+        assert!((r.wasted_energy_pct() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_reflects_dispersion() {
+        let r = sample(); // rates 0.8, 0.4
+        let j = r.jain();
+        assert!(j < 1.0 && j > 0.5);
+    }
+
+    #[test]
+    fn overhead_mean() {
+        let mut r = sample();
+        r.mapping_events = 4;
+        r.mapper_time_total = 8e-6;
+        assert!((r.mapper_overhead_us() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let j = sample().to_json();
+        assert!(j.req_f64("wasted_energy_pct").is_ok());
+        assert!(j.req_f64("collective_completion_rate").is_ok());
+        assert_eq!(j.req_str("heuristic").unwrap(), "test");
+    }
+}

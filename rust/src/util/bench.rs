@@ -1,0 +1,248 @@
+//! Micro/macro benchmark harness (substrate for `criterion`).
+//!
+//! Used by every target in `rust/benches/` (wired with `harness = false`).
+//! Auto-tunes iteration count to a target measurement window, reports
+//! mean / p50 / p99 / std and optional throughput, and can emit a JSON
+//! line per result for the §Perf log in EXPERIMENTS.md.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+pub use std::hint::black_box;
+
+/// One benchmark's collected result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+    /// items/sec if `throughput_items` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) => format!("  {:>12}/s", human_count(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12}  p50 {:>12}  p99 {:>12}  ±{:>10}{tp}",
+            self.name,
+            human_ns(self.mean_ns),
+            human_ns(self.p50_ns),
+            human_ns(self.p99_ns),
+            human_ns(self.std_ns),
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::object()
+            .set("name", self.name.as_str())
+            .set("samples", self.samples)
+            .set("iters_per_sample", self.iters_per_sample)
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p99_ns", self.p99_ns)
+            .set("std_ns", self.std_ns);
+        if let Some(t) = self.throughput {
+            j = j.set("items_per_sec", t);
+        }
+        j
+    }
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn human_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Harness configuration; `Bencher::new(name)` gives sane defaults.
+pub struct Bencher {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    throughput_items: Option<u64>,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            samples: 30,
+            throughput_items: None,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(2);
+        self
+    }
+
+    /// Report items/sec computed from the per-iteration mean.
+    pub fn throughput_items(mut self, n: u64) -> Self {
+        self.throughput_items = Some(n);
+        self
+    }
+
+    /// Run `f` repeatedly; the closure's return value is black-boxed.
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + estimate per-iteration cost.
+        let warm_end = Instant::now() + self.warmup;
+        let mut warm_iters: u64 = 0;
+        let warm_start = Instant::now();
+        while Instant::now() < warm_end {
+            bb(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+
+        // Choose iters/sample so samples fill the measurement window.
+        let budget_ns = self.measure.as_nanos() as f64 / self.samples as f64;
+        let iters = ((budget_ns / per_iter.max(1.0)).floor() as u64).max(1);
+
+        let mut per_sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            per_sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let s = Summary::of(&per_sample_ns);
+        let mean = s.mean;
+        BenchResult {
+            name: self.name,
+            samples: self.samples,
+            iters_per_sample: iters,
+            mean_ns: mean,
+            p50_ns: s.median(),
+            p99_ns: s.percentile(99.0),
+            std_ns: s.std,
+            throughput: self.throughput_items.map(|n| n as f64 * 1e9 / mean),
+        }
+    }
+}
+
+/// Bench-target entrypoint helper: prints a header, runs each closure,
+/// prints report lines, returns all results.
+pub struct Suite {
+    title: String,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        eprintln!("\n=== bench suite: {title} ===");
+        Self { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn add(&mut self, r: BenchResult) {
+        println!("{}", r.report_line());
+        self.results.push(r);
+    }
+
+    /// Write all results as a JSON array under results/bench/.
+    pub fn write_json(&self) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all("results/bench")?;
+        let arr = Json::Array(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench/{}.json", self.title.replace(' ', "_"));
+        std::fs::write(path, arr.to_string_pretty())
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = Bencher::new("noop")
+            .warmup(Duration::from_millis(5))
+            .measure_time(Duration::from_millis(20))
+            .samples(5)
+            .run(|| 1 + 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns > 0.0);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let fast = Bencher::new("fast")
+            .warmup(Duration::from_millis(5))
+            .measure_time(Duration::from_millis(30))
+            .samples(5)
+            .run(|| bb(0u64));
+        let slow = Bencher::new("slow")
+            .warmup(Duration::from_millis(5))
+            .measure_time(Duration::from_millis(30))
+            .samples(5)
+            .run(|| (0..2000u64).map(bb).sum::<u64>());
+        assert!(slow.mean_ns > fast.mean_ns * 3.0, "fast={} slow={}", fast.mean_ns, slow.mean_ns);
+    }
+
+    #[test]
+    fn throughput_derived_from_mean() {
+        let r = Bencher::new("tp")
+            .warmup(Duration::from_millis(5))
+            .measure_time(Duration::from_millis(20))
+            .samples(4)
+            .throughput_items(100)
+            .run(|| bb(7u32));
+        let t = r.throughput.unwrap();
+        assert!((t - 100.0 * 1e9 / r.mean_ns).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_ns(12.0), "12.0 ns");
+        assert!(human_ns(1500.0).contains("µs"));
+        assert!(human_ns(2.5e6).contains("ms"));
+        assert!(human_ns(3.0e9).contains(" s"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Declarative command-line parsing (substrate for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! per-flag defaults, typed accessors and generated `--help`. The binary's
+//! subcommand dispatch lives in main.rs; each subcommand owns an `Args`
+//! spec from here.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    takes_value: bool,
+    default: Option<String>,
+    help: String,
+}
+
+/// A subcommand's argument specification + parse results.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            takes_value: true,
+            default: Some(default.into()),
+            help: help.into(),
+        });
+        self
+    }
+
+    /// `--name <value>` option that may be absent.
+    pub fn opt_optional(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            takes_value: true,
+            default: None,
+            help: help.into(),
+        });
+        self
+    }
+
+    /// Boolean `--name` switch (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            takes_value: false,
+            default: None,
+            help: help.into(),
+        });
+        self
+    }
+
+    /// Parse a raw arg list (no program name). Returns Err(help) on
+    /// `--help` or a usage error message on bad input.
+    pub fn parse(mut self, raw: &[String]) -> Result<Args, String> {
+        let mut it = raw.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?
+                    .clone();
+                if opt.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    };
+                    self.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+        }
+        // fill defaults
+        for opt in &self.opts {
+            if opt.takes_value && !self.values.contains_key(&opt.name) {
+                if let Some(d) = &opt.default {
+                    self.values.insert(opt.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            let _ = writeln!(s, "  {left:<28} {}{default}", o.help);
+        }
+        s
+    }
+
+    // ---- typed accessors ---------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} has no value/default"))
+            .clone()
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects a number, got '{}'", self.str(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        Ok(self.u64(name)? as usize)
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list value.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.list(name)
+            .iter()
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| format!("--{name}: '{s}' is not a number"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("rate", "5.0", "arrival rate")
+            .opt("heuristic", "felare", "policy name")
+            .opt_optional("out", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&raw(&[])).unwrap();
+        assert_eq!(a.f64("rate").unwrap(), 5.0);
+        assert_eq!(a.str("heuristic"), "felare");
+        assert_eq!(a.get("out"), None);
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = spec().parse(&raw(&["--rate", "2.5", "--heuristic=mm"])).unwrap();
+        assert_eq!(a.f64("rate").unwrap(), 2.5);
+        assert_eq!(a.str("heuristic"), "mm");
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = spec().parse(&raw(&["--verbose", "tracefile", "x"])).unwrap();
+        assert!(a.is_set("verbose"));
+        assert_eq!(a.positional(), &["tracefile".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&raw(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&raw(&["--rate"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(spec().parse(&raw(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_flag_returns_help() {
+        let err = spec().parse(&raw(&["--help"])).unwrap_err();
+        assert!(err.contains("arrival rate"));
+        assert!(err.contains("[default: 5.0]"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = spec().parse(&raw(&["--rate", "abc"])).unwrap();
+        assert!(a.f64("rate").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::new("t", "x")
+            .opt("rates", "1,2,3.5", "rates")
+            .parse(&raw(&[]))
+            .unwrap();
+        assert_eq!(a.f64_list("rates").unwrap(), vec![1.0, 2.0, 3.5]);
+        let b = Args::new("t", "x")
+            .opt("rates", "", "rates")
+            .parse(&raw(&[]))
+            .unwrap();
+        assert!(b.f64_list("rates").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! In-repo substrates (offline environment: only `xla`/`anyhow`/`thiserror`
+//! are available as external crates — see DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod parallel;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,105 @@
+//! Scoped-thread parallel map (substrate for `rayon`'s `par_iter`).
+//!
+//! The experiment sweeps run hundreds of independent simulations (30
+//! traces × rates × heuristics); this fans them across a fixed worker pool
+//! with `std::thread::scope`, preserving input order in the output.
+
+/// Number of workers: FELARE_JOBS env var, else available parallelism.
+pub fn default_jobs() -> usize {
+    std::env::var("FELARE_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Apply `f` to every item on a pool of `jobs` threads; results keep the
+/// input order. `f` must be `Sync` (called concurrently) and items `Send`.
+pub fn par_map<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(n);
+    if jobs == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let work: Vec<std::sync::Mutex<Option<T>>> =
+        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("work item taken twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = par_map(xs, 8, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let ys: Vec<u64> = par_map(Vec::<u64>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+        assert_eq!(par_map(vec![7], 4, |x: u64| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn single_job_sequential_path() {
+        assert_eq!(par_map(vec![1, 2, 3], 1, |x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let xs: Vec<u32> = (0..16).collect();
+        par_map(xs, 4, |_| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) >= 2, "peak {}", PEAK.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn jobs_clamped_to_items() {
+        assert_eq!(par_map(vec![1, 2], 64, |x: u64| x), vec![1, 2]);
+    }
+}

@@ -1,0 +1,492 @@
+//! Deterministic PRNG + statistical distributions (substrate for `rand`/`rand_distr`).
+//!
+//! The workload generator (paper §VI) needs Poisson inter-arrivals, Gamma
+//! service times (CVB heterogeneity synthesis + per-task sampling) and
+//! uniform/normal draws. crates.io is unavailable offline, so this module
+//! implements them from the literature:
+//!
+//! * core generator: PCG XSL-RR 128/64 (O'Neill 2014) — 128-bit LCG state,
+//!   xorshift-rotate output; passes BigCrush, 2^128 period.
+//! * seeding: SplitMix64 over the user seed so nearby seeds decorrelate.
+//! * `Normal`: Marsaglia polar method with spare caching.
+//! * `Gamma`: Marsaglia–Tsang (2000) squeeze method; shape < 1 via the
+//!   Ahrens–Dieter boost `Gamma(a+1) · U^(1/a)`.
+//! * `Poisson`: Knuth product-of-uniforms for small mean; PTRS transformed
+//!   rejection (Hörmann 1993) for mean ≥ 10.
+//!
+//! Every sampler is a value type over `&mut Pcg64` so streams are explicit
+//! and replayable (`Pcg64::seed_from(seed, stream)`).
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG XSL-RR 128/64: the repo-wide deterministic generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Seed a generator; `stream` selects an independent sequence for the
+    /// same seed (arrivals vs. service times vs. property-test cases).
+    pub fn seed_from(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let lo = splitmix64(&mut sm);
+        let hi = splitmix64(&mut sm);
+        let mut sm2 = stream ^ 0xda3e_39cb_94b9_5bdb;
+        let ilo = splitmix64(&mut sm2);
+        let ihi = splitmix64(&mut sm2);
+        let mut rng = Self {
+            state: ((hi as u128) << 64) | lo as u128,
+            // stream selector must be odd
+            inc: (((ihi as u128) << 64) | ilo as u128) | 1,
+        };
+        rng.next_u64(); // burn one to mix the seed into the LCG
+        rng
+    }
+
+    pub fn new(seed: u64) -> Self {
+        Self::seed_from(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of randomness.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(lo <= hi);
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform index into a slice.
+    pub fn index(&mut self, len: usize) -> usize {
+        self.below(len as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Standard normal via the Marsaglia polar method (cached spare).
+#[derive(Clone, Debug, Default)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sample(&mut self, rng: &mut Pcg64) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * rng.f64() - 1.0;
+            let v = 2.0 * rng.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    pub fn sample_with(&mut self, rng: &mut Pcg64, mean: f64, std: f64) -> f64 {
+        mean + std * self.sample(rng)
+    }
+}
+
+/// Gamma(shape, scale) via Marsaglia–Tsang; mean = shape·scale.
+#[derive(Clone, Debug)]
+pub struct Gamma {
+    shape: f64,
+    scale: f64,
+    normal: Normal,
+}
+
+impl Gamma {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0, "Gamma requires positive params");
+        Self { shape, scale, normal: Normal::new() }
+    }
+
+    /// Parameterise by (mean, coefficient-of-variation) — the CVB paper's
+    /// natural coordinates: shape = 1/CV², scale = mean·CV².
+    pub fn from_mean_cv(mean: f64, cv: f64) -> Self {
+        assert!(mean > 0.0 && cv > 0.0, "mean/CV must be positive");
+        let shape = 1.0 / (cv * cv);
+        Self::new(shape, mean / shape)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.shape * self.scale
+    }
+
+    pub fn sample(&mut self, rng: &mut Pcg64) -> f64 {
+        if self.shape < 1.0 {
+            // Ahrens–Dieter boost: Gamma(a) = Gamma(a+1) · U^(1/a)
+            let boosted = self.sample_shape_ge1(rng, self.shape + 1.0);
+            let u = rng.f64_open();
+            return boosted * u.powf(1.0 / self.shape) * self.scale;
+        }
+        self.sample_shape_ge1(rng, self.shape) * self.scale
+    }
+
+    fn sample_shape_ge1(&mut self, rng: &mut Pcg64, shape: f64) -> f64 {
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal.sample(rng);
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = rng.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+}
+
+/// Exponential(rate); mean = 1/rate. The Poisson-process inter-arrival law.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "Exponential rate must be positive");
+        Self { rate }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        -rng.f64_open().ln() / self.rate
+    }
+}
+
+/// Poisson(mean) counts.
+#[derive(Clone, Debug)]
+pub struct Poisson {
+    mean: f64,
+}
+
+impl Poisson {
+    pub fn new(mean: f64) -> Self {
+        assert!(mean > 0.0, "Poisson mean must be positive");
+        Self { mean }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        if self.mean < 10.0 {
+            self.sample_knuth(rng)
+        } else {
+            self.sample_ptrs(rng)
+        }
+    }
+
+    fn sample_knuth(&self, rng: &mut Pcg64) -> u64 {
+        let l = (-self.mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64_open();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// PTRS transformed rejection (Hörmann 1993), valid for mean ≥ 10.
+    fn sample_ptrs(&self, rng: &mut Pcg64) -> u64 {
+        let mu = self.mean;
+        let b = 0.931 + 2.53 * mu.sqrt();
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = rng.f64() - 0.5;
+            let v = rng.f64_open();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + mu + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            let lhs = (v * inv_alpha / (a / (us * us) + b)).ln();
+            let rhs = -mu + k * mu.ln() - ln_factorial(k as u64);
+            if lhs <= rhs {
+                return k as u64;
+            }
+        }
+    }
+}
+
+/// ln(k!) via Stirling–Gosper for large k, exact table for small k.
+fn ln_factorial(k: u64) -> f64 {
+    const TABLE: [f64; 10] = [
+        0.0,
+        0.0,
+        0.693_147_180_559_945_3,
+        1.791_759_469_228_055,
+        3.178_053_830_347_946,
+        4.787_491_742_782_046,
+        6.579_251_212_010_101,
+        8.525_161_361_065_415,
+        10.604_602_902_745_25,
+        12.801_827_480_081_469,
+    ];
+    if (k as usize) < TABLE.len() {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    // Stirling series for ln Γ(x)
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln()
+        + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_and_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn different_streams_diverge() {
+        let mut a = Pcg64::seed_from(7, 0);
+        let mut b = Pcg64::seed_from(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = rng.f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.f64()).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 1.0 / 12.0).abs() < 0.01, "var {v}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut rng = Pcg64::new(5);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let mut n = Normal::new();
+        let xs: Vec<f64> = (0..200_000).map(|_| n.sample(&mut rng)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn normal_scaled() {
+        let mut rng = Pcg64::new(17);
+        let mut n = Normal::new();
+        let xs: Vec<f64> =
+            (0..100_000).map(|_| n.sample_with(&mut rng, 5.0, 2.0)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 5.0).abs() < 0.03, "mean {m}");
+        assert!((v - 4.0).abs() < 0.1, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_ge1() {
+        let mut rng = Pcg64::new(19);
+        let mut g = Gamma::new(4.0, 0.5); // mean 2, var 1
+        let xs: Vec<f64> = (0..200_000).map(|_| g.sample(&mut rng)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 2.0).abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn gamma_moments_shape_lt1() {
+        let mut rng = Pcg64::new(23);
+        let mut g = Gamma::new(0.5, 2.0); // mean 1, var 2
+        let xs: Vec<f64> = (0..200_000).map(|_| g.sample(&mut rng)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 1.0).abs() < 0.03, "mean {m}");
+        assert!((v - 2.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn gamma_from_mean_cv_roundtrip() {
+        let g = Gamma::from_mean_cv(3.0, 0.25);
+        assert!((g.mean() - 3.0).abs() < 1e-12);
+        let mut rng = Pcg64::new(29);
+        let mut g = g;
+        let xs: Vec<f64> = (0..200_000).map(|_| g.sample(&mut rng)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 3.0).abs() < 0.02, "mean {m}");
+        let cv = v.sqrt() / m;
+        assert!((cv - 0.25).abs() < 0.01, "cv {cv}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Pcg64::new(31);
+        let e = Exponential::new(4.0); // mean 0.25
+        let xs: Vec<f64> = (0..200_000).map(|_| e.sample(&mut rng)).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 0.25).abs() < 0.005, "mean {m}");
+        assert!((v - 0.0625).abs() < 0.005, "var {v}");
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut rng = Pcg64::new(37);
+        let p = Poisson::new(3.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| p.sample(&mut rng) as f64).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 3.0).abs() < 0.05, "mean {m}");
+        assert!((v - 3.0).abs() < 0.1, "var {v}");
+    }
+
+    #[test]
+    fn poisson_large_mean_ptrs() {
+        let mut rng = Pcg64::new(41);
+        let p = Poisson::new(50.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| p.sample(&mut rng) as f64).collect();
+        let (m, v) = mean_and_var(&xs);
+        assert!((m - 50.0).abs() < 0.3, "mean {m}");
+        assert!((v - 50.0).abs() < 1.5, "var {v}");
+    }
+
+    #[test]
+    fn ln_factorial_exact_small_and_stirling_agree() {
+        // Stirling series truncation error at k=10 is ~5e-9 — well inside
+        // what the PTRS acceptance test needs.
+        assert!((ln_factorial(10) - (3_628_800f64).ln()).abs() < 1e-7);
+        let exact20: f64 = 2.432_902_008_176_64e18; // 20!
+        assert!((ln_factorial(20) - exact20.ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gamma_rejects_nonpositive_shape() {
+        let _ = Gamma::new(0.0, 1.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! Streaming + batch statistics (substrate; no external crates).
+//!
+//! Used by the fairness tracker (mean/std of completion rates, Eq. 3), the
+//! experiment harness (per-point means over 30 traces, CIs) and the bench
+//! harness (latency percentiles).
+
+/// Welford online mean/variance accumulator — numerically stable, O(1) push.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (divide by n) — what Eq. 3's σ uses: the task
+    /// types are the full population, not a sample.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (divide by n-1) for trace-level aggregation.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn sample_std(&self) -> f64 {
+        self.sample_variance().sqrt()
+    }
+
+    /// Merge two accumulators (Chan et al. parallel update).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Population mean/std of a slice (Eq. 3 convenience).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    (w.mean(), w.std())
+}
+
+/// Batch summary with order statistics. Percentiles use the nearest-rank
+/// method on a sorted copy.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    sorted: Vec<f64>,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (mean, std) = mean_std(&sorted);
+        Self {
+            count: sorted.len(),
+            mean,
+            std,
+            min: sorted.first().copied().unwrap_or(f64::NAN),
+            max: sorted.last().copied().unwrap_or(f64::NAN),
+            sorted,
+        }
+    }
+
+    /// Nearest-rank percentile, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let rank = ((q / 100.0) * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[rank.saturating_sub(1).min(self.sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Half-width of the 95% normal-approx confidence interval on the mean.
+    pub fn ci95(&self) -> f64 {
+        if self.count < 2 {
+            return f64::NAN;
+        }
+        // sample std for CI
+        let n = self.count as f64;
+        let sample_std = self.std * (n / (n - 1.0)).sqrt();
+        1.96 * sample_std / n.sqrt()
+    }
+}
+
+/// Jain's fairness index over non-negative values: (Σx)² / (n·Σx²) ∈ (0, 1].
+/// 1 ⇔ all equal. Reported alongside the paper's fairness-limit machinery
+/// as a scalar summary of per-type completion-rate dispersion.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 4.0).abs() < 1e-12);
+        assert!((w.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_empty_is_zero() {
+        let w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.count(), 0);
+    }
+
+    #[test]
+    fn welford_single_value() {
+        let mut w = Welford::new();
+        w.push(3.5);
+        assert_eq!(w.mean(), 3.5);
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.sample_variance(), 0.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (mut a, mut b) = (Welford::new(), Welford::new());
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn paper_fig2_mean_std() {
+        // Paper §V worked example: cr = {20, 60, 15, 45} ⇒ μ=35, σ=18.4
+        let (mu, sigma) = mean_std(&[20.0, 60.0, 15.0, 45.0]);
+        assert!((mu - 35.0).abs() < 1e-12);
+        assert!((sigma - 18.37).abs() < 0.05, "σ={sigma}");
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_filters_nonfinite() {
+        let s = Summary::of(&[1.0, f64::NAN, 2.0, f64::INFINITY, 3.0]);
+        // NaN and Inf both dropped -> {1, 2, 3}
+        assert_eq!(s.count, 3);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert!(s.percentile(50.0).is_nan());
+        assert_eq!(s.count, 0);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let a = Summary::of(&(0..10).map(|i| i as f64).collect::<Vec<_>>());
+        let b = Summary::of(&(0..1000).map(|i| (i % 10) as f64).collect::<Vec<_>>());
+        assert!(b.ci95() < a.ci95());
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // one user hogs everything: index -> 1/n
+        let j = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12);
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+}

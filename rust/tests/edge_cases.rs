@@ -1,0 +1,249 @@
+//! Failure injection and degenerate-configuration tests: the simulator and
+//! heuristics must stay correct (conserving, non-panicking) at the edges —
+//! zero-slack deadlines, saturated queues, single-machine systems, extreme
+//! service-time variance, empty workloads.
+
+use felare::model::cvb::{generate, CvbParams};
+use felare::model::machine::MachineSpec;
+use felare::model::scenario::RateWindow;
+use felare::model::task::{Task, TaskTypeId};
+use felare::model::{EetMatrix, Scenario, Trace, WorkloadParams};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sim::Simulation;
+use felare::util::rng::Pcg64;
+
+fn tiny_scenario(n_machines: usize, queue_slots: usize) -> Scenario {
+    let machines: Vec<MachineSpec> = (0..n_machines)
+        .map(|i| MachineSpec::new(i, &format!("m{i}"), 1.0 + i as f64, 0.05))
+        .collect();
+    let eet = EetMatrix::new(2, n_machines, vec![1.0; 2 * n_machines]);
+    Scenario {
+        name: "edge".into(),
+        machines,
+        task_type_names: vec!["A".into(), "B".into()],
+        eet,
+        queue_slots,
+        fairness_factor: 1.0,
+        fairness_min_samples: 2,
+        rate_window: RateWindow::Cumulative,
+        cv_exec: 0.1,
+        battery: None,
+    }
+}
+
+fn run(scenario: &Scenario, heuristic: &str, trace: &Trace) -> felare::sim::SimResult {
+    let h = heuristic_by_name(heuristic, scenario).unwrap();
+    Simulation::new(scenario, h).run(trace)
+}
+
+fn manual_trace(tasks: Vec<Task>, rate: f64) -> Trace {
+    Trace { tasks, arrival_rate: rate }
+}
+
+#[test]
+fn empty_trace_is_fine() {
+    let sc = tiny_scenario(2, 2);
+    for h in ALL_HEURISTICS {
+        let r = run(&sc, h, &manual_trace(vec![], 1.0));
+        assert_eq!(r.total_arrived(), 0);
+        r.check_conservation().unwrap();
+    }
+}
+
+#[test]
+fn already_expired_deadlines() {
+    // every deadline before its own arrival: everything must fail cleanly
+    let sc = tiny_scenario(2, 2);
+    let tasks: Vec<Task> = (0..20)
+        .map(|i| Task {
+            id: i,
+            type_id: TaskTypeId((i % 2) as usize),
+            arrival: i as f64 * 0.1,
+            deadline: i as f64 * 0.1 - 0.01,
+            size_factor: 1.0,
+        })
+        .collect();
+    for h in ALL_HEURISTICS {
+        let r = run(&sc, h, &manual_trace(tasks.clone(), 10.0));
+        r.check_conservation().unwrap();
+        assert_eq!(r.total_completed(), 0, "{h}");
+        assert_eq!(r.total_missed() + r.total_cancelled(), 20, "{h}");
+    }
+}
+
+#[test]
+fn zero_slack_deadlines() {
+    // deadline == arrival exactly: expired_at(arrival) is true by the ≥
+    // convention; nothing completes, nothing panics.
+    let sc = tiny_scenario(2, 2);
+    let tasks: Vec<Task> = (0..10)
+        .map(|i| Task {
+            id: i,
+            type_id: TaskTypeId(0),
+            arrival: i as f64,
+            deadline: i as f64,
+            size_factor: 1.0,
+        })
+        .collect();
+    for h in ALL_HEURISTICS {
+        let r = run(&sc, h, &manual_trace(tasks.clone(), 1.0));
+        r.check_conservation().unwrap();
+        assert_eq!(r.total_completed(), 0, "{h}");
+    }
+}
+
+#[test]
+fn simultaneous_arrivals_burst() {
+    // all tasks arrive at t=0 (Poisson degenerate burst)
+    let sc = tiny_scenario(3, 2);
+    let tasks: Vec<Task> = (0..60)
+        .map(|i| Task {
+            id: i,
+            type_id: TaskTypeId((i % 2) as usize),
+            arrival: 0.0,
+            deadline: 4.0,
+            size_factor: 1.0,
+        })
+        .collect();
+    for h in ALL_HEURISTICS {
+        let r = run(&sc, h, &manual_trace(tasks.clone(), 1000.0));
+        r.check_conservation().unwrap();
+        // 3 machines × 4s window / 1s exec = at most ~12 on-time + queued ones
+        assert!(r.total_completed() <= 15, "{h}: {}", r.total_completed());
+        assert!(r.total_completed() >= 9, "{h}: {}", r.total_completed());
+    }
+}
+
+#[test]
+fn single_machine_single_slot_fifo_order() {
+    let sc = tiny_scenario(1, 1);
+    let tasks: Vec<Task> = (0..5)
+        .map(|i| Task {
+            id: i,
+            type_id: TaskTypeId(0),
+            arrival: i as f64 * 0.01,
+            deadline: 100.0,
+            size_factor: 1.0,
+        })
+        .collect();
+    let r = run(&sc, "mm", &manual_trace(tasks, 100.0));
+    r.check_conservation().unwrap();
+    // 1 machine, 1s per task, generous deadlines: all complete
+    assert_eq!(r.total_completed(), 5);
+    assert!((r.makespan - 5.0).abs() < 0.1, "makespan {}", r.makespan);
+}
+
+#[test]
+fn huge_service_time_variance() {
+    // cv_exec = 2.0: wild actual execution times vs EET expectations —
+    // the scheduler's estimates are badly wrong but nothing breaks.
+    let mut sc = tiny_scenario(3, 2);
+    sc.cv_exec = 2.0;
+    let params = WorkloadParams {
+        n_tasks: 300,
+        arrival_rate: 2.0,
+        cv_exec: 2.0,
+        type_weights: Vec::new(),
+    };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(9));
+    for h in ALL_HEURISTICS {
+        let r = run(&sc, h, &trace);
+        r.check_conservation().unwrap();
+        assert!(r.total_completed() > 0, "{h}");
+    }
+}
+
+#[test]
+fn skewed_type_mix_starves_gracefully() {
+    // 95% of traffic is type A — type B's completion rate must still be
+    // tracked sanely and FELARE must not panic on tiny samples.
+    let sc = tiny_scenario(2, 2);
+    let params = WorkloadParams {
+        n_tasks: 400,
+        arrival_rate: 3.0,
+        cv_exec: 0.1,
+        type_weights: vec![19.0, 1.0],
+    };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(10));
+    let r = run(&sc, "felare", &trace);
+    r.check_conservation().unwrap();
+    let rates = r.completion_rates();
+    assert!(rates[0].is_finite());
+}
+
+#[test]
+fn zero_idle_power_machines() {
+    let mut sc = tiny_scenario(2, 2);
+    for m in &mut sc.machines {
+        m.idle_power = 0.0;
+    }
+    let params = WorkloadParams { n_tasks: 100, arrival_rate: 1.0, ..Default::default() };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(11));
+    let r = run(&sc, "elare", &trace);
+    assert_eq!(r.idle_energy(), 0.0);
+    assert!(r.dynamic_energy() > 0.0);
+}
+
+#[test]
+fn explicit_battery_is_respected() {
+    let mut sc = tiny_scenario(2, 2);
+    sc.battery = Some(123.456);
+    let params = WorkloadParams { n_tasks: 50, arrival_rate: 1.0, ..Default::default() };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(12));
+    let r = run(&sc, "mm", &trace);
+    assert_eq!(r.battery, 123.456);
+}
+
+#[test]
+fn heterogeneous_cvb_scenarios_all_heuristics() {
+    // CVB-generated EETs (not Table I) across all heuristics.
+    for seed in [1u64, 2, 3] {
+        let mut rng = Pcg64::new(seed);
+        let eet = generate(&CvbParams::default(), &mut rng);
+        let sc = Scenario::paper_synthetic().with_eet(eet);
+        let params = WorkloadParams { n_tasks: 400, arrival_rate: 4.0, ..Default::default() };
+        let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed + 100));
+        for h in ALL_HEURISTICS {
+            let r = run(&sc, h, &trace);
+            r.check_conservation().unwrap_or_else(|e| panic!("{h}/{seed}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn felare_rescues_starved_type() {
+    // Construct a scenario engineered to starve one type under ELARE:
+    // type B is slow everywhere, so ELARE's min-energy phase always
+    // prefers type A. FELARE must close (some of) the gap.
+    let machines: Vec<MachineSpec> = (0..2)
+        .map(|i| MachineSpec::new(i, &format!("m{i}"), 1.0, 0.05))
+        .collect();
+    let eet = EetMatrix::new(2, 2, vec![0.4, 0.5, 1.6, 2.0]);
+    let sc = Scenario {
+        name: "starve".into(),
+        machines,
+        task_type_names: vec!["fast".into(), "slow".into()],
+        eet,
+        queue_slots: 2,
+        fairness_factor: 0.5,
+        fairness_min_samples: 5,
+        rate_window: RateWindow::Cumulative,
+        cv_exec: 0.05,
+        battery: None,
+    };
+    let params = WorkloadParams { n_tasks: 1500, arrival_rate: 4.0, ..Default::default() };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(13));
+    let el = run(&sc, "elare", &trace);
+    let fe = run(&sc, "felare", &trace);
+    let gap = |r: &felare::sim::SimResult| {
+        let c = r.completion_rates();
+        (c[0] - c[1]).abs()
+    };
+    assert!(
+        gap(&fe) < gap(&el),
+        "felare gap {:.3} !< elare gap {:.3}",
+        gap(&fe),
+        gap(&el)
+    );
+    assert!(fe.jain() >= el.jain());
+}

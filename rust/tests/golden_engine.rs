@@ -1,0 +1,150 @@
+//! Golden tests: tiny scenarios whose timelines, energies and outcomes are
+//! computed by hand and pinned exactly. These are the ground truth the
+//! statistical tests stand on — if the engine's event semantics drift,
+//! these fail with precise numbers.
+
+use felare::model::machine::MachineSpec;
+use felare::model::scenario::RateWindow;
+use felare::model::task::{Task, TaskTypeId};
+use felare::model::{EetMatrix, Scenario, Trace};
+use felare::sched::registry::heuristic_by_name;
+use felare::sim::Simulation;
+
+/// One machine (dyn 2.0, idle 0.1), one task type, EET = 1.0 s.
+fn one_machine() -> Scenario {
+    Scenario {
+        name: "golden-1m".into(),
+        machines: vec![MachineSpec::new(0, "m", 2.0, 0.1)],
+        task_type_names: vec!["A".into()],
+        eet: EetMatrix::new(1, 1, vec![1.0]),
+        queue_slots: 2,
+        fairness_factor: 1.0,
+        fairness_min_samples: 1,
+        rate_window: RateWindow::Cumulative,
+        cv_exec: 0.0,
+        battery: Some(1000.0),
+    }
+}
+
+fn task(id: u64, arrival: f64, deadline: f64, size: f64) -> Task {
+    Task { id, type_id: TaskTypeId(0), arrival, deadline, size_factor: size }
+}
+
+fn run(sc: &Scenario, tasks: Vec<Task>) -> felare::sim::SimResult {
+    let trace = Trace { tasks, arrival_rate: 1.0 };
+    Simulation::new(sc, heuristic_by_name("mm", sc).unwrap()).run(&trace)
+}
+
+#[test]
+fn single_task_timeline_and_energy() {
+    // Task arrives t=0, runs 1.0 s, completes at 1.0 (deadline 5).
+    // dyn energy = 2.0·1.0 = 2.0; makespan = 1.0; idle = 0.1·(1.0−1.0) = 0.
+    let sc = one_machine();
+    let r = run(&sc, vec![task(0, 0.0, 5.0, 1.0)]);
+    assert_eq!(r.total_completed(), 1);
+    assert!((r.dynamic_energy() - 2.0).abs() < 1e-12, "dyn {}", r.dynamic_energy());
+    assert!((r.makespan - 1.0).abs() < 1e-12);
+    assert!((r.idle_energy() - 0.0).abs() < 1e-12);
+    assert_eq!(r.wasted_energy(), 0.0);
+}
+
+#[test]
+fn back_to_back_fifo_timeline() {
+    // Two tasks at t=0; one runs [0,1], the second queues and runs [1,2].
+    // Both meet deadline 3. dyn = 2·2 = 4; makespan 2; idle 0.
+    let sc = one_machine();
+    let r = run(&sc, vec![task(0, 0.0, 3.0, 1.0), task(1, 0.0, 3.0, 1.0)]);
+    assert_eq!(r.total_completed(), 2);
+    assert!((r.dynamic_energy() - 4.0).abs() < 1e-12);
+    assert!((r.makespan - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn deadline_abort_wastes_exact_energy() {
+    // size_factor 4 ⇒ actual exec 4.0 s, deadline 2.5 ⇒ aborted at 2.5.
+    // dyn energy = 2.0·2.5 = 5.0, all wasted. Outcome: missed.
+    let sc = one_machine();
+    let r = run(&sc, vec![task(0, 0.0, 2.5, 4.0)]);
+    assert_eq!(r.total_missed(), 1);
+    assert_eq!(r.total_completed(), 0);
+    assert!((r.wasted_energy() - 5.0).abs() < 1e-12, "wasted {}", r.wasted_energy());
+    assert!((r.dynamic_energy() - 5.0).abs() < 1e-12);
+    assert!((r.makespan - 2.5).abs() < 1e-12);
+}
+
+#[test]
+fn queued_task_dead_at_start_costs_nothing() {
+    // First task runs [0, 2] (size 2). Second task (deadline 1.5) queues
+    // behind it and is dead before it can start: missed, zero energy.
+    let sc = one_machine();
+    let r = run(&sc, vec![task(0, 0.0, 5.0, 2.0), task(1, 0.0, 1.5, 1.0)]);
+    assert_eq!(r.total_completed(), 1);
+    assert_eq!(r.total_missed(), 1);
+    // only the first task's energy: 2.0·2.0 = 4.0
+    assert!((r.dynamic_energy() - 4.0).abs() < 1e-12);
+    assert_eq!(r.wasted_energy(), 0.0, "never-started task burns nothing");
+}
+
+#[test]
+fn idle_energy_covers_gaps() {
+    // Task A runs [0,1]; task B arrives at 3, runs [3,4]. Makespan 4.
+    // busy = 2 ⇒ idle = 0.1·(4−2) = 0.2.
+    let sc = one_machine();
+    let r = run(&sc, vec![task(0, 0.0, 5.0, 1.0), task(1, 3.0, 8.0, 1.0)]);
+    assert_eq!(r.total_completed(), 2);
+    assert!((r.idle_energy() - 0.2).abs() < 1e-12, "idle {}", r.idle_energy());
+    assert!((r.makespan - 4.0).abs() < 1e-12);
+}
+
+#[test]
+fn elare_proactive_drop_vs_mm_burn() {
+    // Deadline 0.5 < EET 1.0: ELARE defers (never assigns) and the task
+    // expires with zero energy; MM assigns it and burns 2.0·0.5 = 1.0.
+    let sc = one_machine();
+    let tasks = vec![task(0, 0.0, 0.5, 1.0)];
+
+    let trace = Trace { tasks: tasks.clone(), arrival_rate: 1.0 };
+    let mm = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap()).run(&trace);
+    assert_eq!(mm.total_missed(), 1);
+    assert!((mm.wasted_energy() - 1.0).abs() < 1e-12, "MM wasted {}", mm.wasted_energy());
+
+    let el = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&trace);
+    assert_eq!(el.total_cancelled(), 1);
+    assert_eq!(el.wasted_energy(), 0.0, "ELARE proactively avoids the burn");
+}
+
+#[test]
+fn two_machines_elare_picks_cheap_one() {
+    // m0: EET 1.0 @ dyn 3.0 (energy 3.0); m1: EET 2.0 @ dyn 1.0 (energy 2.0).
+    // Slack deadline ⇒ ELARE chooses m1 (cheap+slow); MM chooses m0 (fast).
+    let sc = Scenario {
+        name: "golden-2m".into(),
+        machines: vec![
+            MachineSpec::new(0, "fast", 3.0, 0.0),
+            MachineSpec::new(1, "slow", 1.0, 0.0),
+        ],
+        task_type_names: vec!["A".into()],
+        eet: EetMatrix::new(1, 2, vec![1.0, 2.0]),
+        queue_slots: 1,
+        fairness_factor: 1.0,
+        fairness_min_samples: 1,
+        rate_window: RateWindow::Cumulative,
+        cv_exec: 0.0,
+        battery: Some(100.0),
+    };
+    let trace = Trace { tasks: vec![task(0, 0.0, 10.0, 1.0)], arrival_rate: 1.0 };
+    let el = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&trace);
+    assert!((el.dynamic_energy() - 2.0).abs() < 1e-12, "ELARE energy {}", el.dynamic_energy());
+    assert!((el.energy[1].busy_time - 2.0).abs() < 1e-12, "ran on the slow machine");
+
+    let mm = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap()).run(&trace);
+    assert!((mm.dynamic_energy() - 3.0).abs() < 1e-12, "MM energy {}", mm.dynamic_energy());
+    assert!((mm.energy[0].busy_time - 1.0).abs() < 1e-12, "ran on the fast machine");
+}
+
+#[test]
+fn wasted_pct_uses_explicit_battery() {
+    let sc = one_machine(); // battery 1000
+    let r = run(&sc, vec![task(0, 0.0, 2.5, 4.0)]); // wastes exactly 5.0
+    assert!((r.wasted_energy_pct() - 0.5).abs() < 1e-12, "pct {}", r.wasted_energy_pct());
+}

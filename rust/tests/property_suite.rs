@@ -1,0 +1,452 @@
+//! Property-based invariants over the coordinator (own mini-framework,
+//! util::proptest — seeds are reported on failure and replayable with
+//! FELARE_PROP_SEED).
+//!
+//! Invariants checked over randomized scenarios/workloads/views:
+//!  * outcome conservation: completed + missed + cancelled == arrived;
+//!  * energy sanity: wasted ≤ dynamic, idle ≥ 0, per Eq. 2 bounds;
+//!  * mapper action validity: every action targets a live task/slot, at
+//!    most one terminal action per task, ELARE/FELARE only assign
+//!    feasible pairs, FELARE never evicts suffered types;
+//!  * Eq. 1/2 algebraic relations; fairness-limit algebra (ε ≤ μ);
+//!  * determinism: same seed ⇒ identical results.
+
+use felare::model::cvb::{generate, CvbParams};
+use felare::model::machine::MachineSpec;
+use felare::model::scenario::RateWindow;
+use felare::model::task::{Task, TaskTypeId};
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::sched::fairness::FairnessSnapshot;
+use felare::sched::feasibility::{completion_time, expected_energy, is_feasible};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::{Action, MachineSnapshot, QueuedInfo, SchedView};
+use felare::sim::Simulation;
+use felare::util::proptest::{check, f64_in, pick, small_usize, vec_of};
+use felare::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RandomSystem {
+    scenario: Scenario,
+    heuristic: &'static str,
+    rate: f64,
+    n_tasks: usize,
+    seed: u64,
+}
+
+fn gen_system(rng: &mut Pcg64) -> RandomSystem {
+    let n_types = small_usize(rng, 1, 5);
+    let n_machines = small_usize(rng, 1, 5);
+    let machines: Vec<MachineSpec> = (0..n_machines)
+        .map(|i| {
+            MachineSpec::new(
+                i,
+                &format!("m{i}"),
+                f64_in(rng, 0.5, 4.0),
+                f64_in(rng, 0.0, 0.3),
+            )
+        })
+        .collect();
+    let eet = generate(
+        &CvbParams {
+            n_types,
+            n_machines,
+            mean_task: f64_in(rng, 0.2, 4.0),
+            v_task: f64_in(rng, 0.05, 0.5),
+            v_mach: f64_in(rng, 0.1, 0.9),
+        },
+        rng,
+    );
+    let scenario = Scenario {
+        name: "prop".into(),
+        machines,
+        task_type_names: (0..n_types).map(|i| format!("T{i}")).collect(),
+        eet,
+        queue_slots: small_usize(rng, 1, 3),
+        fairness_factor: f64_in(rng, 0.0, 2.0),
+        fairness_min_samples: small_usize(rng, 1, 20) as u64,
+        rate_window: if rng.chance(0.3) {
+            RateWindow::Sliding(small_usize(rng, 5, 50))
+        } else {
+            RateWindow::Cumulative
+        },
+        cv_exec: f64_in(rng, 0.01, 0.5),
+        battery: None,
+    };
+    RandomSystem {
+        scenario,
+        heuristic: *pick(rng, &ALL_HEURISTICS[..]),
+        rate: f64_in(rng, 0.3, 40.0),
+        n_tasks: small_usize(rng, 5, 250),
+        seed: rng.next_u64(),
+    }
+}
+
+fn run_system(sys: &RandomSystem) -> felare::sim::SimResult {
+    let params = WorkloadParams {
+        n_tasks: sys.n_tasks,
+        arrival_rate: sys.rate,
+        cv_exec: sys.scenario.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let trace = Trace::generate(&params, &sys.scenario.eet, &mut Pcg64::new(sys.seed));
+    let h = heuristic_by_name(sys.heuristic, &sys.scenario).unwrap();
+    Simulation::new(&sys.scenario, h).run(&trace)
+}
+
+// ---------------------------------------------------------------------------
+// whole-simulation invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_outcome_conservation() {
+    check("outcome-conservation", gen_system, |sys| {
+        let r = run_system(sys);
+        r.check_conservation()?;
+        if r.total_arrived() != sys.n_tasks as u64 {
+            return Err(format!("arrived {} != {}", r.total_arrived(), sys.n_tasks));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_sanity() {
+    check("energy-sanity", gen_system, |sys| {
+        let r = run_system(sys);
+        for (i, e) in r.energy.iter().enumerate() {
+            if e.wasted > e.dynamic + 1e-9 {
+                return Err(format!("machine {i}: wasted {} > dynamic {}", e.wasted, e.dynamic));
+            }
+            if e.idle < -1e-9 || e.dynamic < -1e-9 || e.busy_time < -1e-9 {
+                return Err(format!("machine {i}: negative energy component {e:?}"));
+            }
+            if e.busy_time > r.makespan + 1e-9 {
+                return Err(format!("machine {i}: busy {} > makespan {}", e.busy_time, r.makespan));
+            }
+        }
+        if r.wasted_energy_pct() < 0.0 || r.wasted_energy_pct() > 100.0 + 1e-9 {
+            return Err(format!("wasted pct {}", r.wasted_energy_pct()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism() {
+    check("determinism", gen_system, |sys| {
+        let a = run_system(sys);
+        let b = run_system(sys);
+        if a.completed != b.completed || a.missed != b.missed || a.cancelled != b.cancelled {
+            return Err("same seed produced different outcomes".into());
+        }
+        if (a.wasted_energy() - b.wasted_energy()).abs() > 1e-9 {
+            return Err("same seed produced different energy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_victim_drops_exclusive_to_felare() {
+    check("victim-drops-felare-only", gen_system, |sys| {
+        let r = run_system(sys);
+        if sys.heuristic != "felare" && r.cancelled_victim != 0 {
+            return Err(format!("{} victim-dropped {}", sys.heuristic, r.cancelled_victim));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// single-mapping-event invariants (view level)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RandomEvent {
+    scenario: Scenario,
+    heuristic: &'static str,
+    now: f64,
+    tasks: Vec<Task>,
+    snaps: Vec<MachineSnapshot>,
+    rates: Option<FairnessSnapshot>,
+}
+
+fn gen_event(rng: &mut Pcg64) -> RandomEvent {
+    let sys = gen_system(rng);
+    let scenario = sys.scenario;
+    let now = f64_in(rng, 0.0, 50.0);
+    let n_types = scenario.n_types();
+    let mut id = 0u64;
+    let tasks = vec_of(rng, 0, 12, |rng| {
+        id += 1;
+        let ty = TaskTypeId(rng.index(n_types));
+        Task {
+            id,
+            type_id: ty,
+            arrival: now - f64_in(rng, 0.0, 3.0),
+            // mix of expired, tight and slack deadlines
+            deadline: now + f64_in(rng, -2.0, 8.0),
+            size_factor: f64_in(rng, 0.5, 2.0),
+        }
+    });
+    let snaps: Vec<MachineSnapshot> = scenario
+        .machines
+        .iter()
+        .map(|spec| {
+            let n_queued = small_usize(rng, 0, scenario.queue_slots);
+            let mut avail = now + f64_in(rng, 0.0, 2.0);
+            let queued: Vec<QueuedInfo> = (0..n_queued)
+                .map(|_| {
+                    id += 1;
+                    let ty = TaskTypeId(rng.index(n_types));
+                    let e = scenario.eet.get(ty, spec.id);
+                    avail += e;
+                    QueuedInfo { task_id: id, type_id: ty, expected_exec: e }
+                })
+                .collect();
+            MachineSnapshot {
+                dyn_power: spec.dyn_power,
+                avail,
+                free_slots: scenario.queue_slots - n_queued,
+                queued,
+            }
+        })
+        .collect();
+    let rates = rng.chance(0.7).then(|| FairnessSnapshot {
+        rates: (0..n_types)
+            .map(|_| rng.chance(0.8).then(|| f64_in(rng, 0.0, 1.0)))
+            .collect(),
+        fairness_factor: scenario.fairness_factor,
+    });
+    RandomEvent { scenario, heuristic: sys.heuristic, now, tasks, snaps, rates }
+}
+
+#[test]
+fn prop_mapping_actions_valid() {
+    check("mapping-actions-valid", gen_event, |ev| {
+        let mut view = SchedView::new(
+            ev.now,
+            &ev.scenario.eet,
+            ev.snaps.clone(),
+            &ev.tasks,
+            ev.rates.as_ref(),
+        );
+        let mut h = heuristic_by_name(ev.heuristic, &ev.scenario).unwrap();
+        h.map(&mut view);
+
+        let suffered = ev.rates.as_ref().map(|r| r.suffered()).unwrap_or_default();
+        let mut terminal = vec![0u32; ev.tasks.len()];
+        // replay actions against an independent model of the event
+        let mut avail: Vec<f64> = ev.snaps.iter().map(|s| s.avail).collect();
+        let mut free: Vec<usize> = ev.snaps.iter().map(|s| s.free_slots).collect();
+        let mut queued: Vec<Vec<QueuedInfo>> =
+            ev.snaps.iter().map(|s| s.queued.clone()).collect();
+
+        for action in view.actions() {
+            match action {
+                Action::Assign { task_idx, machine } => {
+                    let task = ev.tasks.get(*task_idx).ok_or("assign: bad task idx")?;
+                    terminal[*task_idx] += 1;
+                    let j = machine.0;
+                    if free[j] == 0 {
+                        return Err(format!("assign to full machine {j}"));
+                    }
+                    let s = avail[j].max(ev.now);
+                    let e = ev.scenario.eet.get(task.type_id, *machine);
+                    if (ev.heuristic == "elare" || ev.heuristic == "felare")
+                        && !is_feasible(s, e, task.deadline)
+                    {
+                        return Err(format!(
+                            "{} assigned infeasible pair: s={s} e={e} d={}",
+                            ev.heuristic, task.deadline
+                        ));
+                    }
+                    avail[j] = s + e;
+                    free[j] -= 1;
+                    queued[j].push(QueuedInfo {
+                        task_id: task.id,
+                        type_id: task.type_id,
+                        expected_exec: e,
+                    });
+                }
+                Action::Drop { task_idx } => {
+                    let task = ev.tasks.get(*task_idx).ok_or("drop: bad task idx")?;
+                    terminal[*task_idx] += 1;
+                    // only ELARE/FELARE drop proactively, and only expired tasks
+                    if !(ev.heuristic == "elare" || ev.heuristic == "felare") {
+                        return Err(format!("{} proactively dropped", ev.heuristic));
+                    }
+                    if !task.expired_at(ev.now) {
+                        return Err("dropped a task whose deadline is ahead".into());
+                    }
+                }
+                Action::VictimDrop { machine, task_id } => {
+                    let j = machine.0;
+                    let pos = queued[j]
+                        .iter()
+                        .position(|q| q.task_id == *task_id)
+                        .ok_or("victim not in queue")?;
+                    let victim = queued[j].remove(pos);
+                    if suffered.contains(&victim.type_id) {
+                        return Err("evicted a suffered-type task".into());
+                    }
+                    avail[j] -= victim.expected_exec;
+                    free[j] += 1;
+                }
+            }
+        }
+        if let Some(&n) = terminal.iter().find(|&&n| n > 1) {
+            return Err(format!("a task got {n} terminal actions"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// algebraic invariants
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Eq12Case {
+    s: f64,
+    e: f64,
+    d: f64,
+    p: f64,
+}
+
+#[test]
+fn prop_eq1_eq2_relations() {
+    check(
+        "eq1-eq2-relations",
+        |rng| Eq12Case {
+            s: f64_in(rng, 0.0, 10.0),
+            e: f64_in(rng, 0.001, 10.0),
+            d: f64_in(rng, 0.0, 15.0),
+            p: f64_in(rng, 0.1, 5.0),
+        },
+        |c| {
+            let ct = completion_time(c.s, c.e, c.d);
+            let ec = expected_energy(c.p, c.s, c.e, c.d);
+            // completion never before start, never after s+e
+            if ct < c.s - 1e-12 || ct > c.s + c.e + 1e-12 {
+                return Err(format!("c={ct} outside [s, s+e]"));
+            }
+            // feasible ⟺ first Eq. 1 case
+            if is_feasible(c.s, c.e, c.d) != (ct == c.s + c.e && ct <= c.d) {
+                return Err("feasibility inconsistent with Eq. 1".into());
+            }
+            // energy bounded by full execution, non-negative
+            if !(0.0..=c.p * c.e + 1e-12).contains(&ec) {
+                return Err(format!("ec={ec} outside [0, p·e]"));
+            }
+            // never-starts case has zero energy
+            if c.s >= c.d && ec != 0.0 {
+                return Err("expired-at-start must cost nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fairness_limit_algebra() {
+    check(
+        "fairness-limit-algebra",
+        |rng| {
+            let n = small_usize(rng, 1, 8);
+            let rates: Vec<Option<f64>> = (0..n)
+                .map(|_| rng.chance(0.85).then(|| f64_in(rng, 0.0, 1.0)))
+                .collect();
+            let f = f64_in(rng, 0.0, 3.0);
+            FairnessSnapshot { rates, fairness_factor: f }
+        },
+        |snap| {
+            let xs: Vec<f64> = snap.rates.iter().flatten().copied().collect();
+            let eps = snap.fairness_limit();
+            if xs.is_empty() {
+                if eps != 0.0 || !snap.suffered().is_empty() {
+                    return Err("empty snapshot must be neutral".into());
+                }
+                return Ok(());
+            }
+            let mu = xs.iter().sum::<f64>() / xs.len() as f64;
+            if eps > mu + 1e-12 {
+                return Err(format!("ε={eps} > μ={mu}"));
+            }
+            for ty in snap.suffered() {
+                let cr = snap.rates[ty.0].ok_or("suffered type with no rate")?;
+                if cr >= eps {
+                    return Err(format!("suffered type {ty} has cr {cr} ≥ ε {eps}"));
+                }
+            }
+            // never all types suffered (ε ≤ μ means the max can't be below it)
+            if snap.suffered().len() == xs.len() && xs.len() > 0 && xs.iter().cloned().fold(f64::MIN, f64::max) >= eps {
+                return Err("max-rate type cannot be suffered".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// substrate fuzz: JSON round-trip over random documents
+// ---------------------------------------------------------------------------
+
+fn gen_json(rng: &mut Pcg64, depth: usize) -> felare::util::json::Json {
+    use felare::util::json::Json;
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            // grid-quantised doubles round-trip exactly through the writer
+            let x = (rng.range_f64(-1e6, 1e6) * 64.0).round() / 64.0;
+            Json::Num(x)
+        }
+        3 => {
+            let n = small_usize(rng, 0, 12);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 0x20;
+                    c as char
+                })
+                .collect();
+            Json::Str(format!("{s}😀{}", if rng.chance(0.3) { "\"quoted\"" } else { "" }))
+        }
+        4 => Json::Array(vec_of(rng, 0, 5, |r| gen_json(r, depth - 1))),
+        _ => {
+            let kvs = vec_of(rng, 0, 5, |r| {
+                (format!("k{}", r.below(100)), gen_json(r, depth - 1))
+            });
+            // dedup keys so equality after parse is well-defined
+            let mut seen = std::collections::HashSet::new();
+            Json::Object(
+                kvs.into_iter()
+                    .filter(|(k, _)| seen.insert(k.clone()))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use felare::util::json::Json;
+    check(
+        "json-roundtrip",
+        |rng| gen_json(rng, 3),
+        |doc| {
+            for text in [doc.to_string_compact(), doc.to_string_pretty()] {
+                let back = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+                if &back != doc {
+                    return Err(format!("roundtrip mismatch via {text}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,127 @@
+//! Integration: the AOT bridge end to end — python-lowered HLO text is
+//! loaded, compiled and executed through the PJRT CPU client, and the
+//! numbers behave like the models python tested.
+//!
+//! Requires `make artifacts`; every test no-ops (with a note) when the
+//! artifacts aren't built so `cargo test` stays green on a fresh clone.
+
+use felare::model::machine::aws_machines;
+use felare::runtime::{default_artifact_dir, profile_eet, Executor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn loads_all_models() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.n_task_types(), 5);
+    assert_eq!(rt.platform(), "cpu");
+    for name in ["obj_det", "speech_rec", "face_rec", "motion_det", "text_rec"] {
+        assert!(rt.by_name(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn executes_and_produces_finite_output() {
+    let Some(rt) = runtime() else { return };
+    for (ty, model) in rt.models.iter().enumerate() {
+        let input = vec![0.1f32; model.meta.input_len()];
+        let out = model.execute(&input).unwrap();
+        assert_eq!(out.len(), model.meta.output_len(), "{}", model.meta.name);
+        assert!(out.iter().all(|x| x.is_finite()), "{}: non-finite", model.meta.name);
+        let _ = ty;
+    }
+}
+
+#[test]
+fn probability_heads_sum_to_one() {
+    // obj_det and motion_det end in a softmax row — PJRT must agree.
+    let Some(rt) = runtime() else { return };
+    for name in ["obj_det", "motion_det", "text_rec"] {
+        let m = rt.by_name(name).unwrap();
+        let input = vec![0.25f32; m.meta.input_len()];
+        let out = m.execute(&input).unwrap();
+        // every softmax row sums to 1 (text_rec emits one row per position)
+        let rows = m.meta.output_shape[0];
+        let cols = m.meta.output_len() / rows;
+        for (i, row) in out.chunks(cols).enumerate() {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "{name} row {i}: softmax sum {sum}");
+        }
+    }
+}
+
+#[test]
+fn face_rec_embedding_unit_norm() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.by_name("face_rec").unwrap();
+    let input = vec![0.5f32; m.meta.input_len()];
+    let out = m.execute(&input).unwrap();
+    let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.by_name("speech_rec").unwrap();
+    let input: Vec<f32> = (0..m.meta.input_len()).map(|i| (i as f32).sin()).collect();
+    let a = m.execute(&input).unwrap();
+    let b = m.execute(&input).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn different_inputs_different_outputs() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.by_name("face_rec").unwrap();
+    let a = m.execute(&vec![0.1f32; m.meta.input_len()]).unwrap();
+    let b = m.execute(&vec![0.9f32; m.meta.input_len()]).unwrap();
+    assert_ne!(a, b, "model must actually depend on its input");
+}
+
+#[test]
+fn wrong_input_length_rejected() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.by_name("obj_det").unwrap();
+    assert!(m.execute(&[0.0f32; 3]).is_err());
+}
+
+#[test]
+fn executor_runs_all_types() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = Executor::new(&rt, 2, 7);
+    for ty in 0..rt.n_task_types() {
+        let rec = exec.run(ty).unwrap();
+        assert!(rec.wall > 0.0);
+        assert!(rec.output_l1 > 0.0, "compute fingerprint must be nonzero");
+    }
+}
+
+#[test]
+fn profiler_builds_scaled_eet() {
+    let Some(rt) = runtime() else { return };
+    let machines = aws_machines(); // speeds 1.0 (t2) and 0.35 (g3s)
+    let report = profile_eet(&rt, &machines, 5).unwrap();
+    assert_eq!(report.eet.n_types(), 5);
+    assert_eq!(report.eet.n_machines(), 2);
+    for ty in 0..5 {
+        let t2 = report.eet.get(felare::model::TaskTypeId(ty), felare::model::MachineId(0));
+        let g3 = report.eet.get(felare::model::TaskTypeId(ty), felare::model::MachineId(1));
+        assert!((g3 / t2 - 0.35).abs() < 1e-9, "speed scaling");
+        assert!(t2 > 0.0);
+    }
+    // heaviest model should profile slowest: motion_det (id 3) > obj_det (0)
+    assert!(
+        report.base_times[3] > report.base_times[0],
+        "motion_det {} !> obj_det {}",
+        report.base_times[3],
+        report.base_times[0]
+    );
+}

@@ -1,0 +1,72 @@
+//! Integration: the live serving coordinator end-to-end — Poisson arrivals,
+//! FELARE mapping, real PJRT inference on worker threads, full accounting.
+//! Skips gracefully when artifacts aren't built.
+
+use felare::model::machine::aws_machines;
+use felare::runtime::default_artifact_dir;
+use felare::serve::{serve, ServeConfig};
+
+fn have_artifacts() -> bool {
+    let ok = default_artifact_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn quick_config(heuristic: &str, rate: f64, n: usize) -> ServeConfig {
+    ServeConfig {
+        heuristic: heuristic.into(),
+        machines: aws_machines(),
+        arrival_rate: rate,
+        n_requests: n,
+        profile_reps: 3,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serves_all_requests_to_terminal_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = serve(&quick_config("felare", 40.0, 60)).unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.arrived.iter().sum::<u64>(), 60);
+    assert!(report.inferences > 0, "real PJRT inference must have run");
+    assert!(report.duration > 0.0);
+    assert!(report.mapper_events >= 60, "every arrival fires a mapping event");
+}
+
+#[test]
+fn generous_deadlines_mostly_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_config("elare", 20.0, 50);
+    cfg.deadline_scale = 6.0;
+    let report = serve(&cfg).unwrap();
+    assert!(
+        report.collective_completion_rate() > 0.8,
+        "rate {} with slack deadlines",
+        report.collective_completion_rate()
+    );
+    // completed requests have measured sojourn latencies
+    assert!(!report.latencies.is_empty());
+    assert!(report.latency_summary().mean > 0.0);
+}
+
+#[test]
+fn overload_causes_misses_but_conserves() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_config("mm", 300.0, 120);
+    cfg.deadline_scale = 0.6;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    let unsuccessful = report.missed.iter().sum::<u64>() + report.cancelled.iter().sum::<u64>();
+    assert!(unsuccessful > 0, "overload must shed load");
+    assert!(report.total_energy() > 0.0);
+}
