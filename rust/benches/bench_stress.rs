@@ -1,0 +1,143 @@
+//! Stress benches for the million-task regime: the recycled-state engine
+//! vs fresh-per-run construction, the incremental feasibility cache vs the
+//! brute-force fixpoint, and raw engine throughput on `Scenario::stress`.
+//! These are the numbers behind the sweep hot-path overhaul — run with
+//! `cargo bench --bench bench_stress` (or `cargo run --release` it, the
+//! harness is the in-repo Bencher).
+
+use std::time::Duration;
+
+use felare::model::task::{Task, TaskTypeId};
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::sched::feasibility::{
+    assign_winners_per_machine, feasible_efficient_pairs, FeasibilityCache,
+};
+use felare::sched::registry::heuristic_by_name;
+use felare::sched::{MachineSnapshot, SchedView};
+use felare::sim::Simulation;
+use felare::util::bench::{Bencher, Suite};
+use felare::util::rng::Pcg64;
+
+/// The pre-cache ELARE fixpoint: full phase-I rebuild every round.
+fn brute_rounds(view: &mut SchedView) {
+    loop {
+        let (pairs, _) = feasible_efficient_pairs(view);
+        if pairs.is_empty() {
+            break;
+        }
+        let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
+            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+        });
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+fn backlog_tasks(n: usize, n_types: usize) -> Vec<Task> {
+    (0..n)
+        .map(|i| Task {
+            id: i as u64,
+            type_id: TaskTypeId(i % n_types),
+            arrival: 0.0,
+            deadline: 2.0 + (i % 11) as f64,
+            size_factor: 1.0,
+        })
+        .collect()
+}
+
+fn idle_snaps(sc: &Scenario, slots: usize) -> Vec<MachineSnapshot> {
+    sc.machines
+        .iter()
+        .map(|m| MachineSnapshot {
+            dyn_power: m.dyn_power,
+            avail: 0.0,
+            free_slots: slots,
+            queued: vec![],
+        })
+        .collect()
+}
+
+fn main() {
+    let mut suite = Suite::new("stress");
+
+    // ---- recycled engine vs fresh construction ---------------------------
+    // Paper-scale traces, many back-to-back runs: the arena amortises the
+    // per-run allocation (machines, heap, snapshots, tracker).
+    let sc = Scenario::paper_synthetic();
+    let params = WorkloadParams { n_tasks: 2000, arrival_rate: 5.0, ..Default::default() };
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(1));
+    suite.add(
+        Bencher::new("engine/fresh-per-run/n=2000")
+            .samples(10)
+            .throughput_items(2000)
+            .run(|| {
+                let h = heuristic_by_name("felare", &sc).unwrap();
+                Simulation::new(&sc, h).run(&trace).total_completed()
+            }),
+    );
+    let mut recycled = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+    suite.add(
+        Bencher::new("engine/recycled/n=2000")
+            .samples(10)
+            .throughput_items(2000)
+            .run(|| recycled.run(&trace).total_completed()),
+    );
+
+    // ---- cached vs brute-force fixpoint ----------------------------------
+    // One saturated mapping event: large arriving backlog, limited slots —
+    // the regime where per-round O(tasks × machines) rebuilds hurt.
+    for &n in &[64usize, 256, 1024] {
+        let stress_sc = Scenario::stress(32, 8);
+        let tasks = backlog_tasks(n, stress_sc.n_types());
+        suite.add(
+            Bencher::new(&format!("rounds/bruteforce/backlog={n}"))
+                .measure_time(Duration::from_millis(600))
+                .throughput_items(n as u64)
+                .run(|| {
+                    let mut v =
+                        SchedView::new(0.0, &stress_sc.eet, idle_snaps(&stress_sc, 2), &tasks, None);
+                    brute_rounds(&mut v);
+                    v.actions().len()
+                }),
+        );
+        let mut cache = FeasibilityCache::new();
+        suite.add(
+            Bencher::new(&format!("rounds/cached/backlog={n}"))
+                .measure_time(Duration::from_millis(600))
+                .throughput_items(n as u64)
+                .run(|| {
+                    let mut v =
+                        SchedView::new(0.0, &stress_sc.eet, idle_snaps(&stress_sc, 2), &tasks, None);
+                    cache.rounds(&mut v, None);
+                    v.actions().len()
+                }),
+        );
+    }
+
+    // ---- raw engine throughput on the stress scenario --------------------
+    // 100k tasks per iteration keeps the bench under a minute; `felare
+    // stress` drives the full ≥1M-task run.
+    let stress_sc = Scenario::stress(32, 8);
+    let rate = 0.9 * stress_sc.service_capacity();
+    let params = WorkloadParams {
+        n_tasks: 100_000,
+        arrival_rate: rate,
+        cv_exec: stress_sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let big = Trace::generate(&params, &stress_sc.eet, &mut Pcg64::new(2));
+    for h in ["mm", "elare", "felare"] {
+        let mut sim = Simulation::new(&stress_sc, heuristic_by_name(h, &stress_sc).unwrap());
+        suite.add(
+            Bencher::new(&format!("stress/engine/{h}/n=100k"))
+                .samples(5)
+                .warmup(Duration::from_millis(100))
+                .measure_time(Duration::from_millis(3000))
+                .throughput_items(100_000)
+                .run(|| sim.run(&big).total_completed()),
+        );
+    }
+
+    suite.write_json().expect("write bench json");
+}

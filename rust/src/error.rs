@@ -1,26 +1,44 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — the offline
+//! environment has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("workload error: {0}")]
     Workload(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("experiment error: {0}")]
     Experiment(String),
+    Io(std::io::Error),
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Workload(s) => write!(f, "workload error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime (PJRT) error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Experiment(s) => write!(f, "experiment error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<String> for Error {
@@ -30,3 +48,22 @@ impl From<String> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert!(Error::Config("x".into()).to_string().starts_with("config error"));
+        assert!(Error::Runtime("x".into()).to_string().contains("PJRT"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn from_string_is_config() {
+        let e: Error = String::from("bad").into();
+        assert!(matches!(e, Error::Config(_)));
+    }
+}

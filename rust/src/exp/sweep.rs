@@ -1,11 +1,30 @@
 //! Shared sweep machinery for the experiment harness: run (heuristic ×
 //! arrival-rate × trace) grids in parallel and aggregate per-point means,
 //! exactly the way the paper aggregates "30 synthesized workload traces".
+//!
+//! §Perf — the hot path is organised for the million-task regime:
+//!
+//! * the parallel work item is one **(rate, trace)** pair: the workload is
+//!   generated once and replayed under every heuristic on a single
+//!   recycled [`Simulation`] arena (`set_heuristic` between runs), so a
+//!   5-heuristic sweep synthesizes each trace once instead of five times
+//!   and allocates one engine per item instead of one per cell;
+//! * each cell is reduced to a [`CellMetrics`] record the moment it
+//!   completes — the full `Vec<SimResult>` (per-type/per-machine vectors
+//!   and all) is never materialized;
+//! * grouping is **indexed**: cell (heuristic h, rate r, trace t) lives at
+//!   `cells[r·traces + t][h]`, so aggregation is a direct chunk walk, not
+//!   the old O(points × cells) filter scan with per-cell string compares.
+//!
+//! Aggregation iterates traces in index order, so per-point means are
+//! bit-identical run to run (and to the pre-refactor sequential grouping)
+//! regardless of worker scheduling.
 
 use crate::model::{Scenario, Trace, WorkloadParams};
 use crate::sched::registry::heuristic_by_name;
 use crate::sim::{SimResult, Simulation};
-use crate::util::parallel::{default_jobs, par_map};
+use crate::util::parallel::{default_jobs, par_map_n};
+use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
 /// One aggregated sweep point: a heuristic at an arrival rate, averaged
@@ -65,6 +84,15 @@ impl SweepSpec {
     }
 }
 
+/// Workload seed for one (rate, trace) sweep cell. The trace seed is
+/// shared across heuristics so comparisons are paired (same workloads for
+/// every heuristic, like the paper). The rate participates via its full
+/// IEEE-754 bit pattern: the old `(rate * 1000.0) as u64` truncation made
+/// nearby rates (e.g. 5.0001 vs 5.0004) collide onto identical workloads.
+pub fn cell_seed(base: u64, rate: f64, trace_i: usize) -> u64 {
+    base ^ (trace_i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15) ^ rate.to_bits()
+}
+
 /// Run one (heuristic, rate, trace-seed) cell.
 pub fn run_cell(scenario: &Scenario, heuristic: &str, rate: f64, tasks: usize, seed: u64) -> SimResult {
     let params = WorkloadParams {
@@ -73,61 +101,109 @@ pub fn run_cell(scenario: &Scenario, heuristic: &str, rate: f64, tasks: usize, s
         cv_exec: scenario.cv_exec,
         type_weights: Vec::new(),
     };
-    let mut rng = crate::util::rng::Pcg64::seed_from(seed, 0x7ACE);
+    let mut rng = Pcg64::seed_from(seed, 0x7ACE);
     let trace = Trace::generate(&params, &scenario.eet, &mut rng);
     let h = heuristic_by_name(heuristic, scenario).expect("bad heuristic name");
     Simulation::new(scenario, h).run(&trace)
 }
 
-/// Execute the whole grid; returns points ordered by (heuristic, rate).
-pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
-    // Work items: every (heuristic, rate, trace) cell.
-    let mut cells = Vec::new();
-    for h in &spec.heuristics {
-        for &rate in &spec.rates {
-            for trace_i in 0..spec.traces {
-                cells.push((h.clone(), rate, trace_i));
-            }
+/// The scalars `aggregate` consumes, extracted from a [`SimResult`] the
+/// moment its cell completes (so the result's per-type/per-machine vectors
+/// are dropped immediately instead of being held for the whole sweep).
+#[derive(Clone, Debug)]
+struct CellMetrics {
+    completion_rate: f64,
+    miss_rate: f64,
+    cancelled_frac: f64,
+    missed_frac: f64,
+    total_energy: f64,
+    wasted_energy: f64,
+    wasted_energy_pct: f64,
+    jain: f64,
+    per_type_rates: Vec<f64>,
+    mapper_overhead_us: f64,
+    victim_drops_per_k: f64,
+}
+
+impl CellMetrics {
+    fn of(r: &SimResult) -> CellMetrics {
+        let (cancelled_frac, missed_frac) = r.unsuccessful_split();
+        CellMetrics {
+            completion_rate: r.collective_completion_rate(),
+            miss_rate: r.miss_rate(),
+            cancelled_frac,
+            missed_frac,
+            total_energy: r.total_energy(),
+            wasted_energy: r.wasted_energy(),
+            wasted_energy_pct: r.wasted_energy_pct(),
+            jain: r.jain(),
+            per_type_rates: r.completion_rates(),
+            mapper_overhead_us: r.mapper_overhead_us(),
+            victim_drops_per_k: 1000.0 * r.cancelled_victim as f64
+                / r.total_arrived().max(1) as f64,
         }
     }
-    let scenario = &spec.scenario;
-    let tasks = spec.tasks;
-    let seed0 = spec.seed;
-    let results = par_map(cells, default_jobs(), |(h, rate, trace_i)| {
-        // the trace seed is shared across heuristics so comparisons are
-        // paired (same workloads for every heuristic, like the paper)
-        let seed = seed0 ^ (trace_i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
-            ^ ((rate * 1000.0) as u64);
-        let r = run_cell(scenario, &h, rate, tasks, seed);
-        (h, rate, r)
+}
+
+/// Execute the whole grid; returns points ordered by (heuristic, rate).
+pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
+    let traces = spec.traces;
+    let n_rates = spec.rates.len();
+    let n_items = n_rates * traces;
+
+    // One work item per (rate, trace): generate the workload once, replay
+    // it under every heuristic on one recycled engine arena.
+    let cells: Vec<Vec<CellMetrics>> = par_map_n(n_items, default_jobs(), |item| {
+        let (ri, ti) = (item / traces, item % traces);
+        let rate = spec.rates[ri];
+        let params = WorkloadParams {
+            n_tasks: spec.tasks,
+            arrival_rate: rate,
+            cv_exec: spec.scenario.cv_exec,
+            type_weights: Vec::new(),
+        };
+        let mut rng = Pcg64::seed_from(cell_seed(spec.seed, rate, ti), 0x7ACE);
+        let trace = Trace::generate(&params, &spec.scenario.eet, &mut rng);
+        let mut engine: Option<Simulation> = None;
+        let mut out = Vec::with_capacity(spec.heuristics.len());
+        for h in &spec.heuristics {
+            let heuristic = heuristic_by_name(h, &spec.scenario).expect("bad heuristic name");
+            let mut sim = match engine.take() {
+                Some(mut sim) => {
+                    sim.set_heuristic(heuristic);
+                    sim
+                }
+                None => Simulation::new(&spec.scenario, heuristic),
+            };
+            out.push(CellMetrics::of(&sim.run(&trace)));
+            engine = Some(sim);
+        }
+        out
     });
 
-    // group back into points
-    let mut points = Vec::new();
-    for h in &spec.heuristics {
-        for &rate in &spec.rates {
-            let group: Vec<&SimResult> = results
-                .iter()
-                .filter(|(rh, rr, _)| rh == h && *rr == rate)
-                .map(|(_, _, r)| r)
-                .collect();
+    // Indexed grouping: cell (h, ri, ti) lives at cells[ri·traces + ti][h].
+    let mut points = Vec::with_capacity(spec.heuristics.len() * n_rates);
+    for (hi, h) in spec.heuristics.iter().enumerate() {
+        for (ri, &rate) in spec.rates.iter().enumerate() {
+            let group: Vec<&CellMetrics> =
+                (0..traces).map(|ti| &cells[ri * traces + ti][hi]).collect();
             points.push(aggregate(h, rate, &group));
         }
     }
     points
 }
 
-fn aggregate(heuristic: &str, rate: f64, rs: &[&SimResult]) -> SweepPoint {
+fn aggregate(heuristic: &str, rate: f64, rs: &[&CellMetrics]) -> SweepPoint {
     let n = rs.len().max(1) as f64;
-    let mean = |f: &dyn Fn(&SimResult) -> f64| rs.iter().map(|r| f(r)).sum::<f64>() / n;
-    let completion = Summary::of(&rs.iter().map(|r| r.collective_completion_rate()).collect::<Vec<_>>());
-    let wasted_pct = Summary::of(&rs.iter().map(|r| r.wasted_energy_pct()).collect::<Vec<_>>());
-    let n_types = rs.first().map(|r| r.n_types()).unwrap_or(0);
+    let mean = |f: &dyn Fn(&CellMetrics) -> f64| rs.iter().map(|r| f(r)).sum::<f64>() / n;
+    let completion = Summary::of(&rs.iter().map(|r| r.completion_rate).collect::<Vec<_>>());
+    let wasted_pct = Summary::of(&rs.iter().map(|r| r.wasted_energy_pct).collect::<Vec<_>>());
+    let n_types = rs.first().map(|r| r.per_type_rates.len()).unwrap_or(0);
     let per_type_rates = (0..n_types)
         .map(|ty| {
             let xs: Vec<f64> = rs
                 .iter()
-                .map(|r| r.completion_rates()[ty])
+                .map(|r| r.per_type_rates[ty])
                 .filter(|x| x.is_finite())
                 .collect();
             xs.iter().sum::<f64>() / xs.len().max(1) as f64
@@ -138,20 +214,18 @@ fn aggregate(heuristic: &str, rate: f64, rs: &[&SimResult]) -> SweepPoint {
         arrival_rate: rate,
         traces: rs.len(),
         completion_rate: completion.mean,
-        miss_rate: mean(&|r| r.miss_rate()),
-        cancelled_frac: mean(&|r| r.unsuccessful_split().0),
-        missed_frac: mean(&|r| r.unsuccessful_split().1),
-        total_energy: mean(&|r| r.total_energy()),
-        wasted_energy: mean(&|r| r.wasted_energy()),
+        miss_rate: mean(&|r| r.miss_rate),
+        cancelled_frac: mean(&|r| r.cancelled_frac),
+        missed_frac: mean(&|r| r.missed_frac),
+        total_energy: mean(&|r| r.total_energy),
+        wasted_energy: mean(&|r| r.wasted_energy),
         wasted_energy_pct: wasted_pct.mean,
-        jain: mean(&|r| r.jain()),
+        jain: mean(&|r| r.jain),
         per_type_rates,
         completion_ci95: completion.ci95(),
         wasted_pct_ci95: wasted_pct.ci95(),
-        mapper_overhead_us: mean(&|r| r.mapper_overhead_us()),
-        victim_drops_per_k: mean(&|r| {
-            1000.0 * r.cancelled_victim as f64 / r.total_arrived().max(1) as f64
-        }),
+        mapper_overhead_us: mean(&|r| r.mapper_overhead_us),
+        victim_drops_per_k: mean(&|r| r.victim_drops_per_k),
     }
 }
 
@@ -196,6 +270,60 @@ mod tests {
         let a = run_cell(&sc, "mm", 5.0, 300, 123);
         let b = run_cell(&sc, "felare", 5.0, 300, 123);
         assert_eq!(a.arrived, b.arrived, "same workload for both heuristics");
+    }
+
+    #[test]
+    fn nearby_rates_get_distinct_workloads() {
+        // Regression for the trace-seed collision: (rate·1000) as u64
+        // truncated 5.0001 and 5.0004 onto the same seed.
+        assert_ne!(cell_seed(0x5EED, 5.0001, 0), cell_seed(0x5EED, 5.0004, 0));
+        assert_ne!(cell_seed(0x5EED, 5.0, 0), cell_seed(0x5EED, 5.0001, 0));
+        // pairing is untouched: the seed has no heuristic component, and
+        // equal inputs agree
+        assert_eq!(cell_seed(7, 3.25, 4), cell_seed(7, 3.25, 4));
+        // trace index still decorrelates
+        assert_ne!(cell_seed(7, 3.25, 4), cell_seed(7, 3.25, 5));
+    }
+
+    #[test]
+    fn sweep_matches_per_cell_reference() {
+        // The streaming/indexed path must equal the naive reference:
+        // run_cell per (heuristic, rate, trace) with the same seeds,
+        // aggregated in trace order — bit for bit.
+        let mut spec = SweepSpec::paper_default(&["mm", "felare"], &[4.0, 6.0]);
+        spec.traces = 3;
+        spec.tasks = 150;
+        let points = run_sweep(&spec);
+        for (hi, h) in spec.heuristics.iter().enumerate() {
+            for (ri, &rate) in spec.rates.iter().enumerate() {
+                let p = &points[hi * spec.rates.len() + ri];
+                assert_eq!(p.heuristic, *h);
+                assert_eq!(p.arrival_rate, rate);
+                let reference: Vec<SimResult> = (0..spec.traces)
+                    .map(|ti| {
+                        run_cell(&spec.scenario, h, rate, spec.tasks, cell_seed(spec.seed, rate, ti))
+                    })
+                    .collect();
+                let completion = Summary::of(
+                    &reference.iter().map(|r| r.collective_completion_rate()).collect::<Vec<_>>(),
+                );
+                assert_eq!(p.completion_rate, completion.mean, "{h}@{rate}: completion");
+                let wasted = reference.iter().map(|r| r.wasted_energy()).sum::<f64>()
+                    / spec.traces as f64;
+                assert_eq!(p.wasted_energy, wasted, "{h}@{rate}: wasted energy");
+                let jain =
+                    reference.iter().map(|r| r.jain()).sum::<f64>() / spec.traces as f64;
+                assert_eq!(p.jain, jain, "{h}@{rate}: jain");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rates_yield_no_points() {
+        let mut spec = SweepSpec::paper_default(&["mm"], &[]);
+        spec.traces = 2;
+        spec.tasks = 50;
+        assert!(run_sweep(&spec).is_empty());
     }
 
     #[test]

@@ -2,23 +2,36 @@
 //!
 //! Subcommands:
 //!   simulate   run one heuristic on one scenario/trace (discrete-event)
+//!   stress     drive ≥1M tasks through the recycled-state engine
 //!   serve      live serving with real PJRT inference (needs artifacts)
 //!   profile    profile artifacts → EET matrix
 //!   exp        regenerate paper tables/figures (`exp all`)
 //!   gen-trace  synthesize a workload trace to JSON
 //!   list       enumerate heuristics and experiments
+//!
+//! Error handling is plain `Box<dyn Error>` (no `anyhow` in this offline
+//! tree); `fail!` builds a formatted boxed error in place.
 
-use anyhow::{anyhow, Result};
+use std::time::Instant;
 
 use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
 use felare::model::machine::aws_machines;
 use felare::model::{Scenario, Trace, WorkloadParams};
 use felare::runtime::{profile_eet, Runtime};
-use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS, EXTENDED_HEURISTICS};
 use felare::serve::{serve, ServeConfig};
 use felare::sim::Simulation;
 use felare::util::cli::Args;
 use felare::util::rng::Pcg64;
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// Build a boxed error from a format string (anyhow!-shaped).
+macro_rules! fail {
+    ($($t:tt)*) => {
+        Box::<dyn std::error::Error>::from(format!($($t)*))
+    };
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +58,7 @@ fn usage() -> String {
     );
     for (cmd, about) in [
         ("simulate", "discrete-event simulation of one heuristic"),
+        ("stress", "million-task throughput run on a scalable stress scenario"),
         ("serve", "live serving with real PJRT inference (needs `make artifacts`)"),
         ("profile", "profile AOT artifacts into an EET matrix"),
         ("exp", "regenerate paper tables/figures: felare exp <id>|all [--quick]"),
@@ -59,30 +73,31 @@ fn usage() -> String {
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
-        return Err(anyhow!("__help__{}", usage()));
+        return Err(fail!("__help__{}", usage()));
     };
     let rest = &argv[1..];
     match cmd.as_str() {
         "simulate" => cmd_simulate(rest),
+        "stress" => cmd_stress(rest),
         "serve" => cmd_serve(rest),
         "profile" => cmd_profile(rest),
         "exp" => cmd_exp(rest),
         "gen-trace" => cmd_gen_trace(rest),
         "list" => cmd_list(),
-        "--help" | "-h" | "help" => Err(anyhow!("__help__{}", usage())),
-        other => Err(anyhow!("unknown command '{other}'\n\n{}", usage())),
+        "--help" | "-h" | "help" => Err(fail!("__help__{}", usage())),
+        other => Err(fail!("unknown command '{other}'\n\n{}", usage())),
     }
 }
 
 fn parse(spec: Args, raw: &[String]) -> Result<Args> {
-    spec.parse(raw).map_err(|help| anyhow!("__help__{help}"))
+    spec.parse(raw).map_err(|help| fail!("__help__{help}"))
 }
 
 fn load_scenario(args: &Args) -> Result<Scenario> {
     match args.get("scenario") {
         Some("paper") | None => Ok(Scenario::paper_synthetic()),
         Some("aws") => Ok(Scenario::aws_two_app()),
-        Some(path) => Scenario::load(path).map_err(|e| anyhow!(e)),
+        Some(path) => Scenario::load(path).map_err(|e| fail!("{e}")),
     }
 }
 
@@ -99,14 +114,14 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     )?;
     let sc = load_scenario(&args)?;
     let params = WorkloadParams {
-        n_tasks: args.usize("tasks").map_err(|e| anyhow!(e))?,
-        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
+        n_tasks: args.usize("tasks")?,
+        arrival_rate: args.f64("rate")?,
         cv_exec: sc.cv_exec,
         type_weights: Vec::new(),
     };
-    let seed = args.u64("seed").map_err(|e| anyhow!(e))?;
+    let seed = args.u64("seed")?;
     let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
-    let h = heuristic_by_name(&args.str("heuristic"), &sc).map_err(|e| anyhow!(e))?;
+    let h = heuristic_by_name(&args.str("heuristic"), &sc)?;
     let result = Simulation::new(&sc, h).run(&trace);
     if args.is_set("json") {
         println!("{}", result.to_json().to_string_pretty());
@@ -140,6 +155,84 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Million-task throughput run: `Scenario::stress` + the recycled-state
+/// engine, reporting wall-clock simulated-tasks/second (the ROADMAP's
+/// serving-scale target; `bench_stress` gives the micro numbers).
+fn cmd_stress(raw: &[String]) -> Result<()> {
+    let args = parse(
+        Args::new("felare stress", "million-task engine throughput run")
+            .opt("tasks", "1000000", "tasks in the trace")
+            .opt("machines", "32", "machines in the stress scenario")
+            .opt("types", "8", "task types in the stress scenario")
+            .opt("load", "0.9", "offered load as a fraction of service capacity")
+            .opt_optional("rate", "explicit arrival rate λ (overrides --load)")
+            .opt("heuristic", "felare", "mapping heuristic")
+            .opt("seed", "42", "PRNG seed")
+            .flag("json", "emit the result as JSON"),
+        raw,
+    )?;
+    let n_machines = args.usize("machines")?;
+    let n_types = args.usize("types")?;
+    let n_tasks = args.usize("tasks")?;
+    let sc = Scenario::stress(n_machines, n_types);
+    let capacity = sc.service_capacity();
+    let rate = match args.get("rate") {
+        Some(r) => r
+            .parse::<f64>()
+            .map_err(|_| fail!("--rate expects a number, got '{r}'"))?,
+        None => args.f64("load")? * capacity,
+    };
+    if rate <= 0.0 {
+        return Err(fail!("arrival rate must be positive (got {rate})"));
+    }
+    eprintln!(
+        "stress: {} machines × {} types, capacity ≈ {capacity:.1} tasks/s, λ = {rate:.1}",
+        sc.n_machines(),
+        sc.n_types()
+    );
+
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    let t0 = Instant::now();
+    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(args.u64("seed")?));
+    let gen_s = t0.elapsed().as_secs_f64();
+
+    let mut sim = Simulation::new(&sc, heuristic_by_name(&args.str("heuristic"), &sc)?);
+    let t1 = Instant::now();
+    let result = sim.run(&trace);
+    let sim_s = t1.elapsed().as_secs_f64();
+    result.check_conservation()?;
+
+    if args.is_set("json") {
+        let j = result
+            .to_json()
+            .set("trace_gen_s", gen_s)
+            .set("sim_wall_s", sim_s)
+            .set("tasks_per_s", n_tasks as f64 / sim_s);
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "stress[{}] {} tasks in {sim_s:.2}s wall → {:.0} tasks/s  (trace gen {gen_s:.2}s)",
+            result.heuristic,
+            result.total_arrived(),
+            n_tasks as f64 / sim_s,
+        );
+        println!(
+            "  completion {:.1}%  miss {:.1}%  mapping events {}  mapper {:.2} µs/event  makespan {:.0}s",
+            100.0 * result.collective_completion_rate(),
+            100.0 * result.miss_rate(),
+            result.mapping_events,
+            result.mapper_overhead_us(),
+            result.makespan,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(raw: &[String]) -> Result<()> {
     let args = parse(
         Args::new("felare serve", "live serving with real PJRT inference")
@@ -157,11 +250,11 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         artifact_dir: args.str("artifacts").into(),
         heuristic: args.str("heuristic"),
         machines: aws_machines(),
-        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
-        n_requests: args.usize("requests").map_err(|e| anyhow!(e))?,
-        queue_slots: args.usize("queue-slots").map_err(|e| anyhow!(e))?,
-        deadline_scale: args.f64("deadline-scale").map_err(|e| anyhow!(e))?,
-        seed: args.u64("seed").map_err(|e| anyhow!(e))?,
+        arrival_rate: args.f64("rate")?,
+        n_requests: args.usize("requests")?,
+        queue_slots: args.usize("queue-slots")?,
+        deadline_scale: args.f64("deadline-scale")?,
+        seed: args.u64("seed")?,
         ..Default::default()
     };
     let report = serve(&config)?;
@@ -183,7 +276,7 @@ fn cmd_profile(raw: &[String]) -> Result<()> {
     let rt = Runtime::load(args.str("artifacts"))?;
     println!("platform: {}  models: {}", rt.platform(), rt.n_task_types());
     let machines = aws_machines();
-    let report = profile_eet(&rt, &machines, args.usize("reps").map_err(|e| anyhow!(e))?)?;
+    let report = profile_eet(&rt, &machines, args.usize("reps")?)?;
     println!(
         "\nEET (rows = task types, cols = {:?}):",
         machines.iter().map(|m| m.name.clone()).collect::<Vec<_>>()
@@ -210,7 +303,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         quick: args.is_set("quick"),
         traces: args.get("traces").and_then(|s| s.parse().ok()),
         tasks: args.get("tasks").and_then(|s| s.parse().ok()),
-        seed: args.u64("seed").map_err(|e| anyhow!(e))?,
+        seed: args.u64("seed")?,
     };
     run_by_name(&name, &opts)?;
     Ok(())
@@ -228,12 +321,12 @@ fn cmd_gen_trace(raw: &[String]) -> Result<()> {
     )?;
     let sc = load_scenario(&args)?;
     let params = WorkloadParams {
-        n_tasks: args.usize("tasks").map_err(|e| anyhow!(e))?,
-        arrival_rate: args.f64("rate").map_err(|e| anyhow!(e))?,
+        n_tasks: args.usize("tasks")?,
+        arrival_rate: args.f64("rate")?,
         cv_exec: sc.cv_exec,
         type_weights: Vec::new(),
     };
-    let seed = args.u64("seed").map_err(|e| anyhow!(e))?;
+    let seed = args.u64("seed")?;
     let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
     let out = args.str("out");
     std::fs::write(&out, trace.to_json().to_string_pretty())?;
@@ -245,6 +338,9 @@ fn cmd_list() -> Result<()> {
     println!("heuristics:");
     for h in ALL_HEURISTICS {
         println!("  {h}");
+    }
+    for h in EXTENDED_HEURISTICS {
+        println!("  {h} (extension)");
     }
     println!("\nexperiments (felare exp <id>):");
     for (id, desc, _) in EXPERIMENTS {

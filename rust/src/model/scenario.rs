@@ -4,9 +4,11 @@
 //! JSON files (`felare simulate --scenario path.json`) with two built-in
 //! presets matching the paper's evaluation setups.
 
+use crate::model::cvb::{generate as cvb_generate, CvbParams};
 use crate::model::eet::{paper_table1, EetMatrix};
 use crate::model::machine::{aws_machines, paper_machines, MachineSpec};
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 
 /// Completion-rate monitoring mode for the fairness tracker (§V).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -78,6 +80,49 @@ impl Scenario {
             cv_exec: 0.1,
             battery: None,
         }
+    }
+
+    /// Scalable stress preset for the million-task regime (ROADMAP north
+    /// star): `n_machines` edge machines cycling the paper's Table-I power
+    /// spread, `n_types` task types, and a CVB-drawn EET seeded
+    /// deterministically from the dimensions — every (machines, types)
+    /// pair names exactly one reproducible system. Drive it with
+    /// `felare stress` or `benches/bench_stress.rs`.
+    pub fn stress(n_machines: usize, n_types: usize) -> Scenario {
+        assert!(n_machines > 0 && n_types > 0, "stress scenario needs machines and types");
+        const POWERS: [f64; 4] = [1.6, 3.0, 1.8, 1.5];
+        let machines: Vec<MachineSpec> = (0..n_machines)
+            .map(|i| MachineSpec::new(i, &format!("edge-{i}"), POWERS[i % POWERS.len()], 0.05))
+            .collect();
+        let params = CvbParams {
+            n_types,
+            n_machines,
+            mean_task: 2.3,
+            v_task: 0.3,
+            v_mach: 0.6,
+        };
+        let mut rng =
+            Pcg64::seed_from(0x57E55, ((n_machines as u64) << 32) | n_types as u64);
+        let eet = cvb_generate(&params, &mut rng);
+        Scenario {
+            name: format!("stress-{n_machines}x{n_types}"),
+            machines,
+            task_type_names: (0..n_types).map(|i| format!("S{i}")).collect(),
+            eet,
+            queue_slots: 2,
+            fairness_factor: 1.0,
+            fairness_min_samples: 10,
+            rate_window: RateWindow::Cumulative,
+            cv_exec: 0.1,
+            battery: None,
+        }
+    }
+
+    /// Aggregate service capacity in tasks/second (machines per mean EET)
+    /// — the arrival rate at which offered load ≈ 1. The stress CLI sizes
+    /// λ as `--load × service_capacity()`.
+    pub fn service_capacity(&self) -> f64 {
+        self.n_machines() as f64 / self.eet.grand_mean()
     }
 
     pub fn n_types(&self) -> usize {
@@ -251,6 +296,26 @@ mod tests {
         assert_eq!(s.n_machines(), 4);
         assert_eq!(s.queue_slots, 2);
         assert_eq!(s.fairness_factor, 1.0);
+    }
+
+    #[test]
+    fn stress_scenario_shape_and_determinism() {
+        let a = Scenario::stress(32, 8);
+        assert!(a.validate().is_ok());
+        assert_eq!(a.n_machines(), 32);
+        assert_eq!(a.n_types(), 8);
+        assert_eq!(a.machines[0].dyn_power, 1.6);
+        assert_eq!(a.machines[1].dyn_power, 3.0);
+        assert_eq!(a.machines[4].dyn_power, 1.6, "powers cycle Table I's spread");
+        // deterministic per (machines, types); distinct across dimensions
+        let b = Scenario::stress(32, 8);
+        assert_eq!(a.eet.flat(), b.eet.flat());
+        let c = Scenario::stress(16, 8);
+        assert_ne!(a.eet.flat()[..16 * 8], c.eet.flat()[..]);
+        assert!(a.service_capacity() > 0.0);
+        // capacity tracks machine count at fixed mean-EET scale
+        let big = Scenario::stress(64, 8);
+        assert!(big.service_capacity() > a.service_capacity());
     }
 
     #[test]

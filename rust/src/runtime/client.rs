@@ -7,6 +7,13 @@
 //! protos; jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects) and compiles one PJRT executable per task type on the CPU
 //! client. After construction the serving hot path is pure rust + PJRT.
+//!
+//! The real execution path is gated behind the `pjrt` cargo feature (the
+//! `xla` bindings are not vendored in this offline tree). Without it,
+//! manifest parsing still works but [`Runtime::load`] returns
+//! `Error::Runtime` and [`LoadedModel::execute`] is unavailable at
+//! construction time — the simulator, heuristics and experiment harness
+//! are fully functional either way.
 
 use std::path::{Path, PathBuf};
 
@@ -97,11 +104,13 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ModelMeta>> {
 /// A compiled task-type model on the PJRT CPU client.
 pub struct LoadedModel {
     pub meta: ModelMeta,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl LoadedModel {
     /// Run one inference; returns the flat f32 output.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
         if input.len() != self.meta.input_len() {
             return Err(Error::Runtime(format!(
@@ -139,6 +148,16 @@ impl LoadedModel {
         }
         Ok(values)
     }
+
+    /// Without the `pjrt` feature no model can be constructed, so this is
+    /// unreachable in practice; it exists so callers typecheck identically.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        Err(Error::Runtime(format!(
+            "{}: felare was built without the `pjrt` feature; PJRT execution is unavailable",
+            self.meta.name
+        )))
+    }
 }
 
 /// The PJRT runtime: CPU client + one compiled executable per task type.
@@ -150,6 +169,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Load and compile every artifact in `dir`.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref();
         let metas = load_manifest(dir)?;
@@ -172,6 +192,20 @@ impl Runtime {
             models.push(LoadedModel { meta, exe });
         }
         Ok(Runtime { models, platform, dir: dir.to_path_buf() })
+    }
+
+    /// Without the `pjrt` feature the manifest is still validated (so
+    /// callers get precise artifact errors first) but loading always fails
+    /// with a clear message instead of compiling executables.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let _metas = load_manifest(dir)?;
+        Err(Error::Runtime(
+            "felare was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (and the xla bindings) for real execution"
+                .into(),
+        ))
     }
 
     pub fn platform(&self) -> &str {

@@ -73,7 +73,7 @@ pub struct Adaptive {
 impl Default for Adaptive {
     fn default() -> Self {
         Self {
-            elare: Elare,
+            elare: Elare::default(),
             felare: Felare::default(),
             threshold: 0.35,
             elare_events: 0,

@@ -13,27 +13,22 @@
 //! mapping event can fill several slots while feasibility is re-evaluated
 //! against the updated availability estimates.
 
-use crate::sched::feasibility::{assign_winners_per_machine, feasible_efficient_pairs};
+use crate::sched::feasibility::FeasibilityCache;
 use crate::sched::{MappingHeuristic, SchedView};
 
+/// ELARE. Carries a recycled [`FeasibilityCache`] so the phase-I pair set
+/// is maintained incrementally across fixpoint rounds instead of being
+/// rebuilt from scratch each round (§Perf; the cache is semantically
+/// invisible — see `feasibility::tests::cached_rounds_match_bruteforce`).
 #[derive(Debug, Default)]
-pub struct Elare;
+pub struct Elare {
+    cache: FeasibilityCache,
+}
 
 /// One ELARE phase-I + phase-II fixpoint over the view; shared with FELARE
 /// (which runs it after its high-priority pass).
-pub(crate) fn elare_rounds(view: &mut SchedView) {
-    loop {
-        let (pairs, _infeasible) = feasible_efficient_pairs(view);
-        if pairs.is_empty() {
-            break;
-        }
-        let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
-            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
-        });
-        if n == 0 {
-            break;
-        }
-    }
+pub(crate) fn elare_rounds(view: &mut SchedView, cache: &mut FeasibilityCache) {
+    cache.rounds(view, None);
 }
 
 /// Algorithm 1 lines 8–12 (corrected): drop infeasible tasks whose
@@ -57,7 +52,7 @@ impl MappingHeuristic for Elare {
     }
 
     fn map(&mut self, view: &mut SchedView) {
-        elare_rounds(view);
+        elare_rounds(view, &mut self.cache);
         drop_or_defer_infeasible(view);
     }
 }
@@ -95,7 +90,7 @@ mod tests {
         // T1 energies: m1 3.58, m2 5.09, m3 7.85, m4 1.10 → m4
         let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         assert_eq!(assigns(&v), vec![(0, 3)]);
     }
 
@@ -112,7 +107,7 @@ mod tests {
         // starts at 0.736 → 1.472 > 1.0 infeasible; m1 needs 2.238 infeasible
         // → second task must be deferred (not dropped: deadline ahead).
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         assert_eq!(assigns(&v), vec![(0, 3)]);
         assert!(drops(&v).is_empty(), "deadline ahead ⇒ defer, not drop");
         assert_eq!(v.deferrals, 1);
@@ -124,7 +119,7 @@ mod tests {
         // infeasible everywhere (0.5 < 0.736 min) but deadline not passed
         let tasks = vec![mk_task(0, 0, 0.0, 0.5)];
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         assert!(assigns(&v).is_empty());
         assert!(drops(&v).is_empty());
         assert_eq!(v.deferrals, 1);
@@ -136,7 +131,7 @@ mod tests {
         let tasks = vec![mk_task(0, 0, 0.0, 2.0)];
         // mapping event at t=3 > deadline 2
         let mut v = SchedView::new(3.0, &eet, idle_snapshots(3.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         assert_eq!(drops(&v), vec![0]);
         assert_eq!(v.deferrals, 0);
     }
@@ -147,7 +142,7 @@ mod tests {
         // mix: one feasible task, one hopeless
         let tasks = vec![mk_task(0, 0, 0.0, 10.0), mk_task(1, 2, 0.0, 0.1)];
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         let a = assigns(&v);
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].0, 0);
@@ -165,7 +160,7 @@ mod tests {
             mk_task(2, 2, 0.0, 1.0),
         ];
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         // round 1: one of them on m4; round 2: start 0.865 ⇒ 1.73 > 1.0 ⇒
         // infeasible ⇒ others deferred
         assert_eq!(assigns(&v).len(), 1);
@@ -177,7 +172,7 @@ mod tests {
         let eet = paper_table1();
         let tasks: Vec<_> = (0..20).map(|i| mk_task(i, 0, 0.0, 1000.0)).collect();
         let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        Elare.map(&mut v);
+        Elare::default().map(&mut v);
         assert!(assigns(&v).len() <= 8, "4 machines × 2 slots");
         for m in &v.machines {
             assert!(m.queued.len() <= 2);

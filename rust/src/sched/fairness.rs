@@ -94,6 +94,18 @@ impl FairnessTracker {
         }
     }
 
+    /// Zero every per-type counter and sliding window, keeping the
+    /// allocations — a reset tracker is observationally identical to a
+    /// fresh one (engine recycling, §Perf).
+    pub fn reset(&mut self) {
+        for s in &mut self.stats {
+            s.arrived = 0;
+            s.completed = 0;
+            s.failed = 0;
+            s.window.clear();
+        }
+    }
+
     pub fn on_arrival(&mut self, ty: TaskTypeId) {
         self.stats[ty.0].arrived += 1;
     }
@@ -171,6 +183,11 @@ impl FairnessTracker {
 
     pub fn arrived(&self, ty: TaskTypeId) -> u64 {
         self.stats[ty.0].arrived
+    }
+
+    /// Terminal outcomes that were not on-time completions.
+    pub fn failed(&self, ty: TaskTypeId) -> u64 {
+        self.stats[ty.0].failed
     }
 }
 
@@ -296,6 +313,23 @@ mod tests {
         assert!(s.rates[2].is_none());
         // ε computed over observable types only
         assert!((s.fairness_limit() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_matches_fresh() {
+        let mut t = FairnessTracker::new(2, 1.0, 1, RateWindow::Sliding(4));
+        for _ in 0..6 {
+            t.on_arrival(TaskTypeId(0));
+            t.on_terminal(TaskTypeId(0), false);
+        }
+        assert_eq!(t.failed(TaskTypeId(0)), 6);
+        t.reset();
+        let fresh = FairnessTracker::new(2, 1.0, 1, RateWindow::Sliding(4));
+        assert_eq!(t.rate(TaskTypeId(0)), fresh.rate(TaskTypeId(0)));
+        assert_eq!(t.arrived(TaskTypeId(0)), 0);
+        assert_eq!(t.failed(TaskTypeId(0)), 0);
+        assert_eq!(t.final_rates().len(), 2);
+        assert!(t.final_rates()[0].is_nan());
     }
 
     #[test]

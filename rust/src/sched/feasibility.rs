@@ -1,10 +1,29 @@
 //! Equations 1–2 (paper §IV-B): expected completion time, expected energy
 //! consumption, feasibility — plus the shared phase-1 computations every
 //! two-phase heuristic builds on.
+//!
+//! [`FeasibilityCache`] is the incremental engine behind the ELARE/FELARE
+//! phase-I/phase-II fixpoint: instead of rebuilding every task's
+//! feasible-efficient pair from scratch on every round (O(tasks ×
+//! machines) per round — quadratic per mapping event under backlog), it
+//! exploits two structural facts of Eq. 2:
+//!
+//! 1. for a *feasible* pair the expected energy `p_dyn · e_ij` is
+//!    independent of the start time, so the preference order of machines
+//!    per task type is static within a mapping event and can be sorted
+//!    once;
+//! 2. within a fixpoint (only `Assign` actions), every machine's
+//!    availability is non-decreasing and its free slots non-increasing, so
+//!    a task's feasible candidate set only shrinks — a cached nomination
+//!    stays optimal until *its* machine is assigned to.
+//!
+//! Together these make each round O(assigned-machines' tasks) instead of
+//! O(all tasks × all machines), while producing byte-identical actions
+//! (see `cached_rounds_match_bruteforce`).
 
 use crate::model::machine::MachineId;
-use crate::model::task::{Task, Time};
-use crate::sched::SchedView;
+use crate::model::task::{Task, TaskTypeId, Time};
+use crate::sched::{Action, SchedView};
 
 /// Eq. 1 — expected completion time of a task started at `s` with expected
 /// execution `e` and deadline `d`:
@@ -162,6 +181,142 @@ pub fn assign_winners_per_machine(
     assigned
 }
 
+/// One statically-ranked candidate machine for a task type.
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    machine: usize,
+    /// EET entry e_ij.
+    exec: f64,
+    /// Static energy p_dyn · e_ij (exact for feasible pairs, Eq. 2 case 1).
+    energy: f64,
+}
+
+/// Incremental feasible-efficient-pair cache for the ELARE/FELARE rounds.
+///
+/// Owned by a heuristic and reused across mapping events; all buffers are
+/// recycled, so the steady-state fixpoint allocates nothing. `rounds` is
+/// drop-in equivalent to looping `feasible_efficient_pairs` +
+/// `assign_winners_per_machine` with ELARE's energy-first comparator.
+#[derive(Debug, Default)]
+pub struct FeasibilityCache {
+    /// Per task type: machines sorted by (static energy, machine index).
+    order: Vec<Vec<Candidate>>,
+    /// Per arriving-queue task: current phase-I nomination (`None` =
+    /// consumed, filtered out, or infeasible — and infeasibility is
+    /// permanent within one `rounds` call, see the module docs).
+    best: Vec<Option<Pair>>,
+    /// Tasks participating in this `rounds` call, ascending index.
+    eligible: Vec<usize>,
+    /// Machines assigned-to in the previous round.
+    dirty: Vec<bool>,
+    /// Scratch for the per-round phase-I output.
+    pairs: Vec<Pair>,
+}
+
+/// Walk `order[task type]` and return the first feasible candidate with a
+/// free slot — the minimum-energy feasible pair, exactly as the brute-force
+/// scan would pick it (ties in energy resolve to the lower machine index in
+/// both).
+fn best_for(order: &[Vec<Candidate>], view: &SchedView, idx: usize, task: &Task) -> Option<Pair> {
+    for cand in &order[task.type_id.0] {
+        let j = MachineId(cand.machine);
+        if !view.has_free_slot(j) {
+            continue;
+        }
+        let s = view.start_time(j);
+        if !is_feasible(s, cand.exec, task.deadline) {
+            continue;
+        }
+        return Some(Pair {
+            task_idx: idx,
+            machine: j,
+            completion: s + cand.exec,
+            energy: cand.energy,
+        });
+    }
+    None
+}
+
+impl FeasibilityCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild the static per-type machine ranking from the view's EET and
+    /// dynamic powers. Cost O(types × machines log machines) once per
+    /// mapping event — independent of the arriving-queue length.
+    fn prepare(&mut self, view: &SchedView) {
+        let n_types = view.eet.n_types();
+        let n_machines = view.machines.len();
+        self.order.resize(n_types, Vec::new());
+        for (ty, row) in self.order.iter_mut().enumerate() {
+            row.clear();
+            for m in 0..n_machines {
+                let exec = view.eet.get(TaskTypeId(ty), MachineId(m));
+                row.push(Candidate { machine: m, exec, energy: view.machines[m].dyn_power * exec });
+            }
+            row.sort_by(|a, b| a.energy.total_cmp(&b.energy).then(a.machine.cmp(&b.machine)));
+        }
+    }
+
+    /// The ELARE phase-I + phase-II fixpoint (Algorithms 2–3), optionally
+    /// restricted to tasks whose type is in `filter` (FELARE's
+    /// high-priority pass). Equivalent to the brute-force loop; only the
+    /// tasks whose nominated machine changed are re-evaluated per round.
+    pub fn rounds(&mut self, view: &mut SchedView, filter: Option<&[TaskTypeId]>) {
+        self.prepare(view);
+        let n_tasks = view.n_tasks();
+        let n_machines = view.machines.len();
+        self.best.clear();
+        self.best.resize(n_tasks, None);
+        self.eligible.clear();
+        for (idx, task) in view.unconsumed() {
+            if filter.map_or(true, |f| f.contains(&task.type_id)) {
+                self.eligible.push(idx);
+            }
+        }
+        for &idx in &self.eligible {
+            self.best[idx] = best_for(&self.order, view, idx, view.task(idx));
+        }
+        loop {
+            self.pairs.clear();
+            for &idx in &self.eligible {
+                if let Some(p) = self.best[idx] {
+                    self.pairs.push(p);
+                }
+            }
+            if self.pairs.is_empty() {
+                break;
+            }
+            let before = view.actions().len();
+            let n = assign_winners_per_machine(view, &self.pairs, |a, b, _| {
+                a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+            });
+            if n == 0 {
+                break;
+            }
+            self.dirty.clear();
+            self.dirty.resize(n_machines, false);
+            for action in &view.actions()[before..] {
+                if let Action::Assign { task_idx, machine } = action {
+                    self.dirty[machine.0] = true;
+                    self.best[*task_idx] = None;
+                }
+            }
+            // Re-nominate only the tasks whose cached machine was touched:
+            // untouched machines kept their availability and slots, so
+            // every other cached pair is still the minimum (module docs).
+            for &idx in &self.eligible {
+                if let Some(p) = self.best[idx] {
+                    if self.dirty[p.machine.0] {
+                        self.best[idx] = best_for(&self.order, view, idx, view.task(idx));
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +443,149 @@ mod tests {
         let v = SchedView::new(0.0, &eet, snaps, &tasks, None);
         let pairs = min_completion_pairs(&v);
         assert_eq!(pairs[0].machine, MachineId(1));
+    }
+
+    // ---- FeasibilityCache ----------------------------------------------------
+
+    /// The pre-cache fixpoint, verbatim: full phase-I rebuild every round.
+    fn brute_rounds(view: &mut SchedView) {
+        loop {
+            let (pairs, _) = feasible_efficient_pairs(view);
+            if pairs.is_empty() {
+                break;
+            }
+            let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
+                a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+            });
+            if n == 0 {
+                break;
+            }
+        }
+    }
+
+    fn random_case(
+        rng: &mut crate::util::rng::Pcg64,
+    ) -> (crate::model::EetMatrix, Vec<crate::sched::MachineSnapshot>, Vec<Task>, f64) {
+        use crate::sched::MachineSnapshot;
+        let n_types = 1 + rng.index(4);
+        let n_machines = 1 + rng.index(5);
+        let data: Vec<f64> = (0..n_types * n_machines)
+            .map(|_| rng.range_f64(0.2, 4.0))
+            .collect();
+        let eet = crate::model::EetMatrix::new(n_types, n_machines, data);
+        let now = rng.range_f64(0.0, 10.0);
+        let snaps: Vec<MachineSnapshot> = (0..n_machines)
+            .map(|_| MachineSnapshot {
+                dyn_power: rng.range_f64(0.5, 3.0),
+                avail: now + rng.range_f64(0.0, 3.0),
+                free_slots: rng.index(4),
+                queued: vec![],
+            })
+            .collect();
+        let tasks: Vec<Task> = (0..rng.index(14))
+            .map(|i| {
+                mk_task(
+                    i as u64,
+                    rng.index(n_types),
+                    now,
+                    now + rng.range_f64(-1.0, 8.0),
+                )
+            })
+            .collect();
+        (eet, snaps, tasks, now)
+    }
+
+    #[test]
+    fn cached_rounds_match_bruteforce() {
+        for seed in 0..200u64 {
+            let mut rng = crate::util::rng::Pcg64::seed_from(seed, 0xFEA5);
+            let (eet, snaps, tasks, now) = random_case(&mut rng);
+            let mut brute = SchedView::new(now, &eet, snaps.clone(), &tasks, None);
+            brute_rounds(&mut brute);
+            let mut cached = SchedView::new(now, &eet, snaps, &tasks, None);
+            FeasibilityCache::new().rounds(&mut cached, None);
+            assert_eq!(
+                brute.actions(),
+                cached.actions(),
+                "seed {seed}: cached fixpoint diverged from brute force"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_rounds_match_bruteforce_filtered() {
+        // FELARE's high-priority pass: brute force computes all pairs then
+        // filters to the suffered types; the cache only nominates suffered
+        // tasks. Actions must be identical.
+        for seed in 0..200u64 {
+            let mut rng = crate::util::rng::Pcg64::seed_from(seed, 0xF11);
+            let (eet, snaps, tasks, now) = random_case(&mut rng);
+            let suffered: Vec<TaskTypeId> = (0..eet.n_types())
+                .filter(|_| rng.chance(0.5))
+                .map(TaskTypeId)
+                .collect();
+            let mut brute = SchedView::new(now, &eet, snaps.clone(), &tasks, None);
+            loop {
+                let (pairs, _) = feasible_efficient_pairs(&brute);
+                let hp: Vec<_> = pairs
+                    .into_iter()
+                    .filter(|p| suffered.contains(&brute.task(p.task_idx).type_id))
+                    .collect();
+                if hp.is_empty() {
+                    break;
+                }
+                let n = assign_winners_per_machine(&mut brute, &hp, |a, b, _| {
+                    a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+                });
+                if n == 0 {
+                    break;
+                }
+            }
+            let mut cached = SchedView::new(now, &eet, snaps, &tasks, None);
+            FeasibilityCache::new().rounds(&mut cached, Some(&suffered));
+            assert_eq!(brute.actions(), cached.actions(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn cache_is_reusable_across_events() {
+        // One cache across two different views (different EET shapes) must
+        // behave like a fresh cache each time.
+        let mut cache = FeasibilityCache::new();
+        let eet1 = paper_table1();
+        let tasks1 = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut v1 = SchedView::new(0.0, &eet1, idle_snapshots(0.0, 2), &tasks1, None);
+        cache.rounds(&mut v1, None);
+        assert_eq!(v1.actions().len(), 1);
+
+        let eet2 = crate::model::EetMatrix::new(1, 2, vec![4.0, 1.0]);
+        let tasks2 = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps.truncate(2);
+        snaps[0].dyn_power = 0.5; // 0.5·4 = 2.0 beats 3.0·1
+        snaps[1].dyn_power = 3.0;
+        let mut v2 = SchedView::new(0.0, &eet2, snaps, &tasks2, None);
+        cache.rounds(&mut v2, None);
+        assert_eq!(
+            v2.actions(),
+            &[Action::Assign { task_idx: 0, machine: MachineId(0) }],
+            "stale 4-type order must not leak into the 1-type event"
+        );
+    }
+
+    #[test]
+    fn cache_energy_tie_breaks_on_machine_index() {
+        // two machines with identical (e, p): the scan picks the lower
+        // index; the sorted order must too.
+        let eet = crate::model::EetMatrix::new(1, 2, vec![1.0, 1.0]);
+        let tasks = vec![mk_task(0, 0, 0.0, 10.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps.truncate(2);
+        snaps[0].dyn_power = 2.0;
+        snaps[1].dyn_power = 2.0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        FeasibilityCache::new().rounds(&mut v, None);
+        assert_eq!(v.actions(), &[Action::Assign { task_idx: 0, machine: MachineId(0) }]);
     }
 
     #[test]

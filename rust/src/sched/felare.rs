@@ -18,9 +18,7 @@
 
 use crate::model::task::TaskTypeId;
 use crate::sched::elare::{drop_or_defer_infeasible, elare_rounds};
-use crate::sched::feasibility::{
-    assign_winners_per_machine, feasible_efficient_pairs, is_feasible,
-};
+use crate::sched::feasibility::{is_feasible, FeasibilityCache};
 use crate::sched::{MappingHeuristic, SchedView};
 
 #[derive(Debug)]
@@ -28,17 +26,20 @@ pub struct Felare {
     /// Enable §V's queue-eviction mechanism (the `felare-novd` ablation
     /// variant turns it off, keeping only suffered-type prioritisation).
     pub victim_dropping: bool,
+    /// Recycled incremental phase-I cache shared by the high-priority pass
+    /// and the ELARE tail (§Perf).
+    cache: FeasibilityCache,
 }
 
 impl Default for Felare {
     fn default() -> Self {
-        Self { victim_dropping: true }
+        Self { victim_dropping: true, cache: FeasibilityCache::new() }
     }
 }
 
 impl Felare {
     pub fn without_victim_dropping() -> Self {
-        Self { victim_dropping: false }
+        Self { victim_dropping: false, ..Default::default() }
     }
 }
 
@@ -61,7 +62,7 @@ impl MappingHeuristic for Felare {
             view.rates.map(|r| r.suffered()).unwrap_or_default();
 
         if !suffered.is_empty() {
-            high_priority_rounds(view, &suffered);
+            high_priority_rounds(view, &suffered, &mut self.cache);
             if self.victim_dropping {
                 victim_dropping(view, &suffered);
             }
@@ -69,29 +70,18 @@ impl MappingHeuristic for Felare {
         // Remaining capacity goes to everyone else (ELARE semantics);
         // suffered leftovers participate here too in case victim-dropping
         // opened unrelated capacity.
-        elare_rounds(view);
+        elare_rounds(view, &mut self.cache);
         drop_or_defer_infeasible(view);
     }
 }
 
 /// Phase-II over high-priority pairs only (suffered task types).
-fn high_priority_rounds(view: &mut SchedView, suffered: &[TaskTypeId]) {
-    loop {
-        let (pairs, _) = feasible_efficient_pairs(view);
-        let hp: Vec<_> = pairs
-            .into_iter()
-            .filter(|p| suffered.contains(&view.task(p.task_idx).type_id))
-            .collect();
-        if hp.is_empty() {
-            break;
-        }
-        let n = assign_winners_per_machine(view, &hp, |a, b, _| {
-            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
-        });
-        if n == 0 {
-            break;
-        }
-    }
+fn high_priority_rounds(
+    view: &mut SchedView,
+    suffered: &[TaskTypeId],
+    cache: &mut FeasibilityCache,
+) {
+    cache.rounds(view, Some(suffered));
 }
 
 /// Paper §V: "for a suffered task that is infeasible, the pending tasks in
@@ -170,7 +160,7 @@ mod tests {
         let mut v1 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
         Felare::default().map(&mut v1);
         let mut v2 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        crate::sched::elare::Elare.map(&mut v2);
+        crate::sched::elare::Elare::default().map(&mut v2);
         assert_eq!(v1.actions(), v2.actions());
     }
 
@@ -182,7 +172,7 @@ mod tests {
         let mut v1 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, Some(&rates));
         Felare::default().map(&mut v1);
         let mut v2 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
-        crate::sched::elare::Elare.map(&mut v2);
+        crate::sched::elare::Elare::default().map(&mut v2);
         assert_eq!(v1.actions(), v2.actions());
     }
 
@@ -302,9 +292,85 @@ mod tests {
     }
 
     #[test]
+    fn eviction_order_is_queue_tail_first() {
+        // three non-suffered victims queued on m4; a hopeless-deadline
+        // suffered task evicts newest-first until the queue is empty.
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        let tasks = vec![mk_task(10, 2, 0.0, 0.87)]; // barely feasible only on empty m4
+        let mut snaps = idle_snapshots(0.0, 3);
+        snaps[3].queued = vec![
+            QueuedInfo { task_id: 1, type_id: TaskTypeId(0), expected_exec: 0.736 },
+            QueuedInfo { task_id: 2, type_id: TaskTypeId(1), expected_exec: 0.868 },
+            QueuedInfo { task_id: 3, type_id: TaskTypeId(0), expected_exec: 0.736 },
+        ];
+        snaps[3].avail = 0.736 + 0.868 + 0.736;
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        assert_eq!(
+            victim_drops(&v),
+            vec![3, 2, 1],
+            "victims leave strictly from the queue tail"
+        );
+        assert!(assigns(&v).contains(&(0, 3)), "suffered task takes the freed m4");
+    }
+
+    #[test]
+    fn novd_ablation_never_evicts() {
+        // identical setup to victim_dropping_frees_best_machine, but the
+        // ablation variant must defer instead of evicting.
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        let tasks = vec![mk_task(10, 2, 0.0, 1.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].queued = vec![
+            QueuedInfo { task_id: 1, type_id: TaskTypeId(0), expected_exec: 0.736 },
+            QueuedInfo { task_id: 2, type_id: TaskTypeId(0), expected_exec: 0.736 },
+        ];
+        snaps[3].avail = 1.472;
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        let mut novd = Felare::without_victim_dropping();
+        assert_eq!(novd.name(), "felare-novd");
+        novd.map(&mut v);
+        assert!(victim_drops(&v).is_empty(), "felare-novd must never evict");
+        assert!(assigns(&v).is_empty(), "m4 stays full, task stays deferred");
+        assert_eq!(v.deferrals, 1);
+    }
+
+    #[test]
+    fn expired_suffered_task_is_dropped_not_assigned() {
+        // a suffered task already past its deadline at the mapping event:
+        // no eviction, no assignment — the ELARE tail proactively drops it
+        // and the victims keep their slots.
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]);
+        let tasks = vec![mk_task(10, 2, 0.0, 1.5)];
+        let mut snaps = idle_snapshots(3.0, 2); // now = 3.0 > deadline 1.5
+        snaps[3].queued = vec![QueuedInfo {
+            task_id: 1,
+            type_id: TaskTypeId(0),
+            expected_exec: 0.736,
+        }];
+        snaps[3].avail = 3.736;
+        snaps[3].free_slots = 1;
+        let mut v = SchedView::new(3.0, &eet, snaps, &tasks, Some(&rates));
+        Felare::default().map(&mut v);
+        assert!(victim_drops(&v).is_empty());
+        assert!(assigns(&v).is_empty());
+        assert_eq!(
+            v.actions(),
+            &[Action::Drop { task_idx: 0 }],
+            "expired suffered task is proactively dropped"
+        );
+        assert_eq!(v.machines[3].queued.len(), 1, "victim kept its slot");
+    }
+
+    #[test]
     fn wants_fairness_tracking() {
         assert!(Felare::default().wants_fairness());
-        assert!(!crate::sched::elare::Elare.wants_fairness());
+        assert!(!crate::sched::elare::Elare::default().wants_fairness());
     }
 
     const _: () = {

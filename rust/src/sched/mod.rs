@@ -10,6 +10,12 @@
 //! availability estimates up to date as actions are recorded, so
 //! multi-round two-phase heuristics see the consequences of their earlier
 //! picks within the same event.
+//!
+//! The ELARE/FELARE fixpoint rounds run through the incremental
+//! [`FeasibilityCache`] (see `feasibility.rs`): heuristic structs own a
+//! recycled cache so phase-I nominations are maintained across rounds
+//! instead of rebuilt O(tasks × machines) per round — semantically
+//! invisible, property-tested equivalent to the brute-force loop.
 
 pub mod adaptive;
 pub mod elare;
@@ -25,6 +31,8 @@ use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
 use fairness::FairnessSnapshot;
+
+pub use feasibility::FeasibilityCache;
 
 /// One entry of a machine's bounded FCFS local queue, as the mapper sees it.
 #[derive(Clone, Debug)]

@@ -27,7 +27,7 @@ pub fn heuristic_by_name(
         "mm" | "min-min" => Ok(Box::new(Mm)),
         "msd" => Ok(Box::new(Msd)),
         "mmu" => Ok(Box::new(Mmu)),
-        "elare" | "ee" => Ok(Box::new(Elare)), // paper's figures label ELARE "EE"
+        "elare" | "ee" => Ok(Box::new(Elare::default())), // paper's figures label ELARE "EE"
         "felare" => Ok(Box::new(Felare::default())),
         "felare-novd" => Ok(Box::new(Felare::without_victim_dropping())),
         "adaptive" => Ok(Box::new(Adaptive::default())),

@@ -17,6 +17,38 @@
 //! The mapper sees only *expected* execution times (the EET matrix);
 //! actual service times are EET · size_factor, revealed only as
 //! completions happen — the paper's execution-time uncertainty.
+//!
+//! # Recycled-state API contract (§Perf)
+//!
+//! A [`Simulation`] is an *arena*: machine state, the event queue, the
+//! arriving queue, the fairness tracker and every mapper scratch buffer
+//! are allocated once in [`Simulation::new`] and recycled across runs.
+//! The contract callers rely on:
+//!
+//! * [`Simulation::run`] may be called any number of times, with any
+//!   traces; every run starts from a fully reset state, and every
+//!   *deterministic* field of its [`SimResult`] (outcome counters,
+//!   energies, makespan, deferrals — everything except the wall-clock
+//!   mapper-latency measurements `mapper_time_total`/`mapper_time_max`/
+//!   `mapper_overhead_us` and `overhead_samples`) is **bit-identical** to
+//!   what a freshly constructed `Simulation` over the same scenario +
+//!   heuristic would produce (tested by `recycled_runs_match_fresh_runs`);
+//! * [`Simulation::set_heuristic`] swaps the mapper between runs without
+//!   dropping the arena — this is what lets the experiment sweep generate
+//!   each workload trace once and replay it under every heuristic;
+//! * the heuristic itself is retained across runs. The paper's five
+//!   mappers (and `felare-novd`) are stateless between mapping events, so
+//!   back-to-back runs are independent; a stateful custom heuristic must
+//!   be reset by the caller (or re-installed via `set_heuristic`) if
+//!   run-to-run isolation is required. `adaptive` only accumulates
+//!   diagnostic counters — its decisions are per-event;
+//! * `overhead_samples` holds the per-event latencies of the **latest**
+//!   run only (it is cleared at the start of each run); populated when
+//!   `record_overhead_samples` is set.
+//!
+//! At million-task scale this removes every per-run allocation from the
+//! sweep hot path except the trace itself — see `benches/bench_stress.rs`
+//! for the measured effect.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -24,7 +56,7 @@ use std::time::Instant;
 use crate::model::machine::MachineSpec;
 use crate::model::task::{CancelReason, Outcome, Task, Time};
 use crate::model::{Scenario, Trace};
-use crate::sched::fairness::FairnessTracker;
+use crate::sched::fairness::{FairnessSnapshot, FairnessTracker};
 use crate::sched::{Action, MachineSnapshot, MappingHeuristic, SchedView};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::result::{MachineEnergy, SimResult};
@@ -53,7 +85,17 @@ struct MachState {
     energy: MachineEnergy,
 }
 
-/// One simulation run: scenario + heuristic, consumed per trace.
+impl MachState {
+    /// Reset to the idle state, keeping the queue's allocation.
+    fn reset(&mut self) {
+        self.running = None;
+        self.queue.clear();
+        self.energy = MachineEnergy::default();
+    }
+}
+
+/// One simulation engine: scenario + heuristic, reusable across traces
+/// (see the module docs for the recycled-state contract).
 pub struct Simulation {
     scenario: Scenario,
     heuristic: Box<dyn MappingHeuristic>,
@@ -61,73 +103,117 @@ pub struct Simulation {
     /// off by default — the aggregate total/max are always collected).
     pub record_overhead_samples: bool,
     pub overhead_samples: Vec<f64>,
+    // ---- recycled arena state (reset at the top of every run) ----------
+    machines: Vec<MachState>,
+    events: EventQueue,
+    arriving: Vec<Task>,
+    tracker: FairnessTracker,
+    snapshots: Vec<MachineSnapshot>,
+    fair_buf: FairnessSnapshot,
+    consumed: Vec<bool>,
 }
 
 impl Simulation {
     pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>) -> Self {
         scenario.validate().expect("invalid scenario");
-        Self {
-            scenario: scenario.clone(),
-            heuristic,
-            record_overhead_samples: false,
-            overhead_samples: Vec::new(),
-        }
-    }
-
-    /// Run the full trace to completion and report. `&mut self` so callers
-    /// can read `overhead_samples` afterwards; the five paper heuristics
-    /// are stateless, so back-to-back runs are independent.
-    pub fn run(&mut self, trace: &Trace) -> SimResult {
-        let sc = &self.scenario;
-        let n_types = sc.n_types();
-        let n_machines = sc.n_machines();
-        let mut result =
-            SimResult::empty(self.heuristic.name(), trace.arrival_rate, n_types, n_machines);
-        result.arrived = trace.arrivals_per_type(n_types);
-
-        let mut machines: Vec<MachState> = sc
+        let machines: Vec<MachState> = scenario
             .machines
             .iter()
             .map(|spec| MachState {
                 spec: spec.clone(),
                 running: None,
-                queue: VecDeque::with_capacity(sc.queue_slots),
+                queue: VecDeque::with_capacity(scenario.queue_slots),
                 energy: MachineEnergy::default(),
             })
             .collect();
-
-        let mut tracker = FairnessTracker::new(
-            n_types,
-            sc.fairness_factor,
-            sc.fairness_min_samples,
-            sc.rate_window,
-        );
-        let track_for_mapper = self.heuristic.wants_fairness();
-
-        let mut events = EventQueue::new();
-        for (i, t) in trace.tasks.iter().enumerate() {
-            events.push(t.arrival, Event::Arrival { trace_idx: i });
-        }
-
-        let mut arriving: Vec<Task> = Vec::new();
-        let mut now: Time = 0.0;
-        let mut fair_buf = crate::sched::fairness::FairnessSnapshot {
-            rates: Vec::with_capacity(n_types),
-            fairness_factor: sc.fairness_factor,
-        };
-
-        // scratch buffers recycled across mapping events (§Perf: the view
-        // hands them back via into_parts, so neither the snapshot vec nor
-        // the inner queued vecs reallocate in the hot loop)
-        let mut snapshots: Vec<MachineSnapshot> = (0..n_machines)
+        let snapshots: Vec<MachineSnapshot> = (0..scenario.n_machines())
             .map(|_| MachineSnapshot {
                 dyn_power: 0.0,
                 avail: 0.0,
                 free_slots: 0,
-                queued: Vec::with_capacity(sc.queue_slots),
+                queued: Vec::with_capacity(scenario.queue_slots),
             })
             .collect();
+        let tracker = FairnessTracker::new(
+            scenario.n_types(),
+            scenario.fairness_factor,
+            scenario.fairness_min_samples,
+            scenario.rate_window,
+        );
+        let fair_buf = FairnessSnapshot {
+            rates: Vec::with_capacity(scenario.n_types()),
+            fairness_factor: scenario.fairness_factor,
+        };
+        Self {
+            scenario: scenario.clone(),
+            heuristic,
+            record_overhead_samples: false,
+            overhead_samples: Vec::new(),
+            machines,
+            events: EventQueue::new(),
+            arriving: Vec::new(),
+            tracker,
+            snapshots,
+            fair_buf,
+            consumed: Vec::new(),
+        }
+    }
 
+    /// Swap the mapping heuristic, keeping the recycled arena. The next
+    /// [`Simulation::run`] behaves exactly like a fresh engine built with
+    /// this heuristic.
+    pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        self.heuristic = heuristic;
+    }
+
+    pub fn heuristic_name(&self) -> &'static str {
+        self.heuristic.name()
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Run the full trace to completion and report. `&mut self` recycles
+    /// the arena: no per-run allocation beyond result counters, and the
+    /// outcome is bit-identical to a fresh engine's (module docs).
+    pub fn run(&mut self, trace: &Trace) -> SimResult {
+        // split the borrow: every arena field independently mutable
+        let Simulation {
+            scenario: sc,
+            heuristic,
+            record_overhead_samples,
+            overhead_samples,
+            machines,
+            events,
+            arriving,
+            tracker,
+            snapshots,
+            fair_buf,
+            consumed,
+        } = self;
+
+        let n_types = sc.n_types();
+        let n_machines = sc.n_machines();
+        let mut result =
+            SimResult::empty(heuristic.name(), trace.arrival_rate, n_types, n_machines);
+        result.arrived = trace.arrivals_per_type(n_types);
+
+        // ---- arena reset ---------------------------------------------------
+        for m in machines.iter_mut() {
+            m.reset();
+        }
+        events.clear();
+        arriving.clear();
+        tracker.reset();
+        overhead_samples.clear();
+        let track_for_mapper = heuristic.wants_fairness();
+
+        for (i, t) in trace.tasks.iter().enumerate() {
+            events.push(t.arrival, Event::Arrival { trace_idx: i });
+        }
+
+        let mut now: Time = 0.0;
         while let Some((t, ev)) = events.pop() {
             now = t;
             match ev {
@@ -142,7 +228,7 @@ impl Simulation {
                         machine_idx,
                         now,
                         &mut result,
-                        &mut tracker,
+                        tracker,
                     );
                 }
             }
@@ -150,45 +236,46 @@ impl Simulation {
             // start queued work freed by the completion (before mapping so
             // availability estimates are current)
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, &mut events, &mut result, &mut tracker);
+                try_start(m, mi, now, events, &mut result, tracker);
             }
 
             // engine-level expiry: tasks that died waiting in the arriving
             // queue are cancelled for every heuristic alike
-            expire_arriving(&mut arriving, now, &mut result, &mut tracker);
+            expire_arriving(arriving, now, &mut result, tracker);
 
             // ---- the mapping event -------------------------------------
-            for (snap, m) in snapshots.iter_mut().zip(&machines) {
+            for (snap, m) in snapshots.iter_mut().zip(machines.iter()) {
                 fill_snapshot(snap, m, now, sc.queue_slots);
             }
             let fair_snap = if track_for_mapper {
-                tracker.snapshot_into(&mut fair_buf);
-                Some(&fair_buf)
+                tracker.snapshot_into(fair_buf);
+                Some(&*fair_buf)
             } else {
                 None
             };
             let mut view = SchedView::new(
                 now,
                 &sc.eet,
-                std::mem::take(&mut snapshots),
-                &arriving,
+                std::mem::take(snapshots),
+                arriving,
                 fair_snap,
             );
             let t0 = Instant::now();
-            self.heuristic.map(&mut view);
+            heuristic.map(&mut view);
             let dt = t0.elapsed().as_secs_f64();
             result.mapping_events += 1;
             result.mapper_time_total += dt;
             result.mapper_time_max = result.mapper_time_max.max(dt);
             result.deferrals += view.deferrals;
-            if self.record_overhead_samples {
-                self.overhead_samples.push(dt);
+            if *record_overhead_samples {
+                overhead_samples.push(dt);
             }
 
             // ---- apply the mapper's actions -----------------------------
             let (actions, recycled) = view.into_parts();
-            snapshots = recycled;
-            let mut consumed = vec![false; arriving.len()];
+            *snapshots = recycled;
+            consumed.clear();
+            consumed.resize(arriving.len(), false);
             for action in actions {
                 match action {
                     Action::Assign { task_idx, machine } => {
@@ -228,20 +315,19 @@ impl Simulation {
                     }
                 }
             }
-            // compact the arriving queue
+            // compact the arriving queue in place (keeps its allocation)
             if consumed.iter().any(|&c| c) {
-                let mut keep = Vec::with_capacity(arriving.len());
-                for (i, task) in arriving.drain(..).enumerate() {
-                    if !consumed[i] {
-                        keep.push(task);
-                    }
-                }
-                arriving = keep;
+                let mut i = 0;
+                arriving.retain(|_| {
+                    let keep = !consumed[i];
+                    i += 1;
+                    keep
+                });
             }
 
             // idle machines may now have work
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, &mut events, &mut result, &mut tracker);
+                try_start(m, mi, now, events, &mut result, tracker);
             }
         }
 
@@ -480,6 +566,17 @@ mod tests {
     }
 
     #[test]
+    fn felare_novd_never_victim_drops() {
+        // the ablation variant prioritises suffered types but must never
+        // evict queued work, end to end.
+        let full = run("felare", 6.0, 1500, 9);
+        let novd = run("felare-novd", 6.0, 1500, 9);
+        assert!(full.total_arrived() == novd.total_arrived());
+        assert_eq!(novd.cancelled_victim, 0, "felare-novd must not evict");
+        novd.check_conservation().unwrap();
+    }
+
+    #[test]
     fn mapper_overhead_recorded() {
         let r = run("felare", 5.0, 300, 10);
         assert!(r.mapping_events >= 300, "≥ one event per arrival");
@@ -500,5 +597,75 @@ mod tests {
         let r = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&trace);
         r.check_conservation().unwrap();
         assert!(r.collective_completion_rate() > 0.9);
+    }
+
+    // ---- recycled-state contract -------------------------------------------
+
+    fn trace_for(rate: f64, n: usize, seed: u64) -> Trace {
+        let sc = Scenario::paper_synthetic();
+        let params = WorkloadParams { n_tasks: n, arrival_rate: rate, ..Default::default() };
+        Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+    }
+
+    fn assert_same(a: &SimResult, b: &SimResult, tag: &str) {
+        assert_eq!(a.completed, b.completed, "{tag}: completed");
+        assert_eq!(a.missed, b.missed, "{tag}: missed");
+        assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+        assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victims");
+        assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+        assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+        for (ea, eb) in a.energy.iter().zip(&b.energy) {
+            assert_eq!(ea.dynamic, eb.dynamic, "{tag}: dynamic energy");
+            assert_eq!(ea.wasted, eb.wasted, "{tag}: wasted energy");
+            assert_eq!(ea.busy_time, eb.busy_time, "{tag}: busy time");
+        }
+    }
+
+    #[test]
+    fn recycled_runs_match_fresh_runs() {
+        // one engine across three traces and two heuristics must equal
+        // fresh engines bit for bit — the recycled-state contract.
+        let sc = Scenario::paper_synthetic();
+        let traces = [trace_for(5.0, 600, 21), trace_for(2.0, 400, 22), trace_for(9.0, 500, 23)];
+        let mut recycled = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        for (i, tr) in traces.iter().enumerate() {
+            let ours = recycled.run(tr);
+            let fresh =
+                Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(tr);
+            assert_same(&ours, &fresh, &format!("trace {i}"));
+        }
+        // heuristic swap mid-life
+        recycled.set_heuristic(heuristic_by_name("mm", &sc).unwrap());
+        assert_eq!(recycled.heuristic_name(), "mm");
+        let ours = recycled.run(&traces[0]);
+        let fresh = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap()).run(&traces[0]);
+        assert_same(&ours, &fresh, "after set_heuristic");
+    }
+
+    #[test]
+    fn recycled_run_after_heavy_run_is_clean() {
+        // a saturating run must leave no residue visible to a light run
+        let sc = Scenario::paper_synthetic();
+        let mut sim = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap());
+        let heavy = trace_for(100.0, 2000, 31);
+        let light = trace_for(0.5, 200, 32);
+        sim.run(&heavy);
+        let ours = sim.run(&light);
+        let fresh = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&light);
+        assert_same(&ours, &fresh, "light-after-heavy");
+        assert!(ours.collective_completion_rate() > 0.95);
+    }
+
+    #[test]
+    fn overhead_samples_reset_per_run() {
+        let sc = Scenario::paper_synthetic();
+        let tr = trace_for(5.0, 100, 41);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap());
+        sim.record_overhead_samples = true;
+        sim.run(&tr);
+        let first = sim.overhead_samples.len();
+        assert!(first > 0);
+        sim.run(&tr);
+        assert_eq!(sim.overhead_samples.len(), first, "samples are per-run, not cumulative");
     }
 }

@@ -1,6 +1,12 @@
 //! Discrete-event queue: a time-ordered min-heap with deterministic
 //! tie-breaking (sequence numbers), so equal-time events process in
 //! insertion order and runs are exactly replayable.
+//!
+//! Non-finite event times are rejected unconditionally at `push` — in
+//! release builds a `debug_assert!` would compile out and a NaN would
+//! silently corrupt the heap order (NaN comparisons are never `Less`),
+//! so the check is a hard `assert!`. Ordering itself uses
+//! `f64::total_cmp`, a total order, as a second line of defence.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -34,11 +40,13 @@ impl Eq for Entry {}
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        // reversed: BinaryHeap is a max-heap, we want earliest-first.
+        // total_cmp is a total order over all f64 bit patterns, so heap
+        // invariants hold even for values the push assert should have
+        // caught.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -60,8 +68,13 @@ impl EventQueue {
         Self::default()
     }
 
+    /// Schedule `event` at `time`.
+    ///
+    /// Panics on non-finite times (NaN/±inf) in every build profile: a
+    /// corrupted heap order would silently reorder the whole simulation,
+    /// which is strictly worse than failing loudly at the injection site.
     pub fn push(&mut self, time: Time, event: Event) {
-        debug_assert!(time.is_finite(), "event time must be finite");
+        assert!(time.is_finite(), "event time must be finite, got {time}");
         self.heap.push(Entry { time, seq: self.seq, event });
         self.seq += 1;
     }
@@ -80,6 +93,14 @@ impl EventQueue {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Reset for reuse: drop all pending events and restart the FIFO
+    /// tie-break counter, keeping the heap's allocation. A cleared queue is
+    /// observationally identical to a fresh one (engine recycling, §Perf).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
     }
 }
 
@@ -128,11 +149,48 @@ mod tests {
         assert!(q.is_empty());
     }
 
+    // Regression for the release-mode NaN hole: the old debug_assert!
+    // compiled out under --release, and a NaN time then corrupted heap
+    // order silently. These must panic in *every* profile.
     #[test]
-    #[should_panic]
-    #[cfg(debug_assertions)]
+    #[should_panic(expected = "event time must be finite")]
     fn rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, Event::Arrival { trace_idx: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, Event::Finish { machine_idx: 0 });
+    }
+
+    #[test]
+    fn clear_resets_fifo_counter() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival { trace_idx: 0 });
+        q.push(1.0, Event::Arrival { trace_idx: 1 });
+        q.clear();
+        assert!(q.is_empty());
+        // after clear, FIFO order restarts exactly like a fresh queue
+        q.push(7.0, Event::Arrival { trace_idx: 10 });
+        q.push(7.0, Event::Arrival { trace_idx: 11 });
+        match q.pop().unwrap().1 {
+            Event::Arrival { trace_idx } => assert_eq!(trace_idx, 10),
+            _ => panic!(),
+        }
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn negative_and_tiny_times_order_totally() {
+        let mut q = EventQueue::new();
+        q.push(0.0, Event::Arrival { trace_idx: 0 });
+        q.push(-1.5, Event::Arrival { trace_idx: 1 });
+        q.push(f64::MIN_POSITIVE, Event::Arrival { trace_idx: 2 });
+        assert_eq!(q.pop().unwrap().0, -1.5);
+        assert_eq!(q.pop().unwrap().0, 0.0);
+        assert_eq!(q.pop().unwrap().0, f64::MIN_POSITIVE);
     }
 }

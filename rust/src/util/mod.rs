@@ -1,5 +1,5 @@
-//! In-repo substrates (offline environment: only `xla`/`anyhow`/`thiserror`
-//! are available as external crates — see DESIGN.md §4).
+//! In-repo substrates (offline environment: the crate is dependency-free;
+//! even the optional `pjrt` feature only gates code, it pulls nothing in).
 
 pub mod bench;
 pub mod cli;

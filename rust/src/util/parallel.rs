@@ -60,6 +60,48 @@ where
         .collect()
 }
 
+/// Indexed parallel map: evaluate `f(0) .. f(n-1)` on a pool of `jobs`
+/// threads; results come back in index order. Unlike [`par_map`] there is
+/// no input buffer at all — work items are just indices claimed from an
+/// atomic cursor, and each result lands in its preassigned slot the moment
+/// it completes. The experiment sweep uses this to stream (rate, trace)
+/// cells straight into indexed aggregation (§Perf).
+pub fn par_map_n<R, F>(n: usize, jobs: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(n);
+    if jobs == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +143,14 @@ mod tests {
     #[test]
     fn jobs_clamped_to_items() {
         assert_eq!(par_map(vec![1, 2], 64, |x: u64| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn par_map_n_matches_sequential() {
+        let seq: Vec<usize> = (0..200).map(|i| i * 3 + 1).collect();
+        assert_eq!(par_map_n(200, 8, |i| i * 3 + 1), seq);
+        assert_eq!(par_map_n(200, 1, |i| i * 3 + 1), seq, "sequential path");
+        assert!(par_map_n(0, 4, |i| i).is_empty());
+        assert_eq!(par_map_n(3, 64, |i| i), vec![0, 1, 2], "jobs clamped");
     }
 }

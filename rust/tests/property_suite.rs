@@ -306,6 +306,49 @@ fn prop_mapping_actions_valid() {
     });
 }
 
+#[test]
+fn prop_felare_without_suffered_types_equals_elare() {
+    // Paper §V: "with no suffered types observed, FELARE degrades to
+    // exactly ELARE". A zero-dispersion fairness snapshot (σ = 0 ⇒ ε = μ,
+    // strict < finds nobody) must produce byte-identical actions to plain
+    // ELARE on the same event — priority pass and victim dropping both
+    // inert.
+    check("felare-no-suffered-equals-elare", gen_event, |ev| {
+        let uniform = FairnessSnapshot {
+            rates: vec![Some(0.5); ev.scenario.n_types()],
+            fairness_factor: ev.scenario.fairness_factor,
+        };
+        if !uniform.suffered().is_empty() {
+            return Err("uniform rates produced suffered types".into());
+        }
+        let mut vf = SchedView::new(
+            ev.now,
+            &ev.scenario.eet,
+            ev.snaps.clone(),
+            &ev.tasks,
+            Some(&uniform),
+        );
+        let mut felare = heuristic_by_name("felare", &ev.scenario).unwrap();
+        felare.map(&mut vf);
+
+        let mut ve = SchedView::new(ev.now, &ev.scenario.eet, ev.snaps.clone(), &ev.tasks, None);
+        let mut elare = heuristic_by_name("elare", &ev.scenario).unwrap();
+        elare.map(&mut ve);
+
+        if vf.actions() != ve.actions() {
+            return Err(format!(
+                "actions diverged: felare {:?} vs elare {:?}",
+                vf.actions(),
+                ve.actions()
+            ));
+        }
+        if vf.deferrals != ve.deferrals {
+            return Err(format!("deferrals {} vs {}", vf.deferrals, ve.deferrals));
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // algebraic invariants
 // ---------------------------------------------------------------------------

@@ -2,13 +2,18 @@
 //! loaded, compiled and executed through the PJRT CPU client, and the
 //! numbers behave like the models python tested.
 //!
-//! Requires `make artifacts`; every test no-ops (with a note) when the
-//! artifacts aren't built so `cargo test` stays green on a fresh clone.
+//! Requires `make artifacts` AND the `pjrt` cargo feature; every test
+//! no-ops (with a note) when either is missing so `cargo test` stays green
+//! on a fresh clone and in the default (offline, pjrt-less) build.
 
 use felare::model::machine::aws_machines;
 use felare::runtime::{default_artifact_dir, profile_eet, Executor, Runtime};
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");

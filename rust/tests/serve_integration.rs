@@ -7,6 +7,10 @@ use felare::runtime::default_artifact_dir;
 use felare::serve::{serve, ServeConfig};
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
     let ok = default_artifact_dir().join("manifest.json").exists();
     if !ok {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
