@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   simulate   run one heuristic on one scenario/trace (discrete-event)
 //!   stress     drive ≥1M tasks through the recycled-state engine
-//!   serve      live serving with real PJRT inference (needs artifacts)
+//!   serve      live serving — synthetic backend (no artifacts) or PJRT
 //!   profile    profile artifacts → EET matrix
 //!   exp        regenerate paper tables/figures (`exp all`)
 //!   gen-trace  synthesize a workload trace to JSON
@@ -16,10 +16,10 @@ use std::time::Instant;
 
 use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
 use felare::model::machine::aws_machines;
-use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::model::{RateProfile, Scenario, Trace, WorkloadParams};
 use felare::runtime::{profile_eet, Runtime};
 use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS, EXTENDED_HEURISTICS};
-use felare::serve::{serve, ServeConfig};
+use felare::serve::{serve, ServeBackend, ServeConfig};
 use felare::sim::Simulation;
 use felare::util::cli::Args;
 use felare::util::rng::Pcg64;
@@ -59,7 +59,7 @@ fn usage() -> String {
     for (cmd, about) in [
         ("simulate", "discrete-event simulation of one heuristic"),
         ("stress", "million-task throughput run on a scalable stress scenario"),
-        ("serve", "live serving with real PJRT inference (needs `make artifacts`)"),
+        ("serve", "live request serving: --synthetic (no artifacts) or real PJRT"),
         ("profile", "profile AOT artifacts into an EET matrix"),
         ("exp", "regenerate paper tables/figures: felare exp <id>|all [--quick]"),
         ("gen-trace", "synthesize a workload trace to JSON"),
@@ -93,10 +93,29 @@ fn parse(spec: Args, raw: &[String]) -> Result<Args> {
     spec.parse(raw).map_err(|help| fail!("__help__{help}"))
 }
 
+/// `--scenario` spec: `paper` | `aws` | `stress:<machines>:<types>` |
+/// `path/to/scenario.json` (default: `paper`).
 fn load_scenario(args: &Args) -> Result<Scenario> {
     match args.get("scenario") {
         Some("paper") | None => Ok(Scenario::paper_synthetic()),
         Some("aws") => Ok(Scenario::aws_two_app()),
+        Some(spec) if spec.starts_with("stress:") => {
+            let dims: Vec<&str> = spec["stress:".len()..].split(':').collect();
+            if dims.len() != 2 {
+                return Err(fail!("expected stress:<machines>:<types>, got '{spec}'"));
+            }
+            let (m, t) = (dims[0], dims[1]);
+            let m: usize = m
+                .parse()
+                .map_err(|_| fail!("bad machine count '{m}' in '{spec}'"))?;
+            let t: usize = t
+                .parse()
+                .map_err(|_| fail!("bad type count '{t}' in '{spec}'"))?;
+            if m == 0 || t == 0 {
+                return Err(fail!("stress scenario needs ≥1 machine and ≥1 type"));
+            }
+            Ok(Scenario::stress(m, t))
+        }
         Some(path) => Scenario::load(path).map_err(|e| fail!("{e}")),
     }
 }
@@ -108,7 +127,7 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             .opt("rate", "5.0", "arrival rate λ (tasks/s)")
             .opt("tasks", "2000", "tasks per trace")
             .opt("seed", "42", "PRNG seed")
-            .opt_optional("scenario", "paper | aws | path/to/scenario.json")
+            .opt_optional("scenario", "paper | aws | stress:M:T | path/to/scenario.json")
             .flag("json", "emit the result as JSON"),
         raw,
     )?;
@@ -235,33 +254,125 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
 
 fn cmd_serve(raw: &[String]) -> Result<()> {
     let args = parse(
-        Args::new("felare serve", "live serving with real PJRT inference")
+        Args::new("felare serve", "live request serving (PJRT or synthetic backend)")
+            .flag("synthetic", "synthetic backend: no artifacts or PJRT needed")
+            .opt_optional("scenario", "synthetic system: paper | aws | stress:M:T | path.json")
             .opt("heuristic", "felare", "mapping heuristic")
-            .opt("rate", "20.0", "arrival rate (req/s)")
+            .opt_optional("rate", "arrival rate (req/s); synthetic default: --load × capacity")
+            .opt("load", "0.8", "synthetic: offered load as a fraction of service capacity")
+            .opt_optional("phases", "time-varying rates 'rate:dur,rate:dur,…' (cycled)")
             .opt("requests", "200", "total requests")
-            .opt("queue-slots", "2", "local queue slots per machine")
+            .opt_optional("queue-slots", "local queue slots (synthetic default: scenario's)")
             .opt("deadline-scale", "1.0", "scales Eq. 4 deadlines")
+            .opt("speedup", "1.0", "fast-forward factor (modeled seconds per wall second)")
+            .opt_optional("report-every", "modeled seconds between progress snapshots")
+            .opt_optional("expect-completion", "fail unless completion rate ≥ this fraction")
             .opt("seed", "42", "PRNG seed")
-            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
             .flag("json", "emit the report as JSON"),
         raw,
     )?;
-    let config = ServeConfig {
-        artifact_dir: args.str("artifacts").into(),
+    let speedup = args.f64("speedup")?;
+    if speedup <= 0.0 {
+        return Err(fail!("--speedup must be positive (got {speedup})"));
+    }
+    let rate_profile = args
+        .get("phases")
+        .map(RateProfile::parse)
+        .transpose()
+        .map_err(|e| fail!("--phases: {e}"))?;
+    let progress_every = args
+        .get("report-every")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| fail!("--report-every expects a number, got '{s}'"))
+        })
+        .transpose()?;
+    let explicit_rate = args
+        .get("rate")
+        .map(|r| {
+            r.parse::<f64>()
+                .map_err(|_| fail!("--rate expects a number, got '{r}'"))
+        })
+        .transpose()?;
+    let explicit_queue_slots = args
+        .get("queue-slots")
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| fail!("--queue-slots expects an integer, got '{s}'"))
+        })
+        .transpose()?;
+
+    let common = ServeConfig {
         heuristic: args.str("heuristic"),
-        machines: aws_machines(),
-        arrival_rate: args.f64("rate")?,
         n_requests: args.usize("requests")?,
-        queue_slots: args.usize("queue-slots")?,
         deadline_scale: args.f64("deadline-scale")?,
         seed: args.u64("seed")?,
+        time_scale: 1.0 / speedup,
+        rate_profile,
+        progress_every,
         ..Default::default()
+    };
+    if common.rate_profile.is_some() && explicit_rate.is_some() {
+        return Err(fail!("--rate conflicts with --phases; pass one or the other"));
+    }
+    let config = if args.is_set("synthetic") {
+        let mut sc = load_scenario(&args)?;
+        // scenario's queue_slots is authoritative unless explicitly overridden
+        if let Some(slots) = explicit_queue_slots {
+            sc.queue_slots = slots;
+        }
+        // effective mean λ: a rate profile drives the generator directly;
+        // otherwise --rate, otherwise --load × capacity
+        let rate = match (&common.rate_profile, explicit_rate) {
+            (Some(p), _) => p.mean_rate(),
+            (None, Some(r)) => r,
+            (None, None) => args.f64("load")? * sc.service_capacity(),
+        };
+        eprintln!(
+            "serve[synthetic]: {} ({} machines × {} types), capacity ≈ {:.1} req/s, mean λ = {rate:.1}",
+            sc.name,
+            sc.n_machines(),
+            sc.n_types(),
+            sc.service_capacity()
+        );
+        ServeConfig {
+            backend: ServeBackend::Synthetic,
+            scenario: Some(sc),
+            arrival_rate: rate,
+            ..common
+        }
+    } else {
+        // --scenario only shapes the synthetic system; reject rather than
+        // silently ignore it (the PJRT backend profiles its own system)
+        if args.get("scenario").is_some() {
+            return Err(fail!("--scenario requires --synthetic"));
+        }
+        ServeConfig {
+            backend: ServeBackend::Pjrt,
+            artifact_dir: args.str("artifacts").into(),
+            machines: aws_machines(),
+            arrival_rate: explicit_rate.unwrap_or(20.0),
+            queue_slots: explicit_queue_slots.unwrap_or(2),
+            ..common
+        }
     };
     let report = serve(&config)?;
     if args.is_set("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         print!("{}", report.render());
+    }
+    if let Some(min) = args.get("expect-completion") {
+        let min: f64 = min
+            .parse()
+            .map_err(|_| fail!("--expect-completion expects a fraction"))?;
+        let got = report.collective_completion_rate();
+        if got.is_nan() || got < min {
+            return Err(fail!(
+                "collective completion rate {got:.3} below required {min:.3}"
+            ));
+        }
     }
     Ok(())
 }
@@ -316,7 +427,7 @@ fn cmd_gen_trace(raw: &[String]) -> Result<()> {
             .opt("tasks", "2000", "number of tasks")
             .opt("seed", "42", "PRNG seed")
             .opt("out", "trace.json", "output path")
-            .opt_optional("scenario", "paper | aws | path.json"),
+            .opt_optional("scenario", "paper | aws | stress:M:T | path.json"),
         raw,
     )?;
     let sc = load_scenario(&args)?;

@@ -22,7 +22,11 @@ impl fmt::Display for TaskTypeId {
 pub type Time = f64;
 
 /// One request to an ML application.
-#[derive(Clone, Debug)]
+///
+/// `Copy`: a task is ~40 bytes of plain data, so the dispatch layer moves
+/// tasks between the arriving queue and machine queues by value — no heap
+/// traffic, no clone calls on the mapping hot path.
+#[derive(Clone, Copy, Debug)]
 pub struct Task {
     /// Unique, monotonically increasing with arrival order.
     pub id: u64,

@@ -30,6 +30,89 @@ impl Default for WorkloadParams {
     }
 }
 
+/// Piecewise-constant arrival-rate schedule for open-loop request
+/// generation (`felare serve`): phases of `(rate, duration)` cycled for
+/// the whole session, so a short schedule describes an arbitrarily long
+/// diurnal/bursty pattern. A single phase degenerates to a constant rate.
+///
+/// (This is the *arrival-rate* window schedule; the fairness tracker's
+/// completion-rate window is the unrelated
+/// [`RateWindow`](crate::model::scenario::RateWindow).)
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateProfile {
+    /// `(rate, duration)` phases; every rate and duration is positive.
+    pub phases: Vec<(f64, f64)>,
+}
+
+impl RateProfile {
+    pub fn constant(rate: f64) -> RateProfile {
+        assert!(rate > 0.0, "rate must be positive");
+        RateProfile { phases: vec![(rate, f64::INFINITY)] }
+    }
+
+    /// Parse `"rate:dur,rate:dur,…"` (e.g. `"12:60,24:30,6:60"`: 12/s for
+    /// 60 s, burst to 24/s for 30 s, lull at 6/s for 60 s, repeat).
+    pub fn parse(s: &str) -> Result<RateProfile, String> {
+        let mut phases = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (r, d) = part
+                .split_once(':')
+                .ok_or_else(|| format!("phase '{part}' is not 'rate:duration'"))?;
+            let rate: f64 = r
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad rate '{r}' in phase '{part}'"))?;
+            let dur: f64 = d
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad duration '{d}' in phase '{part}'"))?;
+            let ok = rate > 0.0 && rate.is_finite() && dur > 0.0 && dur.is_finite();
+            if !ok {
+                return Err(format!(
+                    "phase '{part}': rate and duration must be positive and finite"
+                ));
+            }
+            phases.push((rate, dur));
+        }
+        if phases.is_empty() {
+            return Err("rate profile has no phases".into());
+        }
+        Ok(RateProfile { phases })
+    }
+
+    /// Seconds covered by one pass through the phases.
+    pub fn cycle_len(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d).sum()
+    }
+
+    /// Arrival rate in effect at time `t` (cycled).
+    pub fn rate_at(&self, t: Time) -> f64 {
+        let cycle = self.cycle_len();
+        if !cycle.is_finite() {
+            return self.phases[0].0;
+        }
+        let mut rem = t.rem_euclid(cycle);
+        for &(rate, dur) in &self.phases {
+            if rem < dur {
+                return rate;
+            }
+            rem -= dur;
+        }
+        // float edge: rem == cycle after rounding ⇒ first phase again
+        self.phases[0].0
+    }
+
+    /// Duration-weighted mean rate over one cycle.
+    pub fn mean_rate(&self) -> f64 {
+        let cycle = self.cycle_len();
+        if !cycle.is_finite() {
+            return self.phases[0].0;
+        }
+        self.phases.iter().map(|(r, d)| r * d).sum::<f64>() / cycle
+    }
+}
+
 /// A fully materialised workload: tasks sorted by arrival, deadlines from
 /// Eq. 4, per-task size factors already drawn.
 #[derive(Clone, Debug)]
@@ -217,6 +300,43 @@ mod tests {
             assert_eq!(x.type_id, y.type_id);
             assert_eq!(x.size_factor, y.size_factor);
         }
+    }
+
+    #[test]
+    fn rate_profile_parses_and_cycles() {
+        let p = RateProfile::parse("12:60, 24:30,6:60").unwrap();
+        assert_eq!(p.phases.len(), 3);
+        assert_eq!(p.cycle_len(), 150.0);
+        assert_eq!(p.rate_at(0.0), 12.0);
+        assert_eq!(p.rate_at(59.9), 12.0);
+        assert_eq!(p.rate_at(60.0), 24.0);
+        assert_eq!(p.rate_at(90.0), 6.0);
+        // cycles: t = 150 + 70 lands in the burst phase
+        assert_eq!(p.rate_at(220.0), 24.0);
+        let mean = p.mean_rate();
+        assert!((mean - (12.0 * 60.0 + 24.0 * 30.0 + 6.0 * 60.0) / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_profile_constant_never_ends() {
+        let p = RateProfile::constant(5.0);
+        assert_eq!(p.rate_at(0.0), 5.0);
+        assert_eq!(p.rate_at(1e12), 5.0);
+        assert_eq!(p.mean_rate(), 5.0);
+    }
+
+    #[test]
+    fn rate_profile_rejects_malformed() {
+        assert!(RateProfile::parse("").is_err());
+        assert!(RateProfile::parse("12").is_err());
+        assert!(RateProfile::parse("12:0").is_err());
+        assert!(RateProfile::parse("-1:10").is_err());
+        assert!(RateProfile::parse("a:b").is_err());
+        // non-finite phases would break cycling (inf cycle) or the
+        // generator (zero inter-arrival sleeps)
+        assert!(RateProfile::parse("inf:10").is_err());
+        assert!(RateProfile::parse("5:inf").is_err());
+        assert!(RateProfile::parse("nan:10").is_err());
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Pluggable execution substrates for the live serving coordinator.
+//!
+//! The serve path needs one thing from the world: "run one inference of
+//! task type *i* as machine *j* and tell me how long it took". The
+//! [`InferenceBackend`] trait captures exactly that, so the coordinator's
+//! mapping/threading/accounting machinery is identical whether requests
+//! hit real AOT-compiled PJRT executables or a synthetic service-time
+//! model:
+//!
+//! * [`PjrtBackend`] wraps the [`Executor`] over a loaded [`Runtime`]:
+//!   real compute runs on the PJRT CPU client and slower machines are
+//!   modeled by scaling the measured wall time with the machine's `speed`
+//!   multiplier (DESIGN.md §Hardware-adaptation). Constructible only when
+//!   a `Runtime` loads, i.e. with the `pjrt` feature and built artifacts.
+//! * [`SyntheticBackend`] samples service times from the scenario model —
+//!   a Gamma draw (mean 1, CV = `cv_exec`) around the scenario's EET
+//!   entry, exactly how the simulator's traces draw per-task
+//!   `size_factor`s. It burns no compute (`consumed_wall` = 0), so the
+//!   worker realises the whole modeled time as (possibly fast-forwarded)
+//!   sleep. This is what makes `felare serve --synthetic` runnable with
+//!   zero artifacts and no PJRT, in CI and at stress scale.
+//!
+//! Workers interpret an [`InferenceRecord`] as: `consumed_wall` modeled
+//! seconds already elapsed inside the backend; pad with sleep up to
+//! `modeled`, or abort at the deadline if `modeled` overruns the task's
+//! remaining budget (Eq. 1 middle case).
+
+use crate::error::Result;
+use crate::model::machine::MachineId;
+use crate::model::task::TaskTypeId;
+use crate::model::EetMatrix;
+use crate::runtime::executor::Executor;
+use crate::util::rng::{Gamma, Pcg64};
+
+/// One executed (or modeled) inference.
+#[derive(Clone, Copy, Debug)]
+pub struct InferenceRecord {
+    /// Modeled wall seconds the request occupies its machine.
+    pub modeled: f64,
+    /// Modeled seconds already spent inside the backend call (real PJRT
+    /// compute); the worker sleeps `modeled − consumed_wall` to realise
+    /// the rest.
+    pub consumed_wall: f64,
+}
+
+/// An execution substrate for one serving worker (one machine).
+///
+/// Implementations are *not* required to be `Send`: each worker thread
+/// owns its backend (the PJRT client is `Rc`-based and thread-local).
+pub trait InferenceBackend {
+    fn name(&self) -> &'static str;
+
+    fn n_task_types(&self) -> usize;
+
+    /// Execute one request of `type_idx` as machine `machine`.
+    fn infer(&mut self, type_idx: usize, machine: MachineId) -> Result<InferenceRecord>;
+}
+
+/// Synthetic substrate: service times drawn from the scenario model
+/// (EET entry × Gamma(mean 1, CV = `cv_exec`)), no artifacts, no compute.
+pub struct SyntheticBackend {
+    eet: EetMatrix,
+    size_gamma: Option<Gamma>,
+    rng: Pcg64,
+}
+
+impl SyntheticBackend {
+    /// `cv_exec` ≤ 0 disables per-request variation (service time is the
+    /// EET entry exactly — handy for deterministic tests).
+    pub fn new(eet: EetMatrix, cv_exec: f64, seed: u64) -> Self {
+        let size_gamma = (cv_exec > 0.0).then(|| Gamma::from_mean_cv(1.0, cv_exec));
+        Self { eet, size_gamma, rng: Pcg64::seed_from(seed, 0x5E17) }
+    }
+}
+
+impl InferenceBackend for SyntheticBackend {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn n_task_types(&self) -> usize {
+        self.eet.n_types()
+    }
+
+    fn infer(&mut self, type_idx: usize, machine: MachineId) -> Result<InferenceRecord> {
+        let factor = match &mut self.size_gamma {
+            Some(g) => g.sample(&mut self.rng),
+            None => 1.0,
+        };
+        let modeled = self.eet.get(TaskTypeId(type_idx), machine) * factor;
+        Ok(InferenceRecord { modeled, consumed_wall: 0.0 })
+    }
+}
+
+/// Real-execution substrate: the PJRT [`Executor`] plus the per-machine
+/// speed multipliers (fastest machine = profiled base, speed 1.0).
+///
+/// Only constructible from a loaded [`Runtime`](crate::runtime::Runtime),
+/// which requires the `pjrt` feature — but the type itself compiles
+/// everywhere so callers typecheck identically.
+pub struct PjrtBackend<'a> {
+    exec: Executor<'a>,
+    speeds: Vec<f64>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(exec: Executor<'a>, speeds: Vec<f64>) -> Self {
+        Self { exec, speeds }
+    }
+}
+
+impl InferenceBackend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn n_task_types(&self) -> usize {
+        self.exec.runtime().n_task_types()
+    }
+
+    fn infer(&mut self, type_idx: usize, machine: MachineId) -> Result<InferenceRecord> {
+        let rec = self.exec.run(type_idx)?;
+        Ok(InferenceRecord {
+            modeled: rec.wall * self.speeds[machine.0],
+            consumed_wall: rec.wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+
+    #[test]
+    fn synthetic_without_variation_returns_eet_exactly() {
+        let eet = paper_table1();
+        let mut b = SyntheticBackend::new(eet.clone(), 0.0, 1);
+        assert_eq!(b.name(), "synthetic");
+        assert_eq!(b.n_task_types(), eet.n_types());
+        for ty in 0..eet.n_types() {
+            for m in 0..eet.n_machines() {
+                let rec = b.infer(ty, MachineId(m)).unwrap();
+                assert_eq!(rec.modeled, eet.get(TaskTypeId(ty), MachineId(m)));
+                assert_eq!(rec.consumed_wall, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_variation_centers_on_eet() {
+        let eet = paper_table1();
+        let mut b = SyntheticBackend::new(eet.clone(), 0.1, 7);
+        let base = eet.get(TaskTypeId(0), MachineId(0));
+        let n = 4000;
+        let mean: f64 = (0..n)
+            .map(|_| b.infer(0, MachineId(0)).unwrap().modeled)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean / base - 1.0).abs() < 0.03, "mean factor {}", mean / base);
+    }
+
+    #[test]
+    fn synthetic_deterministic_per_seed() {
+        let eet = paper_table1();
+        let mut a = SyntheticBackend::new(eet.clone(), 0.2, 42);
+        let mut b = SyntheticBackend::new(eet, 0.2, 42);
+        for ty in 0..4 {
+            let ra = a.infer(ty, MachineId(ty)).unwrap();
+            let rb = b.infer(ty, MachineId(ty)).unwrap();
+            assert_eq!(ra.modeled, rb.modeled);
+        }
+    }
+}

@@ -1,11 +1,17 @@
-//! PJRT runtime (Layer-3 ↔ Layer-2 bridge): load AOT'd HLO-text artifacts,
-//! compile them on the PJRT CPU client, execute and profile them. Python
-//! never appears on this path — artifacts are plain files.
+//! Execution runtime (Layer-3 ↔ Layer-2 bridge): load AOT'd HLO-text
+//! artifacts, compile them on the PJRT CPU client, execute and profile
+//! them. Python never appears on this path — artifacts are plain files.
+//!
+//! The [`backend`] module abstracts the execution substrate behind the
+//! [`InferenceBackend`] trait so the serving coordinator runs unchanged
+//! on real PJRT executables or on the artifact-free [`SyntheticBackend`].
 
+pub mod backend;
 pub mod client;
 pub mod executor;
 pub mod profiler;
 
+pub use backend::{InferenceBackend, InferenceRecord, PjrtBackend, SyntheticBackend};
 pub use client::{default_artifact_dir, load_manifest, ModelMeta, Runtime};
 pub use executor::{ExecRecord, Executor};
 pub use profiler::{profile_eet, ProfileReport};

@@ -100,7 +100,7 @@ fn victim_dropping(view: &mut SchedView, suffered: &[TaskTypeId]) {
         if view.is_consumed(idx) {
             continue;
         }
-        let task = view.task(idx).clone();
+        let task = *view.task(idx);
         let j = view.eet.best_machine(task.type_id);
         let e = view.eet.get(task.type_id, j);
         loop {

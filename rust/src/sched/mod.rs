@@ -18,6 +18,7 @@
 //! invisible, property-tested equivalent to the brute-force loop.
 
 pub mod adaptive;
+pub mod dispatch;
 pub mod elare;
 pub mod fairness;
 pub mod feasibility;
@@ -32,6 +33,7 @@ use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
 use fairness::FairnessSnapshot;
 
+pub use dispatch::{DropKind, MappingState, MappingStats, QueuedTask};
 pub use feasibility::FeasibilityCache;
 
 /// One entry of a machine's bounded FCFS local queue, as the mapper sees it.

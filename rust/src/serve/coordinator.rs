@@ -1,68 +1,122 @@
 //! Real-time serving coordinator: the paper's HEC system running live.
 //!
-//! This is the online counterpart of `sim::engine` — same mapping-event
-//! semantics, but with wall-clock time, an open-loop Poisson request
-//! generator, per-machine worker threads, and *real ML inference* on the
-//! request path (each execution runs the task type's AOT-compiled PJRT
-//! executable; python is never involved).
+//! This is the online counterpart of `sim::engine` — the *same*
+//! mapping-event semantics, because both engines drive the same shared
+//! [`MappingState`] (`sched::dispatch`): arriving-queue expiry, machine
+//! snapshots, heuristic invocation and action application are one copy of
+//! code, not two. What this module adds is the live substrate: wall-clock
+//! time, an open-loop Poisson request generator (optionally with a
+//! time-varying [`RateProfile`]), per-machine worker threads, and a
+//! pluggable [`InferenceBackend`] on the request path:
 //!
-//! Heterogeneity is modeled exactly as the paper's simulator models it
-//! (DESIGN.md §Hardware-adaptation): machine speeds are normalised so the
-//! fastest machine is the profiled PJRT base (speed 1.0) and slower
-//! machines pad the real inference with sleep up to `wall × speed`. A
-//! running task whose padded finish would cross its deadline is released
-//! at the deadline and counted missed — mirroring Eq. 1's abort.
+//! * [`ServeBackend::Pjrt`] — real ML inference per request (each
+//!   execution runs the task type's AOT-compiled PJRT executable; python
+//!   is never involved). Machine heterogeneity is modeled exactly as the
+//!   paper's simulator models it (DESIGN.md §Hardware-adaptation): speeds
+//!   are normalised so the fastest machine is the profiled PJRT base
+//!   (speed 1.0) and slower machines pad the real inference with sleep up
+//!   to `wall × speed`.
+//! * [`ServeBackend::Synthetic`] — service times sampled from the
+//!   scenario model (EET × Gamma), zero artifacts, no `pjrt` feature.
+//!   Combined with `time_scale` fast-forwarding this serves stress-scale
+//!   sessions (tens of thousands of requests) in seconds of wall clock,
+//!   which is how CI exercises the live path on every PR.
+//!
+//! In both modes a running task whose modeled finish would cross its
+//! deadline is released at the deadline and counted missed — mirroring
+//! Eq. 1's abort.
+//!
+//! All bookkeeping (arrivals, deadlines, energies, latencies, the
+//! [`ServeReport`]) is in *modeled* seconds; `time_scale` only converts
+//! modeled time to wall-clock sleeps (`1.0` = real time, `0.01` = 100×
+//! fast-forward).
 //!
 //! Threading: `PjRtClient` is `Rc`-based (not `Send`), so every worker
-//! owns a thread-local `Runtime` compiled from the same artifacts.
-//! Coordinator state (arriving queue, local queues, fairness tracker, the
-//! mapping heuristic) lives behind one mutex + condvar; mapping events run
-//! under the lock (they are microseconds — see the overhead experiment),
-//! inference runs outside it.
+//! owns a thread-local backend. Coordinator state (the shared
+//! `MappingState` plus terminal accounting) lives behind one mutex +
+//! condvar; mapping events run under the lock (they are microseconds —
+//! see the overhead experiment), inference runs outside it. The drain
+//! phase is event-driven: completions fire mapping events from the
+//! workers themselves, and the coordinator sleeps on the condvar until
+//! the earliest arriving-queue deadline — no mapping event ever fires on
+//! a fixed polling interval (idle workers still use short condvar
+//! timeouts as an exit-check backstop).
 
-use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::model::machine::MachineSpec;
+use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::scenario::RateWindow;
 use crate::model::task::{Task, TaskTypeId, Time};
-use crate::model::EetMatrix;
-use crate::runtime::{profile_eet, Executor, Runtime};
+use crate::model::{EetMatrix, RateProfile, Scenario};
+use crate::runtime::{
+    profile_eet, Executor, InferenceBackend, PjrtBackend, Runtime, SyntheticBackend,
+};
+use crate::sched::dispatch::MappingState;
 use crate::sched::fairness::FairnessTracker;
 use crate::sched::registry::heuristic_by_name;
-use crate::sched::{Action, MachineSnapshot, MappingHeuristic, QueuedInfo, SchedView};
-use crate::serve::report::ServeReport;
+use crate::serve::report::{ServeReport, ServeSnapshot};
 use crate::util::rng::{Exponential, Pcg64};
+
+/// Which execution substrate serves the requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// Real PJRT inference from AOT artifacts (`pjrt` feature + `make
+    /// artifacts`).
+    Pjrt,
+    /// Synthetic service times from the scenario model — no artifacts, no
+    /// PJRT, runs everywhere (module docs).
+    Synthetic,
+}
 
 /// Serving-run configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    pub backend: ServeBackend,
+    /// Synthetic backend: the full system under test (machines, EET,
+    /// queue/fairness knobs). `None` ⇒ `Scenario::paper_synthetic()`.
+    /// Ignored by the PJRT backend, which profiles its EET at startup.
+    pub scenario: Option<Scenario>,
     pub artifact_dir: PathBuf,
     pub heuristic: String,
-    /// Machines (speeds are normalised internally so min speed = 1.0).
+    /// PJRT backend machines (speeds are normalised internally so min
+    /// speed = 1.0). The synthetic backend takes machines from `scenario`.
     pub machines: Vec<MachineSpec>,
+    /// Constant arrival rate (req/s); superseded by `rate_profile`.
     pub arrival_rate: f64,
+    /// Time-varying arrival schedule, cycled for the whole session.
+    pub rate_profile: Option<RateProfile>,
     pub n_requests: usize,
+    /// PJRT backend local-queue slots (synthetic: `scenario.queue_slots`).
     pub queue_slots: usize,
     pub fairness_factor: f64,
     pub fairness_min_samples: u64,
     /// Scales Eq. 4 deadlines (1.0 = paper rule; <1 tightens).
     pub deadline_scale: f64,
     pub seed: u64,
-    /// Profiling repetitions for the startup EET measurement.
+    /// Profiling repetitions for the startup EET measurement (PJRT).
     pub profile_reps: usize,
+    /// Wall seconds per modeled second: 1.0 = real time, <1 fast-forwards
+    /// (e.g. 0.01 serves a 100-second session in one wall second).
+    /// Synthetic backend only — PJRT inference consumes real wall time, so
+    /// `serve` rejects any value other than 1.0 for [`ServeBackend::Pjrt`].
+    pub time_scale: f64,
+    /// Record a [`ServeSnapshot`] every this many modeled seconds.
+    pub progress_every: Option<f64>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
+            backend: ServeBackend::Pjrt,
+            scenario: None,
             artifact_dir: crate::runtime::default_artifact_dir(),
             heuristic: "felare".into(),
             machines: crate::model::machine::aws_machines(),
             arrival_rate: 20.0,
+            rate_profile: None,
             n_requests: 200,
             queue_slots: 2,
             fairness_factor: 1.0,
@@ -70,21 +124,39 @@ impl Default for ServeConfig {
             deadline_scale: 1.0,
             seed: 42,
             profile_reps: 7,
+            time_scale: 1.0,
+            progress_every: None,
         }
     }
 }
 
-struct SharedState {
-    arriving: Vec<Task>,
-    queues: Vec<VecDeque<Task>>,
-    /// Expected (EET-based) end of the currently running task per machine.
-    running_expected_end: Vec<Option<Time>>,
-    heuristic: Box<dyn MappingHeuristic>,
-    tracker: FairnessTracker,
-    eet: EetMatrix,
+/// Everything the session needs after backend-specific setup resolved.
+struct Plan {
     specs: Vec<MachineSpec>,
+    eet: EetMatrix,
+    n_types: usize,
     queue_slots: usize,
-    // terminal accounting
+    fairness_factor: f64,
+    fairness_min_samples: u64,
+    rate_window: RateWindow,
+    /// Scenario handed to the heuristic registry.
+    reg_scenario: Scenario,
+    worker_backend: WorkerBackend,
+    backend_name: &'static str,
+}
+
+/// Per-worker backend recipe (each thread builds its own instance;
+/// `PjRtClient` is not `Send`).
+#[derive(Clone)]
+enum WorkerBackend {
+    Synthetic { eet: EetMatrix, cv_exec: f64 },
+    Pjrt { dir: PathBuf, speeds: Vec<f64> },
+}
+
+struct SharedState {
+    /// The shared mapping-event driver (same layer the simulator runs).
+    map: MappingState,
+    // terminal accounting (modeled seconds)
     arrived: Vec<u64>,
     completed: Vec<u64>,
     missed: Vec<u64>,
@@ -95,11 +167,18 @@ struct SharedState {
     done_generating: bool,
     mapper_events: u64,
     mapper_time_total: f64,
+    deferrals: u64,
     inferences: u64,
-    /// Workers that finished compiling their thread-local runtime; the
+    snapshots: Vec<ServeSnapshot>,
+    /// Workers that finished building their thread-local backend; the
     /// arrival generator gates on this so startup compilation doesn't eat
     /// the first requests' deadlines.
     workers_ready: usize,
+}
+
+enum Terminal {
+    Completed,
+    Missed,
 }
 
 impl SharedState {
@@ -107,105 +186,67 @@ impl SharedState {
         self.done_generating && self.terminal == self.total_expected
     }
 
-    fn record_terminal(&mut self, ty: TaskTypeId, kind: Terminal, latency: Option<f64>) {
+    /// Worker-side terminal outcome (completion or deadline miss).
+    fn record_exec_terminal(&mut self, ty: TaskTypeId, kind: Terminal, latency: Option<f64>) {
         match kind {
             Terminal::Completed => {
                 self.completed[ty.0] += 1;
-                self.tracker.on_terminal(ty, true);
+                self.map.record_terminal(ty, true);
                 if let Some(l) = latency {
                     self.latencies.push(l);
                 }
             }
             Terminal::Missed => {
                 self.missed[ty.0] += 1;
-                self.tracker.on_terminal(ty, false);
-            }
-            Terminal::Cancelled => {
-                self.cancelled[ty.0] += 1;
-                self.tracker.on_terminal(ty, false);
+                self.map.record_terminal(ty, false);
             }
         }
         self.terminal += 1;
     }
 
-    /// One mapping event (same semantics as the simulator's).
+    /// One mapping event through the shared dispatch layer. Every drop the
+    /// mapper makes (expiry, proactive, victim) lands in `cancelled` —
+    /// fairness is already accounted inside [`MappingState`].
     fn coordinate(&mut self, now: Time) {
-        // expire waiting tasks
-        let mut expired: Vec<Task> = Vec::new();
-        self.arriving.retain(|t| {
-            if t.expired_at(now) {
-                expired.push(t.clone());
-                false
-            } else {
-                true
-            }
+        let SharedState {
+            map,
+            cancelled,
+            terminal,
+            mapper_events,
+            mapper_time_total,
+            deferrals,
+            ..
+        } = self;
+        let stats = map.mapping_event(now, &mut |_kind, ty| {
+            cancelled[ty.0] += 1;
+            *terminal += 1;
         });
-        for t in expired {
-            self.record_terminal(t.type_id, Terminal::Cancelled, None);
-        }
-
-        let snapshots: Vec<MachineSnapshot> = (0..self.specs.len())
-            .map(|m| {
-                let mut avail = self.running_expected_end[m].unwrap_or(now).max(now);
-                let queued: Vec<QueuedInfo> = self.queues[m]
-                    .iter()
-                    .map(|t| {
-                        let e = self.eet.get(t.type_id, crate::model::MachineId(m));
-                        avail += e;
-                        QueuedInfo { task_id: t.id, type_id: t.type_id, expected_exec: e }
-                    })
-                    .collect();
-                MachineSnapshot {
-                    dyn_power: self.specs[m].dyn_power,
-                    avail,
-                    free_slots: self.queue_slots.saturating_sub(queued.len()),
-                    queued,
-                }
-            })
-            .collect();
-
-        let fair = self.heuristic.wants_fairness().then(|| self.tracker.snapshot());
-        let arriving = std::mem::take(&mut self.arriving);
-        let mut view = SchedView::new(now, &self.eet, snapshots, &arriving, fair.as_ref());
-        let t0 = Instant::now();
-        self.heuristic.map(&mut view);
-        self.mapper_time_total += t0.elapsed().as_secs_f64();
-        self.mapper_events += 1;
-        let actions = view.into_actions();
-
-        let mut consumed = vec![false; arriving.len()];
-        for a in &actions {
-            match a {
-                Action::Assign { task_idx, machine } => {
-                    consumed[*task_idx] = true;
-                    self.queues[machine.0].push_back(arriving[*task_idx].clone());
-                }
-                Action::Drop { task_idx } => {
-                    consumed[*task_idx] = true;
-                    let ty = arriving[*task_idx].type_id;
-                    self.record_terminal(ty, Terminal::Cancelled, None);
-                }
-                Action::VictimDrop { machine, task_id } => {
-                    let q = &mut self.queues[machine.0];
-                    if let Some(pos) = q.iter().position(|t| t.id == *task_id) {
-                        let victim = q.remove(pos).unwrap();
-                        self.record_terminal(victim.type_id, Terminal::Cancelled, None);
-                    }
-                }
-            }
-        }
-        self.arriving = arriving
-            .into_iter()
-            .enumerate()
-            .filter_map(|(i, t)| (!consumed[i]).then_some(t))
-            .collect();
+        *mapper_events += 1;
+        *mapper_time_total += stats.mapper_dt;
+        *deferrals += stats.deferrals;
     }
-}
 
-enum Terminal {
-    Completed,
-    Missed,
-    Cancelled,
+    fn take_snapshot(&mut self, now: Time) {
+        let arrived: u64 = self.arrived.iter().sum();
+        let snap = ServeSnapshot {
+            t: now,
+            arrived,
+            completed: self.completed.iter().sum(),
+            missed: self.missed.iter().sum(),
+            cancelled: self.cancelled.iter().sum(),
+            in_flight: arrived - self.terminal as u64,
+        };
+        crate::log_info!(
+            "serve t={:.0}s  arrived {}  completed {}  missed {}  cancelled {}  in-flight {}",
+            snap.t,
+            snap.arrived,
+            snap.completed,
+            snap.missed,
+            snap.cancelled,
+            snap.in_flight
+        );
+        self.snapshots.push(snap);
+    }
 }
 
 struct WorkerEnergy {
@@ -213,47 +254,199 @@ struct WorkerEnergy {
     wasted_busy: f64,
 }
 
+/// Resolve backend-specific setup into a uniform [`Plan`].
+fn plan(config: &ServeConfig) -> Result<Plan> {
+    match config.backend {
+        ServeBackend::Pjrt => {
+            if config.machines.is_empty() {
+                return Err(Error::Config("serve needs machines".into()));
+            }
+            if config.queue_slots == 0 {
+                return Err(Error::Config("queue_slots must be >= 1".into()));
+            }
+            // ---- startup: profile EET on the real PJRT runtime ----------
+            let runtime = Runtime::load(&config.artifact_dir)?;
+            let n_types = runtime.n_task_types();
+            // normalise speeds: fastest machine == PJRT base
+            let min_speed = config
+                .machines
+                .iter()
+                .map(|m| m.speed)
+                .fold(f64::INFINITY, f64::min);
+            let mut specs = config.machines.clone();
+            for s in &mut specs {
+                s.speed /= min_speed;
+            }
+            let profile = profile_eet(&runtime, &specs, config.profile_reps)?;
+            let eet = profile.eet.clone();
+            drop(runtime); // workers build their own (PjRtClient is not Send)
+            let speeds = specs.iter().map(|s| s.speed).collect();
+            Ok(Plan {
+                specs,
+                eet,
+                n_types,
+                queue_slots: config.queue_slots,
+                fairness_factor: config.fairness_factor,
+                fairness_min_samples: config.fairness_min_samples,
+                rate_window: RateWindow::Cumulative,
+                reg_scenario: Scenario::paper_synthetic(),
+                worker_backend: WorkerBackend::Pjrt { dir: config.artifact_dir.clone(), speeds },
+                backend_name: "pjrt",
+            })
+        }
+        ServeBackend::Synthetic => {
+            let sc = config
+                .scenario
+                .clone()
+                .unwrap_or_else(Scenario::paper_synthetic);
+            sc.validate().map_err(Error::Config)?;
+            Ok(Plan {
+                specs: sc.machines.clone(),
+                eet: sc.eet.clone(),
+                n_types: sc.n_types(),
+                queue_slots: sc.queue_slots,
+                fairness_factor: sc.fairness_factor,
+                fairness_min_samples: sc.fairness_min_samples,
+                rate_window: sc.rate_window,
+                worker_backend: WorkerBackend::Synthetic {
+                    eet: sc.eet.clone(),
+                    cv_exec: sc.cv_exec,
+                },
+                reg_scenario: sc,
+                backend_name: "synthetic",
+            })
+        }
+    }
+}
+
+/// One worker = one machine: fetch from the shared local queue, execute
+/// through the backend, realise the modeled time (padding with scaled
+/// sleep), fire the completion mapping event.
+fn run_worker(
+    m: usize,
+    state: &(Mutex<SharedState>, Condvar),
+    backend: &mut dyn InferenceBackend,
+    epoch: Instant,
+    time_scale: f64,
+) -> Result<WorkerEnergy> {
+    let now = || epoch.elapsed().as_secs_f64() / time_scale;
+    let mut energy = WorkerEnergy { busy: 0.0, wasted_busy: 0.0 };
+    let (lock, cv) = state;
+    {
+        let mut st = lock.lock().unwrap();
+        st.workers_ready += 1;
+        cv.notify_all();
+    }
+    loop {
+        // fetch next task for this machine (or exit)
+        let next = {
+            let mut st = lock.lock().unwrap();
+            loop {
+                if let Some(q) = st.map.pop_queued(m) {
+                    st.map.mark_running(m, now() + q.expected_exec);
+                    break Some(q.task);
+                }
+                if st.all_done() {
+                    break None;
+                }
+                let (guard, _timeout) =
+                    cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+                st = guard;
+            }
+        };
+        let Some(task) = next else { return Ok(energy) };
+
+        let start = now();
+        // (terminal kind, completion latency, modeled busy time, ran inference)
+        let outcome = if start >= task.deadline {
+            // queued past its deadline: dropped at start, no energy
+            (Terminal::Missed, None, 0.0, false)
+        } else {
+            let rec = backend.infer(task.type_id.0, MachineId(m))?;
+            let budget = task.deadline - start;
+            if rec.modeled <= budget {
+                // pad the backend's consumed time up to the modeled time
+                let pad = rec.modeled - rec.consumed_wall;
+                if pad > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(pad * time_scale));
+                }
+                let fin = now();
+                energy.busy += rec.modeled;
+                (Terminal::Completed, Some(fin - task.arrival), rec.modeled, true)
+            } else {
+                // deadline interrupts the (modeled) execution — abort at
+                // the deadline, energy wasted (Eq. 1/2)
+                let pad = (budget - rec.consumed_wall).max(0.0);
+                if pad > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(pad * time_scale));
+                }
+                energy.busy += budget;
+                energy.wasted_busy += budget;
+                (Terminal::Missed, None, budget, true)
+            }
+        };
+
+        let mut st = lock.lock().unwrap();
+        if outcome.3 {
+            st.inferences += 1;
+        }
+        st.map.mark_idle(m);
+        st.record_exec_terminal(task.type_id, outcome.0, outcome.1);
+        let t = now();
+        st.coordinate(t); // completion-triggered mapping event
+        cv.notify_all();
+    }
+}
+
 /// Run a full serving session; blocks until every request is terminal.
 pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
-    if config.machines.is_empty() || config.n_requests == 0 {
-        return Err(Error::Config("serve needs machines and requests".into()));
+    if config.n_requests == 0 {
+        return Err(Error::Config("serve needs at least one request".into()));
     }
-    // ---- startup: profile EET on the real PJRT runtime -------------------
-    let runtime = Runtime::load(&config.artifact_dir)?;
-    let n_types = runtime.n_task_types();
-
-    // normalise speeds: fastest machine == PJRT base
-    let min_speed = config
-        .machines
-        .iter()
-        .map(|m| m.speed)
-        .fold(f64::INFINITY, f64::min);
-    let mut specs = config.machines.clone();
-    for s in &mut specs {
-        s.speed /= min_speed;
+    if config.time_scale <= 0.0 || !config.time_scale.is_finite() {
+        return Err(Error::Config("time_scale must be positive and finite".into()));
     }
-    let profile = profile_eet(&runtime, &specs, config.profile_reps)?;
-    let eet = profile.eet.clone();
-    drop(runtime); // workers build their own (PjRtClient is not Send)
+    if config.backend == ServeBackend::Pjrt && config.time_scale != 1.0 {
+        // The PJRT backend consumes real wall time per inference; scaling
+        // would mix wall and modeled seconds in the pad/abort math.
+        return Err(Error::Config(
+            "time_scale only applies to the synthetic backend (PJRT inference \
+             runs in real time)"
+                .into(),
+        ));
+    }
+    let rate_profile = match &config.rate_profile {
+        Some(p) => p.clone(),
+        None => {
+            if config.arrival_rate <= 0.0 {
+                return Err(Error::Config("arrival_rate must be positive".into()));
+            }
+            RateProfile::constant(config.arrival_rate)
+        }
+    };
+    let plan = plan(config)?;
+    let time_scale = config.time_scale;
+    let n_types = plan.n_types;
+    let eet = plan.eet.clone();
 
-    let heuristic = heuristic_by_name(&config.heuristic, &crate::model::Scenario::paper_synthetic())
-        .map_err(Error::Config)?;
+    let heuristic =
+        heuristic_by_name(&config.heuristic, &plan.reg_scenario).map_err(Error::Config)?;
+    let mapping = MappingState::new(
+        eet.clone(),
+        plan.specs.iter().map(|s| s.dyn_power).collect(),
+        plan.queue_slots,
+        FairnessTracker::new(
+            n_types,
+            plan.fairness_factor,
+            plan.fairness_min_samples,
+            plan.rate_window,
+        ),
+        heuristic,
+    );
 
     let state = Arc::new((
         Mutex::new(SharedState {
-            arriving: Vec::new(),
-            queues: vec![VecDeque::new(); specs.len()],
-            running_expected_end: vec![None; specs.len()],
-            heuristic,
-            tracker: FairnessTracker::new(
-                n_types,
-                config.fairness_factor,
-                config.fairness_min_samples,
-                RateWindow::Cumulative,
-            ),
-            eet: eet.clone(),
-            specs: specs.clone(),
-            queue_slots: config.queue_slots,
+            map: mapping,
             arrived: vec![0; n_types],
             completed: vec![0; n_types],
             missed: vec![0; n_types],
@@ -264,93 +457,35 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
             done_generating: false,
             mapper_events: 0,
             mapper_time_total: 0.0,
+            deferrals: 0,
             inferences: 0,
+            snapshots: Vec::new(),
             workers_ready: 0,
         }),
         Condvar::new(),
     ));
     let epoch = Instant::now();
-    let now = move || epoch.elapsed().as_secs_f64();
+    let now = move || epoch.elapsed().as_secs_f64() / time_scale;
 
     // ---- workers ----------------------------------------------------------
     let mut handles = Vec::new();
-    for (m, spec) in specs.iter().enumerate() {
+    for (m, spec) in plan.specs.iter().enumerate() {
         let state = Arc::clone(&state);
-        let spec = spec.clone();
-        let dir = config.artifact_dir.clone();
+        let wb = plan.worker_backend.clone();
         let seed = config.seed ^ (m as u64) << 8;
         let handle = std::thread::Builder::new()
             .name(format!("worker-{}", spec.name))
             .spawn(move || -> Result<WorkerEnergy> {
-                let rt = Runtime::load(&dir)?;
-                let mut exec = Executor::new(&rt, 4, seed);
-                let mut energy = WorkerEnergy { busy: 0.0, wasted_busy: 0.0 };
-                let (lock, cv) = &*state;
-                {
-                    let mut st = lock.lock().unwrap();
-                    st.workers_ready += 1;
-                    cv.notify_all();
-                }
-                loop {
-                    // fetch next task for this machine (or exit)
-                    let task = {
-                        let mut st = lock.lock().unwrap();
-                        loop {
-                            if let Some(t) = st.queues[m].pop_front() {
-                                let e = st.eet.get(t.type_id, crate::model::MachineId(m));
-                                st.running_expected_end[m] = Some(now() + e);
-                                break Some(t);
-                            }
-                            if st.all_done() {
-                                break None;
-                            }
-                            let (guard, _timeout) = cv
-                                .wait_timeout(st, Duration::from_millis(20))
-                                .unwrap();
-                            st = guard;
-                        }
-                    };
-                    let Some(task) = task else { return Ok(energy) };
-
-                    let start = now();
-                    let outcome = if start >= task.deadline {
-                        // queued past its deadline: dropped at start, no energy
-                        (Terminal::Missed, None, 0.0)
-                    } else {
-                        let rec = exec.run(task.type_id.0)?;
-                        let modeled = rec.wall * spec.speed;
-                        let budget = task.deadline - start;
-                        if modeled <= budget {
-                            // pad the real inference up to the modeled time
-                            let pad = modeled - rec.wall;
-                            if pad > 0.0 {
-                                std::thread::sleep(Duration::from_secs_f64(pad));
-                            }
-                            let fin = now();
-                            energy.busy += modeled;
-                            (Terminal::Completed, Some(fin - task.arrival), modeled)
-                        } else {
-                            // deadline interrupts the (modeled) execution —
-                            // abort at the deadline, energy wasted (Eq. 1/2)
-                            let pad = (budget - rec.wall).max(0.0);
-                            if pad > 0.0 {
-                                std::thread::sleep(Duration::from_secs_f64(pad));
-                            }
-                            energy.busy += budget;
-                            energy.wasted_busy += budget;
-                            (Terminal::Missed, None, budget)
-                        }
-                    };
-
-                    let mut st = lock.lock().unwrap();
-                    if !matches!(outcome.0, Terminal::Missed if outcome.2 == 0.0) {
-                        st.inferences += 1;
+                match wb {
+                    WorkerBackend::Synthetic { eet, cv_exec } => {
+                        let mut backend = SyntheticBackend::new(eet, cv_exec, seed);
+                        run_worker(m, &state, &mut backend, epoch, time_scale)
                     }
-                    st.running_expected_end[m] = None;
-                    st.record_terminal(task.type_id, outcome.0, outcome.1);
-                    let t = now();
-                    st.coordinate(t); // completion-triggered mapping event
-                    cv.notify_all();
+                    WorkerBackend::Pjrt { dir, speeds } => {
+                        let rt = Runtime::load(&dir)?;
+                        let mut backend = PjrtBackend::new(Executor::new(&rt, 4, seed), speeds);
+                        run_worker(m, &state, &mut backend, epoch, time_scale)
+                    }
                 }
             })
             .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
@@ -359,46 +494,81 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
 
     // ---- open-loop Poisson arrival generator ------------------------------
     let mut rng = Pcg64::seed_from(config.seed, 0xA881);
-    let inter = Exponential::new(config.arrival_rate);
+    let mut next_snap = config.progress_every;
     {
         let (lock, cv) = &*state;
-        // wait for every worker's thread-local runtime to finish compiling
+        // wait for every worker's thread-local backend to finish building
         {
             let mut st = lock.lock().unwrap();
-            while st.workers_ready < specs.len() {
+            while st.workers_ready < plan.specs.len() {
                 let (guard, _) = cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
                 st = guard;
             }
         }
         for i in 0..config.n_requests {
-            std::thread::sleep(Duration::from_secs_f64(inter.sample(&mut rng)));
+            let rate = rate_profile.rate_at(now());
+            let inter = Exponential::new(rate).sample(&mut rng);
+            std::thread::sleep(Duration::from_secs_f64(inter * time_scale));
             let ty = TaskTypeId(rng.index(n_types));
             let t_arr = now();
-            let deadline = t_arr
-                + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
+            let deadline =
+                t_arr + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
             let task = Task {
                 id: i as u64,
                 type_id: ty,
                 arrival: t_arr,
                 deadline,
-                size_factor: 1.0, // real service time comes from real execution
+                size_factor: 1.0, // service time comes from the backend
             };
             let mut st = lock.lock().unwrap();
             st.arrived[ty.0] += 1;
-            st.tracker.on_arrival(ty);
-            st.arriving.push(task);
+            st.map.push_arrival(task);
             st.coordinate(t_arr); // arrival-triggered mapping event
+            if let (Some(every), Some(due)) = (config.progress_every, next_snap) {
+                if t_arr >= due {
+                    st.take_snapshot(t_arr);
+                    next_snap = Some(t_arr + every);
+                }
+            }
             cv.notify_all();
         }
-        // drain: periodically fire mapping events until everything terminal
+
+        // ---- graceful drain -----------------------------------------------
+        // Workers fire a mapping event on every completion themselves; the
+        // only state change left to this thread is an arriving-queue task's
+        // deadline passing, so sleep on the condvar exactly until the
+        // earliest such deadline (no fixed-interval polling).
         let mut st = lock.lock().unwrap();
         st.done_generating = true;
+        cv.notify_all();
         while st.terminal < st.total_expected {
             let t = now();
-            st.coordinate(t);
-            cv.notify_all();
-            let (guard, _) = cv.wait_timeout(st, Duration::from_millis(10)).unwrap();
-            st = guard;
+            if let (Some(every), Some(due)) = (config.progress_every, next_snap) {
+                if t >= due {
+                    st.take_snapshot(t);
+                    next_snap = Some(t + every);
+                }
+            }
+            match st.map.earliest_arriving_deadline() {
+                Some(d) if d <= t => {
+                    st.coordinate(t); // expiry-triggered mapping event
+                    cv.notify_all();
+                }
+                deadline => {
+                    // wait for a worker's completion signal, or until the
+                    // next deadline could expire something
+                    let wait = match deadline {
+                        Some(d) => ((d - t) * time_scale).clamp(0.0005, 0.25),
+                        None => 0.25,
+                    };
+                    let (guard, _) =
+                        cv.wait_timeout(st, Duration::from_secs_f64(wait)).unwrap();
+                    st = guard;
+                }
+            }
+        }
+        if config.progress_every.is_some() {
+            st.take_snapshot(now());
         }
         cv.notify_all();
     }
@@ -408,7 +578,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
     let mut dyn_energy = Vec::new();
     let mut idle_energy = Vec::new();
     let mut wasted_energy = Vec::new();
-    for (h, spec) in handles.into_iter().zip(&specs) {
+    for (h, spec) in handles.into_iter().zip(&plan.specs) {
         let e = h
             .join()
             .map_err(|_| Error::Runtime("worker panicked".into()))??;
@@ -419,8 +589,9 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
 
     let st = state.0.lock().unwrap();
     let report = ServeReport {
+        backend: plan.backend_name.into(),
         heuristic: config.heuristic.clone(),
-        arrival_rate: config.arrival_rate,
+        arrival_rate: rate_profile.mean_rate(),
         n_requests: config.n_requests,
         duration,
         arrived: st.arrived.clone(),
@@ -433,7 +604,9 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         wasted_energy,
         mapper_events: st.mapper_events,
         mapper_time_total: st.mapper_time_total,
+        deferrals: st.deferrals,
         inferences: st.inferences,
+        snapshots: st.snapshots.clone(),
     };
     report.check_conservation().map_err(Error::Runtime)?;
     Ok(report)
@@ -441,6 +614,31 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
 
 #[cfg(test)]
 mod tests {
-    // Live serving needs artifacts + threads + wall-clock; covered by
-    // rust/tests/serve_integration.rs and examples/smartsight.rs.
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            n_requests: 0,
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            arrival_rate: -1.0,
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+    }
+
+    // End-to-end serving (threads + wall clock) is covered by
+    // rust/tests/serve_integration.rs — synthetic backend on default
+    // features, PJRT when artifacts exist — and examples/smartsight.rs.
 }

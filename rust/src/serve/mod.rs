@@ -1,8 +1,10 @@
-//! Real-time serving coordinator: the live (wall-clock, threaded,
-//! PJRT-executing) counterpart of the discrete-event simulator.
+//! Real-time serving coordinator: the live (wall-clock, threaded)
+//! counterpart of the discrete-event simulator, sharing its mapping-event
+//! semantics through `sched::dispatch` and executing requests through a
+//! pluggable `runtime::InferenceBackend` (real PJRT or synthetic).
 
 pub mod coordinator;
 pub mod report;
 
-pub use coordinator::{serve, ServeConfig};
-pub use report::ServeReport;
+pub use coordinator::{serve, ServeBackend, ServeConfig};
+pub use report::{ServeReport, ServeSnapshot};

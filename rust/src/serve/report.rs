@@ -4,12 +4,28 @@
 use crate::util::json::Json;
 use crate::util::stats::{jain_index, Summary};
 
+/// One periodic progress sample of a serving session (taken every
+/// `ServeConfig::progress_every` modeled seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeSnapshot {
+    /// Modeled seconds since session start.
+    pub t: f64,
+    pub arrived: u64,
+    pub completed: u64,
+    pub missed: u64,
+    pub cancelled: u64,
+    /// Arrived but not yet terminal (waiting, queued or running).
+    pub in_flight: u64,
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Execution substrate that served the requests ("pjrt" / "synthetic").
+    pub backend: String,
     pub heuristic: String,
     pub arrival_rate: f64,
     pub n_requests: usize,
-    /// Wall-clock duration of the run (seconds).
+    /// Modeled duration of the run (seconds; wall clock × 1/time_scale).
     pub duration: f64,
     /// Per-type terminal counters.
     pub arrived: Vec<u64>,
@@ -25,8 +41,12 @@ pub struct ServeReport {
     /// Mapper overhead per mapping event (seconds).
     pub mapper_events: u64,
     pub mapper_time_total: f64,
-    /// Number of PJRT inferences actually executed.
+    /// Tasks left unassigned-but-feasible-later across mapping events.
+    pub deferrals: u64,
+    /// Number of backend inferences actually executed.
     pub inferences: u64,
+    /// Periodic progress samples (empty unless requested).
+    pub snapshots: Vec<ServeSnapshot>,
 }
 
 impl ServeReport {
@@ -97,7 +117,21 @@ impl ServeReport {
 
     pub fn to_json(&self) -> Json {
         let lat = self.latency_summary();
+        let snapshots: Vec<Json> = self
+            .snapshots
+            .iter()
+            .map(|s| {
+                Json::object()
+                    .set("t", s.t)
+                    .set("arrived", s.arrived)
+                    .set("completed", s.completed)
+                    .set("missed", s.missed)
+                    .set("cancelled", s.cancelled)
+                    .set("in_flight", s.in_flight)
+            })
+            .collect();
         Json::object()
+            .set("backend", self.backend.as_str())
             .set("heuristic", self.heuristic.as_str())
             .set("arrival_rate", self.arrival_rate)
             .set("n_requests", self.n_requests)
@@ -112,15 +146,18 @@ impl ServeReport {
             .set("mapper_overhead_us", self.mapper_overhead_us())
             .set("total_energy", self.total_energy())
             .set("wasted_energy", self.total_wasted_energy())
+            .set("deferrals", self.deferrals)
             .set("inferences", self.inferences)
+            .set("snapshots", Json::Array(snapshots))
     }
 
     pub fn render(&self) -> String {
         let lat = self.latency_summary();
         let mut s = String::new();
         s.push_str(&format!(
-            "serve[{}] λ={}/s  {} requests in {:.1}s  ({:.1} completed/s)\n",
+            "serve[{} @ {}] λ={}/s  {} requests in {:.1}s  ({:.1} completed/s)\n",
             self.heuristic,
+            self.backend,
             self.arrival_rate,
             self.n_requests,
             self.duration,
@@ -137,7 +174,7 @@ impl ServeReport {
             self.jain()
         ));
         s.push_str(&format!(
-            "  latency p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms   ({} PJRT inferences)\n",
+            "  latency p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms   ({} inferences)\n",
             lat.median() * 1e3,
             lat.percentile(99.0) * 1e3,
             lat.mean * 1e3,
@@ -159,6 +196,7 @@ mod tests {
 
     fn sample() -> ServeReport {
         ServeReport {
+            backend: "synthetic".into(),
             heuristic: "felare".into(),
             arrival_rate: 10.0,
             n_requests: 20,
@@ -173,7 +211,16 @@ mod tests {
             wasted_energy: vec![0.5, 1.0],
             mapper_events: 10,
             mapper_time_total: 50e-6,
+            deferrals: 3,
             inferences: 16,
+            snapshots: vec![ServeSnapshot {
+                t: 1.0,
+                arrived: 12,
+                completed: 8,
+                missed: 1,
+                cancelled: 1,
+                in_flight: 2,
+            }],
         }
     }
 
@@ -202,7 +249,10 @@ mod tests {
         let text = r.render();
         assert!(text.contains("80.0%"));
         assert!(text.contains("felare"));
+        assert!(text.contains("synthetic"));
         let j = r.to_json();
         assert!(j.req_f64("latency_p99_ms").unwrap() > 0.0);
+        assert_eq!(j.req_str("backend").unwrap(), "synthetic");
+        assert_eq!(j.req("snapshots").unwrap().as_array().unwrap().len(), 1);
     }
 }

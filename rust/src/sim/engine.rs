@@ -5,14 +5,22 @@
 //!
 //! * tasks arrive dynamically and wait in the *arriving queue*;
 //! * a mapping event fires on every arrival and every completion; the
-//!   mapper (any [`MappingHeuristic`]) assigns tasks to bounded FCFS
-//!   per-machine local queues, or defers/drops them;
+//!   mapper (any [`MappingHeuristic`](crate::sched::MappingHeuristic))
+//!   assigns tasks to bounded FCFS per-machine local queues, or
+//!   defers/drops them;
 //! * mapped tasks cannot be remapped or preempted;
 //! * a running task whose deadline passes is aborted at the deadline
 //!   (Eq. 1 middle case) — its dynamic energy is wasted;
 //! * a queued task whose deadline passes before it starts is dropped at
 //!   start with no dynamic energy spent (Eq. 1 last case);
 //! * energy = Σ dynamic power · busy time + idle power · idle time.
+//!
+//! The mapping-event machinery itself (arriving queue, local queues,
+//! fairness tracker, snapshot building, action application) lives in the
+//! shared [`MappingState`] (`sched::dispatch`) and is driven identically
+//! by this engine and by the live serving coordinator — the simulator
+//! owns only what the mapper must not see: actual service times, the
+//! event queue, and energy accounting.
 //!
 //! The mapper sees only *expected* execution times (the EET matrix);
 //! actual service times are EET · size_factor, revealed only as
@@ -21,9 +29,10 @@
 //! # Recycled-state API contract (§Perf)
 //!
 //! A [`Simulation`] is an *arena*: machine state, the event queue, the
-//! arriving queue, the fairness tracker and every mapper scratch buffer
-//! are allocated once in [`Simulation::new`] and recycled across runs.
-//! The contract callers rely on:
+//! shared mapping state (arriving queue, local queues, fairness tracker)
+//! and every mapper scratch buffer are allocated once in
+//! [`Simulation::new`] and recycled across runs. The contract callers
+//! rely on:
 //!
 //! * [`Simulation::run`] may be called any number of times, with any
 //!   traces; every run starts from a fully reset state, and every
@@ -50,22 +59,14 @@
 //! sweep hot path except the trace itself — see `benches/bench_stress.rs`
 //! for the measured effect.
 
-use std::collections::VecDeque;
-use std::time::Instant;
-
 use crate::model::machine::MachineSpec;
 use crate::model::task::{CancelReason, Outcome, Task, Time};
 use crate::model::{Scenario, Trace};
-use crate::sched::fairness::{FairnessSnapshot, FairnessTracker};
-use crate::sched::{Action, MachineSnapshot, MappingHeuristic, SchedView};
+use crate::sched::dispatch::{DropKind, MappingState};
+use crate::sched::fairness::FairnessTracker;
+use crate::sched::{Action, MappingHeuristic};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::result::{MachineEnergy, SimResult};
-
-struct Queued {
-    task: Task,
-    expected_exec: f64,
-    actual_exec: f64,
-}
 
 struct Running {
     task: Task,
@@ -74,22 +75,18 @@ struct Running {
     end: Time,
     /// True finish had it been allowed to run to completion.
     actual_end: Time,
-    /// What the mapper believes: start + EET entry.
-    expected_end: Time,
 }
 
 struct MachState {
     spec: MachineSpec,
     running: Option<Running>,
-    queue: VecDeque<Queued>,
     energy: MachineEnergy,
 }
 
 impl MachState {
-    /// Reset to the idle state, keeping the queue's allocation.
+    /// Reset to the idle state.
     fn reset(&mut self) {
         self.running = None;
-        self.queue.clear();
         self.energy = MachineEnergy::default();
     }
 }
@@ -98,7 +95,6 @@ impl MachState {
 /// (see the module docs for the recycled-state contract).
 pub struct Simulation {
     scenario: Scenario,
-    heuristic: Box<dyn MappingHeuristic>,
     /// Collect per-event mapper latencies (used by the overhead study;
     /// off by default — the aggregate total/max are always collected).
     pub record_overhead_samples: bool,
@@ -106,11 +102,7 @@ pub struct Simulation {
     // ---- recycled arena state (reset at the top of every run) ----------
     machines: Vec<MachState>,
     events: EventQueue,
-    arriving: Vec<Task>,
-    tracker: FairnessTracker,
-    snapshots: Vec<MachineSnapshot>,
-    fair_buf: FairnessSnapshot,
-    consumed: Vec<bool>,
+    mapping: MappingState,
 }
 
 impl Simulation {
@@ -122,16 +114,7 @@ impl Simulation {
             .map(|spec| MachState {
                 spec: spec.clone(),
                 running: None,
-                queue: VecDeque::with_capacity(scenario.queue_slots),
                 energy: MachineEnergy::default(),
-            })
-            .collect();
-        let snapshots: Vec<MachineSnapshot> = (0..scenario.n_machines())
-            .map(|_| MachineSnapshot {
-                dyn_power: 0.0,
-                avail: 0.0,
-                free_slots: 0,
-                queued: Vec::with_capacity(scenario.queue_slots),
             })
             .collect();
         let tracker = FairnessTracker::new(
@@ -140,22 +123,20 @@ impl Simulation {
             scenario.fairness_min_samples,
             scenario.rate_window,
         );
-        let fair_buf = FairnessSnapshot {
-            rates: Vec::with_capacity(scenario.n_types()),
-            fairness_factor: scenario.fairness_factor,
-        };
+        let mapping = MappingState::new(
+            scenario.eet.clone(),
+            scenario.machines.iter().map(|m| m.dyn_power).collect(),
+            scenario.queue_slots,
+            tracker,
+            heuristic,
+        );
         Self {
             scenario: scenario.clone(),
-            heuristic,
             record_overhead_samples: false,
             overhead_samples: Vec::new(),
             machines,
             events: EventQueue::new(),
-            arriving: Vec::new(),
-            tracker,
-            snapshots,
-            fair_buf,
-            consumed: Vec::new(),
+            mapping,
         }
     }
 
@@ -163,15 +144,27 @@ impl Simulation {
     /// [`Simulation::run`] behaves exactly like a fresh engine built with
     /// this heuristic.
     pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
-        self.heuristic = heuristic;
+        self.mapping.set_heuristic(heuristic);
     }
 
     pub fn heuristic_name(&self) -> &'static str {
-        self.heuristic.name()
+        self.mapping.heuristic_name()
     }
 
     pub fn scenario(&self) -> &Scenario {
         &self.scenario
+    }
+
+    /// Record every applied mapping [`Action`] of the next runs (golden
+    /// sim/serve equivalence tests; off by default on hot paths).
+    pub fn set_record_actions(&mut self, on: bool) {
+        self.mapping.record_actions = on;
+    }
+
+    /// Actions applied during the latest [`Simulation::run`] (empty unless
+    /// [`Simulation::set_record_actions`] was enabled).
+    pub fn action_log(&self) -> &[Action] {
+        &self.mapping.action_log
     }
 
     /// Run the full trace to completion and report. `&mut self` recycles
@@ -181,22 +174,17 @@ impl Simulation {
         // split the borrow: every arena field independently mutable
         let Simulation {
             scenario: sc,
-            heuristic,
             record_overhead_samples,
             overhead_samples,
             machines,
             events,
-            arriving,
-            tracker,
-            snapshots,
-            fair_buf,
-            consumed,
+            mapping,
         } = self;
 
         let n_types = sc.n_types();
         let n_machines = sc.n_machines();
         let mut result =
-            SimResult::empty(heuristic.name(), trace.arrival_rate, n_types, n_machines);
+            SimResult::empty(mapping.heuristic_name(), trace.arrival_rate, n_types, n_machines);
         result.arrived = trace.arrivals_per_type(n_types);
 
         // ---- arena reset ---------------------------------------------------
@@ -204,10 +192,8 @@ impl Simulation {
             m.reset();
         }
         events.clear();
-        arriving.clear();
-        tracker.reset();
+        mapping.reset();
         overhead_samples.clear();
-        let track_for_mapper = heuristic.wants_fairness();
 
         for (i, t) in trace.tasks.iter().enumerate() {
             events.push(t.arrival, Event::Arrival { trace_idx: i });
@@ -218,9 +204,7 @@ impl Simulation {
             now = t;
             match ev {
                 Event::Arrival { trace_idx } => {
-                    let task = trace.tasks[trace_idx].clone();
-                    tracker.on_arrival(task.type_id);
-                    arriving.push(task);
+                    mapping.push_arrival(trace.tasks[trace_idx]);
                 }
                 Event::Finish { machine_idx } => {
                     finish_running(
@@ -228,7 +212,7 @@ impl Simulation {
                         machine_idx,
                         now,
                         &mut result,
-                        tracker,
+                        mapping,
                     );
                 }
             }
@@ -236,116 +220,47 @@ impl Simulation {
             // start queued work freed by the completion (before mapping so
             // availability estimates are current)
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, tracker);
+                try_start(m, mi, now, events, &mut result, mapping);
             }
 
-            // engine-level expiry: tasks that died waiting in the arriving
-            // queue are cancelled for every heuristic alike
-            expire_arriving(arriving, now, &mut result, tracker);
-
-            // ---- the mapping event -------------------------------------
-            for (snap, m) in snapshots.iter_mut().zip(machines.iter()) {
-                fill_snapshot(snap, m, now, sc.queue_slots);
-            }
-            let fair_snap = if track_for_mapper {
-                tracker.snapshot_into(fair_buf);
-                Some(&*fair_buf)
-            } else {
-                None
-            };
-            let mut view = SchedView::new(
-                now,
-                &sc.eet,
-                std::mem::take(snapshots),
-                arriving,
-                fair_snap,
-            );
-            let t0 = Instant::now();
-            heuristic.map(&mut view);
-            let dt = t0.elapsed().as_secs_f64();
+            // ---- the mapping event (shared driver: expiry, snapshots,
+            // heuristic, action application — sched::dispatch) -----------
+            let stats = mapping.mapping_event(now, &mut |kind, ty| {
+                let reason = match kind {
+                    DropKind::Expired => CancelReason::DeadlineExpired,
+                    DropKind::MapperDropped => CancelReason::MapperDropped,
+                    DropKind::VictimDropped => CancelReason::VictimDropped,
+                };
+                result.record(ty.0, &Outcome::Cancelled { reason, at: now });
+            });
             result.mapping_events += 1;
-            result.mapper_time_total += dt;
-            result.mapper_time_max = result.mapper_time_max.max(dt);
-            result.deferrals += view.deferrals;
+            result.mapper_time_total += stats.mapper_dt;
+            result.mapper_time_max = result.mapper_time_max.max(stats.mapper_dt);
+            result.deferrals += stats.deferrals;
             if *record_overhead_samples {
-                overhead_samples.push(dt);
-            }
-
-            // ---- apply the mapper's actions -----------------------------
-            let (actions, recycled) = view.into_parts();
-            *snapshots = recycled;
-            consumed.clear();
-            consumed.resize(arriving.len(), false);
-            for action in actions {
-                match action {
-                    Action::Assign { task_idx, machine } => {
-                        let task = arriving[task_idx].clone();
-                        debug_assert!(!consumed[task_idx]);
-                        consumed[task_idx] = true;
-                        let e = sc.eet.get(task.type_id, machine);
-                        let m = &mut machines[machine.0];
-                        debug_assert!(m.queue.len() < sc.queue_slots, "queue overflow");
-                        m.queue.push_back(Queued {
-                            actual_exec: e * task.size_factor,
-                            expected_exec: e,
-                            task,
-                        });
-                    }
-                    Action::Drop { task_idx } => {
-                        debug_assert!(!consumed[task_idx]);
-                        consumed[task_idx] = true;
-                        let task = &arriving[task_idx];
-                        let out =
-                            Outcome::Cancelled { reason: CancelReason::MapperDropped, at: now };
-                        result.record(task.type_id.0, &out);
-                        tracker.on_terminal(task.type_id, false);
-                    }
-                    Action::VictimDrop { machine, task_id } => {
-                        let m = &mut machines[machine.0];
-                        let pos = m
-                            .queue
-                            .iter()
-                            .position(|q| q.task.id == task_id)
-                            .expect("victim not in queue");
-                        let victim = m.queue.remove(pos).unwrap();
-                        let out =
-                            Outcome::Cancelled { reason: CancelReason::VictimDropped, at: now };
-                        result.record(victim.task.type_id.0, &out);
-                        tracker.on_terminal(victim.task.type_id, false);
-                    }
-                }
-            }
-            // compact the arriving queue in place (keeps its allocation)
-            if consumed.iter().any(|&c| c) {
-                let mut i = 0;
-                arriving.retain(|_| {
-                    let keep = !consumed[i];
-                    i += 1;
-                    keep
-                });
+                overhead_samples.push(stats.mapper_dt);
             }
 
             // idle machines may now have work
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, tracker);
+                try_start(m, mi, now, events, &mut result, mapping);
             }
         }
 
         // Anything still waiting dies at its own deadline.
-        for task in arriving.drain(..) {
+        mapping.drain_unmapped(&mut |ty, deadline| {
             let out = Outcome::Cancelled {
                 reason: CancelReason::DeadlineExpired,
-                at: task.deadline.max(now),
+                at: deadline.max(now),
             };
-            result.record(task.type_id.0, &out);
-            tracker.on_terminal(task.type_id, false);
-        }
+            result.record(ty.0, &out);
+        });
 
         result.makespan = now;
         result.battery = sc.battery_for(now);
         for (mi, m) in machines.iter().enumerate() {
             debug_assert!(m.running.is_none(), "machine {mi} still running at drain");
-            debug_assert!(m.queue.is_empty(), "machine {mi} queue not drained");
+            debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
             let mut e = m.energy.clone();
             e.idle = m.spec.idle_energy(now - e.busy_time);
             result.energy[mi] = e;
@@ -355,38 +270,17 @@ impl Simulation {
     }
 }
 
-/// Refresh one recycled mapper-visible snapshot (expected availability).
-fn fill_snapshot(snap: &mut MachineSnapshot, m: &MachState, now: Time, queue_slots: usize) {
-    let mut avail = match &m.running {
-        // optimistic clamp: a task running past its expected end is
-        // estimated to finish "now"
-        Some(r) => r.expected_end.max(now),
-        None => now,
-    };
-    snap.queued.clear();
-    for q in &m.queue {
-        avail += q.expected_exec;
-        snap.queued.push(crate::sched::QueuedInfo {
-            task_id: q.task.id,
-            type_id: q.task.type_id,
-            expected_exec: q.expected_exec,
-        });
-    }
-    snap.dyn_power = m.spec.dyn_power;
-    snap.avail = avail;
-    snap.free_slots = queue_slots.saturating_sub(snap.queued.len());
-}
-
 /// Account the finished/aborted running task.
 fn finish_running(
     m: &mut MachState,
     machine_idx: usize,
     now: Time,
     result: &mut SimResult,
-    tracker: &mut FairnessTracker,
+    mapping: &mut MappingState,
 ) {
     let r = m.running.take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
+    mapping.mark_idle(machine_idx);
     let busy = r.end - r.start;
     let e = m.spec.dyn_energy(busy);
     m.energy.dynamic += e;
@@ -394,12 +288,12 @@ fn finish_running(
     let ty = r.task.type_id;
     if r.actual_end <= r.task.deadline {
         result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
-        tracker.on_terminal(ty, true);
+        mapping.record_terminal(ty, true);
     } else {
         // aborted at the deadline; everything it burnt is wasted
         m.energy.wasted += e;
         result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
-        tracker.on_terminal(ty, false);
+        mapping.record_terminal(ty, false);
     }
 }
 
@@ -411,44 +305,25 @@ fn try_start(
     now: Time,
     events: &mut EventQueue,
     result: &mut SimResult,
-    tracker: &mut FairnessTracker,
+    mapping: &mut MappingState,
 ) {
     if m.running.is_some() {
         return;
     }
-    while let Some(q) = m.queue.pop_front() {
+    while let Some(q) = mapping.pop_queued(machine_idx) {
         if q.task.expired_at(now) {
             // assigned but never started: Missed with no dynamic energy
             result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
-            tracker.on_terminal(q.task.type_id, false);
+            mapping.record_terminal(q.task.type_id, false);
             continue;
         }
-        let actual_end = now + q.actual_exec;
+        let actual_end = now + q.expected_exec * q.task.size_factor;
         let end = actual_end.min(q.task.deadline);
-        let expected_end = now + q.expected_exec;
         events.push(end, Event::Finish { machine_idx });
-        m.running = Some(Running { task: q.task, start: now, end, actual_end, expected_end });
+        mapping.mark_running(machine_idx, now + q.expected_exec);
+        m.running = Some(Running { task: q.task, start: now, end, actual_end });
         return;
     }
-}
-
-/// Cancel arriving-queue tasks whose deadline has passed.
-fn expire_arriving(
-    arriving: &mut Vec<Task>,
-    now: Time,
-    result: &mut SimResult,
-    tracker: &mut FairnessTracker,
-) {
-    arriving.retain(|task| {
-        if task.expired_at(now) {
-            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at: now };
-            result.record(task.type_id.0, &out);
-            tracker.on_terminal(task.type_id, false);
-            false
-        } else {
-            true
-        }
-    });
 }
 
 #[cfg(test)]
@@ -667,5 +542,20 @@ mod tests {
         assert!(first > 0);
         sim.run(&tr);
         assert_eq!(sim.overhead_samples.len(), first, "samples are per-run, not cumulative");
+    }
+
+    #[test]
+    fn action_log_off_by_default_and_reset_per_run() {
+        let sc = Scenario::paper_synthetic();
+        let tr = trace_for(5.0, 100, 51);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap());
+        sim.run(&tr);
+        assert!(sim.action_log().is_empty(), "recording is opt-in");
+        sim.set_record_actions(true);
+        sim.run(&tr);
+        let n = sim.action_log().len();
+        assert!(n > 0);
+        sim.run(&tr);
+        assert_eq!(sim.action_log().len(), n, "log is per-run, not cumulative");
     }
 }

@@ -1,0 +1,197 @@
+//! Golden sim/serve semantic equivalence through the shared dispatch
+//! layer (`sched::dispatch::MappingState`).
+//!
+//! Two independent drivers run the same scenario + trace:
+//!
+//! * the discrete-event simulator (`sim::Simulation`), which owns the
+//!   event loop, energy accounting and actual service times internally;
+//! * a "live-style" driver written here that mirrors the serving
+//!   coordinator's control flow — workers pop queued tasks the moment
+//!   they go idle (`pop_queued`/`mark_running`), report completions
+//!   (`mark_idle`/`record_terminal`), and a mapping event fires after
+//!   every arrival and every completion — in virtual time with
+//!   deterministic service times (EET × `size_factor`, exactly what the
+//!   simulator realises).
+//!
+//! Both record every applied mapping [`Action`]. If the sequences (and
+//! the terminal counts) are identical, the mapping semantics live
+//! entirely in the shared layer: neither engine adds decisions of its
+//! own, so the serve path cannot drift from the simulator again.
+
+use felare::model::task::Task;
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::sched::dispatch::MappingState;
+use felare::sched::fairness::FairnessTracker;
+use felare::sched::registry::heuristic_by_name;
+use felare::sched::Action;
+use felare::sim::event::{Event, EventQueue};
+use felare::sim::Simulation;
+use felare::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Counts {
+    completed: u64,
+    missed: u64,
+    cancelled: u64,
+}
+
+struct RunningTask {
+    task: Task,
+    actual_end: f64,
+}
+
+/// Worker-side start logic, mirroring both the simulator's `try_start`
+/// and the serve worker's fetch loop: pop FCFS, drop-at-start if the
+/// deadline already passed, otherwise run until min(actual end, deadline).
+fn live_try_start(
+    m: usize,
+    now: f64,
+    map: &mut MappingState,
+    running: &mut [Option<RunningTask>],
+    events: &mut EventQueue,
+    counts: &mut Counts,
+) {
+    if running[m].is_some() {
+        return;
+    }
+    while let Some(q) = map.pop_queued(m) {
+        if q.task.expired_at(now) {
+            counts.missed += 1;
+            map.record_terminal(q.task.type_id, false);
+            continue;
+        }
+        let actual_end = now + q.expected_exec * q.task.size_factor;
+        let end = actual_end.min(q.task.deadline);
+        events.push(end, Event::Finish { machine_idx: m });
+        map.mark_running(m, now + q.expected_exec);
+        running[m] = Some(RunningTask { task: q.task, actual_end });
+        return;
+    }
+}
+
+/// Serve-style driver over the shared dispatch layer, in virtual time.
+fn drive_live(sc: &Scenario, trace: &Trace, heuristic: &str) -> (Vec<Action>, Counts) {
+    let mut map = MappingState::new(
+        sc.eet.clone(),
+        sc.machines.iter().map(|m| m.dyn_power).collect(),
+        sc.queue_slots,
+        FairnessTracker::new(
+            sc.n_types(),
+            sc.fairness_factor,
+            sc.fairness_min_samples,
+            sc.rate_window,
+        ),
+        heuristic_by_name(heuristic, sc).unwrap(),
+    );
+    map.record_actions = true;
+    let mut events = EventQueue::new();
+    for (i, t) in trace.tasks.iter().enumerate() {
+        events.push(t.arrival, Event::Arrival { trace_idx: i });
+    }
+    let n_machines = sc.n_machines();
+    let mut running: Vec<Option<RunningTask>> = (0..n_machines).map(|_| None).collect();
+    let mut counts = Counts::default();
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival { trace_idx } => map.push_arrival(trace.tasks[trace_idx]),
+            Event::Finish { machine_idx } => {
+                let r = running[machine_idx].take().expect("finish with no running task");
+                map.mark_idle(machine_idx);
+                let ok = r.actual_end <= r.task.deadline;
+                if ok {
+                    counts.completed += 1;
+                } else {
+                    counts.missed += 1;
+                }
+                map.record_terminal(r.task.type_id, ok);
+            }
+        }
+        for m in 0..n_machines {
+            live_try_start(m, now, &mut map, &mut running, &mut events, &mut counts);
+        }
+        // the mapping event: arrival- or completion-triggered, exactly as
+        // the serving coordinator fires it
+        map.mapping_event(now, &mut |_kind, _ty| counts.cancelled += 1);
+        for m in 0..n_machines {
+            live_try_start(m, now, &mut map, &mut running, &mut events, &mut counts);
+        }
+    }
+    map.drain_unmapped(&mut |_ty, _deadline| counts.cancelled += 1);
+    (map.action_log.clone(), counts)
+}
+
+/// The discrete-event simulator over the same shared layer.
+fn drive_sim(sc: &Scenario, trace: &Trace, heuristic: &str) -> (Vec<Action>, Counts) {
+    let mut sim = Simulation::new(sc, heuristic_by_name(heuristic, sc).unwrap());
+    sim.set_record_actions(true);
+    let r = sim.run(trace);
+    r.check_conservation().unwrap();
+    let counts = Counts {
+        completed: r.total_completed(),
+        missed: r.total_missed(),
+        cancelled: r.total_cancelled(),
+    };
+    (sim.action_log().to_vec(), counts)
+}
+
+fn trace_for(sc: &Scenario, rate: f64, n: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks: n,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+fn assert_equivalent(sc: &Scenario, rate: f64, n: usize, seed: u64, heuristic: &str) {
+    let trace = trace_for(sc, rate, n, seed);
+    let (sim_actions, sim_counts) = drive_sim(sc, &trace, heuristic);
+    let (live_actions, live_counts) = drive_live(sc, &trace, heuristic);
+    assert_eq!(
+        sim_actions.len(),
+        live_actions.len(),
+        "{heuristic}@λ={rate}: action counts differ"
+    );
+    for (i, (a, b)) in sim_actions.iter().zip(&live_actions).enumerate() {
+        assert_eq!(a, b, "{heuristic}@λ={rate}: action {i} differs");
+    }
+    assert_eq!(sim_counts, live_counts, "{heuristic}@λ={rate}: terminal counts differ");
+    assert_eq!(
+        sim_counts.completed + sim_counts.missed + sim_counts.cancelled,
+        n as u64,
+        "conservation"
+    );
+}
+
+#[test]
+fn all_heuristics_identical_on_paper_scenario() {
+    let sc = Scenario::paper_synthetic();
+    for h in ["mm", "msd", "mmu", "elare", "felare", "felare-novd"] {
+        assert_equivalent(&sc, 5.0, 600, 21, h);
+    }
+}
+
+#[test]
+fn identical_under_light_and_saturating_load() {
+    let sc = Scenario::paper_synthetic();
+    for (rate, seed) in [(0.5, 31), (9.0, 32), (40.0, 33)] {
+        assert_equivalent(&sc, rate, 500, seed, "felare");
+        assert_equivalent(&sc, rate, 500, seed, "elare");
+    }
+}
+
+#[test]
+fn identical_on_stress_scenario() {
+    // the serve-mode system preset: many machines, CVB-drawn EET
+    let sc = Scenario::stress(16, 6);
+    let rate = 0.9 * sc.service_capacity();
+    assert_equivalent(&sc, rate, 2000, 41, "felare");
+    assert_equivalent(&sc, rate, 2000, 41, "mm");
+}
+
+#[test]
+fn identical_on_aws_scenario() {
+    let sc = Scenario::aws_two_app();
+    assert_equivalent(&sc, 6.0, 400, 51, "felare");
+}

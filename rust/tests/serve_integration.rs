@@ -1,10 +1,115 @@
 //! Integration: the live serving coordinator end-to-end — Poisson arrivals,
-//! FELARE mapping, real PJRT inference on worker threads, full accounting.
-//! Skips gracefully when artifacts aren't built.
+//! mapping through the shared dispatch layer, per-machine worker threads,
+//! full accounting.
+//!
+//! The synthetic-backend tests run on default features (no PJRT, no
+//! artifacts) and are fast-forwarded 100×, so CI exercises the live path
+//! on every PR. The PJRT tests skip gracefully when artifacts aren't
+//! built.
 
 use felare::model::machine::aws_machines;
+use felare::model::{RateProfile, Scenario};
 use felare::runtime::default_artifact_dir;
-use felare::serve::{serve, ServeConfig};
+use felare::serve::{serve, ServeBackend, ServeConfig};
+
+// ---- synthetic backend: runs everywhere --------------------------------
+
+fn synthetic_config(sc: Scenario, heuristic: &str, rate: f64, n: usize) -> ServeConfig {
+    ServeConfig {
+        backend: ServeBackend::Synthetic,
+        scenario: Some(sc),
+        heuristic: heuristic.into(),
+        arrival_rate: rate,
+        n_requests: n,
+        time_scale: 0.01, // 100× fast-forward
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn synthetic_serve_reaches_terminal_state_without_pjrt() {
+    let sc = Scenario::stress(8, 4);
+    let rate = 0.8 * sc.service_capacity();
+    let report = serve(&synthetic_config(sc, "felare", rate, 400)).unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.backend, "synthetic");
+    assert_eq!(report.arrived.iter().sum::<u64>(), 400);
+    assert!(report.inferences > 0, "synthetic inference must have run");
+    assert!(
+        report.collective_completion_rate() > 0.0,
+        "nonzero on-time rate at moderate load"
+    );
+    assert!(report.duration > 0.0);
+    assert!(report.mapper_events >= 400, "every arrival fires a mapping event");
+    // completed requests have measured sojourn latencies
+    assert!(!report.latencies.is_empty());
+    assert!(report.latency_summary().mean > 0.0);
+    assert!(report.total_energy() > 0.0);
+}
+
+#[test]
+fn synthetic_serve_with_phases_and_snapshots() {
+    let sc = Scenario::stress(4, 3);
+    let cap = sc.service_capacity();
+    let phases =
+        RateProfile::parse(&format!("{:.3}:20,{:.3}:10", 0.5 * cap, 1.5 * cap)).unwrap();
+    let mut cfg = synthetic_config(sc, "felare", cap, 200);
+    cfg.rate_profile = Some(phases);
+    cfg.progress_every = Some(10.0);
+    cfg.seed = 11;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    assert!(!report.snapshots.is_empty(), "periodic snapshots recorded");
+    for w in report.snapshots.windows(2) {
+        assert!(w[0].t <= w[1].t, "snapshots ordered in time");
+        assert!(w[0].arrived <= w[1].arrived, "arrivals cumulative");
+        assert!(w[0].completed <= w[1].completed, "completions cumulative");
+    }
+    let last = report.snapshots.last().unwrap();
+    assert_eq!(last.arrived, 200);
+    assert_eq!(last.in_flight, 0, "final snapshot taken after graceful drain");
+    assert!(report.collective_completion_rate() > 0.0);
+}
+
+#[test]
+fn synthetic_overload_sheds_load_but_conserves() {
+    let sc = Scenario::stress(4, 3);
+    let rate = 5.0 * sc.service_capacity();
+    let mut cfg = synthetic_config(sc, "mm", rate, 300);
+    cfg.deadline_scale = 0.6;
+    cfg.seed = 13;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    let unsuccessful =
+        report.missed.iter().sum::<u64>() + report.cancelled.iter().sum::<u64>();
+    assert!(unsuccessful > 0, "overload must shed load");
+    assert!(report.total_energy() > 0.0);
+}
+
+#[test]
+fn synthetic_serve_paper_scenario_default() {
+    // `scenario: None` falls back to the paper system
+    let cfg = ServeConfig {
+        backend: ServeBackend::Synthetic,
+        heuristic: "elare".into(),
+        arrival_rate: 1.0,
+        n_requests: 60,
+        time_scale: 0.01,
+        deadline_scale: 4.0,
+        seed: 17,
+        ..Default::default()
+    };
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    assert!(
+        report.collective_completion_rate() > 0.5,
+        "light load with slack deadlines mostly completes (rate {})",
+        report.collective_completion_rate()
+    );
+}
+
+// ---- PJRT backend: needs the feature + built artifacts -----------------
 
 fn have_artifacts() -> bool {
     if !cfg!(feature = "pjrt") {
