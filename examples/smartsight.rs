@@ -15,6 +15,7 @@
 //! split, mapper overhead. Recorded in EXPERIMENTS.md §End-to-end.
 
 use felare::model::machine::aws_machines;
+use felare::model::ArrivalProcess;
 use felare::runtime::default_artifact_dir;
 use felare::serve::{serve, ServeConfig};
 
@@ -37,7 +38,7 @@ fn main() {
             artifact_dir: dir.clone(),
             heuristic: heuristic.into(),
             machines: aws_machines(),
-            arrival_rate: rate,
+            arrival: ArrivalProcess::Poisson { rate },
             n_requests: n,
             queue_slots: 2,
             deadline_scale: 1.5,

@@ -31,6 +31,7 @@ fn sweep_one(scenario: Scenario, heuristics: &[&str], rates: &[f64], opts: &ExpO
         traces: opts.traces().min(12), // ablations are many cells; cap traces
         tasks: opts.tasks(),
         seed: opts.seed,
+        engine: opts.engine,
     };
     run_sweep(&spec)
 }

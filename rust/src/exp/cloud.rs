@@ -61,6 +61,7 @@ fn sweep(sc: Scenario, opts: &ExpOpts) -> (f64, f64, f64) {
         traces: opts.traces().min(10),
         tasks: opts.tasks(),
         seed: opts.seed,
+        engine: opts.engine,
     };
     let p = &run_sweep(&spec)[0];
     (p.completion_rate, p.total_energy, p.wasted_energy_pct)

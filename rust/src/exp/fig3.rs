@@ -12,13 +12,13 @@ use crate::exp::sweep::{pareto_front, run_sweep, SweepSpec};
 use crate::exp::ExpOpts;
 use crate::sched::registry::ALL_HEURISTICS;
 
-pub const RATES: [f64; 9] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 100.0];
-
 pub fn run(opts: &ExpOpts) -> Result<()> {
-    let mut spec = SweepSpec::paper_default(&ALL_HEURISTICS, &RATES);
+    let mut spec =
+        SweepSpec::paper_default(&ALL_HEURISTICS, &SweepSpec::paper_rates_saturating());
     spec.traces = opts.traces();
     spec.tasks = opts.tasks();
     spec.seed = opts.seed;
+    spec.engine = opts.engine;
     let points = run_sweep(&spec);
 
     // Pareto front over all (energy, miss) points

@@ -11,19 +11,19 @@ use crate::exp::sweep::{run_sweep, SweepSpec};
 use crate::exp::ExpOpts;
 use crate::sched::registry::ALL_HEURISTICS;
 
-pub const RATES: [f64; 10] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 20.0, 100.0];
-
 pub fn run(opts: &ExpOpts) -> Result<()> {
-    let mut spec = SweepSpec::paper_default(&ALL_HEURISTICS, &RATES);
+    let rates = SweepSpec::paper_rates_extended();
+    let mut spec = SweepSpec::paper_default(&ALL_HEURISTICS, &rates);
     spec.traces = opts.traces();
     spec.tasks = opts.tasks();
     spec.seed = opts.seed;
+    spec.engine = opts.engine;
     let points = run_sweep(&spec);
 
     let mut cols: Vec<&str> = vec!["λ"];
     cols.extend(ALL_HEURISTICS.iter().map(|h| *h));
     let mut t = Table::new("Fig. 4 — wasted energy (% of battery)", &cols);
-    for &rate in &RATES {
+    for &rate in &rates {
         let mut cells = vec![fmt_f(rate, 1)];
         for h in ALL_HEURISTICS {
             let p = points

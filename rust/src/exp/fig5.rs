@@ -50,6 +50,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         traces: opts.traces(),
         tasks: opts.tasks(),
         seed: opts.seed,
+        engine: opts.engine,
     };
     let points = run_sweep(&spec);
 

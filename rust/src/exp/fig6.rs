@@ -11,20 +11,20 @@ use crate::exp::output::{fmt_f, Table};
 use crate::exp::sweep::{run_sweep, SweepSpec};
 use crate::exp::ExpOpts;
 
-pub const RATES: [f64; 8] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0];
-
 pub fn run(opts: &ExpOpts) -> Result<()> {
-    let mut spec = SweepSpec::paper_default(&["mm", "elare"], &RATES);
+    let rates = SweepSpec::paper_rates();
+    let mut spec = SweepSpec::paper_default(&["mm", "elare"], &rates);
     spec.traces = opts.traces();
     spec.tasks = opts.tasks();
     spec.seed = opts.seed;
+    spec.engine = opts.engine;
     let points = run_sweep(&spec);
 
     let mut t = Table::new(
         "Fig. 6 — unsuccessful tasks (% of arrivals), split cancelled/missed",
         &["λ", "MM cancelled", "MM missed", "MM total", "EL cancelled", "EL missed", "EL total"],
     );
-    for &rate in &RATES {
+    for &rate in &rates {
         let p = |h: &str| {
             points
                 .iter()

@@ -21,6 +21,7 @@ pub(crate) fn run_at_rate(opts: &ExpOpts, rate: f64, stem: &str, title: &str) ->
     spec.traces = opts.traces();
     spec.tasks = opts.tasks();
     spec.seed = opts.seed;
+    spec.engine = opts.engine;
     run_spec(spec, stem, title)
 }
 

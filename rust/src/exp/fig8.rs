@@ -27,6 +27,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         traces: opts.traces(),
         tasks: opts.tasks(),
         seed: opts.seed,
+        engine: opts.engine,
     };
     fig7::run_spec(
         spec,

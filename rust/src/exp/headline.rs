@@ -16,6 +16,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     spec.traces = opts.traces();
     spec.tasks = opts.tasks();
     spec.seed = opts.seed;
+    spec.engine = opts.engine;
     let points = run_sweep(&spec);
     let p = |h: &str, r: f64| {
         points

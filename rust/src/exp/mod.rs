@@ -20,6 +20,7 @@ pub mod sweep;
 pub mod table1;
 
 use crate::error::{Error, Result};
+use crate::exp::sweep::EngineKind;
 use crate::model::Scenario;
 
 /// Options shared by every experiment.
@@ -32,11 +33,30 @@ pub struct ExpOpts {
     /// Override tasks per trace (paper: 2000).
     pub tasks: Option<usize>,
     pub seed: u64,
+    /// Which engine executes sweep cells: the discrete-event simulator or
+    /// the headless serve driver (`--engine sim|serve`); both produce
+    /// bit-identical metrics (sweep module docs §Engines).
+    pub engine: EngineKind,
+    /// Rate-grid override for `exp sweep` (`--rates 2,4,8`).
+    pub rates: Option<Vec<f64>>,
+    /// Scenario spec for `exp sweep` (`--scenario paper|aws|stress:M:T|path`).
+    pub scenario: Option<String>,
+    /// Per-request JSONL trace export path for `exp sweep` (`--trace-out`).
+    pub trace_out: Option<String>,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        Self { quick: false, traces: None, tasks: None, seed: 0x5EED }
+        Self {
+            quick: false,
+            traces: None,
+            tasks: None,
+            seed: 0x5EED,
+            engine: EngineKind::Sim,
+            rates: None,
+            scenario: None,
+            trace_out: None,
+        }
     }
 }
 
@@ -66,6 +86,7 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("overhead", "mapper overhead per event (lightweight claim)", overhead::run),
     ("ablation", "design-choice ablations + §VIII adaptive extension", ablation::run),
     ("cloud", "edge-to-cloud continuum RTT sweep (§VIII future work)", cloud::run),
+    ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
 ];
 
 pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {
@@ -129,7 +150,8 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), n);
         assert!(ids.contains(&"fig4"));
-        assert_eq!(n, 12);
+        assert!(ids.contains(&"sweep"));
+        assert_eq!(n, 13);
     }
 
     #[test]

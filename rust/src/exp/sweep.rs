@@ -2,11 +2,24 @@
 //! arrival-rate × trace) grids in parallel and aggregate per-point means,
 //! exactly the way the paper aggregates "30 synthesized workload traces".
 //!
+//! §Engines — a sweep cell runs on a pluggable [`SweepEngine`]:
+//!
+//! * [`EngineKind::Sim`] — the recycled discrete-event [`Simulation`];
+//! * [`EngineKind::Serve`] — the [`HeadlessServe`] driver: the serving
+//!   coordinator's worker control flow in virtual time (`--speedup → ∞`),
+//!   proven **bit-identical** to the simulator cell for cell
+//!   (`rust/tests/sweep_engine_equivalence.rs`).
+//!
+//! `felare exp sweep --engine serve` (and `--engine` on every figure)
+//! therefore compares all heuristics *live* against the same streamed
+//! [`CellMetrics`] reduction the sim path uses — one evaluation system,
+//! two interchangeable engines.
+//!
 //! §Perf — the hot path is organised for the million-task regime:
 //!
 //! * the parallel work item is one **(rate, trace)** pair: the workload is
 //!   generated once and replayed under every heuristic on a single
-//!   recycled [`Simulation`] arena (`set_heuristic` between runs), so a
+//!   recycled engine arena (`set_heuristic` between runs), so a
 //!   5-heuristic sweep synthesizes each trace once instead of five times
 //!   and allocates one engine per item instead of one per cell;
 //! * each cell is reduced to a [`CellMetrics`] record the moment it
@@ -20,12 +33,113 @@
 //! bit-identical run to run (and to the pre-refactor sequential grouping)
 //! regardless of worker scheduling.
 
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::ExpOpts;
 use crate::model::{Scenario, Trace, WorkloadParams};
-use crate::sched::registry::heuristic_by_name;
+use crate::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use crate::sched::trace::TraceRecord;
+use crate::sched::MappingHeuristic;
+use crate::serve::HeadlessServe;
 use crate::sim::{SimResult, Simulation};
 use crate::util::parallel::{default_jobs, par_map_n};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
+
+/// An execution engine the sweep grid can run cells on. Both
+/// implementations are recycled arenas: one engine per (rate, trace) work
+/// item, `set_heuristic` between heuristic replays.
+pub trait SweepEngine {
+    fn engine_name(&self) -> &'static str;
+    fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>);
+    /// Emit one [`TraceRecord`] per task (off by default).
+    fn set_record_traces(&mut self, on: bool);
+    /// Trace records of the latest run.
+    fn trace_log(&self) -> &[TraceRecord];
+    fn run(&mut self, trace: &Trace) -> SimResult;
+}
+
+impl SweepEngine for Simulation {
+    fn engine_name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        Simulation::set_heuristic(self, heuristic);
+    }
+
+    fn set_record_traces(&mut self, on: bool) {
+        Simulation::set_record_traces(self, on);
+    }
+
+    fn trace_log(&self) -> &[TraceRecord] {
+        Simulation::trace_log(self)
+    }
+
+    fn run(&mut self, trace: &Trace) -> SimResult {
+        Simulation::run(self, trace)
+    }
+}
+
+impl SweepEngine for HeadlessServe {
+    fn engine_name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        HeadlessServe::set_heuristic(self, heuristic);
+    }
+
+    fn set_record_traces(&mut self, on: bool) {
+        HeadlessServe::set_record_traces(self, on);
+    }
+
+    fn trace_log(&self) -> &[TraceRecord] {
+        HeadlessServe::trace_log(self)
+    }
+
+    fn run(&mut self, trace: &Trace) -> SimResult {
+        HeadlessServe::run(self, trace)
+    }
+}
+
+/// Which [`SweepEngine`] executes the cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The discrete-event simulator (the paper's evaluation substrate).
+    #[default]
+    Sim,
+    /// The headless serve driver (live worker control flow, virtual time).
+    Serve,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> std::result::Result<EngineKind, String> {
+        match s {
+            "sim" => Ok(EngineKind::Sim),
+            "serve" => Ok(EngineKind::Serve),
+            other => Err(format!("unknown engine '{other}' (expected 'sim' or 'serve')")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Sim => "sim",
+            EngineKind::Serve => "serve",
+        }
+    }
+
+    pub fn build(
+        &self,
+        scenario: &Scenario,
+        heuristic: Box<dyn MappingHeuristic>,
+    ) -> Box<dyn SweepEngine> {
+        match self {
+            EngineKind::Sim => Box::new(Simulation::new(scenario, heuristic)),
+            EngineKind::Serve => Box::new(HeadlessServe::new(scenario, heuristic)),
+        }
+    }
+}
 
 /// One aggregated sweep point: a heuristic at an arrival rate, averaged
 /// over `traces` independent workloads.
@@ -62,6 +176,8 @@ pub struct SweepSpec {
     pub traces: usize,
     pub tasks: usize,
     pub seed: u64,
+    /// Which engine executes the cells (default: the simulator).
+    pub engine: EngineKind,
 }
 
 impl SweepSpec {
@@ -73,6 +189,7 @@ impl SweepSpec {
             traces: 30,
             tasks: 2000,
             seed: 0x5EED,
+            engine: EngineKind::Sim,
         }
     }
 
@@ -81,6 +198,31 @@ impl SweepSpec {
         self.traces = self.traces.min(6);
         self.tasks = self.tasks.min(500);
         self
+    }
+
+    // ---- named rate grids (one copy; figure modules used to carry
+    // drifting per-figure RATES arrays) ----------------------------------
+
+    /// The paper's core arrival-rate grid, λ ∈ {1..6, 8, 10} (Fig. 6/7
+    /// and the default `exp sweep` grid).
+    pub fn paper_rates() -> Vec<f64> {
+        vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0]
+    }
+
+    /// Core grid plus the saturating λ=100 tail where every heuristic
+    /// converges (Fig. 3's Pareto sweep).
+    pub fn paper_rates_saturating() -> Vec<f64> {
+        let mut rates = Self::paper_rates();
+        rates.push(100.0);
+        rates
+    }
+
+    /// Core grid plus the λ=20 and λ=100 tail points (Fig. 4's
+    /// wasted-energy sweep).
+    pub fn paper_rates_extended() -> Vec<f64> {
+        let mut rates = Self::paper_rates();
+        rates.extend([20.0, 100.0]);
+        rates
     }
 }
 
@@ -145,15 +287,40 @@ impl CellMetrics {
     }
 }
 
+/// Per-cell trace records from a traced sweep: the cell's grid coordinates
+/// plus one [`TraceRecord`] per task (`exp sweep --trace-out` exports one
+/// JSONL line each, tagged with these coordinates).
+#[derive(Clone, Debug)]
+pub struct CellTraces {
+    pub heuristic: String,
+    pub rate: f64,
+    pub trace_i: usize,
+    pub records: Vec<TraceRecord>,
+}
+
 /// Execute the whole grid; returns points ordered by (heuristic, rate).
 pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
+    run_sweep_traced(spec, false).0
+}
+
+/// Like [`run_sweep`], optionally collecting per-request trace records for
+/// every cell (memory: one record per task per cell — opt in for bounded
+/// grids, not for million-task sweeps). Every cell's conservation
+/// invariant (completed + missed + cancelled == arrived, per type) is
+/// checked as it completes; a violation panics rather than aggregating
+/// corrupt metrics.
+pub fn run_sweep_traced(
+    spec: &SweepSpec,
+    record_traces: bool,
+) -> (Vec<SweepPoint>, Vec<CellTraces>) {
     let traces = spec.traces;
     let n_rates = spec.rates.len();
     let n_items = n_rates * traces;
 
     // One work item per (rate, trace): generate the workload once, replay
     // it under every heuristic on one recycled engine arena.
-    let cells: Vec<Vec<CellMetrics>> = par_map_n(n_items, default_jobs(), |item| {
+    type Item = (Vec<CellMetrics>, Vec<Vec<TraceRecord>>);
+    let cells: Vec<Item> = par_map_n(n_items, default_jobs(), |item| {
         let (ri, ti) = (item / traces, item % traces);
         let rate = spec.rates[ri];
         let params = WorkloadParams {
@@ -164,21 +331,32 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
         };
         let mut rng = Pcg64::seed_from(cell_seed(spec.seed, rate, ti), 0x7ACE);
         let trace = Trace::generate(&params, &spec.scenario.eet, &mut rng);
-        let mut engine: Option<Simulation> = None;
-        let mut out = Vec::with_capacity(spec.heuristics.len());
+        let mut engine: Option<Box<dyn SweepEngine>> = None;
+        let mut metrics = Vec::with_capacity(spec.heuristics.len());
+        let mut records: Vec<Vec<TraceRecord>> = Vec::new();
         for h in &spec.heuristics {
             let heuristic = heuristic_by_name(h, &spec.scenario).expect("bad heuristic name");
-            let mut sim = match engine.take() {
-                Some(mut sim) => {
-                    sim.set_heuristic(heuristic);
-                    sim
+            let mut eng = match engine.take() {
+                Some(mut eng) => {
+                    eng.set_heuristic(heuristic);
+                    eng
                 }
-                None => Simulation::new(&spec.scenario, heuristic),
+                None => {
+                    let mut eng = spec.engine.build(&spec.scenario, heuristic);
+                    eng.set_record_traces(record_traces);
+                    eng
+                }
             };
-            out.push(CellMetrics::of(&sim.run(&trace)));
-            engine = Some(sim);
+            let r = eng.run(&trace);
+            r.check_conservation()
+                .unwrap_or_else(|e| panic!("{h}@λ={rate} trace {ti}: {e}"));
+            metrics.push(CellMetrics::of(&r));
+            if record_traces {
+                records.push(eng.trace_log().to_vec());
+            }
+            engine = Some(eng);
         }
-        out
+        (metrics, records)
     });
 
     // Indexed grouping: cell (h, ri, ti) lives at cells[ri·traces + ti][h].
@@ -186,11 +364,26 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepPoint> {
     for (hi, h) in spec.heuristics.iter().enumerate() {
         for (ri, &rate) in spec.rates.iter().enumerate() {
             let group: Vec<&CellMetrics> =
-                (0..traces).map(|ti| &cells[ri * traces + ti][hi]).collect();
+                (0..traces).map(|ti| &cells[ri * traces + ti].0[hi]).collect();
             points.push(aggregate(h, rate, &group));
         }
     }
-    points
+
+    let mut cell_traces = Vec::new();
+    if record_traces {
+        for (item, (_, records)) in cells.into_iter().enumerate() {
+            let (ri, ti) = (item / traces, item % traces);
+            for (hi, recs) in records.into_iter().enumerate() {
+                cell_traces.push(CellTraces {
+                    heuristic: spec.heuristics[hi].clone(),
+                    rate: spec.rates[ri],
+                    trace_i: ti,
+                    records: recs,
+                });
+            }
+        }
+    }
+    (points, cell_traces)
 }
 
 fn aggregate(heuristic: &str, rate: f64, rs: &[&CellMetrics]) -> SweepPoint {
@@ -242,6 +435,86 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
         front.push(i);
     }
     front
+}
+
+/// `felare exp sweep` — the engine-agnostic heuristic sweep. All paper
+/// heuristics run over a rate grid on the chosen engine (`--engine
+/// sim|serve`), on any scenario (`--scenario paper|aws|stress:M:T|path`),
+/// with optional per-request JSONL trace export (`--trace-out`).
+pub fn run_exp(opts: &ExpOpts) -> Result<()> {
+    let scenario = match &opts.scenario {
+        Some(spec) => Scenario::from_spec(spec)?,
+        None => Scenario::paper_synthetic(),
+    };
+    let rates = opts.rates.clone().unwrap_or_else(SweepSpec::paper_rates);
+    let spec = SweepSpec {
+        scenario,
+        heuristics: ALL_HEURISTICS.iter().map(|s| s.to_string()).collect(),
+        rates,
+        traces: opts.traces(),
+        tasks: opts.tasks(),
+        seed: opts.seed,
+        engine: opts.engine,
+    };
+    let record = opts.trace_out.is_some();
+    let (points, cell_traces) = run_sweep_traced(&spec, record);
+
+    let mut t = Table::new(
+        &format!(
+            "engine-agnostic sweep [{} engine] — {}",
+            spec.engine.name(),
+            spec.scenario.name
+        ),
+        &["heuristic", "λ", "completion", "miss", "wasted%", "jain", "victims/k"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.heuristic.clone(),
+            fmt_f(p.arrival_rate, 2),
+            format!("{}±{}", fmt_f(p.completion_rate, 4), fmt_f(p.completion_ci95, 4)),
+            fmt_f(p.miss_rate, 4),
+            fmt_f(p.wasted_energy_pct, 3),
+            fmt_f(p.jain, 3),
+            fmt_f(p.victim_drops_per_k, 2),
+        ]);
+    }
+    t.emit(&format!("sweep_{}", spec.engine.name()))?;
+    println!(
+        "sweep[{}]: {} points ({} heuristics × {} rates × {} traces of {} tasks, all cells conservation-checked)",
+        spec.engine.name(),
+        points.len(),
+        spec.heuristics.len(),
+        spec.rates.len(),
+        spec.traces,
+        spec.tasks
+    );
+    if let Some(path) = &opts.trace_out {
+        let n = export_cell_traces(path, &cell_traces)?;
+        println!("wrote {n} trace records ({} cells) to {path}", cell_traces.len());
+    }
+    Ok(())
+}
+
+/// JSONL export for traced sweeps: one line per request, tagged with its
+/// cell coordinates (heuristic, rate, trace index). Returns the line count.
+fn export_cell_traces(path: &str, cells: &[CellTraces]) -> Result<usize> {
+    use std::io::Write as _;
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    let mut n = 0usize;
+    for c in cells {
+        for r in &c.records {
+            let line = r
+                .to_json()
+                .set("heuristic", c.heuristic.as_str())
+                .set("rate", c.rate)
+                .set("trace", c.trace_i);
+            writeln!(w, "{}", line.to_string_compact())?;
+            n += 1;
+        }
+    }
+    w.flush()?;
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -324,6 +597,63 @@ mod tests {
         spec.traces = 2;
         spec.tasks = 50;
         assert!(run_sweep(&spec).is_empty());
+    }
+
+    #[test]
+    fn engine_kind_parses_and_defaults() {
+        assert_eq!(EngineKind::parse("sim").unwrap(), EngineKind::Sim);
+        assert_eq!(EngineKind::parse("serve").unwrap(), EngineKind::Serve);
+        assert!(EngineKind::parse("pjrt").is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Sim);
+        assert_eq!(EngineKind::Serve.name(), "serve");
+        assert_eq!(
+            SweepSpec::paper_default(&["mm"], &[1.0]).engine,
+            EngineKind::Sim,
+            "figures keep the simulator unless asked"
+        );
+    }
+
+    #[test]
+    fn named_rate_grids_nest() {
+        let base = SweepSpec::paper_rates();
+        let sat = SweepSpec::paper_rates_saturating();
+        let ext = SweepSpec::paper_rates_extended();
+        assert_eq!(base.len(), 8);
+        assert_eq!(sat[..base.len()], base[..], "saturating grid extends the core grid");
+        assert_eq!(ext[..base.len()], base[..], "extended grid extends the core grid");
+        assert_eq!(*sat.last().unwrap(), 100.0);
+        assert_eq!(ext[ext.len() - 2..], [20.0, 100.0]);
+    }
+
+    #[test]
+    fn traced_sweep_emits_one_record_per_task_per_cell() {
+        let mut spec = SweepSpec::paper_default(&["mm", "elare"], &[4.0, 9.0]);
+        spec.traces = 2;
+        spec.tasks = 80;
+        let (points, cells) = run_sweep_traced(&spec, true);
+        assert_eq!(points.len(), 4);
+        assert_eq!(cells.len(), 2 * 2 * 2, "heuristics × rates × traces");
+        for c in &cells {
+            assert_eq!(c.records.len(), spec.tasks, "{}@{}: one record per task", c.heuristic, c.rate);
+            for r in &c.records {
+                r.validate().unwrap();
+            }
+        }
+        // untraced sweeps pay nothing
+        let (_, empty) = run_sweep_traced(&spec, false);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn serve_engine_sweep_runs() {
+        // full bit-equality is covered by tests/sweep_engine_equivalence.rs
+        let mut spec = SweepSpec::paper_default(&["mm", "felare"], &[5.0]);
+        spec.traces = 2;
+        spec.tasks = 100;
+        spec.engine = EngineKind::Serve;
+        let points = run_sweep(&spec);
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.completion_rate > 0.0));
     }
 
     #[test]

@@ -14,11 +14,13 @@
 
 use std::time::Instant;
 
+use felare::exp::sweep::EngineKind;
 use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
 use felare::model::machine::aws_machines;
-use felare::model::{RateProfile, Scenario, Trace, WorkloadParams};
+use felare::model::{ArrivalProcess, ClientPool, RateProfile, Scenario, Trace, WorkloadParams};
 use felare::runtime::{profile_eet, Runtime};
 use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS, EXTENDED_HEURISTICS};
+use felare::sched::trace::write_jsonl;
 use felare::serve::{serve, ServeBackend, ServeConfig};
 use felare::sim::Simulation;
 use felare::util::cli::Args;
@@ -94,29 +96,50 @@ fn parse(spec: Args, raw: &[String]) -> Result<Args> {
 }
 
 /// `--scenario` spec: `paper` | `aws` | `stress:<machines>:<types>` |
-/// `path/to/scenario.json` (default: `paper`).
+/// `path/to/scenario.json` (default: `paper`). Grammar lives in
+/// [`Scenario::from_spec`] so the experiment harness shares it.
 fn load_scenario(args: &Args) -> Result<Scenario> {
     match args.get("scenario") {
-        Some("paper") | None => Ok(Scenario::paper_synthetic()),
-        Some("aws") => Ok(Scenario::aws_two_app()),
-        Some(spec) if spec.starts_with("stress:") => {
-            let dims: Vec<&str> = spec["stress:".len()..].split(':').collect();
-            if dims.len() != 2 {
-                return Err(fail!("expected stress:<machines>:<types>, got '{spec}'"));
-            }
-            let (m, t) = (dims[0], dims[1]);
-            let m: usize = m
+        None => Ok(Scenario::paper_synthetic()),
+        Some(spec) => Scenario::from_spec(spec).map_err(|e| fail!("{e}")),
+    }
+}
+
+/// Parse a count option that must be ≥ 1 — `--tasks 0` / `--traces 0`
+/// used to silently produce empty runs; they are parse-time errors now.
+fn positive_count(name: &str, value: &str) -> Result<usize> {
+    let n: usize = value
+        .parse()
+        .map_err(|_| fail!("--{name} expects a positive integer, got '{value}'"))?;
+    if n == 0 {
+        return Err(fail!("--{name} must be at least 1 (got 0)"));
+    }
+    Ok(n)
+}
+
+/// Parse the closed-loop client flags shared by `simulate` and `serve`:
+/// `--clients N` (+ optional `--think-time S`, mean seconds, finite ≥ 0).
+fn parse_client_pool(args: &Args) -> Result<Option<ClientPool>> {
+    let clients = match args.get("clients") {
+        Some(c) => Some(positive_count("clients", c)?),
+        None => None,
+    };
+    let think_time = match args.get("think-time") {
+        Some(s) => {
+            let t: f64 = s
                 .parse()
-                .map_err(|_| fail!("bad machine count '{m}' in '{spec}'"))?;
-            let t: usize = t
-                .parse()
-                .map_err(|_| fail!("bad type count '{t}' in '{spec}'"))?;
-            if m == 0 || t == 0 {
-                return Err(fail!("stress scenario needs ≥1 machine and ≥1 type"));
+                .map_err(|_| fail!("--think-time expects a number, got '{s}'"))?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(fail!("--think-time must be finite and >= 0 (got {s})"));
             }
-            Ok(Scenario::stress(m, t))
+            Some(t)
         }
-        Some(path) => Scenario::load(path).map_err(|e| fail!("{e}")),
+        None => None,
+    };
+    match (clients, think_time) {
+        (Some(n), t) => Ok(Some(ClientPool { n_clients: n, think_time: t.unwrap_or(0.5) })),
+        (None, Some(_)) => Err(fail!("--think-time requires --clients")),
+        (None, None) => Ok(None),
     }
 }
 
@@ -124,24 +147,41 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     let args = parse(
         Args::new("felare simulate", "discrete-event simulation")
             .opt("heuristic", "felare", "mm | msd | mmu | elare | felare")
-            .opt("rate", "5.0", "arrival rate λ (tasks/s)")
+            .opt("rate", "5.0", "arrival rate λ (tasks/s); ignored with --clients")
             .opt("tasks", "2000", "tasks per trace")
+            .opt_optional("clients", "closed-loop: N clients instead of open-loop Poisson")
+            .opt_optional("think-time", "closed-loop mean think time in seconds [default: 0.5]")
             .opt("seed", "42", "PRNG seed")
             .opt_optional("scenario", "paper | aws | stress:M:T | path/to/scenario.json")
+            .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
             .flag("json", "emit the result as JSON"),
         raw,
     )?;
     let sc = load_scenario(&args)?;
-    let params = WorkloadParams {
-        n_tasks: args.usize("tasks")?,
-        arrival_rate: args.f64("rate")?,
-        cv_exec: sc.cv_exec,
-        type_weights: Vec::new(),
-    };
+    let n_tasks = positive_count("tasks", &args.str("tasks"))?;
     let seed = args.u64("seed")?;
-    let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+    let pool = parse_client_pool(&args)?;
+    let trace_out = args.get("trace-out").map(String::from);
     let h = heuristic_by_name(&args.str("heuristic"), &sc)?;
-    let result = Simulation::new(&sc, h).run(&trace);
+    let mut sim = Simulation::new(&sc, h);
+    sim.set_record_traces(trace_out.is_some());
+    let result = match pool {
+        Some(pool) => sim.run_closed(pool, n_tasks, seed),
+        None => {
+            let params = WorkloadParams {
+                n_tasks,
+                arrival_rate: args.f64("rate")?,
+                cv_exec: sc.cv_exec,
+                type_weights: Vec::new(),
+            };
+            let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+            sim.run(&trace)
+        }
+    };
+    if let Some(path) = &trace_out {
+        write_jsonl(path, sim.trace_log())?;
+        eprintln!("wrote {} trace records to {path}", sim.trace_log().len());
+    }
     if args.is_set("json") {
         println!("{}", result.to_json().to_string_pretty());
     } else {
@@ -192,7 +232,7 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
     )?;
     let n_machines = args.usize("machines")?;
     let n_types = args.usize("types")?;
-    let n_tasks = args.usize("tasks")?;
+    let n_tasks = positive_count("tasks", &args.str("tasks"))?;
     let sc = Scenario::stress(n_machines, n_types);
     let capacity = sc.service_capacity();
     let rate = match args.get("rate") {
@@ -259,14 +299,17 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt_optional("scenario", "synthetic system: paper | aws | stress:M:T | path.json")
             .opt("heuristic", "felare", "mapping heuristic")
             .opt_optional("rate", "arrival rate (req/s); synthetic default: --load × capacity")
-            .opt("load", "0.8", "synthetic: offered load as a fraction of service capacity")
+            .opt_optional("load", "synthetic: offered load as a fraction of capacity [default: 0.8]")
             .opt_optional("phases", "time-varying rates 'rate:dur,rate:dur,…' (cycled)")
+            .opt_optional("clients", "closed-loop: N clients instead of open-loop Poisson")
+            .opt_optional("think-time", "closed-loop mean think time in seconds [default: 0.5]")
             .opt("requests", "200", "total requests")
             .opt_optional("queue-slots", "local queue slots (synthetic default: scenario's)")
             .opt("deadline-scale", "1.0", "scales Eq. 4 deadlines")
             .opt("speedup", "1.0", "fast-forward factor (modeled seconds per wall second)")
             .opt_optional("report-every", "modeled seconds between progress snapshots")
             .opt_optional("expect-completion", "fail unless completion rate ≥ this fraction")
+            .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
             .opt("seed", "42", "PRNG seed")
             .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
             .flag("json", "emit the report as JSON"),
@@ -302,44 +345,63 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                 .map_err(|_| fail!("--queue-slots expects an integer, got '{s}'"))
         })
         .transpose()?;
+    let explicit_load = args
+        .get("load")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| fail!("--load expects a number, got '{s}'"))
+        })
+        .transpose()?;
+    let pool = parse_client_pool(&args)?;
+    if pool.is_some()
+        && (explicit_rate.is_some() || rate_profile.is_some() || explicit_load.is_some())
+    {
+        return Err(fail!(
+            "--clients (closed loop) conflicts with --rate/--phases/--load (open loop); \
+             pick one model"
+        ));
+    }
+    if rate_profile.is_some() && explicit_rate.is_some() {
+        return Err(fail!("--rate conflicts with --phases; pass one or the other"));
+    }
+    let trace_out = args.get("trace-out").map(String::from);
 
     let common = ServeConfig {
         heuristic: args.str("heuristic"),
-        n_requests: args.usize("requests")?,
+        n_requests: positive_count("requests", &args.str("requests"))?,
         deadline_scale: args.f64("deadline-scale")?,
         seed: args.u64("seed")?,
         time_scale: 1.0 / speedup,
-        rate_profile,
         progress_every,
+        record_traces: trace_out.is_some(),
         ..Default::default()
     };
-    if common.rate_profile.is_some() && explicit_rate.is_some() {
-        return Err(fail!("--rate conflicts with --phases; pass one or the other"));
-    }
+    // the arrival process, minus the synthetic default rate (needs capacity)
+    let arrival_for = |default_rate: f64| match (&pool, &rate_profile, explicit_rate) {
+        (Some(p), _, _) => ArrivalProcess::ClosedLoop(*p),
+        (None, Some(profile), _) => ArrivalProcess::Profile(profile.clone()),
+        (None, None, Some(r)) => ArrivalProcess::Poisson { rate: r },
+        (None, None, None) => ArrivalProcess::Poisson { rate: default_rate },
+    };
     let config = if args.is_set("synthetic") {
         let mut sc = load_scenario(&args)?;
         // scenario's queue_slots is authoritative unless explicitly overridden
         if let Some(slots) = explicit_queue_slots {
             sc.queue_slots = slots;
         }
-        // effective mean λ: a rate profile drives the generator directly;
-        // otherwise --rate, otherwise --load × capacity
-        let rate = match (&common.rate_profile, explicit_rate) {
-            (Some(p), _) => p.mean_rate(),
-            (None, Some(r)) => r,
-            (None, None) => args.f64("load")? * sc.service_capacity(),
-        };
+        let arrival = arrival_for(explicit_load.unwrap_or(0.8) * sc.service_capacity());
         eprintln!(
-            "serve[synthetic]: {} ({} machines × {} types), capacity ≈ {:.1} req/s, mean λ = {rate:.1}",
+            "serve[synthetic]: {} ({} machines × {} types), capacity ≈ {:.1} req/s, workload {}",
             sc.name,
             sc.n_machines(),
             sc.n_types(),
-            sc.service_capacity()
+            sc.service_capacity(),
+            arrival.describe()
         );
         ServeConfig {
             backend: ServeBackend::Synthetic,
             scenario: Some(sc),
-            arrival_rate: rate,
+            arrival,
             ..common
         }
     } else {
@@ -352,12 +414,16 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             backend: ServeBackend::Pjrt,
             artifact_dir: args.str("artifacts").into(),
             machines: aws_machines(),
-            arrival_rate: explicit_rate.unwrap_or(20.0),
+            arrival: arrival_for(20.0),
             queue_slots: explicit_queue_slots.unwrap_or(2),
             ..common
         }
     };
     let report = serve(&config)?;
+    if let Some(path) = &trace_out {
+        write_jsonl(path, &report.traces)?;
+        eprintln!("wrote {} trace records to {path}", report.traces.len());
+    }
     if args.is_set("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
@@ -402,6 +468,10 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .flag("quick", "small traces/tasks for a fast smoke run")
             .opt_optional("traces", "traces per point (paper: 30)")
             .opt_optional("tasks", "tasks per trace (paper: 2000)")
+            .opt("engine", "sim", "sweep engine: sim | serve (headless live driver)")
+            .opt_optional("rates", "rate grid override for `exp sweep`, e.g. 2,4,8")
+            .opt_optional("scenario", "`exp sweep` system: paper | aws | stress:M:T | path.json")
+            .opt_optional("trace-out", "`exp sweep`: JSONL per-request trace export path")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -410,11 +480,51 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
+    // these knobs are consumed by `exp sweep` alone — passing them to a
+    // figure would silently run the default setup under a mislabeled flag
+    if name != "sweep" {
+        for flag in ["scenario", "rates", "trace-out"] {
+            if args.get(flag).is_some() {
+                return Err(fail!(
+                    "--{flag} applies to `felare exp sweep` only (got experiment '{name}')"
+                ));
+            }
+        }
+    }
+    // --traces 0 / --tasks 0 (and unparsable values) used to be silently
+    // dropped, producing empty sweeps; they are hard errors now
+    let traces = match args.get("traces") {
+        Some(s) => Some(positive_count("traces", s)?),
+        None => None,
+    };
+    let tasks = match args.get("tasks") {
+        Some(s) => Some(positive_count("tasks", s)?),
+        None => None,
+    };
+    let rates = match args.get("rates") {
+        Some(_) => {
+            let rs = args.f64_list("rates")?;
+            if rs.is_empty() {
+                return Err(fail!("--rates needs at least one rate"));
+            }
+            for &r in &rs {
+                if !(r > 0.0 && r.is_finite()) {
+                    return Err(fail!("--rates entries must be positive and finite (got {r})"));
+                }
+            }
+            Some(rs)
+        }
+        None => None,
+    };
     let opts = ExpOpts {
         quick: args.is_set("quick"),
-        traces: args.get("traces").and_then(|s| s.parse().ok()),
-        tasks: args.get("tasks").and_then(|s| s.parse().ok()),
+        traces,
+        tasks,
         seed: args.u64("seed")?,
+        engine: EngineKind::parse(&args.str("engine")).map_err(|e| fail!("--engine: {e}"))?,
+        rates,
+        scenario: args.get("scenario").map(String::from),
+        trace_out: args.get("trace-out").map(String::from),
     };
     run_by_name(&name, &opts)?;
     Ok(())
@@ -432,7 +542,7 @@ fn cmd_gen_trace(raw: &[String]) -> Result<()> {
     )?;
     let sc = load_scenario(&args)?;
     let params = WorkloadParams {
-        n_tasks: args.usize("tasks")?,
+        n_tasks: positive_count("tasks", &args.str("tasks"))?,
         arrival_rate: args.f64("rate")?,
         cv_exec: sc.cv_exec,
         type_weights: Vec::new(),

@@ -13,4 +13,4 @@ pub use eet::EetMatrix;
 pub use machine::{MachineId, MachineSpec};
 pub use scenario::Scenario;
 pub use task::{CancelReason, Outcome, Task, TaskTypeId, Time};
-pub use workload::{RateProfile, Trace, WorkloadParams};
+pub use workload::{ArrivalProcess, ClientPool, RateProfile, Trace, WorkloadParams};

@@ -118,6 +118,34 @@ impl Scenario {
         }
     }
 
+    /// Parse a CLI scenario spec: `paper` | `aws` | `stress:<machines>:<types>`
+    /// | a path to a scenario JSON file. This is the one place the spec
+    /// grammar lives — `felare simulate/serve/exp` and the experiment
+    /// harness all resolve scenarios through it.
+    pub fn from_spec(spec: &str) -> Result<Scenario, String> {
+        match spec {
+            "paper" => Ok(Scenario::paper_synthetic()),
+            "aws" => Ok(Scenario::aws_two_app()),
+            s if s.starts_with("stress:") => {
+                let dims: Vec<&str> = s["stress:".len()..].split(':').collect();
+                if dims.len() != 2 {
+                    return Err(format!("expected stress:<machines>:<types>, got '{s}'"));
+                }
+                let m: usize = dims[0]
+                    .parse()
+                    .map_err(|_| format!("bad machine count '{}' in '{s}'", dims[0]))?;
+                let t: usize = dims[1]
+                    .parse()
+                    .map_err(|_| format!("bad type count '{}' in '{s}'", dims[1]))?;
+                if m == 0 || t == 0 {
+                    return Err("stress scenario needs >=1 machine and >=1 type".into());
+                }
+                Ok(Scenario::stress(m, t))
+            }
+            path => Scenario::load(path),
+        }
+    }
+
     /// Aggregate service capacity in tasks/second (machines per mean EET)
     /// — the arrival rate at which offered load ≈ 1. The stress CLI sizes
     /// λ as `--load × service_capacity()`.
@@ -316,6 +344,19 @@ mod tests {
         // capacity tracks machine count at fixed mean-EET scale
         let big = Scenario::stress(64, 8);
         assert!(big.service_capacity() > a.service_capacity());
+    }
+
+    #[test]
+    fn from_spec_parses_presets_and_rejects_bad_dims() {
+        assert_eq!(Scenario::from_spec("paper").unwrap().name, "paper-synthetic");
+        assert_eq!(Scenario::from_spec("aws").unwrap().name, "aws-two-app");
+        let s = Scenario::from_spec("stress:6:3").unwrap();
+        assert_eq!(s.n_machines(), 6);
+        assert_eq!(s.n_types(), 3);
+        assert!(Scenario::from_spec("stress:0:3").is_err());
+        assert!(Scenario::from_spec("stress:4").is_err());
+        assert!(Scenario::from_spec("stress:a:b").is_err());
+        assert!(Scenario::from_spec("/no/such/file.json").is_err());
     }
 
     #[test]

@@ -113,6 +113,107 @@ impl RateProfile {
     }
 }
 
+/// A pool of closed-loop clients: each client keeps exactly one request
+/// outstanding, waits for its response (completion, miss or drop — any
+/// terminal outcome), thinks for an exponentially distributed time with
+/// mean `think_time`, then issues the next request. Unlike the open-loop
+/// Poisson model, the offered load self-regulates with system latency —
+/// the request-feedback loop HE2C-style evaluations use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientPool {
+    pub n_clients: usize,
+    /// Mean think time in modeled seconds (exponential; `0.0` = clients
+    /// re-issue immediately on response).
+    pub think_time: f64,
+}
+
+impl ClientPool {
+    pub fn new(n_clients: usize, think_time: f64) -> ClientPool {
+        let pool = ClientPool { n_clients, think_time };
+        pool.validate().expect("invalid client pool");
+        pool
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_clients == 0 {
+            return Err("client pool needs at least one client".into());
+        }
+        if !self.think_time.is_finite() || self.think_time < 0.0 {
+            return Err(format!(
+                "think time must be finite and >= 0, got {}",
+                self.think_time
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// How requests enter the system — the knob both engines (discrete-event
+/// sim and live serve) honor identically:
+///
+/// * [`ArrivalProcess::Poisson`] — the paper's open-loop model: a constant
+///   aggregate rate, arrivals independent of system state;
+/// * [`ArrivalProcess::Profile`] — open-loop with a piecewise-constant
+///   [`RateProfile`] (diurnal/bursty schedules);
+/// * [`ArrivalProcess::ClosedLoop`] — a [`ClientPool`] whose next arrival
+///   waits for the previous response (think-time feedback loop).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    Poisson { rate: f64 },
+    Profile(RateProfile),
+    ClosedLoop(ClientPool),
+}
+
+impl ArrivalProcess {
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                if !(*rate > 0.0 && rate.is_finite()) {
+                    return Err(format!("arrival rate must be positive and finite, got {rate}"));
+                }
+                Ok(())
+            }
+            ArrivalProcess::Profile(p) => {
+                if p.phases.is_empty() {
+                    return Err("rate profile has no phases".into());
+                }
+                for &(r, d) in &p.phases {
+                    if !(r > 0.0 && r.is_finite() && d > 0.0) {
+                        return Err(format!("bad rate profile phase ({r}, {d})"));
+                    }
+                }
+                Ok(())
+            }
+            ArrivalProcess::ClosedLoop(pool) => pool.validate(),
+        }
+    }
+
+    /// Mean offered rate for reporting: the Poisson rate, the profile's
+    /// duration-weighted mean, or NaN for closed loops (their rate is an
+    /// outcome of system latency, not an input).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Profile(p) => p.mean_rate(),
+            ArrivalProcess::ClosedLoop(_) => f64::NAN,
+        }
+    }
+
+    /// One-line human description for logs and reports.
+    pub fn describe(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { rate } => format!("poisson λ={rate}/s"),
+            ArrivalProcess::Profile(p) => {
+                format!("profile mean λ={:.2}/s ({} phases)", p.mean_rate(), p.phases.len())
+            }
+            ArrivalProcess::ClosedLoop(pool) => format!(
+                "closed-loop {} clients, think {:.3}s",
+                pool.n_clients, pool.think_time
+            ),
+        }
+    }
+}
+
 /// A fully materialised workload: tasks sorted by arrival, deadlines from
 /// Eq. 4, per-task size factors already drawn.
 #[derive(Clone, Debug)]
@@ -337,6 +438,34 @@ mod tests {
         assert!(RateProfile::parse("inf:10").is_err());
         assert!(RateProfile::parse("5:inf").is_err());
         assert!(RateProfile::parse("nan:10").is_err());
+    }
+
+    #[test]
+    fn client_pool_validation() {
+        assert!(ClientPool { n_clients: 4, think_time: 0.5 }.validate().is_ok());
+        assert!(ClientPool { n_clients: 1, think_time: 0.0 }.validate().is_ok());
+        assert!(ClientPool { n_clients: 0, think_time: 0.5 }.validate().is_err());
+        assert!(ClientPool { n_clients: 4, think_time: -1.0 }.validate().is_err());
+        assert!(ClientPool { n_clients: 4, think_time: f64::NAN }.validate().is_err());
+        assert!(ClientPool { n_clients: 4, think_time: f64::INFINITY }.validate().is_err());
+    }
+
+    #[test]
+    fn arrival_process_validation_and_rates() {
+        let p = ArrivalProcess::Poisson { rate: 5.0 };
+        assert!(p.validate().is_ok());
+        assert_eq!(p.mean_rate(), 5.0);
+        assert!(ArrivalProcess::Poisson { rate: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate: f64::INFINITY }.validate().is_err());
+
+        let prof = ArrivalProcess::Profile(RateProfile::parse("4:10,8:10").unwrap());
+        assert!(prof.validate().is_ok());
+        assert!((prof.mean_rate() - 6.0).abs() < 1e-12);
+
+        let closed = ArrivalProcess::ClosedLoop(ClientPool { n_clients: 8, think_time: 0.25 });
+        assert!(closed.validate().is_ok());
+        assert!(closed.mean_rate().is_nan(), "closed loops have no offered rate");
+        assert!(closed.describe().contains("8 clients"));
     }
 
     #[test]

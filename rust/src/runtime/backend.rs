@@ -71,6 +71,16 @@ impl SyntheticBackend {
         let size_gamma = (cv_exec > 0.0).then(|| Gamma::from_mean_cv(1.0, cv_exec));
         Self { eet, size_gamma, rng: Pcg64::seed_from(seed, 0x5E17) }
     }
+
+    /// Deterministic mode: `infer` returns the EET entry exactly, no
+    /// sampling. This is the substrate of the headless sweep engine
+    /// (`serve::HeadlessServe`), which replays traces whose per-task
+    /// Gamma draws are already materialised as `Task::size_factor` —
+    /// sampling again here would double-apply the execution-time
+    /// uncertainty and break bit-pairing with the simulator.
+    pub fn deterministic(eet: EetMatrix) -> Self {
+        Self::new(eet, 0.0, 0)
+    }
 }
 
 impl InferenceBackend for SyntheticBackend {
@@ -158,6 +168,16 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((mean / base - 1.0).abs() < 0.03, "mean factor {}", mean / base);
+    }
+
+    #[test]
+    fn deterministic_constructor_never_samples() {
+        let eet = paper_table1();
+        let mut b = SyntheticBackend::deterministic(eet.clone());
+        for _ in 0..3 {
+            let rec = b.infer(1, MachineId(2)).unwrap();
+            assert_eq!(rec.modeled, eet.get(TaskTypeId(1), MachineId(2)));
+        }
     }
 
     #[test]

@@ -21,10 +21,13 @@
 //! [`MappingState::mark_idle`] as execution proceeds, and
 //! [`MappingState::record_terminal`] for completion accounting. Tasks that
 //! leave through the mapper (arriving-queue expiry, proactive drops,
-//! victim drops) are reported through the `on_drop` sink as
-//! `(DropKind, TaskTypeId)` pairs — no `Task` clones, no temporary
-//! buffers — and the fairness tracker is updated internally so both
-//! engines count them identically.
+//! victim drops) are reported through the `on_drop` sink as [`Dropped`]
+//! values (`Task` is `Copy`: no clones, no temporary buffers) — and the
+//! fairness tracker is updated internally so both engines count them
+//! identically. The sink carries enough context (task, kind, victim
+//! mapping time) for engines to emit per-request
+//! [`TraceRecord`](crate::sched::trace::TraceRecord)s and release
+//! closed-loop clients without this layer knowing about either.
 //!
 //! The discrete-event simulator stays **bit-identical** to its
 //! pre-refactor behavior: every float is computed from the same operands
@@ -35,6 +38,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
 use crate::sched::fairness::{FairnessSnapshot, FairnessTracker};
@@ -42,11 +46,14 @@ use crate::sched::{Action, MachineSnapshot, MappingHeuristic, QueuedInfo, SchedV
 
 /// One entry of a machine's bounded FCFS local queue, engine-side: the
 /// task plus the EET entry frozen at assignment time (the same value the
-/// mapper planned with).
+/// mapper planned with) and the time of the mapping decision (for
+/// per-request tracing: queue wait = start − mapped).
 #[derive(Clone, Copy, Debug)]
 pub struct QueuedTask {
     pub task: Task,
     pub expected_exec: f64,
+    /// When the mapping event assigned it to this queue.
+    pub mapped: Time,
 }
 
 /// Why a task left through the mapping layer without ever completing.
@@ -58,6 +65,43 @@ pub enum DropKind {
     MapperDropped,
     /// Evicted from a local queue (`Action::VictimDrop`).
     VictimDropped,
+}
+
+impl DropKind {
+    /// The engine-side cancellation reason this drop records — one copy of
+    /// the mapping so the three engines cannot drift.
+    pub fn cancel_reason(&self) -> crate::model::task::CancelReason {
+        use crate::model::task::CancelReason;
+        match self {
+            DropKind::Expired => CancelReason::DeadlineExpired,
+            DropKind::MapperDropped => CancelReason::MapperDropped,
+            DropKind::VictimDropped => CancelReason::VictimDropped,
+        }
+    }
+
+    /// The per-request [`TraceOutcome`](crate::sched::trace::TraceOutcome)
+    /// this drop records.
+    pub fn trace_outcome(&self) -> crate::sched::trace::TraceOutcome {
+        use crate::sched::trace::TraceOutcome;
+        match self {
+            DropKind::Expired => TraceOutcome::Expired,
+            DropKind::MapperDropped => TraceOutcome::MapperDropped,
+            DropKind::VictimDropped => TraceOutcome::VictimDropped,
+        }
+    }
+}
+
+/// One mapper-side drop, reported through the [`MappingState::mapping_event`]
+/// sink. Carries the whole `Task` (it is `Copy`) so engines can release
+/// closed-loop clients and emit [`TraceRecord`](crate::sched::trace::TraceRecord)s
+/// without the dispatch layer knowing about either.
+#[derive(Clone, Copy, Debug)]
+pub struct Dropped {
+    pub kind: DropKind,
+    pub task: Task,
+    /// Machine + mapping time for tasks that had been assigned before
+    /// being evicted (victim drops); `None` for arriving-queue drops.
+    pub mapped: Option<(MachineId, Time)>,
 }
 
 /// Per-event diagnostics returned by [`MappingState::mapping_event`].
@@ -218,23 +262,25 @@ impl MappingState {
     }
 
     /// Drain tasks still waiting in the arriving queue at shutdown: each is
-    /// a failed terminal for fairness; the sink receives `(type, deadline)`
-    /// so engines can timestamp the cancellation.
-    pub fn drain_unmapped(&mut self, sink: &mut dyn FnMut(TaskTypeId, Time)) {
+    /// a failed terminal for fairness; the sink receives the task so
+    /// engines can timestamp the cancellation (its deadline) and emit
+    /// trace records.
+    pub fn drain_unmapped(&mut self, sink: &mut dyn FnMut(Task)) {
         for task in self.arriving.drain(..) {
             self.tracker.on_terminal(task.type_id, false);
-            sink(task.type_id, task.deadline);
+            sink(task);
         }
     }
 
     /// One mapping event (paper §III: fired on every task arrival and
     /// every task completion): expire the arriving queue, snapshot the
     /// machines, run the heuristic, apply its actions. Mapper-side drops
-    /// are reported through `on_drop` (fairness already accounted).
+    /// are reported through `on_drop` as [`Dropped`] values (fairness
+    /// already accounted internally).
     pub fn mapping_event(
         &mut self,
         now: Time,
-        on_drop: &mut dyn FnMut(DropKind, TaskTypeId),
+        on_drop: &mut dyn FnMut(Dropped),
     ) -> MappingStats {
         // split the borrow: every field independently mutable
         let MappingState {
@@ -258,7 +304,7 @@ impl MappingState {
         arriving.retain(|task| {
             if task.expired_at(now) {
                 tracker.on_terminal(task.type_id, false);
-                on_drop(DropKind::Expired, task.type_id);
+                on_drop(Dropped { kind: DropKind::Expired, task: *task, mapped: None });
                 false
             } else {
                 true
@@ -313,14 +359,14 @@ impl MappingState {
                     let e = eet.get(task.type_id, *machine);
                     let q = &mut queues[machine.0];
                     debug_assert!(q.len() < *queue_slots, "queue overflow");
-                    q.push_back(QueuedTask { task, expected_exec: e });
+                    q.push_back(QueuedTask { task, expected_exec: e, mapped: now });
                 }
                 Action::Drop { task_idx } => {
                     debug_assert!(!consumed[*task_idx], "task consumed twice");
                     consumed[*task_idx] = true;
-                    let ty = arriving[*task_idx].type_id;
-                    tracker.on_terminal(ty, false);
-                    on_drop(DropKind::MapperDropped, ty);
+                    let task = arriving[*task_idx];
+                    tracker.on_terminal(task.type_id, false);
+                    on_drop(Dropped { kind: DropKind::MapperDropped, task, mapped: None });
                 }
                 Action::VictimDrop { machine, task_id } => {
                     let q = &mut queues[machine.0];
@@ -330,7 +376,11 @@ impl MappingState {
                         .expect("victim not in queue");
                     let victim = q.remove(pos).unwrap();
                     tracker.on_terminal(victim.task.type_id, false);
-                    on_drop(DropKind::VictimDropped, victim.task.type_id);
+                    on_drop(Dropped {
+                        kind: DropKind::VictimDropped,
+                        task: victim.task,
+                        mapped: Some((*machine, victim.mapped)),
+                    });
                 }
             }
         }
@@ -384,7 +434,7 @@ mod tests {
         st.push_arrival(task(0, 0, 0.0, 100.0));
         assert_eq!(st.arriving_len(), 1);
         let mut drops = 0;
-        st.mapping_event(0.0, &mut |_, _| drops += 1);
+        st.mapping_event(0.5, &mut |_| drops += 1);
         assert_eq!(drops, 0);
         assert_eq!(st.arriving_len(), 0);
         assert_eq!(st.queued_total(), 1);
@@ -392,6 +442,7 @@ mod tests {
         let popped = st.pop_queued(q).unwrap();
         assert_eq!(popped.task.id, 0);
         assert_eq!(popped.expected_exec, sc.eet.get(TaskTypeId(0), MachineId(q)));
+        assert_eq!(popped.mapped, 0.5, "mapping time frozen on the queue entry");
         assert_eq!(st.queued_total(), 0);
     }
 
@@ -401,8 +452,8 @@ mod tests {
         let mut st = state_for(&sc, "mm");
         st.push_arrival(task(0, 1, 0.0, 0.5));
         let mut seen = Vec::new();
-        st.mapping_event(1.0, &mut |kind, ty| seen.push((kind, ty)));
-        assert_eq!(seen, vec![(DropKind::Expired, TaskTypeId(1))]);
+        st.mapping_event(1.0, &mut |d: Dropped| seen.push((d.kind, d.task.type_id, d.mapped)));
+        assert_eq!(seen, vec![(DropKind::Expired, TaskTypeId(1), None)]);
         assert_eq!(st.arriving_len(), 0);
         assert_eq!(st.queued_total(), 0);
     }
@@ -426,7 +477,7 @@ mod tests {
         st.record_actions = true;
         for i in 0..20 {
             st.push_arrival(task(i, (i % 4) as usize, 0.0, 0.1));
-            st.mapping_event(0.0, &mut |_, _| {});
+            st.mapping_event(0.0, &mut |_| {});
         }
         st.mark_running(0, 5.0);
         st.reset();
@@ -436,7 +487,7 @@ mod tests {
         assert_eq!(st.earliest_arriving_deadline(), None);
         // a fresh arrival behaves like the first ever
         st.push_arrival(task(0, 0, 10.0, 100.0));
-        st.mapping_event(10.0, &mut |_, _| {});
+        st.mapping_event(10.0, &mut |_| {});
         assert_eq!(st.queued_total(), 1);
     }
 
@@ -446,7 +497,7 @@ mod tests {
         let mut st = state_for(&sc, "mm");
         st.record_actions = true;
         st.push_arrival(task(0, 0, 0.0, 100.0));
-        st.mapping_event(0.0, &mut |_, _| {});
+        st.mapping_event(0.0, &mut |_| {});
         assert_eq!(st.action_log.len(), 1);
         assert!(matches!(st.action_log[0], Action::Assign { task_idx: 0, .. }));
     }
@@ -462,7 +513,7 @@ mod tests {
         let mut st = state_for(&sc, "mm");
         st.mark_running(0, 9.0);
         st.push_arrival(task(0, 0, 0.0, 100.0));
-        st.mapping_event(0.0, &mut |_, _| {});
+        st.mapping_event(0.0, &mut |_| {});
         assert_eq!(st.queue_len(0), 1, "queued behind the running task");
         st.mark_idle(0);
         let q = st.pop_queued(0).unwrap();

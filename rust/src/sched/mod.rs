@@ -27,14 +27,16 @@ pub mod mm;
 pub mod mmu;
 pub mod msd;
 pub mod registry;
+pub mod trace;
 
 use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
 use fairness::FairnessSnapshot;
 
-pub use dispatch::{DropKind, MappingState, MappingStats, QueuedTask};
+pub use dispatch::{DropKind, Dropped, MappingState, MappingStats, QueuedTask};
 pub use feasibility::FeasibilityCache;
+pub use trace::{LatencyBreakdown, TraceLog, TraceOutcome, TraceRecord};
 
 /// One entry of a machine's bounded FCFS local queue, as the mapper sees it.
 #[derive(Clone, Debug)]

@@ -1,0 +1,383 @@
+//! Per-request tracing: one compact [`TraceRecord`] per task, emitted at
+//! the task's terminal event by *both* engines (the discrete-event
+//! simulator and the live serving coordinator) through the shared dispatch
+//! layer's drop sink plus the engines' own start/finish paths.
+//!
+//! A record captures the full life of a request in modeled seconds —
+//! arrival, mapping decision, execution start, terminal time — so latency
+//! can be decomposed into its three waits:
+//!
+//! ```text
+//! arrival ──(map wait)──▶ mapped ──(queue wait)──▶ started ──(execution)──▶ end
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/property_suite.rs`):
+//! `arrival ≤ mapped ≤ started ≤ end` over every phase the task reached,
+//! and `queue_wait + execution == end − mapped` (up to one float rounding)
+//! for tasks that executed.
+//!
+//! Collection is opt-in via [`TraceLog`] (a recycled buffer gated by a
+//! flag, so the disabled hot path pays one branch per terminal). Export is
+//! JSON Lines ([`write_jsonl`]), and [`LatencyBreakdown`] renders the
+//! serve report's latency-decomposition table.
+
+use std::io::Write as _;
+
+use crate::model::machine::MachineId;
+use crate::model::task::{Task, TaskTypeId, Time};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// How a request's life ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Finished before its deadline.
+    Completed,
+    /// Ran but was aborted at the deadline (Eq. 1 middle case).
+    Missed,
+    /// Popped from a local queue already past its deadline — counted
+    /// missed, never executed, zero dynamic energy (Eq. 1 last case).
+    DroppedAtStart,
+    /// Died waiting in the arriving queue (deadline expiry).
+    Expired,
+    /// Proactively dropped by the heuristic (`Action::Drop`).
+    MapperDropped,
+    /// Evicted from a local queue (`Action::VictimDrop`).
+    VictimDropped,
+    /// Still in the arriving queue at shutdown.
+    Unmapped,
+}
+
+impl TraceOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceOutcome::Completed => "completed",
+            TraceOutcome::Missed => "missed",
+            TraceOutcome::DroppedAtStart => "dropped_at_start",
+            TraceOutcome::Expired => "expired",
+            TraceOutcome::MapperDropped => "mapper_dropped",
+            TraceOutcome::VictimDropped => "victim_dropped",
+            TraceOutcome::Unmapped => "unmapped",
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, TraceOutcome::Completed)
+    }
+}
+
+/// One request's life, compact (`Copy`, no heap): timestamps in modeled
+/// seconds, phases the task never reached are `None`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub task_id: u64,
+    pub type_id: TaskTypeId,
+    pub outcome: TraceOutcome,
+    /// Machine it was mapped to (`None` for arriving-queue drops).
+    pub machine: Option<MachineId>,
+    pub arrival: Time,
+    pub deadline: Time,
+    /// When the mapper assigned it to a local queue.
+    pub mapped: Option<Time>,
+    /// When execution began.
+    pub started: Option<Time>,
+    /// Terminal time: completion, deadline abort, or drop.
+    pub end: Time,
+}
+
+impl TraceRecord {
+    /// Arrival → mapping decision (None if never mapped).
+    pub fn map_wait(&self) -> Option<f64> {
+        self.mapped.map(|m| m - self.arrival)
+    }
+
+    /// Mapping decision → execution start (None unless it started).
+    pub fn queue_wait(&self) -> Option<f64> {
+        match (self.mapped, self.started) {
+            (Some(m), Some(s)) => Some(s - m),
+            _ => None,
+        }
+    }
+
+    /// Execution start → terminal (None unless it started).
+    pub fn execution(&self) -> Option<f64> {
+        self.started.map(|s| self.end - s)
+    }
+
+    /// Arrival → terminal, whatever the outcome.
+    pub fn sojourn(&self) -> f64 {
+        self.end - self.arrival
+    }
+
+    /// Deadline slack at the terminal instant (negative = late).
+    pub fn slack(&self) -> f64 {
+        self.deadline - self.end
+    }
+
+    /// Check the per-record invariants (see module docs). Engines are
+    /// trusted on the hot path; tests call this over whole runs.
+    pub fn validate(&self) -> Result<(), String> {
+        let fail = |msg: String| Err(format!("task {}: {msg}", self.task_id));
+        let mut prev = self.arrival;
+        for (name, t) in [("mapped", self.mapped), ("started", self.started)] {
+            if let Some(t) = t {
+                if t < prev {
+                    return fail(format!("{name} {t} precedes previous phase {prev}"));
+                }
+                prev = t;
+            }
+        }
+        if self.end < prev {
+            return fail(format!("end {} precedes previous phase {prev}", self.end));
+        }
+        if self.started.is_some() && self.mapped.is_none() {
+            return fail("started without ever being mapped".into());
+        }
+        if self.mapped.is_some() && self.machine.is_none() {
+            return fail("mapped but no machine recorded".into());
+        }
+        if let (Some(q), Some(e), Some(m)) = (self.queue_wait(), self.execution(), self.mapped) {
+            let total = self.end - m;
+            if (q + e - total).abs() > 1e-9 * total.abs().max(1.0) {
+                return fail(format!("queue_wait {q} + execution {e} != end - mapped {total}"));
+            }
+        }
+        let phases_ok = match self.outcome {
+            TraceOutcome::Completed | TraceOutcome::Missed => self.started.is_some(),
+            TraceOutcome::DroppedAtStart | TraceOutcome::VictimDropped => {
+                self.mapped.is_some() && self.started.is_none()
+            }
+            TraceOutcome::Expired | TraceOutcome::MapperDropped | TraceOutcome::Unmapped => {
+                self.mapped.is_none() && self.started.is_none()
+            }
+        };
+        if !phases_ok {
+            return fail(format!("phases inconsistent with outcome {:?}", self.outcome));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::object()
+            .set("id", self.task_id)
+            .set("type", self.type_id.0)
+            .set("outcome", self.outcome.as_str())
+            .set("machine", self.machine.map(|m| Json::Num(m.0 as f64)).unwrap_or(Json::Null))
+            .set("arrival", self.arrival)
+            .set("deadline", self.deadline)
+            .set("mapped", opt(self.mapped))
+            .set("started", opt(self.started))
+            .set("end", self.end)
+            .set("map_wait", opt(self.map_wait()))
+            .set("queue_wait", opt(self.queue_wait()))
+            .set("execution", opt(self.execution()))
+            .set("sojourn", self.sojourn())
+            .set("slack", self.slack())
+    }
+}
+
+/// Opt-in trace collection: a recycled buffer behind a flag, shared by the
+/// simulator, the headless sweep driver and the live coordinator. When
+/// `on` is false, [`TraceLog::push`] is one predictable branch.
+#[derive(Debug, Default)]
+pub struct TraceLog {
+    pub on: bool,
+    pub records: Vec<TraceRecord>,
+}
+
+impl TraceLog {
+    pub fn new() -> TraceLog {
+        TraceLog::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.on {
+            self.records.push(rec);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+    }
+}
+
+/// Write records as JSON Lines (one compact object per line).
+pub fn write_jsonl(path: &str, records: &[TraceRecord]) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    for r in records {
+        writeln!(w, "{}", r.to_json().to_string_compact())?;
+    }
+    w.flush()
+}
+
+/// Latency decomposition over completed requests: each phase summarised
+/// independently (mean/median/p99 via [`Summary`]).
+#[derive(Clone, Debug)]
+pub struct LatencyBreakdown {
+    pub n_completed: usize,
+    pub map_wait: Summary,
+    pub queue_wait: Summary,
+    pub execution: Summary,
+    pub sojourn: Summary,
+}
+
+impl LatencyBreakdown {
+    pub fn of(records: &[TraceRecord]) -> LatencyBreakdown {
+        let completed: Vec<&TraceRecord> =
+            records.iter().filter(|r| r.outcome.is_completed()).collect();
+        let collect = |f: &dyn Fn(&TraceRecord) -> Option<f64>| {
+            Summary::of(&completed.iter().filter_map(|r| f(r)).collect::<Vec<_>>())
+        };
+        LatencyBreakdown {
+            n_completed: completed.len(),
+            map_wait: collect(&|r| r.map_wait()),
+            queue_wait: collect(&|r| r.queue_wait()),
+            execution: collect(&|r| r.execution()),
+            sojourn: collect(&|r| Some(r.sojourn())),
+        }
+    }
+
+    /// Aligned console table (milliseconds), one row per latency phase.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "  latency breakdown over {} completed requests (ms):\n", self.n_completed
+        ));
+        s.push_str("    phase        mean      p50      p99\n");
+        for (name, sum) in [
+            ("map-wait", &self.map_wait),
+            ("queue-wait", &self.queue_wait),
+            ("execution", &self.execution),
+            ("sojourn", &self.sojourn),
+        ] {
+            s.push_str(&format!(
+                "    {name:<10} {:>8.2} {:>8.2} {:>8.2}\n",
+                sum.mean * 1e3,
+                sum.median() * 1e3,
+                sum.percentile(99.0) * 1e3
+            ));
+        }
+        s
+    }
+}
+
+/// Build the terminal record for a task that went through the mapper —
+/// engines call this from their finish/drop paths so field wiring lives in
+/// one place.
+#[allow(clippy::too_many_arguments)]
+pub fn record_of(
+    task: &Task,
+    outcome: TraceOutcome,
+    machine: Option<MachineId>,
+    mapped: Option<Time>,
+    started: Option<Time>,
+    end: Time,
+) -> TraceRecord {
+    TraceRecord {
+        task_id: task.id,
+        type_id: task.type_id,
+        outcome,
+        machine,
+        arrival: task.arrival,
+        deadline: task.deadline,
+        mapped,
+        started,
+        end,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> Task {
+        Task { id, type_id: TaskTypeId(1), arrival: 1.0, deadline: 9.0, size_factor: 1.0 }
+    }
+
+    fn completed() -> TraceRecord {
+        record_of(&task(3), TraceOutcome::Completed, Some(MachineId(2)), Some(1.5), Some(2.0), 4.0)
+    }
+
+    #[test]
+    fn derived_waits() {
+        let r = completed();
+        assert_eq!(r.map_wait(), Some(0.5));
+        assert_eq!(r.queue_wait(), Some(0.5));
+        assert_eq!(r.execution(), Some(2.0));
+        assert_eq!(r.sojourn(), 3.0);
+        assert_eq!(r.slack(), 5.0);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn drop_records_have_no_phases() {
+        let r = record_of(&task(1), TraceOutcome::Expired, None, None, None, 9.0);
+        assert_eq!(r.queue_wait(), None);
+        assert_eq!(r.execution(), None);
+        r.validate().unwrap();
+        let v =
+            record_of(&task(2), TraceOutcome::VictimDropped, Some(MachineId(0)), Some(1.2), None, 2.0);
+        assert!((v.map_wait().unwrap() - 0.2).abs() < 1e-12);
+        assert_eq!(v.queue_wait(), None, "victims never started");
+        v.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_time_travel() {
+        let mut r = completed();
+        r.started = Some(0.5); // before mapped
+        assert!(r.validate().is_err());
+        let mut r = completed();
+        r.end = 1.2; // before started
+        assert!(r.validate().is_err());
+        let mut r = completed();
+        r.mapped = None; // started without mapping
+        assert!(r.validate().is_err());
+        let mut r = completed();
+        r.outcome = TraceOutcome::Expired; // expired records must have no phases
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn log_gating_and_recycling() {
+        let mut log = TraceLog::new();
+        log.push(completed());
+        assert!(log.records.is_empty(), "off by default");
+        log.on = true;
+        log.push(completed());
+        assert_eq!(log.records.len(), 1);
+        log.clear();
+        assert!(log.records.is_empty());
+        assert!(log.on, "clear keeps the flag");
+    }
+
+    #[test]
+    fn json_has_nulls_for_missing_phases() {
+        let r = record_of(&task(1), TraceOutcome::MapperDropped, None, None, None, 3.0);
+        let j = r.to_json();
+        assert_eq!(j.get("mapped"), Some(&Json::Null));
+        assert_eq!(j.get("machine"), Some(&Json::Null));
+        assert_eq!(j.req_str("outcome").unwrap(), "mapper_dropped");
+        let line = j.to_string_compact();
+        assert!(line.contains("\"sojourn\""));
+    }
+
+    #[test]
+    fn breakdown_over_mixed_outcomes() {
+        let records = vec![
+            completed(),
+            record_of(&task(4), TraceOutcome::Completed, Some(MachineId(0)), Some(1.0), Some(3.0), 5.0),
+            record_of(&task(5), TraceOutcome::Expired, None, None, None, 9.0),
+        ];
+        let b = LatencyBreakdown::of(&records);
+        assert_eq!(b.n_completed, 2);
+        assert!((b.execution.mean - 2.0).abs() < 1e-12);
+        assert!((b.sojourn.mean - 3.5).abs() < 1e-12);
+        let text = b.render();
+        assert!(text.contains("queue-wait"));
+        assert!(text.contains("2 completed requests"));
+    }
+}

@@ -5,9 +5,13 @@
 //! [`MappingState`] (`sched::dispatch`): arriving-queue expiry, machine
 //! snapshots, heuristic invocation and action application are one copy of
 //! code, not two. What this module adds is the live substrate: wall-clock
-//! time, an open-loop Poisson request generator (optionally with a
-//! time-varying [`RateProfile`]), per-machine worker threads, and a
-//! pluggable [`InferenceBackend`] on the request path:
+//! time, a request generator driven by any [`ArrivalProcess`] — open-loop
+//! Poisson (constant or time-varying [`RateProfile`]) or a closed-loop
+//! client pool whose next request waits for the previous response plus a
+//! think time — per-machine worker threads, a pluggable
+//! [`InferenceBackend`] on the request path, and opt-in per-request
+//! tracing (`ServeConfig::record_traces` → `ServeReport::traces` with a
+//! latency-breakdown table):
 //!
 //! * [`ServeBackend::Pjrt`] — real ML inference per request (each
 //!   execution runs the task type's AOT-compiled PJRT executable; python
@@ -50,13 +54,14 @@ use crate::error::{Error, Result};
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::scenario::RateWindow;
 use crate::model::task::{Task, TaskTypeId, Time};
-use crate::model::{EetMatrix, RateProfile, Scenario};
+use crate::model::{ArrivalProcess, EetMatrix, RateProfile, Scenario};
 use crate::runtime::{
     profile_eet, Executor, InferenceBackend, PjrtBackend, Runtime, SyntheticBackend,
 };
-use crate::sched::dispatch::MappingState;
+use crate::sched::dispatch::{Dropped, MappingState, QueuedTask};
 use crate::sched::fairness::FairnessTracker;
 use crate::sched::registry::heuristic_by_name;
+use crate::sched::trace::{record_of, TraceLog, TraceOutcome};
 use crate::serve::report::{ServeReport, ServeSnapshot};
 use crate::util::rng::{Exponential, Pcg64};
 
@@ -84,10 +89,11 @@ pub struct ServeConfig {
     /// PJRT backend machines (speeds are normalised internally so min
     /// speed = 1.0). The synthetic backend takes machines from `scenario`.
     pub machines: Vec<MachineSpec>,
-    /// Constant arrival rate (req/s); superseded by `rate_profile`.
-    pub arrival_rate: f64,
-    /// Time-varying arrival schedule, cycled for the whole session.
-    pub rate_profile: Option<RateProfile>,
+    /// How requests enter the system: open-loop Poisson (constant rate or
+    /// a cycled [`RateProfile`]), or a closed-loop
+    /// [`ClientPool`](crate::model::ClientPool) whose next request waits
+    /// for the previous response plus an exponential think time.
+    pub arrival: ArrivalProcess,
     pub n_requests: usize,
     /// PJRT backend local-queue slots (synthetic: `scenario.queue_slots`).
     pub queue_slots: usize,
@@ -105,6 +111,10 @@ pub struct ServeConfig {
     pub time_scale: f64,
     /// Record a [`ServeSnapshot`] every this many modeled seconds.
     pub progress_every: Option<f64>,
+    /// Collect one [`TraceRecord`](crate::sched::trace::TraceRecord) per
+    /// request (exposed as `ServeReport::traces`; `--trace-out` exports
+    /// them as JSONL and the report renders a latency breakdown).
+    pub record_traces: bool,
 }
 
 impl Default for ServeConfig {
@@ -115,8 +125,7 @@ impl Default for ServeConfig {
             artifact_dir: crate::runtime::default_artifact_dir(),
             heuristic: "felare".into(),
             machines: crate::model::machine::aws_machines(),
-            arrival_rate: 20.0,
-            rate_profile: None,
+            arrival: ArrivalProcess::Poisson { rate: 20.0 },
             n_requests: 200,
             queue_slots: 2,
             fairness_factor: 1.0,
@@ -126,6 +135,7 @@ impl Default for ServeConfig {
             profile_reps: 7,
             time_scale: 1.0,
             progress_every: None,
+            record_traces: false,
         }
     }
 }
@@ -174,11 +184,14 @@ struct SharedState {
     /// arrival generator gates on this so startup compilation doesn't eat
     /// the first requests' deadlines.
     workers_ready: usize,
-}
-
-enum Terminal {
-    Completed,
-    Missed,
+    /// Per-request trace records (gated by `ServeConfig::record_traces`).
+    traces: TraceLog,
+    /// Closed-loop only: request id → issuing client (ids are issued in
+    /// order, so a `Vec` indexed by id suffices). Empty on open loop.
+    client_of: Vec<u32>,
+    /// Closed-loop only: clients whose request reached a terminal state
+    /// since the generator last looked, with the release time.
+    released: Vec<(u32, f64)>,
 }
 
 impl SharedState {
@@ -186,27 +199,43 @@ impl SharedState {
         self.done_generating && self.terminal == self.total_expected
     }
 
-    /// Worker-side terminal outcome (completion or deadline miss).
-    fn record_exec_terminal(&mut self, ty: TaskTypeId, kind: Terminal, latency: Option<f64>) {
-        match kind {
-            Terminal::Completed => {
-                self.completed[ty.0] += 1;
-                self.map.record_terminal(ty, true);
-                if let Some(l) = latency {
-                    self.latencies.push(l);
-                }
-            }
-            Terminal::Missed => {
-                self.missed[ty.0] += 1;
-                self.map.record_terminal(ty, false);
-            }
+    /// Worker-side terminal outcome: completion, deadline miss, or
+    /// dropped-at-start (queued past its deadline — counted missed).
+    fn record_worker_terminal(
+        &mut self,
+        q: &QueuedTask,
+        machine: usize,
+        outcome: TraceOutcome,
+        started: Option<f64>,
+        end: f64,
+    ) {
+        let ty = q.task.type_id;
+        if outcome == TraceOutcome::Completed {
+            self.completed[ty.0] += 1;
+            self.map.record_terminal(ty, true);
+            self.latencies.push(end - q.task.arrival);
+        } else {
+            self.missed[ty.0] += 1;
+            self.map.record_terminal(ty, false);
         }
         self.terminal += 1;
+        self.traces.push(record_of(
+            &q.task,
+            outcome,
+            Some(MachineId(machine)),
+            Some(q.mapped),
+            started,
+            end,
+        ));
+        if !self.client_of.is_empty() {
+            self.released.push((self.client_of[q.task.id as usize], end));
+        }
     }
 
     /// One mapping event through the shared dispatch layer. Every drop the
     /// mapper makes (expiry, proactive, victim) lands in `cancelled` —
-    /// fairness is already accounted inside [`MappingState`].
+    /// fairness is already accounted inside [`MappingState`] — and, on
+    /// closed loops, releases the issuing client.
     fn coordinate(&mut self, now: Time) {
         let SharedState {
             map,
@@ -215,11 +244,20 @@ impl SharedState {
             mapper_events,
             mapper_time_total,
             deferrals,
+            traces,
+            client_of,
+            released,
             ..
         } = self;
-        let stats = map.mapping_event(now, &mut |_kind, ty| {
-            cancelled[ty.0] += 1;
+        let stats = map.mapping_event(now, &mut |d: Dropped| {
+            cancelled[d.task.type_id.0] += 1;
             *terminal += 1;
+            let (machine, mapped) = d.mapped.unzip();
+            let outcome = d.kind.trace_outcome();
+            traces.push(record_of(&d.task, outcome, machine, mapped, None, now));
+            if !client_of.is_empty() {
+                released.push((client_of[d.task.id as usize], now));
+            }
         });
         *mapper_events += 1;
         *mapper_time_total += stats.mapper_dt;
@@ -344,7 +382,7 @@ fn run_worker(
             loop {
                 if let Some(q) = st.map.pop_queued(m) {
                     st.map.mark_running(m, now() + q.expected_exec);
-                    break Some(q.task);
+                    break Some(q);
                 }
                 if st.all_done() {
                     break None;
@@ -354,13 +392,14 @@ fn run_worker(
                 st = guard;
             }
         };
-        let Some(task) = next else { return Ok(energy) };
+        let Some(q) = next else { return Ok(energy) };
+        let task = q.task;
 
         let start = now();
-        // (terminal kind, completion latency, modeled busy time, ran inference)
-        let outcome = if start >= task.deadline {
+        // (trace outcome, execution start, modeled busy time, ran inference)
+        let (outcome, started, busy, ran) = if start >= task.deadline {
             // queued past its deadline: dropped at start, no energy
-            (Terminal::Missed, None, 0.0, false)
+            (TraceOutcome::DroppedAtStart, None, 0.0, false)
         } else {
             let rec = backend.infer(task.type_id.0, MachineId(m))?;
             let budget = task.deadline - start;
@@ -370,9 +409,7 @@ fn run_worker(
                 if pad > 0.0 {
                     std::thread::sleep(Duration::from_secs_f64(pad * time_scale));
                 }
-                let fin = now();
-                energy.busy += rec.modeled;
-                (Terminal::Completed, Some(fin - task.arrival), rec.modeled, true)
+                (TraceOutcome::Completed, Some(start), rec.modeled, true)
             } else {
                 // deadline interrupts the (modeled) execution — abort at
                 // the deadline, energy wasted (Eq. 1/2)
@@ -380,18 +417,21 @@ fn run_worker(
                 if pad > 0.0 {
                     std::thread::sleep(Duration::from_secs_f64(pad * time_scale));
                 }
-                energy.busy += budget;
-                energy.wasted_busy += budget;
-                (Terminal::Missed, None, budget, true)
+                (TraceOutcome::Missed, Some(start), budget, true)
             }
         };
+        energy.busy += busy;
+        if outcome == TraceOutcome::Missed {
+            energy.wasted_busy += busy;
+        }
+        let end = now();
 
         let mut st = lock.lock().unwrap();
-        if outcome.3 {
+        if ran {
             st.inferences += 1;
         }
         st.map.mark_idle(m);
-        st.record_exec_terminal(task.type_id, outcome.0, outcome.1);
+        st.record_worker_terminal(&q, m, outcome, started, end);
         let t = now();
         st.coordinate(t); // completion-triggered mapping event
         cv.notify_all();
@@ -415,14 +455,13 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 .into(),
         ));
     }
-    let rate_profile = match &config.rate_profile {
-        Some(p) => p.clone(),
-        None => {
-            if config.arrival_rate <= 0.0 {
-                return Err(Error::Config("arrival_rate must be positive".into()));
-            }
-            RateProfile::constant(config.arrival_rate)
-        }
+    config.arrival.validate().map_err(Error::Config)?;
+    // open-loop generators run off a rate profile; closed loops generate
+    // from client releases instead
+    let rate_profile = match &config.arrival {
+        ArrivalProcess::Poisson { rate } => Some(RateProfile::constant(*rate)),
+        ArrivalProcess::Profile(p) => Some(p.clone()),
+        ArrivalProcess::ClosedLoop(_) => None,
     };
     let plan = plan(config)?;
     let time_scale = config.time_scale;
@@ -461,6 +500,9 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
             inferences: 0,
             snapshots: Vec::new(),
             workers_ready: 0,
+            traces: TraceLog { on: config.record_traces, records: Vec::new() },
+            client_of: Vec::new(),
+            released: Vec::new(),
         }),
         Condvar::new(),
     ));
@@ -492,7 +534,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         handles.push(handle);
     }
 
-    // ---- open-loop Poisson arrival generator ------------------------------
+    // ---- arrival generator (open-loop Poisson or closed-loop clients) -----
     let mut rng = Pcg64::seed_from(config.seed, 0xA881);
     let mut next_snap = config.progress_every;
     {
@@ -505,32 +547,99 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 st = guard;
             }
         }
-        for i in 0..config.n_requests {
-            let rate = rate_profile.rate_at(now());
-            let inter = Exponential::new(rate).sample(&mut rng);
-            std::thread::sleep(Duration::from_secs_f64(inter * time_scale));
+        // inject one request at `t_arr`: type draw, Eq. 4 deadline, the
+        // arrival-triggered mapping event, and a due progress snapshot —
+        // one copy for both arrival models
+        let mut issue = |st: &mut SharedState, rng: &mut Pcg64, id: u64, t_arr: f64| {
             let ty = TaskTypeId(rng.index(n_types));
-            let t_arr = now();
-            let deadline =
-                t_arr + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
+            let deadline = t_arr + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
             let task = Task {
-                id: i as u64,
+                id,
                 type_id: ty,
                 arrival: t_arr,
                 deadline,
                 size_factor: 1.0, // service time comes from the backend
             };
-            let mut st = lock.lock().unwrap();
             st.arrived[ty.0] += 1;
             st.map.push_arrival(task);
-            st.coordinate(t_arr); // arrival-triggered mapping event
+            st.coordinate(t_arr);
             if let (Some(every), Some(due)) = (config.progress_every, next_snap) {
                 if t_arr >= due {
                     st.take_snapshot(t_arr);
                     next_snap = Some(t_arr + every);
                 }
             }
-            cv.notify_all();
+        };
+        match (&config.arrival, &rate_profile) {
+            (ArrivalProcess::ClosedLoop(pool), _) => {
+                // ---- closed loop: arrivals follow responses -------------
+                let think_dist =
+                    (pool.think_time > 0.0).then(|| Exponential::new(1.0 / pool.think_time));
+                let think =
+                    |rng: &mut Pcg64| think_dist.as_ref().map_or(0.0, |e| e.sample(rng));
+                // (next-arrival time, client) for clients not waiting on a
+                // response; the first request follows one think from t=0
+                let mut pending: Vec<(f64, u32)> = (0..pool.n_clients as u32)
+                    .map(|c| (think(&mut rng), c))
+                    .collect();
+                let mut issued = 0usize;
+                let mut st = lock.lock().unwrap();
+                st.client_of.reserve(config.n_requests);
+                while issued < config.n_requests {
+                    // responses since the last look: think, then re-issue
+                    let released = std::mem::take(&mut st.released);
+                    for (c, t) in released {
+                        pending.push((t + think(&mut rng), c));
+                    }
+                    // earliest ready client
+                    let mut best: Option<(f64, usize)> = None;
+                    for (i, &(t, _)) in pending.iter().enumerate() {
+                        match best {
+                            Some((bt, _)) if bt <= t => {}
+                            _ => best = Some((t, i)),
+                        }
+                    }
+                    let Some((t_due, bi)) = best else {
+                        // every client is waiting on a response
+                        let (guard, _) =
+                            cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+                        st = guard;
+                        continue;
+                    };
+                    let client = pending[bi].1;
+                    let t_now = now();
+                    if t_now < t_due {
+                        // sleep toward the think deadline, but wake on
+                        // worker notifies: a fresh release may think less
+                        let wait = ((t_due - t_now) * time_scale).clamp(0.0005, 0.05);
+                        let (guard, _) =
+                            cv.wait_timeout(st, Duration::from_secs_f64(wait)).unwrap();
+                        st = guard;
+                        continue;
+                    }
+                    pending.swap_remove(bi);
+                    // the client map must be in place before the mapping
+                    // event: a same-instant drop already releases it
+                    st.client_of.push(client);
+                    issue(&mut st, &mut rng, issued as u64, t_now);
+                    cv.notify_all();
+                    issued += 1;
+                }
+            }
+            (_, Some(rate_profile)) => {
+                // ---- open loop: Poisson at the (possibly time-varying)
+                // offered rate, independent of system state -------------
+                for i in 0..config.n_requests {
+                    let rate = rate_profile.rate_at(now());
+                    let inter = Exponential::new(rate).sample(&mut rng);
+                    std::thread::sleep(Duration::from_secs_f64(inter * time_scale));
+                    let t_arr = now();
+                    let mut st = lock.lock().unwrap();
+                    issue(&mut st, &mut rng, i as u64, t_arr);
+                    cv.notify_all();
+                }
+            }
+            (_, None) => unreachable!("open-loop arrivals always have a rate profile"),
         }
 
         // ---- graceful drain -----------------------------------------------
@@ -587,11 +696,12 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         idle_energy.push(spec.idle_power * (duration - e.busy).max(0.0));
     }
 
-    let st = state.0.lock().unwrap();
+    let mut st = state.0.lock().unwrap();
     let report = ServeReport {
         backend: plan.backend_name.into(),
         heuristic: config.heuristic.clone(),
-        arrival_rate: rate_profile.mean_rate(),
+        workload: config.arrival.describe(),
+        arrival_rate: config.arrival.mean_rate(),
         n_requests: config.n_requests,
         duration,
         arrived: st.arrived.clone(),
@@ -607,6 +717,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         deferrals: st.deferrals,
         inferences: st.inferences,
         snapshots: st.snapshots.clone(),
+        traces: std::mem::take(&mut st.traces.records),
     };
     report.check_conservation().map_err(Error::Runtime)?;
     Ok(report)
@@ -632,7 +743,16 @@ mod tests {
         assert!(serve(&cfg).is_err());
         let cfg = ServeConfig {
             backend: ServeBackend::Synthetic,
-            arrival_rate: -1.0,
+            arrival: ArrivalProcess::Poisson { rate: -1.0 },
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            arrival: ArrivalProcess::ClosedLoop(crate::model::ClientPool {
+                n_clients: 0,
+                think_time: 0.5,
+            }),
             ..Default::default()
         };
         assert!(serve(&cfg).is_err());

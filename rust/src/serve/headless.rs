@@ -1,0 +1,413 @@
+//! Headless serve driver: the serving coordinator's control flow in
+//! *virtual time* — the `--speedup → ∞` limit where every sleep vanishes
+//! and the session becomes exactly replayable.
+//!
+//! This is the second [`SweepEngine`](crate::exp::sweep::SweepEngine)
+//! implementation behind `felare exp sweep --engine serve`: it drives the
+//! shared [`MappingState`] the way the live coordinator's workers do —
+//! each machine pulls from its local queue the moment it goes idle
+//! (`pop_queued`/`mark_running`), executes through a pluggable
+//! [`InferenceBackend`], reports terminals (`mark_idle`/`record_terminal`)
+//! and fires a completion-triggered mapping event — but time advances by
+//! event, not by wall clock, so results are deterministic per trace.
+//!
+//! # Bit-identity contract
+//!
+//! A `HeadlessServe` run over a trace produces a [`SimResult`] whose
+//! deterministic fields (outcome counters, per-machine energies, makespan,
+//! deferrals — everything except the wall-clock mapper-latency
+//! measurements) are **bit-identical** to [`Simulation`]'s over the same
+//! scenario + heuristic + trace. That is the acceptance gate for live
+//! heuristic sweeps: a serve-engine sweep cell must equal its sim-engine
+//! cell float for float (`rust/tests/sweep_engine_equivalence.rs`). The
+//! contract holds because every float is computed from the same operands
+//! in the same order:
+//!
+//! * service time = `backend.infer(type, machine).modeled × size_factor`,
+//!   with the per-machine [`SyntheticBackend`] in deterministic mode
+//!   (`cv_exec = 0`, so `modeled` is the frozen EET entry). The trace
+//!   *already* carries each task's Gamma service-time draw in
+//!   `size_factor`; sampling again in the backend — what the live
+//!   coordinator does, having no trace — would double-apply the
+//!   execution-time uncertainty and break pairing with the simulator;
+//! * energy is accumulated per completed/aborted execution with the
+//!   simulator's exact expressions (`dyn_energy(end − start)`, idle over
+//!   `makespan − busy`);
+//! * mapping decisions all live in the shared dispatch layer, and events
+//!   pop in the same deterministic order (time, then FIFO).
+//!
+//! Like [`Simulation`], a `HeadlessServe` is a recycled arena: `run` may
+//! be called repeatedly and `set_heuristic` swaps mappers between runs,
+//! which is what lets the sweep replay one generated trace under every
+//! heuristic on a single engine.
+
+use crate::model::machine::MachineId;
+use crate::model::task::{CancelReason, Outcome, Task, Time};
+use crate::model::{Scenario, Trace};
+use crate::runtime::{InferenceBackend, SyntheticBackend};
+use crate::sched::dispatch::{Dropped, MappingState};
+use crate::sched::fairness::FairnessTracker;
+use crate::sched::trace::{record_of, TraceLog, TraceOutcome, TraceRecord};
+use crate::sched::MappingHeuristic;
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::result::{MachineEnergy, SimResult};
+
+struct LiveRunning {
+    task: Task,
+    mapped: Time,
+    start: Time,
+    /// Scheduled release = min(actual finish, deadline) — the worker
+    /// aborts at the deadline (Eq. 1 middle case).
+    end: Time,
+    actual_end: Time,
+}
+
+/// The coordinator's worker loop, replayed in virtual time (module docs).
+pub struct HeadlessServe {
+    scenario: Scenario,
+    // ---- recycled arena state (reset at the top of every run) ----------
+    mapping: MappingState,
+    /// One execution substrate per machine, exactly like the live
+    /// coordinator's thread-local worker backends.
+    backends: Vec<Box<dyn InferenceBackend>>,
+    events: EventQueue,
+    running: Vec<Option<LiveRunning>>,
+    energy: Vec<MachineEnergy>,
+    trace_log: TraceLog,
+}
+
+impl HeadlessServe {
+    pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>) -> Self {
+        scenario.validate().expect("invalid scenario");
+        let tracker = FairnessTracker::new(
+            scenario.n_types(),
+            scenario.fairness_factor,
+            scenario.fairness_min_samples,
+            scenario.rate_window,
+        );
+        let mapping = MappingState::new(
+            scenario.eet.clone(),
+            scenario.machines.iter().map(|m| m.dyn_power).collect(),
+            scenario.queue_slots,
+            tracker,
+            heuristic,
+        );
+        let n_machines = scenario.n_machines();
+        // deterministic mode: the trace's size_factor carries the
+        // service-time draw — module docs §Bit-identity contract
+        let backends: Vec<Box<dyn InferenceBackend>> = (0..n_machines)
+            .map(|_| {
+                Box::new(SyntheticBackend::deterministic(scenario.eet.clone()))
+                    as Box<dyn InferenceBackend>
+            })
+            .collect();
+        Self {
+            scenario: scenario.clone(),
+            mapping,
+            backends,
+            events: EventQueue::new(),
+            running: (0..n_machines).map(|_| None).collect(),
+            energy: vec![MachineEnergy::default(); n_machines],
+            trace_log: TraceLog::new(),
+        }
+    }
+
+    /// Swap the mapping heuristic, keeping the recycled arena.
+    pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        self.mapping.set_heuristic(heuristic);
+    }
+
+    pub fn heuristic_name(&self) -> &'static str {
+        self.mapping.heuristic_name()
+    }
+
+    /// Emit one [`TraceRecord`] per request at its terminal event.
+    pub fn set_record_traces(&mut self, on: bool) {
+        self.trace_log.on = on;
+    }
+
+    /// Trace records of the latest run.
+    pub fn trace_log(&self) -> &[TraceRecord] {
+        &self.trace_log.records
+    }
+
+    /// Serve the whole trace to a terminal state and report (module docs).
+    pub fn run(&mut self, trace: &Trace) -> SimResult {
+        let HeadlessServe {
+            scenario: sc,
+            mapping,
+            backends,
+            events,
+            running,
+            energy,
+            trace_log,
+        } = self;
+
+        let n_types = sc.n_types();
+        let n_machines = sc.n_machines();
+        let mut result =
+            SimResult::empty(mapping.heuristic_name(), trace.arrival_rate, n_types, n_machines);
+        result.arrived = trace.arrivals_per_type(n_types);
+
+        // ---- arena reset ---------------------------------------------------
+        for r in running.iter_mut() {
+            *r = None;
+        }
+        for e in energy.iter_mut() {
+            *e = MachineEnergy::default();
+        }
+        events.clear();
+        mapping.reset();
+        trace_log.clear();
+
+        for (i, t) in trace.tasks.iter().enumerate() {
+            events.push(t.arrival, Event::Arrival { trace_idx: i });
+        }
+
+        let mut now: Time = 0.0;
+        while let Some((t, ev)) = events.pop() {
+            now = t;
+            match ev {
+                Event::Arrival { trace_idx } => mapping.push_arrival(trace.tasks[trace_idx]),
+                Event::Finish { machine_idx } => {
+                    complete(
+                        machine_idx,
+                        now,
+                        sc,
+                        mapping,
+                        running,
+                        energy,
+                        &mut result,
+                        trace_log,
+                    );
+                }
+                Event::Expiry => {}
+            }
+
+            // idle workers pull the moment state changes (the live path's
+            // notify_all after completions/arrivals)
+            for m in 0..n_machines {
+                fetch_and_start(m, now, mapping, backends, running, events, &mut result, trace_log);
+            }
+
+            // arrival-/completion-triggered mapping event through the
+            // shared dispatch layer — identical to the coordinator's
+            let stats = mapping.mapping_event(now, &mut |d: Dropped| {
+                let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
+                result.record(d.task.type_id.0, &out);
+                let (machine, mapped) = d.mapped.unzip();
+                let outcome = d.kind.trace_outcome();
+                trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
+            });
+            result.mapping_events += 1;
+            result.mapper_time_total += stats.mapper_dt;
+            result.mapper_time_max = result.mapper_time_max.max(stats.mapper_dt);
+            result.deferrals += stats.deferrals;
+
+            for m in 0..n_machines {
+                fetch_and_start(m, now, mapping, backends, running, events, &mut result, trace_log);
+            }
+        }
+
+        // graceful drain: anything still waiting dies at its own deadline
+        mapping.drain_unmapped(&mut |task| {
+            let at = task.deadline.max(now);
+            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+            result.record(task.type_id.0, &out);
+            trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+        });
+
+        result.makespan = now;
+        result.battery = sc.battery_for(now);
+        for (mi, e) in energy.iter().enumerate() {
+            debug_assert!(running[mi].is_none(), "machine {mi} still running at drain");
+            debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
+            let mut e = e.clone();
+            e.idle = sc.machines[mi].idle_energy(now - e.busy_time);
+            result.energy[mi] = e;
+        }
+        debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
+        result
+    }
+}
+
+/// The worker fetch loop in virtual time: pop FCFS, drop-at-start if the
+/// deadline already passed, otherwise execute through the backend until
+/// min(actual end, deadline).
+#[allow(clippy::too_many_arguments)]
+fn fetch_and_start(
+    m: usize,
+    now: Time,
+    mapping: &mut MappingState,
+    backends: &mut [Box<dyn InferenceBackend>],
+    running: &mut [Option<LiveRunning>],
+    events: &mut EventQueue,
+    result: &mut SimResult,
+    trace_log: &mut TraceLog,
+) {
+    if running[m].is_some() {
+        return;
+    }
+    while let Some(q) = mapping.pop_queued(m) {
+        if q.task.expired_at(now) {
+            // queued past its deadline: dropped at start, no energy
+            result.record(q.task.type_id.0, &Outcome::Missed { machine: m, at: now });
+            mapping.record_terminal(q.task.type_id, false);
+            trace_log.push(record_of(
+                &q.task,
+                TraceOutcome::DroppedAtStart,
+                Some(MachineId(m)),
+                Some(q.mapped),
+                None,
+                now,
+            ));
+            continue;
+        }
+        let rec = backends[m]
+            .infer(q.task.type_id.0, MachineId(m))
+            .expect("synthetic backend is infallible");
+        let actual_end = now + rec.modeled * q.task.size_factor;
+        let end = actual_end.min(q.task.deadline);
+        events.push(end, Event::Finish { machine_idx: m });
+        mapping.mark_running(m, now + q.expected_exec);
+        running[m] =
+            Some(LiveRunning { task: q.task, mapped: q.mapped, start: now, end, actual_end });
+        return;
+    }
+}
+
+/// Completion handling: account energy, report the terminal, free the
+/// worker (the live path's post-inference critical section).
+#[allow(clippy::too_many_arguments)]
+fn complete(
+    m: usize,
+    now: Time,
+    sc: &Scenario,
+    mapping: &mut MappingState,
+    running: &mut [Option<LiveRunning>],
+    energy: &mut [MachineEnergy],
+    result: &mut SimResult,
+    trace_log: &mut TraceLog,
+) {
+    let r = running[m].take().expect("finish event with no running task");
+    debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
+    mapping.mark_idle(m);
+    let busy = r.end - r.start;
+    let e = sc.machines[m].dyn_energy(busy);
+    energy[m].dynamic += e;
+    energy[m].busy_time += busy;
+    let ty = r.task.type_id;
+    let outcome = if r.actual_end <= r.task.deadline {
+        result.record(ty.0, &Outcome::Completed { machine: m, finish: r.actual_end });
+        mapping.record_terminal(ty, true);
+        TraceOutcome::Completed
+    } else {
+        energy[m].wasted += e;
+        result.record(ty.0, &Outcome::Missed { machine: m, at: r.end });
+        mapping.record_terminal(ty, false);
+        TraceOutcome::Missed
+    };
+    trace_log.push(record_of(
+        &r.task,
+        outcome,
+        Some(MachineId(m)),
+        Some(r.mapped),
+        Some(r.start),
+        r.end,
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::WorkloadParams;
+    use crate::sched::registry::heuristic_by_name;
+    use crate::sim::Simulation;
+    use crate::util::rng::Pcg64;
+
+    fn trace_for(sc: &Scenario, rate: f64, n: usize, seed: u64) -> Trace {
+        let params = WorkloadParams {
+            n_tasks: n,
+            arrival_rate: rate,
+            cv_exec: sc.cv_exec,
+            type_weights: Vec::new(),
+        };
+        Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+    }
+
+    fn assert_bit_identical(a: &SimResult, b: &SimResult, tag: &str) {
+        assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+        assert_eq!(a.completed, b.completed, "{tag}: completed");
+        assert_eq!(a.missed, b.missed, "{tag}: missed");
+        assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+        assert_eq!(a.cancelled_mapper, b.cancelled_mapper, "{tag}: mapper drops");
+        assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victims");
+        assert_eq!(a.cancelled_expired, b.cancelled_expired, "{tag}: expiries");
+        assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+        assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
+        assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+        assert_eq!(a.battery, b.battery, "{tag}: battery");
+        for (ea, eb) in a.energy.iter().zip(&b.energy) {
+            assert_eq!(ea.dynamic, eb.dynamic, "{tag}: dynamic energy");
+            assert_eq!(ea.wasted, eb.wasted, "{tag}: wasted energy");
+            assert_eq!(ea.idle, eb.idle, "{tag}: idle energy");
+            assert_eq!(ea.busy_time, eb.busy_time, "{tag}: busy time");
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_simulator_across_heuristics() {
+        let sc = Scenario::paper_synthetic();
+        let trace = trace_for(&sc, 5.0, 600, 21);
+        for h in ["mm", "msd", "mmu", "elare", "felare", "felare-novd"] {
+            let sim = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap()).run(&trace);
+            let live = HeadlessServe::new(&sc, heuristic_by_name(h, &sc).unwrap()).run(&trace);
+            assert_bit_identical(&sim, &live, h);
+        }
+    }
+
+    #[test]
+    fn bit_identical_on_stress_scenario_under_load() {
+        let sc = Scenario::stress(12, 5);
+        let rate = 1.1 * sc.service_capacity(); // oversubscribed: drops + misses
+        let trace = trace_for(&sc, rate, 1500, 33);
+        let sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&trace);
+        let live = HeadlessServe::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&trace);
+        assert_bit_identical(&sim, &live, "stress felare");
+    }
+
+    #[test]
+    fn recycled_engine_and_heuristic_swap_match_fresh() {
+        let sc = Scenario::paper_synthetic();
+        let traces = [trace_for(&sc, 4.0, 400, 41), trace_for(&sc, 8.0, 400, 42)];
+        let mut eng = HeadlessServe::new(&sc, heuristic_by_name("elare", &sc).unwrap());
+        for tr in &traces {
+            let ours = eng.run(tr);
+            let fresh = HeadlessServe::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(tr);
+            assert_bit_identical(&ours, &fresh, "recycled");
+        }
+        eng.set_heuristic(heuristic_by_name("mm", &sc).unwrap());
+        let ours = eng.run(&traces[0]);
+        let fresh = HeadlessServe::new(&sc, heuristic_by_name("mm", &sc).unwrap()).run(&traces[0]);
+        assert_bit_identical(&ours, &fresh, "after set_heuristic");
+    }
+
+    #[test]
+    fn trace_records_match_the_simulator_exactly() {
+        // same events in the same order ⇒ the per-request stories agree
+        // record for record, timestamps included
+        let sc = Scenario::paper_synthetic();
+        let trace = trace_for(&sc, 6.0, 500, 51);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        sim.set_record_traces(true);
+        let r = sim.run(&trace);
+        let mut live = HeadlessServe::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        live.set_record_traces(true);
+        live.run(&trace);
+        assert_eq!(sim.trace_log().len() as u64, r.total_arrived());
+        assert_eq!(sim.trace_log(), live.trace_log(), "per-request stories diverge");
+        for rec in live.trace_log() {
+            rec.validate().unwrap();
+        }
+    }
+}

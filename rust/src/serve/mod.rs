@@ -4,7 +4,9 @@
 //! pluggable `runtime::InferenceBackend` (real PJRT or synthetic).
 
 pub mod coordinator;
+pub mod headless;
 pub mod report;
 
 pub use coordinator::{serve, ServeBackend, ServeConfig};
+pub use headless::HeadlessServe;
 pub use report::{ServeReport, ServeSnapshot};

@@ -1,6 +1,8 @@
 //! Serving-mode metrics: what the end-to-end driver reports (latency,
-//! throughput, completion, energy) — the serving analogue of SimResult.
+//! throughput, completion, energy, per-request traces) — the serving
+//! analogue of SimResult.
 
+use crate::sched::trace::{LatencyBreakdown, TraceRecord};
 use crate::util::json::Json;
 use crate::util::stats::{jain_index, Summary};
 
@@ -23,6 +25,10 @@ pub struct ServeReport {
     /// Execution substrate that served the requests ("pjrt" / "synthetic").
     pub backend: String,
     pub heuristic: String,
+    /// Human description of the arrival process ("poisson λ=12/s",
+    /// "closed-loop 16 clients, think 0.5s", …).
+    pub workload: String,
+    /// Mean offered rate; NaN for closed loops (their rate is an outcome).
     pub arrival_rate: f64,
     pub n_requests: usize,
     /// Modeled duration of the run (seconds; wall clock × 1/time_scale).
@@ -47,6 +53,9 @@ pub struct ServeReport {
     pub inferences: u64,
     /// Periodic progress samples (empty unless requested).
     pub snapshots: Vec<ServeSnapshot>,
+    /// Per-request trace records (empty unless `ServeConfig::record_traces`;
+    /// one per request, exported as JSONL by `--trace-out`).
+    pub traces: Vec<TraceRecord>,
 }
 
 impl ServeReport {
@@ -115,6 +124,12 @@ impl ServeReport {
         Ok(())
     }
 
+    /// Latency decomposition over completed requests (meaningful when
+    /// per-request tracing was enabled).
+    pub fn latency_breakdown(&self) -> LatencyBreakdown {
+        LatencyBreakdown::of(&self.traces)
+    }
+
     pub fn to_json(&self) -> Json {
         let lat = self.latency_summary();
         let snapshots: Vec<Json> = self
@@ -133,6 +148,8 @@ impl ServeReport {
         Json::object()
             .set("backend", self.backend.as_str())
             .set("heuristic", self.heuristic.as_str())
+            .set("workload", self.workload.as_str())
+            .set("trace_records", self.traces.len())
             .set("arrival_rate", self.arrival_rate)
             .set("n_requests", self.n_requests)
             .set("duration_s", self.duration)
@@ -155,10 +172,10 @@ impl ServeReport {
         let lat = self.latency_summary();
         let mut s = String::new();
         s.push_str(&format!(
-            "serve[{} @ {}] λ={}/s  {} requests in {:.1}s  ({:.1} completed/s)\n",
+            "serve[{} @ {}] {}  {} requests in {:.1}s  ({:.1} completed/s)\n",
             self.heuristic,
             self.backend,
-            self.arrival_rate,
+            self.workload,
             self.n_requests,
             self.duration,
             self.throughput()
@@ -186,6 +203,9 @@ impl ServeReport {
             self.total_wasted_energy(),
             self.mapper_overhead_us()
         ));
+        if !self.traces.is_empty() {
+            s.push_str(&self.latency_breakdown().render());
+        }
         s
     }
 }
@@ -198,6 +218,7 @@ mod tests {
         ServeReport {
             backend: "synthetic".into(),
             heuristic: "felare".into(),
+            workload: "poisson λ=10/s".into(),
             arrival_rate: 10.0,
             n_requests: 20,
             duration: 2.0,
@@ -221,6 +242,7 @@ mod tests {
                 cancelled: 1,
                 in_flight: 2,
             }],
+            traces: Vec::new(),
         }
     }
 
@@ -250,9 +272,36 @@ mod tests {
         assert!(text.contains("80.0%"));
         assert!(text.contains("felare"));
         assert!(text.contains("synthetic"));
+        assert!(text.contains("poisson λ=10/s"));
         let j = r.to_json();
         assert!(j.req_f64("latency_p99_ms").unwrap() > 0.0);
         assert_eq!(j.req_str("backend").unwrap(), "synthetic");
+        assert_eq!(j.req_str("workload").unwrap(), "poisson λ=10/s");
         assert_eq!(j.req("snapshots").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn latency_breakdown_renders_only_when_traced() {
+        use crate::model::{MachineId, Task, TaskTypeId};
+        use crate::sched::trace::{record_of, TraceOutcome};
+        let mut r = sample();
+        assert!(!r.render().contains("latency breakdown"));
+        let task =
+            Task { id: 0, type_id: TaskTypeId(0), arrival: 0.0, deadline: 5.0, size_factor: 1.0 };
+        r.traces.push(record_of(
+            &task,
+            TraceOutcome::Completed,
+            Some(MachineId(0)),
+            Some(0.1),
+            Some(0.3),
+            1.0,
+        ));
+        let text = r.render();
+        assert!(text.contains("latency breakdown"));
+        assert!(text.contains("queue-wait"));
+        assert_eq!(r.to_json().req_f64("trace_records").unwrap(), 1.0);
+        let b = r.latency_breakdown();
+        assert_eq!(b.n_completed, 1);
+        assert!((b.execution.mean - 0.7).abs() < 1e-12);
     }
 }

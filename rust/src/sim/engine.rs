@@ -26,6 +26,25 @@
 //! actual service times are EET · size_factor, revealed only as
 //! completions happen — the paper's execution-time uncertainty.
 //!
+//! # Workloads
+//!
+//! [`Simulation::run`] replays a pre-generated open-loop [`Trace`]
+//! (Poisson arrivals — the paper's model). [`Simulation::run_closed`]
+//! instead drives a [`ClientPool`]: each client keeps one request
+//! outstanding, and its next arrival is generated *inside the event loop*
+//! when the previous request reaches a terminal state (completion, miss
+//! or drop) plus an exponential think time — the request-feedback loop
+//! open-loop traces cannot express. Both paths share one event loop, so
+//! closed-loop runs get the exact same mapping/energy semantics.
+//!
+//! # Per-request tracing
+//!
+//! With [`Simulation::set_record_traces`] enabled, every task emits one
+//! [`TraceRecord`] at its terminal event (completion, deadline abort, or
+//! any drop routed through the shared dispatch sink) — arrival, mapping,
+//! start and end timestamps for latency-breakdown analysis. Off by
+//! default; the disabled path costs one branch per terminal.
+//!
 //! # Recycled-state API contract (§Perf)
 //!
 //! A [`Simulation`] is an *arena*: machine state, the event queue, the
@@ -51,25 +70,31 @@
 //!   be reset by the caller (or re-installed via `set_heuristic`) if
 //!   run-to-run isolation is required. `adaptive` only accumulates
 //!   diagnostic counters — its decisions are per-event;
-//! * `overhead_samples` holds the per-event latencies of the **latest**
-//!   run only (it is cleared at the start of each run); populated when
-//!   `record_overhead_samples` is set.
+//! * `overhead_samples` and the trace log hold the **latest** run only
+//!   (cleared at the start of each run); populated when their respective
+//!   flags are set. Closed-loop scratch (generated tasks, client map) is
+//!   recycled the same way, so open- and closed-loop runs interleave
+//!   freely on one arena.
 //!
 //! At million-task scale this removes every per-run allocation from the
 //! sweep hot path except the trace itself — see `benches/bench_stress.rs`
 //! for the measured effect.
 
-use crate::model::machine::MachineSpec;
-use crate::model::task::{CancelReason, Outcome, Task, Time};
-use crate::model::{Scenario, Trace};
-use crate::sched::dispatch::{DropKind, MappingState};
+use crate::model::machine::{MachineId, MachineSpec};
+use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
+use crate::model::{ClientPool, EetMatrix, Scenario, Trace};
+use crate::sched::dispatch::{Dropped, MappingState};
 use crate::sched::fairness::FairnessTracker;
+use crate::sched::trace::{record_of, TraceLog, TraceOutcome, TraceRecord};
 use crate::sched::{Action, MappingHeuristic};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::result::{MachineEnergy, SimResult};
+use crate::util::rng::{Exponential, Gamma, Pcg64};
 
 struct Running {
     task: Task,
+    /// When the mapper assigned it (from [`QueuedTask::mapped`]).
+    mapped: Time,
     start: Time,
     /// Scheduled end = min(actual finish, deadline).
     end: Time,
@@ -91,6 +116,94 @@ impl MachState {
     }
 }
 
+/// Terminal notifications for the closed-loop generator: `(task id,
+/// terminal time)` pairs, buffered during an event iteration and drained
+/// into next-arrival scheduling after it. Gated off (one branch per
+/// terminal) on open-loop runs.
+#[derive(Default)]
+struct Releases {
+    on: bool,
+    buf: Vec<(u64, Time)>,
+}
+
+impl Releases {
+    #[inline]
+    fn push(&mut self, task_id: u64, t: Time) {
+        if self.on {
+            self.buf.push((task_id, t));
+        }
+    }
+}
+
+/// In-loop request generator for closed-loop runs: draws think times,
+/// task types and size factors exactly when a client is released, so the
+/// arrival process reacts to system latency. Deterministic per seed —
+/// draws happen in event-loop order.
+struct ClosedGen {
+    rng: Pcg64,
+    think: Option<Exponential>,
+    size_gamma: Option<Gamma>,
+    n_types: usize,
+    /// Tasks still to be generated (counts down from `n_tasks`).
+    remaining: usize,
+}
+
+impl ClosedGen {
+    fn new(pool: &ClientPool, n_tasks: usize, seed: u64, n_types: usize, cv_exec: f64) -> Self {
+        ClosedGen {
+            rng: Pcg64::seed_from(seed, 0xC1053D),
+            think: (pool.think_time > 0.0).then(|| Exponential::new(1.0 / pool.think_time)),
+            size_gamma: (cv_exec > 0.0).then(|| Gamma::from_mean_cv(1.0, cv_exec)),
+            n_types,
+            remaining: n_tasks,
+        }
+    }
+
+    /// Client `client` was released at `release_t`: think, then issue its
+    /// next request (unless the task budget is exhausted).
+    fn schedule(
+        &mut self,
+        client: u32,
+        release_t: Time,
+        eet: &EetMatrix,
+        gen_tasks: &mut Vec<Task>,
+        client_of: &mut Vec<u32>,
+        events: &mut EventQueue,
+    ) {
+        if self.remaining == 0 {
+            return;
+        }
+        self.remaining -= 1;
+        let think = match &self.think {
+            Some(e) => e.sample(&mut self.rng),
+            None => 0.0,
+        };
+        let arrival = release_t + think;
+        let type_id = TaskTypeId(self.rng.index(self.n_types));
+        let size_factor = match &mut self.size_gamma {
+            Some(g) => g.sample(&mut self.rng),
+            None => 1.0,
+        };
+        let id = gen_tasks.len() as u64;
+        let task = Task {
+            id,
+            type_id,
+            arrival,
+            deadline: eet.deadline(type_id, arrival),
+            size_factor,
+        };
+        gen_tasks.push(task);
+        client_of.push(client);
+        events.push(arrival, Event::Arrival { trace_idx: id as usize });
+    }
+}
+
+/// The workload a single engine run executes.
+enum WorkloadRef<'a> {
+    Open(&'a Trace),
+    Closed { pool: ClientPool, n_tasks: usize, seed: u64 },
+}
+
 /// One simulation engine: scenario + heuristic, reusable across traces
 /// (see the module docs for the recycled-state contract).
 pub struct Simulation {
@@ -103,6 +216,11 @@ pub struct Simulation {
     machines: Vec<MachState>,
     events: EventQueue,
     mapping: MappingState,
+    trace_log: TraceLog,
+    // closed-loop scratch (empty on open-loop runs)
+    gen_tasks: Vec<Task>,
+    client_of: Vec<u32>,
+    released: Releases,
 }
 
 impl Simulation {
@@ -137,6 +255,10 @@ impl Simulation {
             machines,
             events: EventQueue::new(),
             mapping,
+            trace_log: TraceLog::new(),
+            gen_tasks: Vec::new(),
+            client_of: Vec::new(),
+            released: Releases::default(),
         }
     }
 
@@ -167,10 +289,37 @@ impl Simulation {
         &self.mapping.action_log
     }
 
+    /// Emit one [`TraceRecord`] per task at its terminal event (module
+    /// docs §Per-request tracing). Off by default.
+    pub fn set_record_traces(&mut self, on: bool) {
+        self.trace_log.on = on;
+    }
+
+    /// Trace records of the latest run (empty unless
+    /// [`Simulation::set_record_traces`] was enabled).
+    pub fn trace_log(&self) -> &[TraceRecord] {
+        &self.trace_log.records
+    }
+
     /// Run the full trace to completion and report. `&mut self` recycles
     /// the arena: no per-run allocation beyond result counters, and the
     /// outcome is bit-identical to a fresh engine's (module docs).
     pub fn run(&mut self, trace: &Trace) -> SimResult {
+        self.run_impl(WorkloadRef::Open(trace))
+    }
+
+    /// Run a closed-loop session: `pool.n_clients` clients issue `n_tasks`
+    /// requests in total, each client waiting for its previous response
+    /// plus an exponential think time before the next request (module docs
+    /// §Workloads). The first request of every client follows one think
+    /// draw from t = 0. Deterministic per `seed`.
+    pub fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
+        pool.validate().expect("invalid client pool");
+        assert!(n_tasks > 0, "closed-loop run needs at least one task");
+        self.run_impl(WorkloadRef::Closed { pool, n_tasks, seed })
+    }
+
+    fn run_impl(&mut self, workload: WorkloadRef) -> SimResult {
         // split the borrow: every arena field independently mutable
         let Simulation {
             scenario: sc,
@@ -179,13 +328,21 @@ impl Simulation {
             machines,
             events,
             mapping,
+            trace_log,
+            gen_tasks,
+            client_of,
+            released,
         } = self;
 
         let n_types = sc.n_types();
         let n_machines = sc.n_machines();
+        let arrival_rate = match &workload {
+            WorkloadRef::Open(trace) => trace.arrival_rate,
+            // a closed loop has no offered rate — it is an outcome
+            WorkloadRef::Closed { .. } => f64::NAN,
+        };
         let mut result =
-            SimResult::empty(mapping.heuristic_name(), trace.arrival_rate, n_types, n_machines);
-        result.arrived = trace.arrivals_per_type(n_types);
+            SimResult::empty(mapping.heuristic_name(), arrival_rate, n_types, n_machines);
 
         // ---- arena reset ---------------------------------------------------
         for m in machines.iter_mut() {
@@ -194,17 +351,45 @@ impl Simulation {
         events.clear();
         mapping.reset();
         overhead_samples.clear();
+        trace_log.clear();
+        gen_tasks.clear();
+        client_of.clear();
+        released.buf.clear();
 
-        for (i, t) in trace.tasks.iter().enumerate() {
-            events.push(t.arrival, Event::Arrival { trace_idx: i });
-        }
+        let mut closed: Option<ClosedGen> = None;
+        let open_trace: Option<&Trace> = match workload {
+            WorkloadRef::Open(trace) => {
+                result.arrived = trace.arrivals_per_type(n_types);
+                for (i, t) in trace.tasks.iter().enumerate() {
+                    events.push(t.arrival, Event::Arrival { trace_idx: i });
+                }
+                Some(trace)
+            }
+            WorkloadRef::Closed { pool, n_tasks, seed } => {
+                let mut gen = ClosedGen::new(&pool, n_tasks, seed, n_types, sc.cv_exec);
+                for c in 0..pool.n_clients as u32 {
+                    gen.schedule(c, 0.0, &sc.eet, gen_tasks, client_of, events);
+                }
+                closed = Some(gen);
+                None
+            }
+        };
+        released.on = closed.is_some();
 
         let mut now: Time = 0.0;
         while let Some((t, ev)) = events.pop() {
             now = t;
             match ev {
                 Event::Arrival { trace_idx } => {
-                    mapping.push_arrival(trace.tasks[trace_idx]);
+                    let task = match open_trace {
+                        Some(trace) => trace.tasks[trace_idx],
+                        None => gen_tasks[trace_idx],
+                    };
+                    if closed.is_some() {
+                        // open-loop denominators come from the trace upfront
+                        result.arrived[task.type_id.0] += 1;
+                    }
+                    mapping.push_arrival(task);
                 }
                 Event::Finish { machine_idx } => {
                     finish_running(
@@ -213,25 +398,28 @@ impl Simulation {
                         now,
                         &mut result,
                         mapping,
+                        trace_log,
+                        released,
                     );
                 }
+                Event::Expiry => {} // wake-up only; the mapping event below expires
             }
 
             // start queued work freed by the completion (before mapping so
             // availability estimates are current)
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping);
+                try_start(m, mi, now, events, &mut result, mapping, trace_log, released);
             }
 
             // ---- the mapping event (shared driver: expiry, snapshots,
             // heuristic, action application — sched::dispatch) -----------
-            let stats = mapping.mapping_event(now, &mut |kind, ty| {
-                let reason = match kind {
-                    DropKind::Expired => CancelReason::DeadlineExpired,
-                    DropKind::MapperDropped => CancelReason::MapperDropped,
-                    DropKind::VictimDropped => CancelReason::VictimDropped,
-                };
-                result.record(ty.0, &Outcome::Cancelled { reason, at: now });
+            let stats = mapping.mapping_event(now, &mut |d: Dropped| {
+                let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
+                result.record(d.task.type_id.0, &out);
+                let (machine, mapped) = d.mapped.unzip();
+                let outcome = d.kind.trace_outcome();
+                trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
+                released.push(d.task.id, now);
             });
             result.mapping_events += 1;
             result.mapper_time_total += stats.mapper_dt;
@@ -243,17 +431,43 @@ impl Simulation {
 
             // idle machines may now have work
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping);
+                try_start(m, mi, now, events, &mut result, mapping, trace_log, released);
+            }
+
+            if let Some(gen) = closed.as_mut() {
+                // terminal responses release their clients: think, then
+                // schedule the next arrivals (swap out the buffer so its
+                // allocation survives; `schedule` never pushes back into it)
+                let mut releases = std::mem::take(&mut released.buf);
+                for &(task_id, t_rel) in &releases {
+                    let client = client_of[task_id as usize];
+                    gen.schedule(client, t_rel, &sc.eet, gen_tasks, client_of, events);
+                }
+                releases.clear();
+                released.buf = releases;
+                // deferred arriving-queue tasks must expire (and release
+                // their clients) at their deadline, not whenever the next
+                // unrelated event happens to fire a mapping event — wake
+                // the mapper at the earliest arriving deadline whenever no
+                // earlier event is already scheduled. The guard keeps this
+                // to one pending wake-up (after a push, the deadline *is*
+                // the queue head), so no duplicate storms.
+                if let Some(d) = mapping.earliest_arriving_deadline() {
+                    let covered = events.peek_time().is_some_and(|t| t <= d);
+                    if !covered {
+                        events.push(d, Event::Expiry);
+                    }
+                }
             }
         }
 
-        // Anything still waiting dies at its own deadline.
-        mapping.drain_unmapped(&mut |ty, deadline| {
-            let out = Outcome::Cancelled {
-                reason: CancelReason::DeadlineExpired,
-                at: deadline.max(now),
-            };
-            result.record(ty.0, &out);
+        // Anything still waiting dies at its own deadline. (Closed-loop
+        // runs drained the arriving queue through Expiry events above.)
+        mapping.drain_unmapped(&mut |task| {
+            let at = task.deadline.max(now);
+            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+            result.record(task.type_id.0, &out);
+            trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
         });
 
         result.makespan = now;
@@ -266,6 +480,10 @@ impl Simulation {
             result.energy[mi] = e;
         }
         debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
+        debug_assert!(
+            !trace_log.on || trace_log.records.len() as u64 == result.total_arrived(),
+            "tracing must emit exactly one record per arrival"
+        );
         result
     }
 }
@@ -277,6 +495,8 @@ fn finish_running(
     now: Time,
     result: &mut SimResult,
     mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    released: &mut Releases,
 ) {
     let r = m.running.take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
@@ -286,19 +506,31 @@ fn finish_running(
     m.energy.dynamic += e;
     m.energy.busy_time += busy;
     let ty = r.task.type_id;
-    if r.actual_end <= r.task.deadline {
+    let outcome = if r.actual_end <= r.task.deadline {
         result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
         mapping.record_terminal(ty, true);
+        TraceOutcome::Completed
     } else {
         // aborted at the deadline; everything it burnt is wasted
         m.energy.wasted += e;
         result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
         mapping.record_terminal(ty, false);
-    }
+        TraceOutcome::Missed
+    };
+    trace_log.push(record_of(
+        &r.task,
+        outcome,
+        Some(MachineId(machine_idx)),
+        Some(r.mapped),
+        Some(r.start),
+        r.end,
+    ));
+    released.push(r.task.id, r.end);
 }
 
 /// Start the next queued task if the machine is idle. Tasks whose deadline
 /// already passed are dropped at start (Eq. 1 last case, zero energy).
+#[allow(clippy::too_many_arguments)]
 fn try_start(
     m: &mut MachState,
     machine_idx: usize,
@@ -306,6 +538,8 @@ fn try_start(
     events: &mut EventQueue,
     result: &mut SimResult,
     mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    released: &mut Releases,
 ) {
     if m.running.is_some() {
         return;
@@ -315,13 +549,22 @@ fn try_start(
             // assigned but never started: Missed with no dynamic energy
             result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
             mapping.record_terminal(q.task.type_id, false);
+            trace_log.push(record_of(
+                &q.task,
+                TraceOutcome::DroppedAtStart,
+                Some(MachineId(machine_idx)),
+                Some(q.mapped),
+                None,
+                now,
+            ));
+            released.push(q.task.id, now);
             continue;
         }
         let actual_end = now + q.expected_exec * q.task.size_factor;
         let end = actual_end.min(q.task.deadline);
         events.push(end, Event::Finish { machine_idx });
         mapping.mark_running(machine_idx, now + q.expected_exec);
-        m.running = Some(Running { task: q.task, start: now, end, actual_end });
+        m.running = Some(Running { task: q.task, mapped: q.mapped, start: now, end, actual_end });
         return;
     }
 }
@@ -557,5 +800,135 @@ mod tests {
         assert!(n > 0);
         sim.run(&tr);
         assert_eq!(sim.action_log().len(), n, "log is per-run, not cumulative");
+    }
+
+    // ---- per-request tracing -----------------------------------------------
+
+    #[test]
+    fn tracing_emits_one_valid_record_per_task() {
+        let sc = Scenario::paper_synthetic();
+        let tr = trace_for(6.0, 600, 61);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        sim.run(&tr);
+        assert!(sim.trace_log().is_empty(), "tracing is opt-in");
+        sim.set_record_traces(true);
+        let r = sim.run(&tr);
+        let records = sim.trace_log();
+        assert_eq!(records.len() as u64, r.total_arrived());
+        for rec in records {
+            rec.validate().unwrap();
+        }
+        let completed =
+            records.iter().filter(|t| t.outcome == TraceOutcome::Completed).count() as u64;
+        assert_eq!(completed, r.total_completed(), "trace outcomes match counters");
+        let missed = records
+            .iter()
+            .filter(|t| {
+                matches!(t.outcome, TraceOutcome::Missed | TraceOutcome::DroppedAtStart)
+            })
+            .count() as u64;
+        assert_eq!(missed, r.total_missed());
+        // completed records decompose: queue_wait + execution == sojourn - map_wait
+        for rec in records.iter().filter(|t| t.outcome == TraceOutcome::Completed) {
+            assert!(rec.queue_wait().unwrap() >= 0.0);
+            assert!(rec.execution().unwrap() > 0.0);
+            assert!(rec.slack() >= 0.0, "completed requests meet their deadline");
+        }
+    }
+
+    #[test]
+    fn tracing_resets_per_run() {
+        let sc = Scenario::paper_synthetic();
+        let tr = trace_for(5.0, 120, 62);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap());
+        sim.set_record_traces(true);
+        sim.run(&tr);
+        let n = sim.trace_log().len();
+        sim.run(&tr);
+        assert_eq!(sim.trace_log().len(), n, "log is per-run, not cumulative");
+    }
+
+    // ---- closed-loop client pool -------------------------------------------
+
+    #[test]
+    fn closed_loop_conserves_and_caps_concurrency() {
+        let sc = Scenario::paper_synthetic();
+        let pool = ClientPool { n_clients: 6, think_time: 0.3 };
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        sim.set_record_traces(true);
+        let r = sim.run_closed(pool, 400, 71);
+        r.check_conservation().unwrap();
+        assert_eq!(r.total_arrived(), 400, "every budgeted request was issued");
+        assert!(r.arrival_rate.is_nan(), "closed loops have no offered rate");
+        assert!(r.total_completed() > 0);
+
+        // closed-loop invariant: at most n_clients requests in flight at
+        // any instant (sweep over [arrival, end] intervals)
+        let mut edges: Vec<(f64, i32)> = Vec::new();
+        for rec in sim.trace_log() {
+            rec.validate().unwrap();
+            edges.push((rec.arrival, 1));
+            edges.push((rec.end, -1));
+        }
+        // ends sort before arrivals at equal times: a released client may
+        // re-issue at the same instant with zero think
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let (mut live, mut peak) = (0i32, 0i32);
+        for (_, d) in edges {
+            live += d;
+            peak = peak.max(live);
+        }
+        assert!(
+            peak <= pool.n_clients as i32,
+            "outstanding {peak} exceeds {} clients",
+            pool.n_clients
+        );
+    }
+
+    #[test]
+    fn closed_loop_deterministic_per_seed() {
+        let sc = Scenario::paper_synthetic();
+        let pool = ClientPool { n_clients: 4, think_time: 0.2 };
+        let run = |seed| {
+            Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap())
+                .run_closed(pool, 250, seed)
+        };
+        let (a, b) = (run(5), run(5));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.missed, b.missed);
+        assert_eq!(a.cancelled, b.cancelled);
+        assert_eq!(a.makespan, b.makespan);
+        let c = run(6);
+        assert!(
+            a.makespan != c.makespan || a.completed != c.completed,
+            "different seeds give different sessions"
+        );
+    }
+
+    #[test]
+    fn closed_loop_zero_think_saturates_clients() {
+        // think 0: every client re-issues the instant it hears back, so
+        // the session is a tight feedback loop but still conserves
+        let sc = Scenario::paper_synthetic();
+        let pool = ClientPool { n_clients: 3, think_time: 0.0 };
+        let mut sim = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap());
+        let r = sim.run_closed(pool, 200, 73);
+        r.check_conservation().unwrap();
+        assert_eq!(r.total_arrived(), 200);
+        // 3 clients against 4 machines: effectively no queueing contention
+        assert!(r.collective_completion_rate() > 0.9, "{}", r.collective_completion_rate());
+    }
+
+    #[test]
+    fn closed_loop_leaves_no_residue_for_open_runs() {
+        // interleave closed and open runs on one arena: the open run must
+        // still match a fresh engine bit for bit
+        let sc = Scenario::paper_synthetic();
+        let tr = trace_for(5.0, 300, 74);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        sim.run_closed(ClientPool { n_clients: 8, think_time: 0.1 }, 300, 74);
+        let ours = sim.run(&tr);
+        let fresh = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&tr);
+        assert_same(&ours, &fresh, "open-after-closed");
     }
 }

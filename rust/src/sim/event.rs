@@ -22,6 +22,12 @@ pub enum Event {
     /// The task running on machine `machine_idx` reaches its scheduled end
     /// (actual finish, or deadline abort — engine decides which).
     Finish { machine_idx: usize },
+    /// Wake-up with no payload: fires the mapping event so arriving-queue
+    /// tasks whose deadline passed get expired at that instant. Only
+    /// closed-loop runs schedule these (their next arrival may depend on
+    /// the expiry releasing a client); open-loop runs never push one, so
+    /// their event sequence is untouched.
+    Expiry,
 }
 
 #[derive(Clone, Debug)]

@@ -93,6 +93,7 @@ fn drive_live(sc: &Scenario, trace: &Trace, heuristic: &str) -> (Vec<Action>, Co
     let mut counts = Counts::default();
     while let Some((now, ev)) = events.pop() {
         match ev {
+            Event::Expiry => {}
             Event::Arrival { trace_idx } => map.push_arrival(trace.tasks[trace_idx]),
             Event::Finish { machine_idx } => {
                 let r = running[machine_idx].take().expect("finish with no running task");
@@ -111,12 +112,12 @@ fn drive_live(sc: &Scenario, trace: &Trace, heuristic: &str) -> (Vec<Action>, Co
         }
         // the mapping event: arrival- or completion-triggered, exactly as
         // the serving coordinator fires it
-        map.mapping_event(now, &mut |_kind, _ty| counts.cancelled += 1);
+        map.mapping_event(now, &mut |_drop| counts.cancelled += 1);
         for m in 0..n_machines {
             live_try_start(m, now, &mut map, &mut running, &mut events, &mut counts);
         }
     }
-    map.drain_unmapped(&mut |_ty, _deadline| counts.cancelled += 1);
+    map.drain_unmapped(&mut |_task| counts.cancelled += 1);
     (map.action_log.clone(), counts)
 }
 

@@ -8,6 +8,11 @@
 //!  * mapper action validity: every action targets a live task/slot, at
 //!    most one terminal action per task, ELARE/FELARE only assign
 //!    feasible pairs, FELARE never evicts suffered types;
+//!  * per-request trace records: exactly one per arrival, phase ordering
+//!    arrival ≤ mapped ≤ started ≤ end, queue-wait + execution == end −
+//!    mapped, and outcome tallies equal the result counters;
+//!  * closed-loop client pools: conservation and the ≤ n_clients
+//!    outstanding-requests cap;
 //!  * Eq. 1/2 algebraic relations; fairness-limit algebra (ε ≤ μ);
 //!  * determinism: same seed ⇒ identical results.
 
@@ -15,10 +20,11 @@ use felare::model::cvb::{generate, CvbParams};
 use felare::model::machine::MachineSpec;
 use felare::model::scenario::RateWindow;
 use felare::model::task::{Task, TaskTypeId};
-use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::model::{ClientPool, Scenario, Trace, WorkloadParams};
 use felare::sched::fairness::FairnessSnapshot;
 use felare::sched::feasibility::{completion_time, expected_energy, is_feasible};
 use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::trace::{TraceOutcome, TraceRecord};
 use felare::sched::{Action, MachineSnapshot, QueuedInfo, SchedView};
 use felare::sim::Simulation;
 use felare::util::proptest::{check, f64_in, pick, small_usize, vec_of};
@@ -145,6 +151,104 @@ fn prop_determinism() {
         }
         if (a.wasted_energy() - b.wasted_energy()).abs() > 1e-9 {
             return Err("same seed produced different energy".into());
+        }
+        Ok(())
+    });
+}
+
+/// Shared trace-record checks: exactly one record per arrival, internal
+/// consistency per record, and outcome tallies matching the counters.
+fn check_trace_records(
+    records: &[TraceRecord],
+    r: &felare::sim::SimResult,
+) -> Result<(), String> {
+    if records.len() as u64 != r.total_arrived() {
+        return Err(format!(
+            "{} records for {} arrivals",
+            records.len(),
+            r.total_arrived()
+        ));
+    }
+    let mut seen = std::collections::HashSet::new();
+    let (mut completed, mut missed, mut cancelled) = (0u64, 0u64, 0u64);
+    for rec in records {
+        rec.validate()?;
+        if !seen.insert(rec.task_id) {
+            return Err(format!("task {} traced twice", rec.task_id));
+        }
+        match rec.outcome {
+            TraceOutcome::Completed => completed += 1,
+            // drop-at-start is accounted as a miss (Eq. 1 last case)
+            TraceOutcome::Missed | TraceOutcome::DroppedAtStart => missed += 1,
+            TraceOutcome::Expired
+            | TraceOutcome::MapperDropped
+            | TraceOutcome::VictimDropped
+            | TraceOutcome::Unmapped => cancelled += 1,
+        }
+    }
+    if completed != r.total_completed() || missed != r.total_missed() || cancelled != r.total_cancelled()
+    {
+        return Err(format!(
+            "trace tallies ({completed}/{missed}/{cancelled}) != counters ({}/{}/{})",
+            r.total_completed(),
+            r.total_missed(),
+            r.total_cancelled()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_trace_records_consistent() {
+    check("trace-records-consistent", gen_system, |sys| {
+        let params = WorkloadParams {
+            n_tasks: sys.n_tasks,
+            arrival_rate: sys.rate,
+            cv_exec: sys.scenario.cv_exec,
+            type_weights: Vec::new(),
+        };
+        let trace = Trace::generate(&params, &sys.scenario.eet, &mut Pcg64::new(sys.seed));
+        let h = heuristic_by_name(sys.heuristic, &sys.scenario).unwrap();
+        let mut sim = Simulation::new(&sys.scenario, h);
+        sim.set_record_traces(true);
+        let r = sim.run(&trace);
+        check_trace_records(sim.trace_log(), &r)
+    });
+}
+
+#[test]
+fn prop_closed_loop_conserves_and_caps_outstanding() {
+    check("closed-loop-conservation", gen_system, |sys| {
+        let pool = ClientPool {
+            n_clients: (sys.seed % 7 + 1) as usize,
+            think_time: (sys.seed % 13) as f64 * 0.05,
+        };
+        let h = heuristic_by_name(sys.heuristic, &sys.scenario).unwrap();
+        let mut sim = Simulation::new(&sys.scenario, h);
+        sim.set_record_traces(true);
+        let r = sim.run_closed(pool, sys.n_tasks, sys.seed);
+        r.check_conservation()?;
+        if r.total_arrived() != sys.n_tasks as u64 {
+            return Err(format!("arrived {} != {}", r.total_arrived(), sys.n_tasks));
+        }
+        check_trace_records(sim.trace_log(), &r)?;
+        // a client never has two requests in flight: sweep [arrival, end]
+        // intervals, ends before arrivals at equal times (zero think)
+        let mut edges: Vec<(f64, i32)> = Vec::new();
+        for rec in sim.trace_log() {
+            edges.push((rec.arrival, 1));
+            edges.push((rec.end, -1));
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut live = 0i32;
+        for (t, d) in edges {
+            live += d;
+            if live > pool.n_clients as i32 {
+                return Err(format!(
+                    "{live} outstanding at t={t} with {} clients",
+                    pool.n_clients
+                ));
+            }
         }
         Ok(())
     });

@@ -8,8 +8,9 @@
 //! built.
 
 use felare::model::machine::aws_machines;
-use felare::model::{RateProfile, Scenario};
+use felare::model::{ArrivalProcess, ClientPool, RateProfile, Scenario};
 use felare::runtime::default_artifact_dir;
+use felare::sched::trace::TraceOutcome;
 use felare::serve::{serve, ServeBackend, ServeConfig};
 
 // ---- synthetic backend: runs everywhere --------------------------------
@@ -19,7 +20,7 @@ fn synthetic_config(sc: Scenario, heuristic: &str, rate: f64, n: usize) -> Serve
         backend: ServeBackend::Synthetic,
         scenario: Some(sc),
         heuristic: heuristic.into(),
-        arrival_rate: rate,
+        arrival: ArrivalProcess::Poisson { rate },
         n_requests: n,
         time_scale: 0.01, // 100× fast-forward
         seed: 7,
@@ -55,7 +56,7 @@ fn synthetic_serve_with_phases_and_snapshots() {
     let phases =
         RateProfile::parse(&format!("{:.3}:20,{:.3}:10", 0.5 * cap, 1.5 * cap)).unwrap();
     let mut cfg = synthetic_config(sc, "felare", cap, 200);
-    cfg.rate_profile = Some(phases);
+    cfg.arrival = ArrivalProcess::Profile(phases);
     cfg.progress_every = Some(10.0);
     cfg.seed = 11;
     let report = serve(&cfg).unwrap();
@@ -93,7 +94,7 @@ fn synthetic_serve_paper_scenario_default() {
     let cfg = ServeConfig {
         backend: ServeBackend::Synthetic,
         heuristic: "elare".into(),
-        arrival_rate: 1.0,
+        arrival: ArrivalProcess::Poisson { rate: 1.0 },
         n_requests: 60,
         time_scale: 0.01,
         deadline_scale: 4.0,
@@ -107,6 +108,67 @@ fn synthetic_serve_paper_scenario_default() {
         "light load with slack deadlines mostly completes (rate {})",
         report.collective_completion_rate()
     );
+}
+
+#[test]
+fn closed_loop_clients_conserve_and_self_regulate() {
+    // 6 clients with short think against 8 machines: the offered load
+    // self-regulates with latency, every budgeted request is issued, and
+    // no client ever has two requests outstanding.
+    let sc = Scenario::stress(8, 4);
+    let mut cfg = synthetic_config(sc, "felare", 1.0, 250);
+    cfg.arrival = ArrivalProcess::ClosedLoop(ClientPool { n_clients: 6, think_time: 0.2 });
+    cfg.record_traces = true;
+    cfg.seed = 23;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.arrived.iter().sum::<u64>(), 250);
+    assert!(report.arrival_rate.is_nan(), "closed loops report no offered rate");
+    assert!(report.workload.contains("closed-loop 6 clients"));
+    assert!(report.collective_completion_rate() > 0.5, "6 clients on 8 machines mostly complete");
+    // exactly one trace record per request, all internally consistent
+    assert_eq!(report.traces.len(), 250);
+    let mut edges: Vec<(f64, i32)> = Vec::new();
+    for rec in &report.traces {
+        rec.validate().unwrap();
+        edges.push((rec.arrival, 1));
+        edges.push((rec.end, -1));
+    }
+    edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let (mut live, mut peak) = (0i32, 0i32);
+    for (_, d) in edges {
+        live += d;
+        peak = peak.max(live);
+    }
+    assert!(peak <= 6, "outstanding {peak} exceeds the client pool");
+    let completed =
+        report.traces.iter().filter(|r| r.outcome == TraceOutcome::Completed).count() as u64;
+    assert_eq!(completed, report.completed.iter().sum::<u64>());
+}
+
+#[test]
+fn tracing_records_every_request_and_breaks_down_latency() {
+    let sc = Scenario::stress(4, 3);
+    let rate = 0.8 * sc.service_capacity();
+    let mut cfg = synthetic_config(sc, "elare", rate, 200);
+    cfg.record_traces = true;
+    cfg.seed = 29;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.traces.len(), 200, "one record per request");
+    for rec in &report.traces {
+        rec.validate().unwrap();
+    }
+    let b = report.latency_breakdown();
+    assert_eq!(b.n_completed as u64, report.completed.iter().sum::<u64>());
+    assert!(b.n_completed > 0);
+    assert!(b.execution.mean > 0.0, "completed requests executed for real time");
+    assert!(report.render().contains("latency breakdown"));
+    // untraced runs stay lean
+    let mut lean = synthetic_config(Scenario::stress(4, 3), "elare", rate, 50);
+    lean.seed = 29;
+    let lean_report = serve(&lean).unwrap();
+    assert!(lean_report.traces.is_empty());
 }
 
 // ---- PJRT backend: needs the feature + built artifacts -----------------
@@ -127,7 +189,7 @@ fn quick_config(heuristic: &str, rate: f64, n: usize) -> ServeConfig {
     ServeConfig {
         heuristic: heuristic.into(),
         machines: aws_machines(),
-        arrival_rate: rate,
+        arrival: ArrivalProcess::Poisson { rate },
         n_requests: n,
         profile_reps: 3,
         seed: 7,

@@ -1,0 +1,99 @@
+//! Golden gate for the engine-agnostic experiment harness: a sweep run on
+//! the headless serve engine must reproduce the sim engine **bit for
+//! bit**, cell for cell — same `CellMetrics` reduction, same aggregated
+//! `SweepPoint`s — across scenarios, rates and heuristics.
+//!
+//! Wall-clock mapper-latency measurements (`mapper_overhead_us`) are the
+//! one documented exception: they time the host, not the model, and are
+//! excluded from the recycled-state bit-identity contract too
+//! (`sim/engine.rs` module docs).
+
+use felare::exp::sweep::{run_sweep, run_sweep_traced, EngineKind, SweepPoint, SweepSpec};
+use felare::model::Scenario;
+
+fn spec_for(scenario: Scenario, rates: &[f64], engine: EngineKind) -> SweepSpec {
+    SweepSpec {
+        scenario,
+        heuristics: vec!["mm".into(), "elare".into(), "felare".into()],
+        rates: rates.to_vec(),
+        traces: 3,
+        tasks: 220,
+        seed: 0xE9E9,
+        engine,
+    }
+}
+
+fn assert_points_bit_identical(sim: &[SweepPoint], serve: &[SweepPoint], tag: &str) {
+    assert_eq!(sim.len(), serve.len(), "{tag}: point counts");
+    for (a, b) in sim.iter().zip(serve) {
+        let cell = format!("{tag}/{}@λ={}", a.heuristic, a.arrival_rate);
+        assert_eq!(a.heuristic, b.heuristic, "{cell}: heuristic order");
+        assert_eq!(a.arrival_rate, b.arrival_rate, "{cell}: rate order");
+        assert_eq!(a.traces, b.traces, "{cell}: traces");
+        // every deterministic metric must match bit for bit — no epsilon
+        assert_eq!(a.completion_rate, b.completion_rate, "{cell}: completion");
+        assert_eq!(a.miss_rate, b.miss_rate, "{cell}: miss rate");
+        assert_eq!(a.cancelled_frac, b.cancelled_frac, "{cell}: cancelled frac");
+        assert_eq!(a.missed_frac, b.missed_frac, "{cell}: missed frac");
+        assert_eq!(a.total_energy, b.total_energy, "{cell}: total energy");
+        assert_eq!(a.wasted_energy, b.wasted_energy, "{cell}: wasted energy");
+        assert_eq!(a.wasted_energy_pct, b.wasted_energy_pct, "{cell}: wasted %");
+        assert_eq!(a.jain, b.jain, "{cell}: jain");
+        assert_eq!(a.per_type_rates, b.per_type_rates, "{cell}: per-type rates");
+        // CI half-widths are pure functions of the per-trace metrics
+        assert!(
+            a.completion_ci95 == b.completion_ci95
+                || (a.completion_ci95.is_nan() && b.completion_ci95.is_nan()),
+            "{cell}: completion CI"
+        );
+        assert!(
+            a.wasted_pct_ci95 == b.wasted_pct_ci95
+                || (a.wasted_pct_ci95.is_nan() && b.wasted_pct_ci95.is_nan()),
+            "{cell}: wasted CI"
+        );
+        assert_eq!(a.victim_drops_per_k, b.victim_drops_per_k, "{cell}: victim drops");
+        // mapper_overhead_us is wall-clock — deliberately not compared
+    }
+}
+
+/// The acceptance grid: 3 scenarios × 3 rates each, all through both
+/// engines. Rates bracket under-, near- and over-subscription so drops,
+/// misses and victim evictions all occur.
+#[test]
+fn serve_engine_matches_sim_engine_on_three_scenarios() {
+    let cases: Vec<(&str, Scenario, Vec<f64>)> = vec![
+        ("paper", Scenario::paper_synthetic(), vec![2.0, 5.0, 9.0]),
+        ("aws", Scenario::aws_two_app(), vec![3.0, 6.0, 12.0]),
+        ("stress-8x4", Scenario::stress(8, 4), {
+            let cap = Scenario::stress(8, 4).service_capacity();
+            vec![0.5 * cap, 0.9 * cap, 1.5 * cap]
+        }),
+    ];
+    for (tag, scenario, rates) in cases {
+        let sim = run_sweep(&spec_for(scenario.clone(), &rates, EngineKind::Sim));
+        let serve = run_sweep(&spec_for(scenario, &rates, EngineKind::Serve));
+        assert_points_bit_identical(&sim, &serve, tag);
+    }
+}
+
+#[test]
+fn traced_sweeps_agree_request_for_request() {
+    // not just the aggregates: the per-request stories (timestamps,
+    // machines, outcomes) coincide exactly across engines
+    let sc = Scenario::paper_synthetic();
+    let (sim_points, sim_cells) =
+        run_sweep_traced(&spec_for(sc.clone(), &[6.0], EngineKind::Sim), true);
+    let (serve_points, serve_cells) =
+        run_sweep_traced(&spec_for(sc, &[6.0], EngineKind::Serve), true);
+    assert_points_bit_identical(&sim_points, &serve_points, "traced");
+    assert_eq!(sim_cells.len(), serve_cells.len());
+    for (a, b) in sim_cells.iter().zip(&serve_cells) {
+        assert_eq!(a.heuristic, b.heuristic);
+        assert_eq!(a.trace_i, b.trace_i);
+        assert_eq!(a.records.len(), 220, "one record per task");
+        assert_eq!(a.records, b.records, "{}@{}: request stories diverge", a.heuristic, a.rate);
+        for r in &a.records {
+            r.validate().unwrap();
+        }
+    }
+}
