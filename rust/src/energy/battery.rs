@@ -1,0 +1,505 @@
+//! The battery model: a finite store of joules drained by machine power
+//! draw and optionally refilled by a cyclic recharge (harvest) profile.
+//!
+//! # Semantics
+//!
+//! The whole system shares **one** battery (the paper's "energy-limited"
+//! HEC premise). Between any two engine events the power draw is constant:
+//! every machine draws `dyn_power` while executing and `idle_power`
+//! otherwise, so the battery level is piecewise linear in time and the
+//! depletion instant — the first zero crossing — is exact, not sampled.
+//! [`BatteryState::advance`] integrates draw minus recharge from the last
+//! observed instant to the next event time and reports that crossing; the
+//! engine then terminates the run at the crossing (**system off**) instead
+//! of processing the event.
+//!
+//! # Determinism contract
+//!
+//! Both virtual-time engines (the discrete-event simulator and the
+//! headless serve driver) call [`BatteryState::advance`] /
+//! [`BatteryState::set_busy`] at the same event boundaries with the same
+//! operands, so every derived float (`spent`, `soc`, `depleted_at`) is
+//! bit-identical across engines — the property
+//! `rust/tests/sweep_engine_equivalence.rs` pins for battery-constrained
+//! sweeps. An **infinite** capacity is tracked but can never deplete, so
+//! control flow (and therefore every pre-existing result field) is
+//! bit-identical to an unbatteried run.
+
+use crate::model::machine::MachineSpec;
+use crate::model::task::Time;
+
+/// Piecewise-constant recharge schedule: `(watts, duration)` phases cycled
+/// for the whole run, so a short schedule describes an arbitrarily long
+/// harvest pattern (e.g. `"2:300,0:300"` = 2 W for 5 min, dark for 5 min,
+/// repeat). Watts may be zero (night); durations are positive and finite.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RechargeProfile {
+    pub phases: Vec<(f64, f64)>,
+}
+
+impl RechargeProfile {
+    /// Parse `"watts:dur,watts:dur,…"` (the `--recharge` grammar).
+    pub fn parse(s: &str) -> Result<RechargeProfile, String> {
+        let mut phases = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (w, d) = part
+                .split_once(':')
+                .ok_or_else(|| format!("recharge phase '{part}' is not 'watts:duration'"))?;
+            let watts: f64 = w
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad watts '{w}' in recharge phase '{part}'"))?;
+            let dur: f64 = d
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad duration '{d}' in recharge phase '{part}'"))?;
+            if !(watts >= 0.0 && watts.is_finite() && dur > 0.0 && dur.is_finite()) {
+                return Err(format!(
+                    "recharge phase '{part}': watts must be finite and >= 0, duration \
+                     positive and finite"
+                ));
+            }
+            phases.push((watts, dur));
+        }
+        if phases.is_empty() {
+            return Err("recharge profile has no phases".into());
+        }
+        Ok(RechargeProfile { phases })
+    }
+
+    /// Seconds covered by one pass through the phases.
+    pub fn cycle_len(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d).sum()
+    }
+
+    /// Harvest power in effect at `t` (cycled).
+    pub fn power_at(&self, t: Time) -> f64 {
+        self.segment_at(t).0
+    }
+
+    /// `(watts, seconds until the next phase boundary)` at time `t`.
+    fn segment_at(&self, t: Time) -> (f64, f64) {
+        let cycle = self.cycle_len();
+        let mut rem = t.rem_euclid(cycle);
+        for &(w, d) in &self.phases {
+            if rem < d {
+                return (w, d - rem);
+            }
+            rem -= d;
+        }
+        // float edge: rem == cycle after rounding ⇒ first phase again
+        (self.phases[0].0, self.phases[0].1)
+    }
+
+    /// The `--recharge` grammar, round-trippable through [`Self::parse`]
+    /// (scenario JSON stores recharge schedules in this form).
+    pub fn to_spec(&self) -> String {
+        self.phases
+            .iter()
+            .map(|(w, d)| format!("{w}:{d}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.phases.is_empty() {
+            return Err("recharge profile has no phases".into());
+        }
+        for &(w, d) in &self.phases {
+            if !(w >= 0.0 && w.is_finite() && d > 0.0 && d.is_finite()) {
+                return Err(format!("bad recharge phase ({w}, {d})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Static battery description: initial capacity in joules (also the cap
+/// recharge can refill to) plus an optional harvest schedule.
+/// `f64::INFINITY` capacity models the unbatteried classic setup — tracked
+/// for accounting, never depleting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatterySpec {
+    pub capacity: f64,
+    pub recharge: Option<RechargeProfile>,
+}
+
+impl BatterySpec {
+    pub fn new(capacity: f64) -> BatterySpec {
+        BatterySpec { capacity, recharge: None }
+    }
+
+    pub fn with_recharge(mut self, recharge: RechargeProfile) -> BatterySpec {
+        self.recharge = Some(recharge);
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.capacity > 0.0) {
+            return Err(format!(
+                "battery capacity must be positive (joules), got {}",
+                self.capacity
+            ));
+        }
+        if let Some(r) = &self.recharge {
+            r.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Runtime battery tracker driven by an engine (module docs §Determinism).
+///
+/// Recycled-arena citizen: [`BatteryState::reset`] restores the freshly
+/// constructed state keeping every allocation, matching the engines'
+/// recycled-run contract.
+#[derive(Clone, Debug)]
+pub struct BatteryState {
+    capacity: f64,
+    recharge: Option<RechargeProfile>,
+    dyn_powers: Vec<f64>,
+    idle_powers: Vec<f64>,
+    busy: Vec<bool>,
+    /// Last instant the level was integrated to.
+    t: Time,
+    /// Current stored energy (≤ capacity; 0 once depleted).
+    level: f64,
+    /// Gross joules drawn so far (dynamic + idle) — the debit the energy
+    /// conservation tests compare against the per-machine accounting.
+    spent: f64,
+    /// Joules actually credited by recharge (excess above capacity is lost).
+    harvested: f64,
+    depleted_at: Option<Time>,
+}
+
+impl BatteryState {
+    pub fn new(spec: &BatterySpec, machines: &[MachineSpec]) -> BatteryState {
+        spec.validate().expect("invalid battery spec");
+        BatteryState {
+            capacity: spec.capacity,
+            recharge: spec.recharge.clone(),
+            dyn_powers: machines.iter().map(|m| m.dyn_power).collect(),
+            idle_powers: machines.iter().map(|m| m.idle_power).collect(),
+            busy: vec![false; machines.len()],
+            t: 0.0,
+            level: spec.capacity,
+            spent: 0.0,
+            harvested: 0.0,
+            depleted_at: None,
+        }
+    }
+
+    /// Reset to the full, all-idle state at t = 0 (recycled arena).
+    pub fn reset(&mut self) {
+        for b in &mut self.busy {
+            *b = false;
+        }
+        self.t = 0.0;
+        self.level = self.capacity;
+        self.spent = 0.0;
+        self.harvested = 0.0;
+        self.depleted_at = None;
+    }
+
+    /// Machine `m` started (`true`) or stopped (`false`) executing. Call
+    /// *after* advancing to the transition instant — the flag only shapes
+    /// the draw of subsequent intervals.
+    pub fn set_busy(&mut self, m: usize, busy: bool) {
+        self.busy[m] = busy;
+    }
+
+    /// Instantaneous system power draw under the current busy set.
+    fn draw(&self) -> f64 {
+        let mut p = 0.0;
+        for (m, &busy) in self.busy.iter().enumerate() {
+            p += if busy { self.dyn_powers[m] } else { self.idle_powers[m] };
+        }
+        p
+    }
+
+    /// Advance the battery to time `to`, draining draw minus harvest.
+    /// Returns `Some(depletion instant)` the moment the store first hits
+    /// zero (idempotent afterwards: a depleted battery stays depleted and
+    /// keeps reporting the same instant).
+    pub fn advance(&mut self, to: Time) -> Option<Time> {
+        if self.depleted_at.is_some() {
+            return self.depleted_at;
+        }
+        if to <= self.t {
+            return None; // same-instant events: no time passes
+        }
+        let p_draw = self.draw();
+        // split the borrow: the phase walk reads `recharge` while mutating
+        // the accumulators
+        let BatteryState { capacity, recharge, t, level, spent, harvested, depleted_at, .. } =
+            self;
+        match recharge {
+            None => {
+                let dt = to - *t;
+                if let Some(cross) =
+                    drain_segment(*capacity, level, spent, harvested, p_draw, 0.0, dt)
+                {
+                    let dead = *t + cross;
+                    *t = dead;
+                    *depleted_at = Some(dead);
+                    return Some(dead);
+                }
+                *t = to;
+            }
+            Some(profile) => {
+                // walk harvest-phase boundaries between t and to
+                while *t < to {
+                    let (w, seg_left) = profile.segment_at(*t);
+                    let dt = (to - *t).min(seg_left);
+                    if dt <= 0.0 {
+                        break; // float guard: boundary rounding
+                    }
+                    if let Some(cross) =
+                        drain_segment(*capacity, level, spent, harvested, p_draw, w, dt)
+                    {
+                        let dead = *t + cross;
+                        *t = dead;
+                        *depleted_at = Some(dead);
+                        return Some(dead);
+                    }
+                    *t += dt;
+                }
+                *t = to;
+            }
+        }
+        None
+    }
+
+    /// State of charge in [0, 1]; 1.0 for an infinite battery.
+    pub fn soc(&self) -> f64 {
+        if self.capacity.is_finite() {
+            self.level / self.capacity
+        } else {
+            1.0
+        }
+    }
+
+    /// Stored energy right now (joules; infinite for the unbatteried case).
+    pub fn level(&self) -> f64 {
+        self.level
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    /// Gross joules drawn so far (the conservation-test debit).
+    pub fn spent(&self) -> f64 {
+        self.spent
+    }
+
+    /// Joules credited by recharge (post-cap).
+    pub fn harvested(&self) -> f64 {
+        self.harvested
+    }
+
+    pub fn depleted_at(&self) -> Option<Time> {
+        self.depleted_at
+    }
+
+    pub fn is_depleted(&self) -> bool {
+        self.depleted_at.is_some()
+    }
+}
+
+/// Integrate one constant-draw, constant-harvest segment of length `dt`
+/// against the accumulators. Returns the offset into the segment at which
+/// the battery hits zero, if it does.
+fn drain_segment(
+    capacity: f64,
+    level: &mut f64,
+    spent: &mut f64,
+    harvested: &mut f64,
+    p_draw: f64,
+    w: f64,
+    dt: f64,
+) -> Option<f64> {
+    let net = p_draw - w;
+    if capacity.is_finite() && net > 0.0 && *level <= net * dt {
+        let cross = *level / net;
+        *spent += p_draw * cross;
+        *harvested += w * cross;
+        *level = 0.0;
+        return Some(cross);
+    }
+    *spent += p_draw * dt;
+    let refilled = *level - net * dt;
+    if refilled > capacity {
+        // excess harvest above the cap is lost
+        *harvested += w * dt - (refilled - capacity);
+        *level = capacity;
+    } else {
+        *harvested += w * dt;
+        *level = refilled;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::paper_machines;
+
+    fn state(capacity: f64) -> BatteryState {
+        BatteryState::new(&BatterySpec::new(capacity), &paper_machines())
+    }
+
+    #[test]
+    fn recharge_profile_parses_and_cycles() {
+        let p = RechargeProfile::parse("2:300, 0:300").unwrap();
+        assert_eq!(p.phases, vec![(2.0, 300.0), (0.0, 300.0)]);
+        assert_eq!(p.cycle_len(), 600.0);
+        assert_eq!(p.power_at(0.0), 2.0);
+        assert_eq!(p.power_at(299.9), 2.0);
+        assert_eq!(p.power_at(300.0), 0.0);
+        assert_eq!(p.power_at(650.0), 2.0, "cycles");
+        assert_eq!(RechargeProfile::parse(&p.to_spec()).unwrap(), p, "round trip");
+    }
+
+    #[test]
+    fn recharge_profile_rejects_malformed() {
+        assert!(RechargeProfile::parse("").is_err());
+        assert!(RechargeProfile::parse("2").is_err());
+        assert!(RechargeProfile::parse("-1:10").is_err());
+        assert!(RechargeProfile::parse("2:0").is_err());
+        assert!(RechargeProfile::parse("inf:10").is_err());
+        assert!(RechargeProfile::parse("2:inf").is_err());
+        assert!(RechargeProfile::parse("a:b").is_err());
+        // zero watts is a valid (dark) phase
+        assert!(RechargeProfile::parse("0:10").is_ok());
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(BatterySpec::new(100.0).validate().is_ok());
+        assert!(BatterySpec::new(f64::INFINITY).validate().is_ok());
+        assert!(BatterySpec::new(0.0).validate().is_err());
+        assert!(BatterySpec::new(-5.0).validate().is_err());
+        assert!(BatterySpec::new(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn idle_drain_depletes_at_exact_instant() {
+        // paper machines idle at 4 × 0.05 = 0.2 W ⇒ a 10 J battery dies at
+        // t = 50 exactly.
+        let mut b = state(10.0);
+        assert_eq!(b.advance(49.0), None);
+        assert!((b.level() - (10.0 - 0.2 * 49.0)).abs() < 1e-12);
+        let dead = b.advance(100.0).unwrap();
+        assert!((dead - 50.0).abs() < 1e-9, "depleted at {dead}");
+        assert_eq!(b.depleted_at(), Some(dead));
+        assert!((b.spent() - 10.0).abs() < 1e-9, "drew exactly the capacity");
+        assert_eq!(b.level(), 0.0);
+        assert_eq!(b.soc(), 0.0);
+        // idempotent afterwards
+        assert_eq!(b.advance(200.0), Some(dead));
+    }
+
+    #[test]
+    fn busy_machines_drain_dynamic_power() {
+        let mut b = state(1000.0);
+        b.advance(10.0); // idle: 0.2 × 10 = 2 J
+        b.set_busy(0, true); // m1: 1.6 W instead of 0.05
+        b.advance(20.0); // 10 s at 0.2 − 0.05 + 1.6 = 1.75 W
+        let expect = 2.0 + 17.5;
+        assert!((b.spent() - expect).abs() < 1e-9, "spent {}", b.spent());
+        b.set_busy(0, false);
+        b.advance(30.0);
+        assert!((b.spent() - (expect + 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_battery_tracks_but_never_depletes() {
+        let mut b = state(f64::INFINITY);
+        b.set_busy(1, true);
+        assert_eq!(b.advance(1e7), None);
+        assert!(b.spent() > 0.0);
+        assert_eq!(b.soc(), 1.0);
+        assert!(!b.is_depleted());
+    }
+
+    #[test]
+    fn recharge_caps_at_capacity_and_credits_post_cap() {
+        // idle draw 0.2 W; harvest 0.5 W half the time. Bright phases
+        // refill to the cap (excess lost); dark phases drain 4 J; the
+        // 10 ⇄ 6 J oscillation sustains the system forever.
+        let spec = BatterySpec::new(10.0)
+            .with_recharge(RechargeProfile::parse("0.5:20,0:20").unwrap());
+        let mut b = BatteryState::new(&spec, &paper_machines());
+        // first 20 s: net −0.3 W ⇒ refills to capacity (cap: excess lost)
+        b.advance(20.0);
+        assert_eq!(b.level(), 10.0, "capped at capacity");
+        assert!((b.harvested() - (0.5 * 20.0 - 0.3 * 20.0)).abs() < 1e-9, "excess lost");
+        // dark 20 s: −0.2 W ⇒ 6 J left at t = 40
+        b.advance(40.0);
+        assert!((b.level() - 6.0).abs() < 1e-9);
+        // conservation of the gross debit regardless of harvest
+        assert!((b.spent() - 0.2 * 40.0).abs() < 1e-9);
+        // every cycle nets zero after the cap: never depletes
+        assert_eq!(b.advance(1e5), None);
+    }
+
+    #[test]
+    fn weak_recharge_extends_lifetime() {
+        // Unrecharged, 10 J at 0.2 W idle dies at t = 50. A 0.1 W harvest
+        // half the time stretches the piecewise drain to t = 70:
+        // 2 J per bright 20 s, 4 J per dark 20 s ⇒ 10 − 2 − 4 − 2 = 2 J at
+        // t = 60, gone 10 s into the dark phase.
+        let spec = BatterySpec::new(10.0)
+            .with_recharge(RechargeProfile::parse("0.1:20,0:20").unwrap());
+        let mut b = BatteryState::new(&spec, &paper_machines());
+        let dead = b.advance(1e5).unwrap();
+        assert!((dead - 70.0).abs() < 1e-9, "depleted at {dead}");
+        assert!(dead > 50.0, "recharge extended the unrecharged 50 s lifetime");
+    }
+
+    #[test]
+    fn net_positive_recharge_never_depletes() {
+        let spec = BatterySpec::new(5.0)
+            .with_recharge(RechargeProfile::parse("1:10").unwrap());
+        let mut b = BatteryState::new(&spec, &paper_machines());
+        // idle draw 0.2 < 1.0 harvest: immortal while idle
+        assert_eq!(b.advance(1e5), None);
+        assert_eq!(b.level(), 5.0);
+    }
+
+    #[test]
+    fn depletion_mid_busy_interval() {
+        let mut b = state(10.0);
+        b.set_busy(1, true); // m2: 3.0 W + 3 × 0.05 idle = 3.15 W total
+        let dead = b.advance(100.0).unwrap();
+        assert!((dead - 10.0 / 3.15).abs() < 1e-9);
+        assert!((b.spent() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut b = state(10.0);
+        b.set_busy(0, true);
+        b.advance(1e4);
+        assert!(b.is_depleted());
+        b.reset();
+        assert!(!b.is_depleted());
+        assert_eq!(b.level(), 10.0);
+        assert_eq!(b.spent(), 0.0);
+        assert_eq!(b.soc(), 1.0);
+        // busy flags cleared too: drains at idle rate again
+        b.advance(1.0);
+        assert!((b.spent() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_instant_advance_is_free() {
+        let mut b = state(10.0);
+        b.advance(5.0);
+        let spent = b.spent();
+        assert_eq!(b.advance(5.0), None);
+        assert_eq!(b.spent(), spent);
+    }
+}

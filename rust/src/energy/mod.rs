@@ -1,0 +1,38 @@
+//! The battery subsystem: finite-energy semantics for the whole stack.
+//!
+//! The paper's premise is that HEC systems are *battery-powered
+//! (energy-limited)*, yet until this module the repo only accounted energy
+//! post-hoc (`sim::result::MachineEnergy`). Here energy becomes a feedback
+//! loop:
+//!
+//! * [`BatterySpec`] — a finite store of joules (`f64::INFINITY` models
+//!   the classic unbatteried setup), optionally fed by a cyclic
+//!   [`RechargeProfile`] (solar/harvest schedules, `--recharge
+//!   "watts:dur,…"`);
+//! * [`BatteryState`] — the runtime tracker every engine drives: it
+//!   integrates each machine's dynamic/idle power draw between events,
+//!   credits recharge, and reports the exact instant the store hits zero
+//!   (**depletion ⇒ system off**: running work aborts, queued and future
+//!   work is cancelled with [`CancelReason::SystemOff`]);
+//! * [`EnergyPolicy`] — the scheduling hook: an admission-shedding policy
+//!   installed into the shared dispatch layer
+//!   ([`MappingState`](crate::sched::dispatch::MappingState)) and driven
+//!   by the battery's state of charge. `felare-eb` uses [`SocShedding`]
+//!   to drop the most expensive task types first as the battery drains.
+//!
+//! All three engines — the discrete-event [`Simulation`], the headless
+//! serve driver and the live coordinator — debit **one** battery through
+//! the same [`BatteryState`] methods at the same event boundaries, so
+//! battery-constrained sweep cells stay bit-identical across engines
+//! (`rust/tests/sweep_engine_equivalence.rs`) and an *infinite* battery is
+//! bit-identical to the unbatteried runs that predate this module
+//! (`rust/tests/battery_suite.rs`).
+//!
+//! [`CancelReason::SystemOff`]: crate::model::task::CancelReason::SystemOff
+//! [`Simulation`]: crate::sim::Simulation
+
+pub mod battery;
+pub mod policy;
+
+pub use battery::{BatterySpec, BatteryState, RechargeProfile};
+pub use policy::{EnergyPolicy, NoEnergyPolicy, SocShedding};

@@ -1,0 +1,225 @@
+//! Energy-budget scheduling policies: the hook the shared dispatch layer
+//! ([`MappingState`](crate::sched::dispatch::MappingState)) consults at
+//! every mapping event, driven by the battery's state of charge.
+//!
+//! A policy runs *before* the heuristic sees the arriving queue and may
+//! shed tasks at admission (reported through the dispatch drop sink as
+//! proactive mapper drops). Heuristics declare their policy through
+//! [`MappingHeuristic::energy_policy`](crate::sched::MappingHeuristic::energy_policy);
+//! the default [`NoEnergyPolicy`] keeps the hot path to a single branch
+//! and the behavior bit-identical to the pre-battery engines.
+//!
+//! Policies must be *deterministic functions of (SoC, task, static
+//! scenario data)* — both virtual-time engines evaluate them at the same
+//! events with the same SoC, and bit-identical runs are the acceptance
+//! gate (`rust/tests/sweep_engine_equivalence.rs`).
+
+use crate::model::task::Task;
+use crate::model::EetMatrix;
+
+/// An admission policy over the arriving queue, parameterised by the
+/// battery's state of charge (`None` = unbatteried system).
+pub trait EnergyPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called once when the policy is installed into the dispatch layer,
+    /// with the system's EET matrix and per-machine dynamic powers — the
+    /// static data cost rankings are derived from.
+    fn init(&mut self, eet: &EetMatrix, dyn_powers: &[f64]) {
+        let _ = (eet, dyn_powers);
+    }
+
+    /// Cheap per-event gate: when `false`, no task is consulted this event
+    /// (the unbatteried / full-battery fast path).
+    fn active(&self, soc: Option<f64>) -> bool;
+
+    /// Shed `task` at admission? Only called when [`Self::active`] is true,
+    /// with the concrete SoC.
+    fn shed(&self, soc: f64, task: &Task) -> bool;
+}
+
+/// The default policy: never sheds, never activates. Installed for every
+/// heuristic that does not override
+/// [`MappingHeuristic::energy_policy`](crate::sched::MappingHeuristic::energy_policy).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoEnergyPolicy;
+
+impl EnergyPolicy for NoEnergyPolicy {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn active(&self, _soc: Option<f64>) -> bool {
+        false
+    }
+
+    fn shed(&self, _soc: f64, _task: &Task) -> bool {
+        false
+    }
+}
+
+/// SoC-proportional admission shedding (the `felare-eb` policy): below
+/// `threshold`, the most *expensive* task types are shed first, and the
+/// admitted set shrinks toward the cheapest type as the battery drains.
+///
+/// Each type's cost is its cheapest possible execution,
+/// `cost_i = min_j p_j^dyn · e_ij` (Eq. 2's success case on the most
+/// efficient machine), normalised by the most expensive type:
+/// `rank_i = cost_i / max_k cost_k ∈ (0, 1]`. A task of type `i` is shed
+/// iff
+///
+/// ```text
+/// rank_i > SoC / threshold
+/// ```
+///
+/// so at `SoC = threshold` nothing is shed, just below it only the
+/// top-cost type sheds, and as SoC → 0 everything but (asymptotically)
+/// the cheapest type is refused — spending the last joules where they buy
+/// the most completions.
+#[derive(Clone, Debug)]
+pub struct SocShedding {
+    /// SoC below which shedding ramps in (e.g. 0.25).
+    pub threshold: f64,
+    /// Per-type normalised cost rank, filled by [`EnergyPolicy::init`].
+    rank: Vec<f64>,
+}
+
+impl SocShedding {
+    pub fn new(threshold: f64) -> SocShedding {
+        assert!(
+            threshold > 0.0 && threshold <= 1.0,
+            "shedding threshold must be in (0, 1], got {threshold}"
+        );
+        SocShedding { threshold, rank: Vec::new() }
+    }
+
+    /// Per-type cost ranks (normalised to the most expensive type).
+    pub fn ranks(&self) -> &[f64] {
+        &self.rank
+    }
+}
+
+impl EnergyPolicy for SocShedding {
+    fn name(&self) -> &'static str {
+        "soc-shedding"
+    }
+
+    fn init(&mut self, eet: &EetMatrix, dyn_powers: &[f64]) {
+        self.rank = type_cost_ranks(eet, dyn_powers);
+    }
+
+    fn active(&self, soc: Option<f64>) -> bool {
+        soc.is_some_and(|s| s < self.threshold)
+    }
+
+    fn shed(&self, soc: f64, task: &Task) -> bool {
+        match self.rank.get(task.type_id.0) {
+            Some(&rank) => rank > soc / self.threshold,
+            None => false, // uninitialised / foreign type: never shed
+        }
+    }
+}
+
+/// Per-type cheapest-execution costs `min_j p_j · e_ij`, normalised by the
+/// maximum over types (shared by [`SocShedding`] and `felare-eb`'s
+/// energy-cap rounds).
+pub fn type_costs(eet: &EetMatrix, dyn_powers: &[f64]) -> Vec<f64> {
+    use crate::model::machine::MachineId;
+    use crate::model::task::TaskTypeId;
+    (0..eet.n_types())
+        .map(|ty| {
+            (0..dyn_powers.len())
+                .map(|m| dyn_powers[m] * eet.get(TaskTypeId(ty), MachineId(m)))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect()
+}
+
+fn type_cost_ranks(eet: &EetMatrix, dyn_powers: &[f64]) -> Vec<f64> {
+    let costs = type_costs(eet, dyn_powers);
+    let max = costs.iter().copied().fold(0.0_f64, f64::max);
+    if max <= 0.0 {
+        return vec![1.0; costs.len()];
+    }
+    costs.into_iter().map(|c| c / max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::model::task::TaskTypeId;
+
+    fn task(ty: usize) -> Task {
+        Task { id: 0, type_id: TaskTypeId(ty), arrival: 0.0, deadline: 10.0, size_factor: 1.0 }
+    }
+
+    #[test]
+    fn no_policy_is_inert() {
+        let p = NoEnergyPolicy;
+        assert!(!p.active(Some(0.0)));
+        assert!(!p.active(None));
+        assert!(!p.shed(0.0, &task(0)));
+    }
+
+    #[test]
+    fn soc_shedding_activates_only_below_threshold_with_a_battery() {
+        let p = SocShedding::new(0.25);
+        assert!(!p.active(None), "unbatteried systems never shed");
+        assert!(!p.active(Some(1.0)));
+        assert!(!p.active(Some(0.25)), "at the threshold: inactive");
+        assert!(p.active(Some(0.249)));
+        assert!(p.active(Some(0.0)));
+    }
+
+    #[test]
+    fn sheds_expensive_types_first() {
+        let eet = paper_table1();
+        let powers = [1.6, 3.0, 1.8, 1.5];
+        let mut p = SocShedding::new(0.25);
+        p.init(&eet, &powers);
+        let ranks = p.ranks().to_vec();
+        assert_eq!(ranks.len(), 4);
+        let max_ty = (0..4).max_by(|&a, &b| ranks[a].total_cmp(&ranks[b])).unwrap();
+        let min_ty = (0..4).min_by(|&a, &b| ranks[a].total_cmp(&ranks[b])).unwrap();
+        assert_eq!(ranks[max_ty], 1.0);
+        // just below the threshold only the most expensive type sheds
+        let soc = 0.25 * (ranks.iter().copied().fold(0.0_f64, f64::max) - 1e-9);
+        assert!(p.shed(soc, &task(max_ty)));
+        assert!(!p.shed(soc, &task(min_ty)));
+        // near zero everything sheds (every rank > ~0)
+        for ty in 0..4 {
+            assert!(p.shed(1e-12, &task(ty)), "type {ty} sheds at empty battery");
+        }
+    }
+
+    #[test]
+    fn shedding_monotone_in_soc() {
+        let eet = paper_table1();
+        let powers = [1.6, 3.0, 1.8, 1.5];
+        let mut p = SocShedding::new(0.5);
+        p.init(&eet, &powers);
+        for ty in 0..4 {
+            let mut shed_prev = true;
+            for soc in [0.01, 0.1, 0.2, 0.3, 0.4, 0.499] {
+                let shed = p.shed(soc, &task(ty));
+                assert!(shed_prev || !shed, "shedding must not resume as SoC rises");
+                shed_prev = shed;
+            }
+        }
+    }
+
+    #[test]
+    fn type_costs_match_hand_computation() {
+        // T1 row of Table I: e = [2.238, 1.696, 4.359, 0.736], powers
+        // [1.6, 3.0, 1.8, 1.5] → min cost = 1.5 × 0.736 = 1.104 (m4).
+        let costs = type_costs(&paper_table1(), &[1.6, 3.0, 1.8, 1.5]);
+        assert!((costs[0] - 1.5 * 0.736).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonsense_threshold() {
+        let _ = SocShedding::new(0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Experiment `battery` — the battery subsystem's lifetime/efficiency
+//! figure: sweep battery capacity × arrival rate across heuristics (the
+//! paper trio plus `felare-eb`) on either engine, reporting system
+//! lifetime, final state of charge, and completed tasks per joule.
+//!
+//! The claim under test: below the SoC thresholds, `felare-eb`'s
+//! energy-capped mappings and cost-ranked admission shedding buy **longer
+//! lifetimes and more completions per joule** than stock FELARE at
+//! low-to-moderate rates, at some completion-count cost — exactly the
+//! trade an energy-limited HEC deployment wants to make explicit.
+//!
+//! Default capacities are scaled by `tasks / 2000` so `--quick` runs keep
+//! roughly the same depletion fractions as the full figure.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, improvement_pct, Table};
+use crate::exp::sweep::{run_sweep, SweepPoint, SweepSpec};
+use crate::exp::ExpOpts;
+use crate::model::Scenario;
+
+/// The heuristics the figure compares.
+const HEURISTICS: [&str; 4] = ["mm", "elare", "felare", "felare-eb"];
+
+/// Default capacity grid (joules, at the paper workload scale of 2000
+/// tasks): small enough that every cell depletes, spread over ~3 octaves.
+const BASE_CAPACITIES: [f64; 4] = [400.0, 800.0, 1600.0, 3200.0];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let base_scenario = match &opts.scenario {
+        Some(spec) => Scenario::from_spec(spec)?,
+        None => Scenario::paper_synthetic(),
+    };
+    // low-to-moderate rates: the regime where energy-aware mapping has
+    // room to choose (the saturated tail is dominated by drops anyway)
+    let rates = opts.rates.clone().unwrap_or_else(|| vec![1.0, 2.0, 4.0, 6.0]);
+    let tasks = opts.tasks();
+    let scale = tasks as f64 / 2000.0;
+    let capacities: Vec<f64> = opts
+        .batteries
+        .clone()
+        .unwrap_or_else(|| BASE_CAPACITIES.iter().map(|c| c * scale).collect());
+
+    let mut t = Table::new(
+        &format!(
+            "battery lifetime/efficiency sweep [{} engine] — {}",
+            opts.engine.name(),
+            base_scenario.name
+        ),
+        &[
+            "battery_j",
+            "heuristic",
+            "λ",
+            "lifetime_s",
+            "final_soc",
+            "tasks_per_joule",
+            "completion",
+            "depleted_frac",
+        ],
+    );
+
+    // (capacity, points) per battery level; each level is one paired sweep
+    let mut all: Vec<(f64, Vec<SweepPoint>)> = Vec::new();
+    for &cap in &capacities {
+        let spec = SweepSpec {
+            scenario: base_scenario.clone().with_battery(cap, None),
+            heuristics: HEURISTICS.iter().map(|s| s.to_string()).collect(),
+            rates: rates.clone(),
+            traces: opts.traces(),
+            tasks,
+            seed: opts.seed,
+            engine: opts.engine,
+        };
+        let points = run_sweep(&spec);
+        for p in &points {
+            t.row(vec![
+                fmt_f(cap, 0),
+                p.heuristic.clone(),
+                fmt_f(p.arrival_rate, 2),
+                fmt_f(p.lifetime_s, 2),
+                fmt_f(p.final_soc, 4),
+                fmt_f(p.tasks_per_joule, 5),
+                fmt_f(p.completion_rate, 4),
+                fmt_f(p.depleted_frac, 2),
+            ]);
+        }
+        all.push((cap, points));
+    }
+    t.emit(&format!("battery_{}", opts.engine.name()))?;
+
+    // ---- the felare-eb vs stock-FELARE verdict ------------------------------
+    let mean_over = |h: &str, f: &dyn Fn(&SweepPoint) -> f64| -> f64 {
+        let xs: Vec<f64> = all
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().filter(|p| p.heuristic == h).map(f))
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let eb_tpj = mean_over("felare-eb", &|p| p.tasks_per_joule);
+    let fe_tpj = mean_over("felare", &|p| p.tasks_per_joule);
+    let eb_life = mean_over("felare-eb", &|p| p.lifetime_s);
+    let fe_life = mean_over("felare", &|p| p.lifetime_s);
+    println!(
+        "felare-eb vs felare over {} batteries × {} rates: tasks/J {:.5} vs {:.5} (+{:.1}%), \
+         lifetime {:.1}s vs {:.1}s (+{:.1}%)",
+        capacities.len(),
+        rates.len(),
+        eb_tpj,
+        fe_tpj,
+        100.0 * (eb_tpj / fe_tpj - 1.0),
+        eb_life,
+        fe_life,
+        100.0 * (eb_life / fe_life - 1.0),
+    );
+    println!(
+        "  (improvement_pct formulation: tasks/J {:.1}%, lifetime {:.1}%)",
+        -improvement_pct(fe_tpj, eb_tpj),
+        -improvement_pct(fe_life, eb_life),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::sweep::EngineKind;
+
+    #[test]
+    fn quick_battery_figure_runs_on_both_engines() {
+        for engine in [EngineKind::Sim, EngineKind::Serve] {
+            let opts = ExpOpts {
+                quick: true,
+                traces: Some(2),
+                tasks: Some(150),
+                batteries: Some(vec![60.0, 240.0]),
+                rates: Some(vec![2.0, 5.0]),
+                engine,
+                ..Default::default()
+            };
+            run(&opts).unwrap();
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! tables. `--quick` shrinks traces/tasks for smoke runs.
 
 pub mod ablation;
+pub mod battery;
 pub mod cloud;
 pub mod fig2;
 pub mod fig3;
@@ -39,10 +40,17 @@ pub struct ExpOpts {
     pub engine: EngineKind,
     /// Rate-grid override for `exp sweep` (`--rates 2,4,8`).
     pub rates: Option<Vec<f64>>,
-    /// Scenario spec for `exp sweep` (`--scenario paper|aws|stress:M:T|path`).
+    /// Scenario spec for `exp sweep`/`exp battery`
+    /// (`--scenario paper|aws|stress:M:T|path`).
     pub scenario: Option<String>,
     /// Per-request JSONL trace export path for `exp sweep` (`--trace-out`).
     pub trace_out: Option<String>,
+    /// Percentile-latency SLO gate for `exp sweep` (`--expect-p99 secs`):
+    /// fail unless every cell's p99 completed sojourn is within the limit.
+    pub expect_p99: Option<f64>,
+    /// Battery-capacity grid override for `exp battery` (`--batteries
+    /// 200,400,800`, joules).
+    pub batteries: Option<Vec<f64>>,
 }
 
 impl Default for ExpOpts {
@@ -56,6 +64,8 @@ impl Default for ExpOpts {
             rates: None,
             scenario: None,
             trace_out: None,
+            expect_p99: None,
+            batteries: None,
         }
     }
 }
@@ -87,6 +97,7 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("ablation", "design-choice ablations + §VIII adaptive extension", ablation::run),
     ("cloud", "edge-to-cloud continuum RTT sweep (§VIII future work)", cloud::run),
     ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
+    ("battery", "lifetime/efficiency sweep: battery capacity × rate, felare-eb vs stock", battery::run),
 ];
 
 pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {
@@ -151,7 +162,8 @@ mod tests {
         assert_eq!(ids.len(), n);
         assert!(ids.contains(&"fig4"));
         assert!(ids.contains(&"sweep"));
-        assert_eq!(n, 13);
+        assert!(ids.contains(&"battery"));
+        assert_eq!(n, 14);
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! bit-identical run to run (and to the pre-refactor sequential grouping)
 //! regardless of worker scheduling.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::exp::output::{fmt_f, Table};
 use crate::exp::ExpOpts;
 use crate::model::{Scenario, Trace, WorkloadParams};
@@ -165,6 +165,15 @@ pub struct SweepPoint {
     pub mapper_overhead_us: f64,
     /// FELARE victim evictions per 1000 arrivals (0 for other heuristics).
     pub victim_drops_per_k: f64,
+    /// Mean seconds the system stayed on (= makespan unless a battery
+    /// depleted mid-run; `exp battery`'s lifetime axis).
+    pub lifetime_s: f64,
+    /// Mean end-of-run battery state of charge (1.0 when unbatteried).
+    pub final_soc: f64,
+    /// Mean completed tasks per joule of consumed energy.
+    pub tasks_per_joule: f64,
+    /// Fraction of traces whose battery depleted before the workload ended.
+    pub depleted_frac: f64,
 }
 
 /// Sweep parameters.
@@ -265,6 +274,10 @@ struct CellMetrics {
     per_type_rates: Vec<f64>,
     mapper_overhead_us: f64,
     victim_drops_per_k: f64,
+    lifetime_s: f64,
+    final_soc: f64,
+    tasks_per_joule: f64,
+    depleted: bool,
 }
 
 impl CellMetrics {
@@ -283,6 +296,10 @@ impl CellMetrics {
             mapper_overhead_us: r.mapper_overhead_us(),
             victim_drops_per_k: 1000.0 * r.cancelled_victim as f64
                 / r.total_arrived().max(1) as f64,
+            lifetime_s: r.lifetime_s(),
+            final_soc: r.final_soc,
+            tasks_per_joule: r.tasks_per_joule(),
+            depleted: r.depleted_at.is_some(),
         }
     }
 }
@@ -419,6 +436,10 @@ fn aggregate(heuristic: &str, rate: f64, rs: &[&CellMetrics]) -> SweepPoint {
         wasted_pct_ci95: wasted_pct.ci95(),
         mapper_overhead_us: mean(&|r| r.mapper_overhead_us),
         victim_drops_per_k: mean(&|r| r.victim_drops_per_k),
+        lifetime_s: mean(&|r| r.lifetime_s),
+        final_soc: mean(&|r| r.final_soc),
+        tasks_per_joule: mean(&|r| r.tasks_per_joule),
+        depleted_frac: mean(&|r| if r.depleted { 1.0 } else { 0.0 }),
     }
 }
 
@@ -456,7 +477,7 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
         seed: opts.seed,
         engine: opts.engine,
     };
-    let record = opts.trace_out.is_some();
+    let record = opts.trace_out.is_some() || opts.expect_p99.is_some();
     let (points, cell_traces) = run_sweep_traced(&spec, record);
 
     let mut t = Table::new(
@@ -492,7 +513,48 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
         let n = export_cell_traces(path, &cell_traces)?;
         println!("wrote {n} trace records ({} cells) to {path}", cell_traces.len());
     }
+    if let Some(limit) = opts.expect_p99 {
+        check_p99(limit, &cell_traces)?;
+        println!("p99 sojourn SLO: every cell within {limit}s");
+    }
     Ok(())
+}
+
+/// Percentile-latency SLO gate (`--expect-p99`): fail unless every cell's
+/// p99 completed-request sojourn (from the per-request [`TraceRecord`]s)
+/// is within `limit` seconds. Cells with zero completions pass vacuously —
+/// a sweep's saturating tail legitimately completes nothing, and gating
+/// those cells on latency would make the flag unusable on paper-style
+/// grids (the single-session `serve --expect-p99` gate is stricter: it
+/// errors when nothing completed).
+pub fn check_p99(limit: f64, cells: &[CellTraces]) -> Result<()> {
+    let mut violations: Vec<String> = Vec::new();
+    for c in cells {
+        let sojourns: Vec<f64> = c
+            .records
+            .iter()
+            .filter(|r| r.outcome.is_completed())
+            .map(|r| r.sojourn())
+            .collect();
+        if sojourns.is_empty() {
+            continue;
+        }
+        let p99 = Summary::of(&sojourns).percentile(99.0);
+        if p99 > limit {
+            violations.push(format!(
+                "{}@λ={} trace {}: p99 {:.3}s",
+                c.heuristic, c.rate, c.trace_i, p99
+            ));
+        }
+    }
+    if violations.is_empty() {
+        return Ok(());
+    }
+    Err(Error::Experiment(format!(
+        "p99 sojourn SLO {limit}s violated by {} cell(s): {}",
+        violations.len(),
+        violations.join("; ")
+    )))
 }
 
 /// JSONL export for traced sweeps: one line per request, tagged with its
@@ -642,6 +704,47 @@ mod tests {
         // untraced sweeps pay nothing
         let (_, empty) = run_sweep_traced(&spec, false);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn unbatteried_points_carry_neutral_battery_metrics() {
+        let mut spec = SweepSpec::paper_default(&["mm"], &[4.0]);
+        spec.traces = 2;
+        spec.tasks = 120;
+        let points = run_sweep(&spec);
+        let p = &points[0];
+        assert_eq!(p.final_soc, 1.0);
+        assert_eq!(p.depleted_frac, 0.0);
+        assert!(p.lifetime_s > 0.0, "lifetime = makespan without a battery");
+        assert!(p.tasks_per_joule > 0.0);
+    }
+
+    #[test]
+    fn battery_sweep_reports_depletion_metrics() {
+        let mut spec = SweepSpec::paper_default(&["mm", "felare"], &[5.0]);
+        spec.scenario = Scenario::paper_synthetic().with_battery(30.0, None);
+        spec.traces = 2;
+        spec.tasks = 300;
+        let points = run_sweep(&spec);
+        for p in &points {
+            assert_eq!(p.depleted_frac, 1.0, "{}: 30 J cannot survive", p.heuristic);
+            assert_eq!(p.final_soc, 0.0, "{}", p.heuristic);
+            assert!(p.lifetime_s > 0.0);
+            assert!(p.completion_rate < 1.0, "system off drops work");
+        }
+    }
+
+    #[test]
+    fn p99_gate_passes_generous_and_fails_tight_limits() {
+        let mut spec = SweepSpec::paper_default(&["mm"], &[3.0]);
+        spec.traces = 2;
+        spec.tasks = 150;
+        let (_, cells) = run_sweep_traced(&spec, true);
+        assert!(!cells.is_empty());
+        check_p99(1e9, &cells).unwrap();
+        let err = check_p99(1e-9, &cells).unwrap_err().to_string();
+        assert!(err.contains("p99 sojourn SLO"), "{err}");
+        assert!(err.contains("mm@"), "{err}");
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! * **Layer 3 (this crate)** — the HEC coordinator: the ELARE/FELARE
 //!   mapping heuristics and their MM/MSD/MMU baselines ([`sched`]), a
 //!   discrete-event simulator equivalent to the paper's E2C-Sim ([`sim`]),
-//!   a real-time serving coordinator ([`serve`]), and the experiment
-//!   harness that regenerates every paper table/figure ([`exp`]).
+//!   a real-time serving coordinator ([`serve`]), the battery subsystem
+//!   that makes the "energy-limited" premise a feedback loop ([`energy`]),
+//!   and the experiment harness that regenerates every paper table/figure
+//!   ([`exp`]).
 //! * **Layer 2** — JAX inference models for the ML task types
 //!   (`python/compile/model.py`), AOT-lowered to HLO text.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) those models
@@ -33,6 +35,7 @@
 //! println!("on-time completion: {:.1}%", 100.0 * result.collective_completion_rate());
 //! ```
 
+pub mod energy;
 pub mod error;
 pub mod exp;
 pub mod model;

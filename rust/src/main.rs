@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 
+use felare::energy::{BatterySpec, RechargeProfile};
 use felare::exp::sweep::EngineKind;
 use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
 use felare::model::machine::aws_machines;
@@ -117,6 +118,35 @@ fn positive_count(name: &str, value: &str) -> Result<usize> {
     Ok(n)
 }
 
+/// Parse the battery flags shared by `simulate`, `stress` and `serve`:
+/// `--battery J` (joules, positive; `inf` tracks the debit without ever
+/// depleting) plus an optional `--recharge "watts:dur,…"` harvest
+/// schedule.
+fn parse_battery(args: &Args) -> Result<Option<(f64, Option<RechargeProfile>)>> {
+    let capacity = match args.get("battery") {
+        Some(s) => {
+            let c: f64 = s
+                .parse()
+                .map_err(|_| fail!("--battery expects joules, got '{s}'"))?;
+            if !(c > 0.0) {
+                return Err(fail!("--battery must be positive joules (got {s})"));
+            }
+            Some(c)
+        }
+        None => None,
+    };
+    let recharge = args
+        .get("recharge")
+        .map(RechargeProfile::parse)
+        .transpose()
+        .map_err(|e| fail!("--recharge: {e}"))?;
+    match (capacity, recharge) {
+        (Some(c), r) => Ok(Some((c, r))),
+        (None, Some(_)) => Err(fail!("--recharge requires --battery")),
+        (None, None) => Ok(None),
+    }
+}
+
 /// Parse the closed-loop client flags shared by `simulate` and `serve`:
 /// `--clients N` (+ optional `--think-time S`, mean seconds, finite ≥ 0).
 fn parse_client_pool(args: &Args) -> Result<Option<ClientPool>> {
@@ -153,11 +183,16 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             .opt_optional("think-time", "closed-loop mean think time in seconds [default: 0.5]")
             .opt("seed", "42", "PRNG seed")
             .opt_optional("scenario", "paper | aws | stress:M:T | path/to/scenario.json")
+            .opt_optional("battery", "battery capacity in joules (depletion = system off)")
+            .opt_optional("recharge", "harvest schedule 'watts:dur,…' (requires --battery)")
             .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
             .flag("json", "emit the result as JSON"),
         raw,
     )?;
-    let sc = load_scenario(&args)?;
+    let mut sc = load_scenario(&args)?;
+    if let Some((cap, recharge)) = parse_battery(&args)? {
+        sc = sc.with_battery(cap, recharge);
+    }
     let n_tasks = positive_count("tasks", &args.str("tasks"))?;
     let seed = args.u64("seed")?;
     let pool = parse_client_pool(&args)?;
@@ -210,6 +245,20 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             result.mapping_events,
             result.makespan
         );
+        if sc.battery.is_some() {
+            match result.depleted_at {
+                Some(dead) => println!(
+                    "  battery DEPLETED at t={dead:.1}s (system off; {:.1} J drawn, {} tasks cancelled dead)",
+                    result.battery_spent, result.cancelled_systemoff
+                ),
+                None => println!(
+                    "  battery survived: {:.1} J drawn, final SoC {:.1}%  ({:.4} tasks/J)",
+                    result.battery_spent,
+                    100.0 * result.final_soc,
+                    result.tasks_per_joule()
+                ),
+            }
+        }
     }
     Ok(())
 }
@@ -226,6 +275,8 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
             .opt("load", "0.9", "offered load as a fraction of service capacity")
             .opt_optional("rate", "explicit arrival rate λ (overrides --load)")
             .opt("heuristic", "felare", "mapping heuristic")
+            .opt_optional("battery", "battery capacity in joules (depletion = system off)")
+            .opt_optional("recharge", "harvest schedule 'watts:dur,…' (requires --battery)")
             .opt("seed", "42", "PRNG seed")
             .flag("json", "emit the result as JSON"),
         raw,
@@ -233,7 +284,10 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
     let n_machines = args.usize("machines")?;
     let n_types = args.usize("types")?;
     let n_tasks = positive_count("tasks", &args.str("tasks"))?;
-    let sc = Scenario::stress(n_machines, n_types);
+    let mut sc = Scenario::stress(n_machines, n_types);
+    if let Some((cap, recharge)) = parse_battery(&args)? {
+        sc = sc.with_battery(cap, recharge);
+    }
     let capacity = sc.service_capacity();
     let rate = match args.get("rate") {
         Some(r) => r
@@ -288,6 +342,13 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
             result.mapper_overhead_us(),
             result.makespan,
         );
+        if let Some(dead) = result.depleted_at {
+            println!(
+                "  battery DEPLETED at t={dead:.1}s — lifetime {:.1}s, {:.1} J drawn",
+                result.lifetime_s(),
+                result.battery_spent
+            );
+        }
     }
     Ok(())
 }
@@ -308,7 +369,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("deadline-scale", "1.0", "scales Eq. 4 deadlines")
             .opt("speedup", "1.0", "fast-forward factor (modeled seconds per wall second)")
             .opt_optional("report-every", "modeled seconds between progress snapshots")
+            .opt_optional("battery", "battery capacity in joules (depletion = system off)")
+            .opt_optional("recharge", "harvest schedule 'watts:dur,…' (requires --battery)")
             .opt_optional("expect-completion", "fail unless completion rate ≥ this fraction")
+            .opt_optional("expect-p99", "fail unless the p99 completed sojourn ≤ this (seconds)")
             .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
             .opt("seed", "42", "PRNG seed")
             .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
@@ -365,6 +429,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         return Err(fail!("--rate conflicts with --phases; pass one or the other"));
     }
     let trace_out = args.get("trace-out").map(String::from);
+    let battery = parse_battery(&args)?.map(|(capacity, recharge)| BatterySpec {
+        capacity,
+        recharge,
+    });
 
     let common = ServeConfig {
         heuristic: args.str("heuristic"),
@@ -374,6 +442,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         time_scale: 1.0 / speedup,
         progress_every,
         record_traces: trace_out.is_some(),
+        battery,
         ..Default::default()
     };
     // the arrival process, minus the synthetic default rate (needs capacity)
@@ -440,6 +509,27 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             ));
         }
     }
+    if let Some(limit) = args.get("expect-p99") {
+        let limit: f64 = limit
+            .parse()
+            .map_err(|_| fail!("--expect-p99 expects seconds"))?;
+        if !(limit > 0.0 && limit.is_finite()) {
+            return Err(fail!("--expect-p99 must be positive and finite"));
+        }
+        let lat = report.latency_summary();
+        if lat.count == 0 {
+            return Err(fail!(
+                "p99 SLO {limit:.3}s cannot be met: no requests completed"
+            ));
+        }
+        let p99 = lat.percentile(99.0);
+        if p99 > limit {
+            return Err(fail!(
+                "p99 completed-request sojourn {p99:.3}s exceeds the {limit:.3}s SLO"
+            ));
+        }
+        println!("p99 sojourn {p99:.3}s within the {limit:.3}s SLO");
+    }
     Ok(())
 }
 
@@ -469,9 +559,11 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("traces", "traces per point (paper: 30)")
             .opt_optional("tasks", "tasks per trace (paper: 2000)")
             .opt("engine", "sim", "sweep engine: sim | serve (headless live driver)")
-            .opt_optional("rates", "rate grid override for `exp sweep`, e.g. 2,4,8")
-            .opt_optional("scenario", "`exp sweep` system: paper | aws | stress:M:T | path.json")
+            .opt_optional("rates", "rate grid override for `exp sweep`/`exp battery`, e.g. 2,4,8")
+            .opt_optional("scenario", "`exp sweep`/`exp battery` system: paper | aws | stress:M:T | path.json")
             .opt_optional("trace-out", "`exp sweep`: JSONL per-request trace export path")
+            .opt_optional("expect-p99", "`exp sweep`: fail unless every cell's p99 sojourn ≤ this (s)")
+            .opt_optional("batteries", "`exp battery`: capacity grid in joules, e.g. 400,800,1600")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -480,15 +572,24 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
-    // these knobs are consumed by `exp sweep` alone — passing them to a
-    // figure would silently run the default setup under a mislabeled flag
-    if name != "sweep" {
-        for flag in ["scenario", "rates", "trace-out"] {
-            if args.get(flag).is_some() {
-                return Err(fail!(
-                    "--{flag} applies to `felare exp sweep` only (got experiment '{name}')"
-                ));
-            }
+    // per-experiment knobs — passing them to another figure would silently
+    // run the default setup under a mislabeled flag
+    let allowed: &[(&str, &[&str])] = &[
+        ("scenario", &["sweep", "battery"]),
+        ("rates", &["sweep", "battery"]),
+        ("trace-out", &["sweep"]),
+        ("expect-p99", &["sweep"]),
+        ("batteries", &["battery"]),
+    ];
+    for (flag, exps) in allowed {
+        if args.get(flag).is_some() && !exps.contains(&name.as_str()) {
+            return Err(fail!(
+                "--{flag} applies to {} only (got experiment '{name}')",
+                exps.iter()
+                    .map(|e| format!("`felare exp {e}`"))
+                    .collect::<Vec<_>>()
+                    .join(" / ")
+            ));
         }
     }
     // --traces 0 / --tasks 0 (and unparsable values) used to be silently
@@ -516,6 +617,33 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         }
         None => None,
     };
+    let expect_p99 = match args.get("expect-p99") {
+        Some(s) => {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| fail!("--expect-p99 expects seconds, got '{s}'"))?;
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(fail!("--expect-p99 must be positive and finite (got {s})"));
+            }
+            Some(v)
+        }
+        None => None,
+    };
+    let batteries = match args.get("batteries") {
+        Some(_) => {
+            let bs = args.f64_list("batteries")?;
+            if bs.is_empty() {
+                return Err(fail!("--batteries needs at least one capacity"));
+            }
+            for &b in &bs {
+                if !(b > 0.0) {
+                    return Err(fail!("--batteries entries must be positive joules (got {b})"));
+                }
+            }
+            Some(bs)
+        }
+        None => None,
+    };
     let opts = ExpOpts {
         quick: args.is_set("quick"),
         traces,
@@ -525,6 +653,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         rates,
         scenario: args.get("scenario").map(String::from),
         trace_out: args.get("trace-out").map(String::from),
+        expect_p99,
+        batteries,
     };
     run_by_name(&name, &opts)?;
     Ok(())

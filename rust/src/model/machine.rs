@@ -27,9 +27,17 @@ pub struct MachineSpec {
     pub dyn_power: f64,
     /// Power while idle (paper: 0.05·p for all four synthetic machines).
     pub idle_power: f64,
-    /// Execution-time multiplier for the PJRT real-execution mode: actual
-    /// wall time of an inference × speed = modeled time on this machine.
-    /// 1.0 for the synthetic scenario (EET comes from Table I instead).
+    /// Execution-time multiplier for the **PJRT real-execution mode
+    /// only**: actual wall time of an inference × speed = modeled time on
+    /// this machine (`runtime::PjrtBackend`, `runtime::profile_eet`).
+    ///
+    /// Audited, pinned behavior: every synthetic path — the discrete-event
+    /// simulator, the headless serve driver and `ServeBackend::Synthetic`
+    /// — takes heterogeneity **exclusively** from the EET matrix and
+    /// ignores `speed`; scaling EET sampling by it too would double-apply
+    /// the machine's relative speed (the AWS preset's EET columns already
+    /// encode the GPU being faster). Regression-tested in
+    /// `rust/tests/edge_cases.rs::synthetic_engines_ignore_machine_speed`.
     pub speed: f64,
 }
 

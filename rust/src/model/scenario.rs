@@ -4,6 +4,7 @@
 //! JSON files (`felare simulate --scenario path.json`) with two built-in
 //! presets matching the paper's evaluation setups.
 
+use crate::energy::{BatterySpec, RechargeProfile};
 use crate::model::cvb::{generate as cvb_generate, CvbParams};
 use crate::model::eet::{paper_table1, EetMatrix};
 use crate::model::machine::{aws_machines, paper_machines, MachineSpec};
@@ -36,9 +37,17 @@ pub struct Scenario {
     pub rate_window: RateWindow,
     /// CV of per-task execution-time factors.
     pub cv_exec: f64,
-    /// Initial battery energy E0. `None` ⇒ auto: 2 · Σ_j p_j^dyn · T_trace
-    /// at run time (DESIGN.md); wasted-energy percentages divide by this.
+    /// Initial battery energy E0 in joules. `None` ⇒ unbatteried: the
+    /// wasted-% denominator falls back to 2 · Σ_j p_j^dyn · T_trace at run
+    /// time (DESIGN.md) and no depletion semantics apply. `Some(E0)` arms
+    /// the battery subsystem: every engine debits dynamic + idle energy
+    /// from the shared store and the run ends (system off) when it hits
+    /// zero (`energy::BatteryState`). `Some(f64::INFINITY)` tracks the
+    /// debit without ever depleting — bit-identical to `None` results.
     pub battery: Option<f64>,
+    /// Optional recharge/harvest schedule (requires `battery`); cycled for
+    /// the whole run (`--recharge "watts:dur,…"`).
+    pub recharge: Option<RechargeProfile>,
 }
 
 impl Scenario {
@@ -56,6 +65,7 @@ impl Scenario {
             rate_window: RateWindow::Cumulative,
             cv_exec: 0.1,
             battery: None,
+            recharge: None,
         }
     }
 
@@ -79,6 +89,7 @@ impl Scenario {
             rate_window: RateWindow::Cumulative,
             cv_exec: 0.1,
             battery: None,
+            recharge: None,
         }
     }
 
@@ -115,6 +126,7 @@ impl Scenario {
             rate_window: RateWindow::Cumulative,
             cv_exec: 0.1,
             battery: None,
+            recharge: None,
         }
     }
 
@@ -172,6 +184,24 @@ impl Scenario {
         }
     }
 
+    /// The armed battery, if any. Engines build an
+    /// [`energy::BatteryState`](crate::energy::BatteryState) from this;
+    /// `None` (unbatteried) keeps the classic infinite-energy semantics.
+    pub fn battery_spec(&self) -> Option<BatterySpec> {
+        self.battery.map(|capacity| BatterySpec {
+            capacity,
+            recharge: self.recharge.clone(),
+        })
+    }
+
+    /// Arm the battery subsystem: capacity in joules plus an optional
+    /// recharge schedule (the `--battery J [--recharge …]` CLI path).
+    pub fn with_battery(mut self, capacity: f64, recharge: Option<RechargeProfile>) -> Scenario {
+        self.battery = Some(capacity);
+        self.recharge = recharge;
+        self
+    }
+
     /// Swap in a different EET (CVB draw or profiled) keeping everything else.
     pub fn with_eet(mut self, eet: EetMatrix) -> Scenario {
         assert_eq!(eet.n_types(), self.task_type_names.len());
@@ -198,6 +228,11 @@ impl Scenario {
         }
         if self.fairness_factor < 0.0 {
             return Err("fairness_factor must be >= 0".into());
+        }
+        if let Some(spec) = self.battery_spec() {
+            spec.validate()?;
+        } else if self.recharge.is_some() {
+            return Err("recharge schedule requires a battery capacity".into());
         }
         Ok(())
     }
@@ -231,6 +266,9 @@ impl Scenario {
         };
         if let Some(b) = self.battery {
             j = j.set("battery", b);
+        }
+        if let Some(r) = &self.recharge {
+            j = j.set("recharge", r.to_spec());
         }
         j
     }
@@ -290,6 +328,11 @@ impl Scenario {
             rate_window,
             cv_exec: j.get("cv_exec").and_then(|v| v.as_f64()).unwrap_or(0.1),
             battery: j.get("battery").and_then(|v| v.as_f64()),
+            recharge: j
+                .get("recharge")
+                .and_then(|v| v.as_str())
+                .map(RechargeProfile::parse)
+                .transpose()?,
         };
         sc.validate()?;
         Ok(sc)
@@ -388,9 +431,34 @@ mod tests {
         let mut s = Scenario::aws_two_app();
         s.rate_window = RateWindow::Sliding(64);
         s.battery = Some(5e4);
+        s.recharge = Some(RechargeProfile::parse("2:300,0:300").unwrap());
         let back = Scenario::from_json(&s.to_json()).unwrap();
         assert_eq!(back.rate_window, RateWindow::Sliding(64));
         assert_eq!(back.battery, Some(5e4));
+        assert_eq!(back.recharge, s.recharge);
+    }
+
+    #[test]
+    fn battery_spec_and_validation() {
+        let mut s = Scenario::paper_synthetic();
+        assert!(s.battery_spec().is_none(), "unbatteried by default");
+        s = s.with_battery(500.0, Some(RechargeProfile::parse("1:60").unwrap()));
+        assert!(s.validate().is_ok());
+        let spec = s.battery_spec().unwrap();
+        assert_eq!(spec.capacity, 500.0);
+        assert!(spec.recharge.is_some());
+        // recharge without a battery is a config error
+        let mut bad = Scenario::paper_synthetic();
+        bad.recharge = Some(RechargeProfile::parse("1:60").unwrap());
+        assert!(bad.validate().is_err());
+        // non-positive capacity rejected
+        let mut bad = Scenario::paper_synthetic();
+        bad.battery = Some(0.0);
+        assert!(bad.validate().is_err());
+        // infinite capacity is valid (tracked, never depletes)
+        let mut inf = Scenario::paper_synthetic();
+        inf.battery = Some(f64::INFINITY);
+        assert!(inf.validate().is_ok());
     }
 
     #[test]

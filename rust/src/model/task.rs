@@ -63,6 +63,11 @@ pub enum CancelReason {
     VictimDropped,
     /// Deadline passed while waiting (deferred) in the arriving queue.
     DeadlineExpired,
+    /// The battery depleted before the task could run: the system shut off
+    /// with the task waiting (arriving queue, local queue, or not yet
+    /// arrived). No dynamic energy was ever spent on it
+    /// (`energy::BatteryState` semantics).
+    SystemOff,
 }
 
 /// Terminal state of a task.

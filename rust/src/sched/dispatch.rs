@@ -34,10 +34,20 @@
 //! in the same order (`rust/tests/dispatch_equivalence.rs` additionally
 //! proves a live-style pop/complete driver reproduces the simulator's
 //! exact action sequence through this layer).
+//!
+//! # Energy budget
+//!
+//! On battery-powered systems the engine reports the battery's state of
+//! charge before each event ([`MappingState::set_soc`]). The installed
+//! [`EnergyPolicy`] (declared by the heuristic, inert by default) may then
+//! shed arriving tasks at admission — before the heuristic plans — and the
+//! SoC is exposed to the heuristic itself through
+//! [`SchedView::soc`](crate::sched::SchedView::soc) (`felare-eb` reads it).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::energy::EnergyPolicy;
 use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
@@ -65,6 +75,9 @@ pub enum DropKind {
     MapperDropped,
     /// Evicted from a local queue (`Action::VictimDrop`).
     VictimDropped,
+    /// The battery depleted with the task still waiting (local queue or
+    /// arriving queue) — only [`MappingState::drain_system_off`] emits it.
+    SystemOff,
 }
 
 impl DropKind {
@@ -76,6 +89,7 @@ impl DropKind {
             DropKind::Expired => CancelReason::DeadlineExpired,
             DropKind::MapperDropped => CancelReason::MapperDropped,
             DropKind::VictimDropped => CancelReason::VictimDropped,
+            DropKind::SystemOff => CancelReason::SystemOff,
         }
     }
 
@@ -87,6 +101,7 @@ impl DropKind {
             DropKind::Expired => TraceOutcome::Expired,
             DropKind::MapperDropped => TraceOutcome::MapperDropped,
             DropKind::VictimDropped => TraceOutcome::VictimDropped,
+            DropKind::SystemOff => TraceOutcome::SystemOff,
         }
     }
 }
@@ -117,6 +132,13 @@ pub struct MappingStats {
 /// serving coordinator (module docs).
 pub struct MappingState {
     heuristic: Box<dyn MappingHeuristic>,
+    /// The heuristic's energy-budget admission policy (inert for every
+    /// non-battery-aware heuristic), consulted with `soc` before each
+    /// mapping event.
+    energy_policy: Box<dyn EnergyPolicy>,
+    /// Battery state of charge reported by the engine before each mapping
+    /// event ([`Self::set_soc`]); `None` = unbatteried.
+    soc: Option<f64>,
     eet: EetMatrix,
     dyn_powers: Vec<f64>,
     queue_slots: usize,
@@ -157,8 +179,12 @@ impl MappingState {
             rates: Vec::with_capacity(eet.n_types()),
             fairness_factor: 0.0,
         };
+        let mut energy_policy = heuristic.energy_policy();
+        energy_policy.init(&eet, &dyn_powers);
         Self {
             heuristic,
+            energy_policy,
+            soc: None,
             eet,
             dyn_powers,
             queue_slots,
@@ -187,11 +213,28 @@ impl MappingState {
         }
         self.tracker.reset();
         self.action_log.clear();
+        self.soc = None;
     }
 
-    /// Swap the mapping heuristic, keeping all state and buffers.
+    /// Swap the mapping heuristic, keeping all state and buffers. The
+    /// incoming heuristic's energy policy replaces the current one.
     pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        let mut energy_policy = heuristic.energy_policy();
+        energy_policy.init(&self.eet, &self.dyn_powers);
+        self.energy_policy = energy_policy;
         self.heuristic = heuristic;
+    }
+
+    /// Report the battery state of charge the next mapping events plan
+    /// against (`None` = unbatteried). Engines refresh this whenever the
+    /// battery advances; it feeds both the admission policy and
+    /// [`SchedView::soc`].
+    pub fn set_soc(&mut self, soc: Option<f64>) {
+        self.soc = soc;
+    }
+
+    pub fn soc(&self) -> Option<f64> {
+        self.soc
     }
 
     pub fn heuristic_name(&self) -> &'static str {
@@ -272,6 +315,30 @@ impl MappingState {
         }
     }
 
+    /// System-off sweep over the mapping-side state (battery depletion):
+    /// every queued-but-never-started task (machine order, FCFS within a
+    /// queue) and then every arriving-queue task is reported through the
+    /// sink as a [`DropKind::SystemOff`] drop, with fairness accounted
+    /// internally. One shared copy for all three engines — the sim, the
+    /// headless serve driver and the live coordinator must cancel the same
+    /// tasks in the same order for their shutdowns to stay bit-identical.
+    pub fn drain_system_off(&mut self, on_drop: &mut dyn FnMut(Dropped)) {
+        for m in 0..self.queues.len() {
+            while let Some(q) = self.queues[m].pop_front() {
+                self.tracker.on_terminal(q.task.type_id, false);
+                on_drop(Dropped {
+                    kind: DropKind::SystemOff,
+                    task: q.task,
+                    mapped: Some((MachineId(m), q.mapped)),
+                });
+            }
+        }
+        for task in self.arriving.drain(..) {
+            self.tracker.on_terminal(task.type_id, false);
+            on_drop(Dropped { kind: DropKind::SystemOff, task, mapped: None });
+        }
+    }
+
     /// One mapping event (paper §III: fired on every task arrival and
     /// every task completion): expire the arriving queue, snapshot the
     /// machines, run the heuristic, apply its actions. Mapper-side drops
@@ -285,6 +352,8 @@ impl MappingState {
         // split the borrow: every field independently mutable
         let MappingState {
             heuristic,
+            energy_policy,
+            soc,
             eet,
             dyn_powers,
             queue_slots,
@@ -310,6 +379,22 @@ impl MappingState {
                 true
             }
         });
+
+        // energy-budget admission shedding: the heuristic's policy may
+        // refuse tasks outright at low SoC (reported as proactive mapper
+        // drops). One branch on the unbatteried / inert-policy path.
+        if energy_policy.active(*soc) {
+            let s = soc.unwrap_or(1.0);
+            arriving.retain(|task| {
+                if energy_policy.shed(s, task) {
+                    tracker.on_terminal(task.type_id, false);
+                    on_drop(Dropped { kind: DropKind::MapperDropped, task: *task, mapped: None });
+                    false
+                } else {
+                    true
+                }
+            });
+        }
 
         // refresh the recycled mapper-visible snapshots (expected
         // availability: running task's expected end, optimistically clamped
@@ -340,6 +425,7 @@ impl MappingState {
             None
         };
         let mut view = SchedView::new(now, eet, std::mem::take(snapshots), arriving, fair_snap);
+        view.soc = *soc;
         let t0 = Instant::now();
         heuristic.map(&mut view);
         let mapper_dt = t0.elapsed().as_secs_f64();
@@ -500,6 +586,68 @@ mod tests {
         st.mapping_event(0.0, &mut |_| {});
         assert_eq!(st.action_log.len(), 1);
         assert!(matches!(st.action_log[0], Action::Assign { task_idx: 0, .. }));
+    }
+
+    #[test]
+    fn system_off_drains_queued_then_arriving_in_order() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "mm");
+        // two tasks mapped into local queues, one still arriving
+        st.push_arrival(task(0, 0, 0.0, 100.0));
+        st.push_arrival(task(1, 1, 0.0, 100.0));
+        st.mapping_event(0.5, &mut |_| {});
+        assert_eq!(st.queued_total(), 2);
+        st.push_arrival(task(2, 2, 1.0, 100.0));
+        let mut seen = Vec::new();
+        st.drain_system_off(&mut |d: Dropped| {
+            assert_eq!(d.kind, DropKind::SystemOff);
+            assert_eq!(d.kind.cancel_reason(), crate::model::task::CancelReason::SystemOff);
+            assert_eq!(d.kind.trace_outcome(), crate::sched::trace::TraceOutcome::SystemOff);
+            seen.push((d.task.id, d.mapped.is_some()));
+        });
+        assert_eq!(seen.len(), 3, "every waiting task swept");
+        assert_eq!(st.queued_total(), 0);
+        assert_eq!(st.arriving_len(), 0);
+        // queued tasks (with machine+mapped context) come before arriving
+        assert!(seen[0].1 && seen[1].1, "queued entries carry mapping context");
+        assert_eq!(seen[2], (2, false), "arriving task swept last, unmapped");
+    }
+
+    #[test]
+    fn default_policy_never_sheds_and_soc_resets() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "felare");
+        st.set_soc(Some(0.01)); // nearly empty battery
+        st.push_arrival(task(0, 0, 0.0, 100.0));
+        let mut drops = 0;
+        st.mapping_event(0.0, &mut |_| drops += 1);
+        assert_eq!(drops, 0, "inert policy: no shedding even at 1% SoC");
+        assert_eq!(st.queued_total(), 1);
+        assert_eq!(st.soc(), Some(0.01));
+        st.reset();
+        assert_eq!(st.soc(), None, "reset clears the SoC");
+    }
+
+    #[test]
+    fn eb_policy_sheds_expensive_types_at_low_soc() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "felare-eb");
+        st.set_soc(Some(1e-9)); // effectively empty: every type sheds
+        for ty in 0..4 {
+            st.push_arrival(task(ty as u64, ty, 0.0, 100.0));
+        }
+        let mut shed = Vec::new();
+        st.mapping_event(0.0, &mut |d: Dropped| shed.push(d.kind));
+        assert_eq!(shed.len(), 4, "all types shed at empty battery");
+        assert!(shed.iter().all(|k| *k == DropKind::MapperDropped));
+        assert_eq!(st.queued_total(), 0);
+        // full battery: nothing sheds
+        st.set_soc(Some(1.0));
+        st.push_arrival(task(9, 0, 0.0, 100.0));
+        let mut drops = 0;
+        st.mapping_event(0.0, &mut |_| drops += 1);
+        assert_eq!(drops, 0);
+        assert_eq!(st.queued_total(), 1);
     }
 
     #[test]

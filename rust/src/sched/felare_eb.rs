@@ -1,0 +1,270 @@
+//! FELARE-EB — energy-budget-aware FELARE: the battery subsystem's
+//! scheduling layer.
+//!
+//! The paper's FELARE plans for an energy-*aware* but energy-*unlimited*
+//! system. With a finite battery ([`energy`](crate::energy)) the right
+//! latency-vs-energy weighting depends on how much charge is left, so this
+//! heuristic interpolates by state of charge (read from
+//! [`SchedView::soc`]):
+//!
+//! * **SoC ≥ `low_soc`** (default 0.5) — *paper mode*: delegates verbatim
+//!   to [`Felare`], so a full (or absent) battery reproduces the paper's
+//!   heuristic action for action;
+//! * **SoC < `low_soc`** — *energy-lean mode*: fairness prioritisation and
+//!   victim dropping (which churns already-spent mapping work) switch off,
+//!   and assignments are restricted by a per-type **energy cap** that
+//!   tightens as the battery drains. With `frac = SoC / low_soc`, a
+//!   machine `j` is admissible for type `i` iff its static energy
+//!   `p_j · e_ij` satisfies
+//!
+//!   ```text
+//!   p_j · e_ij ≤ min_k(p_k · e_ik) + frac · (max_k(p_k · e_ik) − min_k(p_k · e_ik))
+//!   ```
+//!
+//!   — at `frac → 1` every machine qualifies (ELARE semantics), at
+//!   `frac → 0` only each type's most efficient machine does: tasks wait
+//!   (or shed) rather than burn premium joules on inefficient hardware.
+//!
+//! Below `shed_soc` (default 0.25) the dispatch layer additionally sheds
+//! the most expensive task types at admission through the
+//! [`SocShedding`] policy this heuristic installs (see
+//! [`MappingHeuristic::energy_policy`]) — spending the last joules where
+//! they buy the most completions.
+//!
+//! Everything here is a deterministic function of the view + SoC, so
+//! battery-constrained runs stay bit-identical across the sim and serve
+//! engines.
+
+use crate::energy::{EnergyPolicy, SocShedding};
+use crate::model::machine::MachineId;
+use crate::model::task::TaskTypeId;
+use crate::sched::elare::drop_or_defer_infeasible;
+use crate::sched::feasibility::{
+    assign_winners_per_machine, completion_time, expected_energy, is_feasible, Pair,
+};
+use crate::sched::felare::Felare;
+use crate::sched::{MappingHeuristic, SchedView};
+
+#[derive(Debug)]
+pub struct FelareEb {
+    inner: Felare,
+    /// SoC below which energy-lean mode ramps in (paper FELARE above it).
+    pub low_soc: f64,
+    /// SoC below which the [`SocShedding`] admission policy activates.
+    pub shed_soc: f64,
+}
+
+impl Default for FelareEb {
+    fn default() -> Self {
+        Self { inner: Felare::default(), low_soc: 0.5, shed_soc: 0.25 }
+    }
+}
+
+impl MappingHeuristic for FelareEb {
+    fn name(&self) -> &'static str {
+        "felare-eb"
+    }
+
+    fn wants_fairness(&self) -> bool {
+        true
+    }
+
+    fn energy_policy(&self) -> Box<dyn EnergyPolicy> {
+        Box::new(SocShedding::new(self.shed_soc))
+    }
+
+    fn map(&mut self, view: &mut SchedView) {
+        // full battery (or unbatteried system) ⇒ exactly the paper FELARE
+        let soc = view.soc.unwrap_or(1.0);
+        if soc >= self.low_soc {
+            self.inner.map(view);
+            return;
+        }
+        let frac = (soc / self.low_soc).clamp(0.0, 1.0);
+        energy_capped_rounds(view, frac);
+        drop_or_defer_infeasible(view);
+    }
+}
+
+/// ELARE-style phase-I/phase-II fixpoint restricted to machines under the
+/// SoC-interpolated per-type energy cap (module docs).
+fn energy_capped_rounds(view: &mut SchedView, frac: f64) {
+    let n_types = view.eet.n_types();
+    let n_machines = view.machines.len();
+    // per-type admissible-energy cap: min + frac · (max − min) over the
+    // static costs p_j · e_ij
+    let mut cap = Vec::with_capacity(n_types);
+    for ty in 0..n_types {
+        let mut min_c = f64::INFINITY;
+        let mut max_c = 0.0_f64;
+        for m in 0..n_machines {
+            let c = view.machines[m].dyn_power * view.eet.get(TaskTypeId(ty), MachineId(m));
+            min_c = min_c.min(c);
+            max_c = max_c.max(c);
+        }
+        cap.push(min_c + frac * (max_c - min_c));
+    }
+
+    let mut pairs: Vec<Pair> = Vec::new();
+    loop {
+        // phase-I under the cap: per task, the min-energy feasible machine
+        // among the admissible ones
+        pairs.clear();
+        for (idx, task) in view.unconsumed() {
+            let mut best: Option<Pair> = None;
+            for j in 0..n_machines {
+                let j = MachineId(j);
+                if !view.has_free_slot(j) {
+                    continue;
+                }
+                let e = view.eet.get(task.type_id, j);
+                if view.machines[j.0].dyn_power * e > cap[task.type_id.0] {
+                    continue; // too expensive for this state of charge
+                }
+                let s = view.start_time(j);
+                if !is_feasible(s, e, task.deadline) {
+                    continue;
+                }
+                let ec = expected_energy(view.machines[j.0].dyn_power, s, e, task.deadline);
+                let c = completion_time(s, e, task.deadline);
+                let cand = Pair { task_idx: idx, machine: j, completion: c, energy: ec };
+                if best.map_or(true, |b| ec < b.energy) {
+                    best = Some(cand);
+                }
+            }
+            if let Some(p) = best {
+                pairs.push(p);
+            }
+        }
+        if pairs.is_empty() {
+            break;
+        }
+        // phase-II: ELARE's energy-first winner per machine
+        let n = assign_winners_per_machine(view, &pairs, |a, b, _| {
+            a.energy < b.energy || (a.energy == b.energy && a.completion < b.completion)
+        });
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eet::paper_table1;
+    use crate::sched::fairness::FairnessSnapshot;
+    use crate::sched::testutil::{idle_snapshots, mk_task};
+    use crate::sched::Action;
+
+    fn snap(rates: &[f64]) -> FairnessSnapshot {
+        FairnessSnapshot {
+            rates: rates.iter().map(|&r| Some(r)).collect(),
+            fairness_factor: 1.0,
+        }
+    }
+
+    fn assigns(v: &SchedView) -> Vec<(usize, usize)> {
+        v.actions()
+            .iter()
+            .filter_map(|a| match a {
+                Action::Assign { task_idx, machine } => Some((*task_idx, machine.0)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_battery_matches_paper_felare_exactly() {
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]); // T3 suffered
+        let tasks = vec![mk_task(0, 0, 0.0, 1.0), mk_task(1, 2, 0.0, 1.0)];
+        for soc in [None, Some(1.0), Some(0.5)] {
+            let mut v1 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, Some(&rates));
+            v1.soc = soc;
+            FelareEb::default().map(&mut v1);
+            let mut v2 = SchedView::new(0.0, &eet, idle_snapshots(0.0, 1), &tasks, Some(&rates));
+            Felare::default().map(&mut v2);
+            assert_eq!(v1.actions(), v2.actions(), "soc {soc:?} must be paper FELARE");
+        }
+    }
+
+    #[test]
+    fn low_soc_disables_victim_dropping() {
+        // the setup from felare::tests::victim_dropping_frees_best_machine,
+        // but at low SoC no eviction happens — the suffered task defers.
+        use crate::sched::QueuedInfo;
+        let eet = paper_table1();
+        let rates = snap(&[0.20, 0.60, 0.15, 0.45]);
+        let tasks = vec![mk_task(10, 2, 0.0, 1.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].queued = vec![
+            QueuedInfo { task_id: 1, type_id: TaskTypeId(0), expected_exec: 0.736 },
+            QueuedInfo { task_id: 2, type_id: TaskTypeId(0), expected_exec: 0.736 },
+        ];
+        snaps[3].avail = 1.472;
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, Some(&rates));
+        v.soc = Some(0.2);
+        FelareEb::default().map(&mut v);
+        assert!(
+            !v.actions().iter().any(|a| matches!(a, Action::VictimDrop { .. })),
+            "energy-lean mode never evicts"
+        );
+        assert!(assigns(&v).is_empty(), "m4 full, other machines infeasible: defer");
+        assert_eq!(v.deferrals, 1);
+    }
+
+    #[test]
+    fn near_zero_soc_admits_only_the_most_efficient_machine() {
+        // T1's cheapest machine is m4 (1.5 × 0.736 = 1.104). At SoC ≈ 0
+        // with m4's queue full, the task must defer rather than take a
+        // pricier feasible machine.
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].free_slots = 0; // m4 unavailable
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        v.soc = Some(1e-9);
+        FelareEb::default().map(&mut v);
+        assert!(assigns(&v).is_empty(), "premium machines refused at empty battery");
+        assert_eq!(v.deferrals, 1);
+
+        // with m4 free it is taken as usual
+        let mut v = SchedView::new(0.0, &eet, idle_snapshots(0.0, 2), &tasks, None);
+        v.soc = Some(1e-9);
+        FelareEb::default().map(&mut v);
+        assert_eq!(assigns(&v), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn cap_interpolates_between_efficient_only_and_all_machines() {
+        // same blocked-m4 setup; just below low_soc the cap admits every
+        // machine, so the task lands on the next-cheapest feasible one.
+        let eet = paper_table1();
+        let tasks = vec![mk_task(0, 0, 0.0, 100.0)];
+        let mut snaps = idle_snapshots(0.0, 2);
+        snaps[3].free_slots = 0;
+        let mut v = SchedView::new(0.0, &eet, snaps, &tasks, None);
+        v.soc = Some(0.499); // frac ≈ 0.998: all machines admissible
+        FelareEb::default().map(&mut v);
+        // T1 energies: m1 3.581, m2 5.088, m3 7.846 → m1
+        assert_eq!(assigns(&v), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn declares_shedding_policy_and_fairness() {
+        let h = FelareEb::default();
+        assert_eq!(h.name(), "felare-eb");
+        assert!(h.wants_fairness());
+        let p = h.energy_policy();
+        assert_eq!(p.name(), "soc-shedding");
+        assert!(p.active(Some(0.1)));
+        assert!(!p.active(None));
+    }
+
+    const _: () = {
+        const fn assert_send<T: Send>() {}
+        assert_send::<FelareEb>();
+    };
+}

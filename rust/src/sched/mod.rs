@@ -23,12 +23,14 @@ pub mod elare;
 pub mod fairness;
 pub mod feasibility;
 pub mod felare;
+pub mod felare_eb;
 pub mod mm;
 pub mod mmu;
 pub mod msd;
 pub mod registry;
 pub mod trace;
 
+use crate::energy::{EnergyPolicy, NoEnergyPolicy};
 use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
@@ -90,6 +92,10 @@ pub struct SchedView<'a> {
     /// Per-type completion rates; `None` when the engine does not track
     /// fairness (plain ELARE / baselines don't read it).
     pub rates: Option<&'a FairnessSnapshot>,
+    /// Battery state of charge in [0, 1]; `None` on unbatteried systems.
+    /// Filled by the dispatch layer; SoC-aware heuristics (`felare-eb`)
+    /// read it, everyone else ignores it.
+    pub soc: Option<f64>,
     consumed: Vec<bool>,
     actions: Vec<Action>,
     /// Count of tasks left unassigned-but-feasible-later (deferred), for
@@ -106,7 +112,17 @@ impl<'a> SchedView<'a> {
         rates: Option<&'a FairnessSnapshot>,
     ) -> Self {
         let consumed = vec![false; tasks.len()];
-        Self { now, eet, machines, tasks, rates, consumed, actions: Vec::new(), deferrals: 0 }
+        Self {
+            now,
+            eet,
+            machines,
+            tasks,
+            rates,
+            soc: None,
+            consumed,
+            actions: Vec::new(),
+            deferrals: 0,
+        }
     }
 
     /// Arriving-queue tasks not yet assigned/dropped in this event.
@@ -208,6 +224,15 @@ pub trait MappingHeuristic: Send {
     /// heuristic (only FELARE reads it; tracking costs a little time).
     fn wants_fairness(&self) -> bool {
         false
+    }
+
+    /// Energy-budget admission policy to install into the dispatch layer
+    /// alongside this heuristic. The dispatch layer consults it with the
+    /// battery SoC *before* every mapping event (shed tasks never reach
+    /// [`MappingHeuristic::map`]). Inert by default, so non-battery-aware
+    /// heuristics stay bit-identical to their pre-battery behavior.
+    fn energy_policy(&self) -> Box<dyn EnergyPolicy> {
+        Box::new(NoEnergyPolicy)
     }
 
     /// Execute one mapping event against the planning view.

@@ -5,6 +5,7 @@ use crate::model::Scenario;
 use crate::sched::adaptive::Adaptive;
 use crate::sched::elare::Elare;
 use crate::sched::felare::Felare;
+use crate::sched::felare_eb::FelareEb;
 use crate::sched::mm::Mm;
 use crate::sched::mmu::Mmu;
 use crate::sched::msd::Msd;
@@ -14,8 +15,9 @@ use crate::sched::MappingHeuristic;
 pub const ALL_HEURISTICS: [&str; 5] = ["mm", "msd", "mmu", "elare", "felare"];
 
 /// Extension heuristics beyond the paper's evaluation: the §VIII
-/// future-work adaptive switcher and the victim-dropping ablation variant.
-pub const EXTENDED_HEURISTICS: [&str; 2] = ["adaptive", "felare-novd"];
+/// future-work adaptive switcher, the victim-dropping ablation variant,
+/// and the battery-aware SoC interpolation (`exp battery` runs it).
+pub const EXTENDED_HEURISTICS: [&str; 3] = ["adaptive", "felare-novd", "felare-eb"];
 
 /// Build a heuristic by name. `scenario` is accepted for future
 /// heuristics that need static configuration; the current seven don't.
@@ -30,6 +32,7 @@ pub fn heuristic_by_name(
         "elare" | "ee" => Ok(Box::new(Elare::default())), // paper's figures label ELARE "EE"
         "felare" => Ok(Box::new(Felare::default())),
         "felare-novd" => Ok(Box::new(Felare::without_victim_dropping())),
+        "felare-eb" => Ok(Box::new(FelareEb::default())),
         "adaptive" => Ok(Box::new(Adaptive::default())),
         other => Err(format!(
             "unknown heuristic '{other}' (expected one of {}, {})",

@@ -46,6 +46,9 @@ pub enum TraceOutcome {
     VictimDropped,
     /// Still in the arriving queue at shutdown.
     Unmapped,
+    /// The battery depleted before the task could start: it was waiting
+    /// (mapped or not) or had not even arrived when the system shut off.
+    SystemOff,
 }
 
 impl TraceOutcome {
@@ -58,6 +61,7 @@ impl TraceOutcome {
             TraceOutcome::MapperDropped => "mapper_dropped",
             TraceOutcome::VictimDropped => "victim_dropped",
             TraceOutcome::Unmapped => "unmapped",
+            TraceOutcome::SystemOff => "system_off",
         }
     }
 
@@ -150,6 +154,9 @@ impl TraceRecord {
             TraceOutcome::Expired | TraceOutcome::MapperDropped | TraceOutcome::Unmapped => {
                 self.mapped.is_none() && self.started.is_none()
             }
+            // system-off kills waiting work wherever it sat: mapped-but-
+            // queued entries and unmapped (even not-yet-arrived) requests
+            TraceOutcome::SystemOff => self.started.is_none(),
         };
         if !phases_ok {
             return fail(format!("phases inconsistent with outcome {:?}", self.outcome));

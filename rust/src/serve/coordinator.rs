@@ -50,6 +50,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::energy::{BatterySpec, BatteryState};
 use crate::error::{Error, Result};
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::scenario::RateWindow;
@@ -115,6 +116,11 @@ pub struct ServeConfig {
     /// request (exposed as `ServeReport::traces`; `--trace-out` exports
     /// them as JSONL and the report renders a latency breakdown).
     pub record_traces: bool,
+    /// Shared battery for the session (`--battery J [--recharge …]`).
+    /// `None` falls back to the synthetic scenario's battery, if any;
+    /// depletion shuts the system off mid-session (waiting requests
+    /// cancel, generation stops, workers drain out).
+    pub battery: Option<BatterySpec>,
 }
 
 impl Default for ServeConfig {
@@ -136,6 +142,7 @@ impl Default for ServeConfig {
             time_scale: 1.0,
             progress_every: None,
             record_traces: false,
+            battery: None,
         }
     }
 }
@@ -153,6 +160,9 @@ struct Plan {
     reg_scenario: Scenario,
     worker_backend: WorkerBackend,
     backend_name: &'static str,
+    /// Session battery: explicit config wins, else the synthetic
+    /// scenario's (PJRT sessions only get the explicit one).
+    battery: Option<BatterySpec>,
 }
 
 /// Per-worker backend recipe (each thread builds its own instance;
@@ -192,6 +202,15 @@ struct SharedState {
     /// Closed-loop only: clients whose request reached a terminal state
     /// since the generator last looked, with the release time.
     released: Vec<(u32, f64)>,
+    /// The session battery (`None` = unbatteried). Advanced under the lock
+    /// at every coordination point; depletion triggers [`Self::shutdown`].
+    battery: Option<BatteryState>,
+    /// Set to the depletion instant once the battery hits zero: waiting
+    /// work is cancelled, generation stops, workers drain out. In-flight
+    /// inferences run to their scheduled release and are recorded normally
+    /// (live mode realises modeled time as wall sleep; aborting them
+    /// mid-sleep would distort the energy account more than finishing).
+    system_off: Option<f64>,
 }
 
 impl SharedState {
@@ -232,11 +251,58 @@ impl SharedState {
         }
     }
 
+    /// Advance the shared battery to `now` under the lock. On the first
+    /// zero crossing the system shuts off; otherwise the dispatch layer
+    /// learns the current SoC.
+    fn advance_battery(&mut self, now: Time) {
+        let crossed = match self.battery.as_mut() {
+            None => return,
+            Some(bat) => bat.advance(now),
+        };
+        match crossed {
+            Some(dead) => {
+                if self.system_off.is_none() {
+                    self.shutdown(dead);
+                }
+            }
+            None => {
+                let soc = self.battery.as_ref().map(|b| b.soc());
+                self.map.set_soc(soc);
+            }
+        }
+    }
+
+    /// The battery hit zero at `dead`: cancel everything still waiting
+    /// (local queues + arriving queue) as [`TraceOutcome::SystemOff`],
+    /// stop expecting never-issued requests, and end generation.
+    fn shutdown(&mut self, dead: f64) {
+        self.system_off = Some(dead);
+        self.map.set_soc(Some(0.0));
+        {
+            // one shared sweep for queued + arriving work (sched::dispatch)
+            let SharedState { map, cancelled, terminal, traces, .. } = self;
+            map.drain_system_off(&mut |d: Dropped| {
+                cancelled[d.task.type_id.0] += 1;
+                *terminal += 1;
+                let (machine, mapped) = d.mapped.unzip();
+                // wall-clock guard: a just-issued request may carry stamps
+                // a hair past the computed crossing
+                let at = dead.max(mapped.unwrap_or(d.task.arrival));
+                traces.push(record_of(&d.task, TraceOutcome::SystemOff, machine, mapped, None, at));
+            });
+        }
+        // requests that were never issued are no longer expected
+        self.total_expected = self.arrived.iter().sum::<u64>() as usize;
+        self.done_generating = true;
+        crate::log_info!("serve battery depleted at t={dead:.1}s — system off");
+    }
+
     /// One mapping event through the shared dispatch layer. Every drop the
     /// mapper makes (expiry, proactive, victim) lands in `cancelled` —
     /// fairness is already accounted inside [`MappingState`] — and, on
     /// closed loops, releases the issuing client.
     fn coordinate(&mut self, now: Time) {
+        self.advance_battery(now);
         let SharedState {
             map,
             cancelled,
@@ -273,16 +339,29 @@ impl SharedState {
             missed: self.missed.iter().sum(),
             cancelled: self.cancelled.iter().sum(),
             in_flight: arrived - self.terminal as u64,
+            soc: self.battery.as_ref().map(|b| b.soc()),
         };
-        crate::log_info!(
-            "serve t={:.0}s  arrived {}  completed {}  missed {}  cancelled {}  in-flight {}",
-            snap.t,
-            snap.arrived,
-            snap.completed,
-            snap.missed,
-            snap.cancelled,
-            snap.in_flight
-        );
+        match snap.soc {
+            Some(soc) => crate::log_info!(
+                "serve t={:.0}s  arrived {}  completed {}  missed {}  cancelled {}  in-flight {}  soc {:.0}%",
+                snap.t,
+                snap.arrived,
+                snap.completed,
+                snap.missed,
+                snap.cancelled,
+                snap.in_flight,
+                100.0 * soc
+            ),
+            None => crate::log_info!(
+                "serve t={:.0}s  arrived {}  completed {}  missed {}  cancelled {}  in-flight {}",
+                snap.t,
+                snap.arrived,
+                snap.completed,
+                snap.missed,
+                snap.cancelled,
+                snap.in_flight
+            ),
+        }
         self.snapshots.push(snap);
     }
 }
@@ -330,6 +409,7 @@ fn plan(config: &ServeConfig) -> Result<Plan> {
                 reg_scenario: Scenario::paper_synthetic(),
                 worker_backend: WorkerBackend::Pjrt { dir: config.artifact_dir.clone(), speeds },
                 backend_name: "pjrt",
+                battery: config.battery.clone(),
             })
         }
         ServeBackend::Synthetic => {
@@ -350,6 +430,7 @@ fn plan(config: &ServeConfig) -> Result<Plan> {
                     eet: sc.eet.clone(),
                     cv_exec: sc.cv_exec,
                 },
+                battery: config.battery.clone().or_else(|| sc.battery_spec()),
                 reg_scenario: sc,
                 backend_name: "synthetic",
             })
@@ -381,7 +462,29 @@ fn run_worker(
             let mut st = lock.lock().unwrap();
             loop {
                 if let Some(q) = st.map.pop_queued(m) {
-                    st.map.mark_running(m, now() + q.expected_exec);
+                    let t = now();
+                    st.advance_battery(t);
+                    if let Some(dead) = st.system_off {
+                        // the battery died while this task waited: it was
+                        // popped before the shutdown sweep could cancel it
+                        st.cancelled[q.task.type_id.0] += 1;
+                        st.terminal += 1;
+                        st.map.record_terminal(q.task.type_id, false);
+                        st.traces.push(record_of(
+                            &q.task,
+                            TraceOutcome::SystemOff,
+                            Some(MachineId(m)),
+                            Some(q.mapped),
+                            None,
+                            dead.max(q.mapped),
+                        ));
+                        cv.notify_all();
+                        continue;
+                    }
+                    st.map.mark_running(m, t + q.expected_exec);
+                    if let Some(bat) = st.battery.as_mut() {
+                        bat.set_busy(m, true);
+                    }
                     break Some(q);
                 }
                 if st.all_done() {
@@ -431,6 +534,10 @@ fn run_worker(
             st.inferences += 1;
         }
         st.map.mark_idle(m);
+        st.advance_battery(end);
+        if let Some(bat) = st.battery.as_mut() {
+            bat.set_busy(m, false);
+        }
         st.record_worker_terminal(&q, m, outcome, started, end);
         let t = now();
         st.coordinate(t); // completion-triggered mapping event
@@ -464,6 +571,9 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         ArrivalProcess::ClosedLoop(_) => None,
     };
     let plan = plan(config)?;
+    if let Some(spec) = &plan.battery {
+        spec.validate().map_err(Error::Config)?;
+    }
     let time_scale = config.time_scale;
     let n_types = plan.n_types;
     let eet = plan.eet.clone();
@@ -503,6 +613,11 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
             traces: TraceLog { on: config.record_traces, records: Vec::new() },
             client_of: Vec::new(),
             released: Vec::new(),
+            battery: plan
+                .battery
+                .as_ref()
+                .map(|spec| BatteryState::new(spec, &plan.specs)),
+            system_off: None,
         }),
         Condvar::new(),
     ));
@@ -547,10 +662,11 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 st = guard;
             }
         }
-        // inject one request at `t_arr`: type draw, Eq. 4 deadline, the
-        // arrival-triggered mapping event, and a due progress snapshot —
-        // one copy for both arrival models
-        let mut issue = |st: &mut SharedState, rng: &mut Pcg64, id: u64, t_arr: f64| {
+        // inject one request at `t_arr`: type draw, Eq. 4 deadline. Does
+        // NOT fire the mapping event — callers coalesce every same-instant
+        // arrival into ONE `coordinate` pass (one lock-held mapping event
+        // per batch instead of one per request).
+        let push_request = |st: &mut SharedState, rng: &mut Pcg64, id: u64, t_arr: f64| {
             let ty = TaskTypeId(rng.index(n_types));
             let deadline = t_arr + config.deadline_scale * (eet.row_mean(ty) + eet.grand_mean());
             let task = Task {
@@ -562,11 +678,12 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
             };
             st.arrived[ty.0] += 1;
             st.map.push_arrival(task);
-            st.coordinate(t_arr);
+        };
+        let mut maybe_snapshot = |st: &mut SharedState, t: f64| {
             if let (Some(every), Some(due)) = (config.progress_every, next_snap) {
-                if t_arr >= due {
-                    st.take_snapshot(t_arr);
-                    next_snap = Some(t_arr + every);
+                if t >= due {
+                    st.take_snapshot(t);
+                    next_snap = Some(t + every);
                 }
             }
         };
@@ -586,6 +703,9 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 let mut st = lock.lock().unwrap();
                 st.client_of.reserve(config.n_requests);
                 while issued < config.n_requests {
+                    if st.system_off.is_some() {
+                        break; // battery depleted: no more requests
+                    }
                     // responses since the last look: think, then re-issue
                     let released = std::mem::take(&mut st.released);
                     for (c, t) in released {
@@ -621,22 +741,51 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                     // the client map must be in place before the mapping
                     // event: a same-instant drop already releases it
                     st.client_of.push(client);
-                    issue(&mut st, &mut rng, issued as u64, t_now);
+                    push_request(&mut st, &mut rng, issued as u64, t_now);
+                    st.coordinate(t_now);
+                    maybe_snapshot(&mut st, t_now);
                     cv.notify_all();
                     issued += 1;
                 }
             }
             (_, Some(rate_profile)) => {
                 // ---- open loop: Poisson at the (possibly time-varying)
-                // offered rate, independent of system state -------------
-                for i in 0..config.n_requests {
-                    let rate = rate_profile.rate_at(now());
-                    let inter = Exponential::new(rate).sample(&mut rng);
-                    std::thread::sleep(Duration::from_secs_f64(inter * time_scale));
-                    let t_arr = now();
+                // offered rate, independent of system state. Arrival times
+                // are drawn in modeled time; whenever the generator wakes
+                // behind schedule (fast-forward sessions, scheduler lag),
+                // every arrival already due is injected under ONE lock
+                // acquisition with ONE mapping event — same-instant
+                // batching instead of N lock round-trips. ---------------
+                let mut next_at = Exponential::new(rate_profile.rate_at(0.0)).sample(&mut rng);
+                let mut issued = 0usize;
+                while issued < config.n_requests {
+                    let t_now = now();
+                    if next_at > t_now {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            (next_at - t_now) * time_scale,
+                        ));
+                    }
+                    let t_arr = now().max(next_at);
+                    // gather every arrival due by t_arr into this batch
+                    let mut batch = 1usize;
+                    next_at +=
+                        Exponential::new(rate_profile.rate_at(next_at)).sample(&mut rng);
+                    while issued + batch < config.n_requests && next_at <= t_arr {
+                        batch += 1;
+                        next_at +=
+                            Exponential::new(rate_profile.rate_at(next_at)).sample(&mut rng);
+                    }
                     let mut st = lock.lock().unwrap();
-                    issue(&mut st, &mut rng, i as u64, t_arr);
+                    if st.system_off.is_some() {
+                        break; // battery depleted: no more requests
+                    }
+                    for k in 0..batch {
+                        push_request(&mut st, &mut rng, (issued + k) as u64, t_arr);
+                    }
+                    st.coordinate(t_arr); // one mapping event for the batch
+                    maybe_snapshot(&mut st, t_arr);
                     cv.notify_all();
+                    issued += batch;
                 }
             }
             (_, None) => unreachable!("open-loop arrivals always have a rate profile"),
@@ -652,6 +801,8 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         cv.notify_all();
         while st.terminal < st.total_expected {
             let t = now();
+            // idle drain still consumes battery: integrate (and shut off)
+            st.advance_battery(t);
             if let (Some(every), Some(due)) = (config.progress_every, next_snap) {
                 if t >= due {
                     st.take_snapshot(t);
@@ -697,6 +848,11 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
     }
 
     let mut st = state.0.lock().unwrap();
+    // settle the battery to the session end (idle tail after the last
+    // coordination point)
+    if let Some(bat) = st.battery.as_mut() {
+        bat.advance(duration);
+    }
     let report = ServeReport {
         backend: plan.backend_name.into(),
         heuristic: config.heuristic.clone(),
@@ -717,6 +873,10 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         deferrals: st.deferrals,
         inferences: st.inferences,
         snapshots: st.snapshots.clone(),
+        battery_capacity: st.battery.as_ref().map(|b| b.capacity()),
+        battery_spent: st.battery.as_ref().map(|b| b.spent()).unwrap_or(0.0),
+        depleted_at: st.system_off,
+        final_soc: st.battery.as_ref().map(|b| b.soc()),
         traces: std::mem::take(&mut st.traces.records),
     };
     report.check_conservation().map_err(Error::Runtime)?;

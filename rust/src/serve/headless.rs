@@ -41,6 +41,7 @@
 //! which is what lets the sweep replay one generated trace under every
 //! heuristic on a single engine.
 
+use crate::energy::BatteryState;
 use crate::model::machine::MachineId;
 use crate::model::task::{CancelReason, Outcome, Task, Time};
 use crate::model::{Scenario, Trace};
@@ -74,6 +75,10 @@ pub struct HeadlessServe {
     running: Vec<Option<LiveRunning>>,
     energy: Vec<MachineEnergy>,
     trace_log: TraceLog,
+    /// The shared battery (`None` = unbatteried). Driven at the same event
+    /// boundaries as the simulator's, so battery-constrained cells stay
+    /// bit-identical across engines.
+    battery: Option<BatteryState>,
 }
 
 impl HeadlessServe {
@@ -101,6 +106,9 @@ impl HeadlessServe {
                     as Box<dyn InferenceBackend>
             })
             .collect();
+        let battery = scenario
+            .battery_spec()
+            .map(|spec| BatteryState::new(&spec, &scenario.machines));
         Self {
             scenario: scenario.clone(),
             mapping,
@@ -109,6 +117,7 @@ impl HeadlessServe {
             running: (0..n_machines).map(|_| None).collect(),
             energy: vec![MachineEnergy::default(); n_machines],
             trace_log: TraceLog::new(),
+            battery,
         }
     }
 
@@ -141,6 +150,7 @@ impl HeadlessServe {
             running,
             energy,
             trace_log,
+            battery,
         } = self;
 
         let n_types = sc.n_types();
@@ -159,13 +169,27 @@ impl HeadlessServe {
         events.clear();
         mapping.reset();
         trace_log.clear();
+        if let Some(bat) = battery.as_mut() {
+            bat.reset();
+        }
 
         for (i, t) in trace.tasks.iter().enumerate() {
             events.push(t.arrival, Event::Arrival { trace_idx: i });
         }
 
         let mut now: Time = 0.0;
+        // event interrupted by battery depletion (system off mid-run)
+        let mut pending: Option<Event> = None;
         while let Some((t, ev)) = events.pop() {
+            // battery advance at the event boundary — same operands, same
+            // order as the simulator's (bit-identity contract)
+            if let Some(bat) = battery.as_mut() {
+                if let Some(dead) = bat.advance(t) {
+                    now = dead;
+                    pending = Some(ev);
+                    break;
+                }
+            }
             now = t;
             match ev {
                 Event::Arrival { trace_idx } => mapping.push_arrival(trace.tasks[trace_idx]),
@@ -179,6 +203,7 @@ impl HeadlessServe {
                         energy,
                         &mut result,
                         trace_log,
+                        battery,
                     );
                 }
                 Event::Expiry => {}
@@ -187,11 +212,16 @@ impl HeadlessServe {
             // idle workers pull the moment state changes (the live path's
             // notify_all after completions/arrivals)
             for m in 0..n_machines {
-                fetch_and_start(m, now, mapping, backends, running, events, &mut result, trace_log);
+                fetch_and_start(
+                    m, now, mapping, backends, running, events, &mut result, trace_log, battery,
+                );
             }
 
             // arrival-/completion-triggered mapping event through the
             // shared dispatch layer — identical to the coordinator's
+            if let Some(bat) = battery.as_ref() {
+                mapping.set_soc(Some(bat.soc()));
+            }
             let stats = mapping.mapping_event(now, &mut |d: Dropped| {
                 let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
                 result.record(d.task.type_id.0, &out);
@@ -205,20 +235,78 @@ impl HeadlessServe {
             result.deferrals += stats.deferrals;
 
             for m in 0..n_machines {
-                fetch_and_start(m, now, mapping, backends, running, events, &mut result, trace_log);
+                fetch_and_start(
+                    m, now, mapping, backends, running, events, &mut result, trace_log, battery,
+                );
             }
         }
 
-        // graceful drain: anything still waiting dies at its own deadline
-        mapping.drain_unmapped(&mut |task| {
-            let at = task.deadline.max(now);
-            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
-            result.record(task.type_id.0, &out);
-            trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
-        });
+        if battery.as_ref().is_some_and(|b| b.is_depleted()) {
+            // ---- system off at `now`: mirror the simulator's sweep ------
+            let t_dead = now;
+            for (mi, slot) in running.iter_mut().enumerate() {
+                if let Some(r) = slot.take() {
+                    mapping.mark_idle(mi);
+                    let busy = t_dead - r.start;
+                    let e = sc.machines[mi].dyn_energy(busy);
+                    energy[mi].dynamic += e;
+                    energy[mi].wasted += e;
+                    energy[mi].busy_time += busy;
+                    result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
+                    mapping.record_terminal(r.task.type_id, false);
+                    trace_log.push(record_of(
+                        &r.task,
+                        TraceOutcome::Missed,
+                        Some(MachineId(mi)),
+                        Some(r.mapped),
+                        Some(r.start),
+                        t_dead,
+                    ));
+                }
+            }
+            // one shared sweep for queued + arriving work (sched::dispatch)
+            mapping.drain_system_off(&mut |d: Dropped| {
+                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
+                result.record(d.task.type_id.0, &out);
+                let (machine, mapped) = d.mapped.unzip();
+                trace_log.push(record_of(
+                    &d.task,
+                    TraceOutcome::SystemOff,
+                    machine,
+                    mapped,
+                    None,
+                    t_dead,
+                ));
+            });
+            let drained = pending
+                .into_iter()
+                .chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
+            for ev in drained {
+                if let Event::Arrival { trace_idx } = ev {
+                    let task = trace.tasks[trace_idx];
+                    let at = task.arrival.max(t_dead);
+                    let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
+                    result.record(task.type_id.0, &out);
+                    trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
+                }
+            }
+        } else {
+            // graceful drain: anything still waiting dies at its own deadline
+            mapping.drain_unmapped(&mut |task| {
+                let at = task.deadline.max(now);
+                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+            });
+        }
 
         result.makespan = now;
         result.battery = sc.battery_for(now);
+        if let Some(bat) = battery.as_ref() {
+            result.battery_spent = bat.spent();
+            result.depleted_at = bat.depleted_at();
+            result.final_soc = bat.soc();
+        }
         for (mi, e) in energy.iter().enumerate() {
             debug_assert!(running[mi].is_none(), "machine {mi} still running at drain");
             debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
@@ -244,6 +332,7 @@ fn fetch_and_start(
     events: &mut EventQueue,
     result: &mut SimResult,
     trace_log: &mut TraceLog,
+    battery: &mut Option<BatteryState>,
 ) {
     if running[m].is_some() {
         return;
@@ -270,6 +359,9 @@ fn fetch_and_start(
         let end = actual_end.min(q.task.deadline);
         events.push(end, Event::Finish { machine_idx: m });
         mapping.mark_running(m, now + q.expected_exec);
+        if let Some(bat) = battery.as_mut() {
+            bat.set_busy(m, true);
+        }
         running[m] =
             Some(LiveRunning { task: q.task, mapped: q.mapped, start: now, end, actual_end });
         return;
@@ -288,10 +380,14 @@ fn complete(
     energy: &mut [MachineEnergy],
     result: &mut SimResult,
     trace_log: &mut TraceLog,
+    battery: &mut Option<BatteryState>,
 ) {
     let r = running[m].take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
     mapping.mark_idle(m);
+    if let Some(bat) = battery.as_mut() {
+        bat.set_busy(m, false);
+    }
     let busy = r.end - r.start;
     let e = sc.machines[m].dyn_energy(busy);
     energy[m].dynamic += e;
@@ -347,6 +443,10 @@ mod tests {
         assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
         assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
         assert_eq!(a.battery, b.battery, "{tag}: battery");
+        assert_eq!(a.battery_spent, b.battery_spent, "{tag}: battery debit");
+        assert_eq!(a.depleted_at, b.depleted_at, "{tag}: depletion instant");
+        assert_eq!(a.final_soc, b.final_soc, "{tag}: final SoC");
+        assert_eq!(a.cancelled_systemoff, b.cancelled_systemoff, "{tag}: system-off drops");
         for (ea, eb) in a.energy.iter().zip(&b.energy) {
             assert_eq!(ea.dynamic, eb.dynamic, "{tag}: dynamic energy");
             assert_eq!(ea.wasted, eb.wasted, "{tag}: wasted energy");
@@ -390,6 +490,32 @@ mod tests {
         let ours = eng.run(&traces[0]);
         let fresh = HeadlessServe::new(&sc, heuristic_by_name("mm", &sc).unwrap()).run(&traces[0]);
         assert_bit_identical(&ours, &fresh, "after set_heuristic");
+    }
+
+    #[test]
+    fn battery_runs_bit_identical_to_simulator() {
+        // depletion mid-run: both engines must die at the same float
+        // instant with identical accounting, for the stock heuristics and
+        // the SoC-aware one alike
+        let sc = Scenario::paper_synthetic().with_battery(40.0, None);
+        let trace = trace_for(&sc, 5.0, 500, 61);
+        for h in ["mm", "felare", "felare-eb"] {
+            let sim = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap()).run(&trace);
+            let live = HeadlessServe::new(&sc, heuristic_by_name(h, &sc).unwrap()).run(&trace);
+            assert!(sim.depleted_at.is_some(), "{h}: 40 J must deplete");
+            assert_bit_identical(&sim, &live, h);
+            sim.check_conservation().unwrap();
+        }
+        // recharge path too
+        let sc = Scenario::paper_synthetic().with_battery(
+            40.0,
+            Some(crate::energy::RechargeProfile::parse("0.6:7,0:13").unwrap()),
+        );
+        let trace = trace_for(&sc, 4.0, 400, 62);
+        let sim = Simulation::new(&sc, heuristic_by_name("felare-eb", &sc).unwrap()).run(&trace);
+        let live =
+            HeadlessServe::new(&sc, heuristic_by_name("felare-eb", &sc).unwrap()).run(&trace);
+        assert_bit_identical(&sim, &live, "recharge felare-eb");
     }
 
     #[test]

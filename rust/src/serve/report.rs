@@ -18,6 +18,9 @@ pub struct ServeSnapshot {
     pub cancelled: u64,
     /// Arrived but not yet terminal (waiting, queued or running).
     pub in_flight: u64,
+    /// Battery state of charge at the sample instant (`None` when the
+    /// session is unbatteried).
+    pub soc: Option<f64>,
 }
 
 #[derive(Clone, Debug)]
@@ -53,6 +56,14 @@ pub struct ServeReport {
     pub inferences: u64,
     /// Periodic progress samples (empty unless requested).
     pub snapshots: Vec<ServeSnapshot>,
+    /// Battery capacity in joules (`None` = unbatteried session).
+    pub battery_capacity: Option<f64>,
+    /// Gross joules drawn from the battery (0 when unbatteried).
+    pub battery_spent: f64,
+    /// Instant the battery hit zero and the system shut off, if it did.
+    pub depleted_at: Option<f64>,
+    /// Battery state of charge at session end.
+    pub final_soc: Option<f64>,
     /// Per-request trace records (empty unless `ServeConfig::record_traces`;
     /// one per request, exported as JSONL by `--trace-out`).
     pub traces: Vec<TraceRecord>,
@@ -136,13 +147,17 @@ impl ServeReport {
             .snapshots
             .iter()
             .map(|s| {
-                Json::object()
+                let mut j = Json::object()
                     .set("t", s.t)
                     .set("arrived", s.arrived)
                     .set("completed", s.completed)
                     .set("missed", s.missed)
                     .set("cancelled", s.cancelled)
-                    .set("in_flight", s.in_flight)
+                    .set("in_flight", s.in_flight);
+                if let Some(soc) = s.soc {
+                    j = j.set("soc", soc);
+                }
+                j
             })
             .collect();
         Json::object()
@@ -165,6 +180,16 @@ impl ServeReport {
             .set("wasted_energy", self.total_wasted_energy())
             .set("deferrals", self.deferrals)
             .set("inferences", self.inferences)
+            .set(
+                "battery_capacity",
+                self.battery_capacity.map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("battery_spent", self.battery_spent)
+            .set(
+                "depleted_at",
+                self.depleted_at.map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("final_soc", self.final_soc.map(Json::Num).unwrap_or(Json::Null))
             .set("snapshots", Json::Array(snapshots))
     }
 
@@ -203,6 +228,20 @@ impl ServeReport {
             self.total_wasted_energy(),
             self.mapper_overhead_us()
         ));
+        if let Some(cap) = self.battery_capacity {
+            let soc = self.final_soc.unwrap_or(f64::NAN);
+            match self.depleted_at {
+                Some(dead) => s.push_str(&format!(
+                    "  battery {cap:.0} J: DEPLETED at t={dead:.1}s (system off; {:.1} J drawn)\n",
+                    self.battery_spent
+                )),
+                None => s.push_str(&format!(
+                    "  battery {cap:.0} J: {:.1} J drawn, final SoC {:.1}%\n",
+                    self.battery_spent,
+                    100.0 * soc
+                )),
+            }
+        }
         if !self.traces.is_empty() {
             s.push_str(&self.latency_breakdown().render());
         }
@@ -241,7 +280,12 @@ mod tests {
                 missed: 1,
                 cancelled: 1,
                 in_flight: 2,
+                soc: None,
             }],
+            battery_capacity: None,
+            battery_spent: 0.0,
+            depleted_at: None,
+            final_soc: None,
             traces: Vec::new(),
         }
     }
@@ -278,6 +322,33 @@ mod tests {
         assert_eq!(j.req_str("backend").unwrap(), "synthetic");
         assert_eq!(j.req_str("workload").unwrap(), "poisson λ=10/s");
         assert_eq!(j.req("snapshots").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn battery_lines_render_only_when_armed() {
+        let mut r = sample();
+        assert!(!r.render().contains("battery"), "unbatteried: no battery line");
+        r.battery_capacity = Some(500.0);
+        r.battery_spent = 123.0;
+        r.final_soc = Some(0.754);
+        let text = r.render();
+        assert!(text.contains("battery 500 J"));
+        assert!(text.contains("75.4%"));
+        r.depleted_at = Some(42.5);
+        assert!(r.render().contains("DEPLETED at t=42.5s"));
+        let j = r.to_json();
+        assert_eq!(j.req_f64("battery_capacity").unwrap(), 500.0);
+        assert_eq!(j.req_f64("depleted_at").unwrap(), 42.5);
+        assert_eq!(j.req_f64("battery_spent").unwrap(), 123.0);
+    }
+
+    #[test]
+    fn snapshot_soc_serializes_when_present() {
+        let mut r = sample();
+        r.snapshots[0].soc = Some(0.5);
+        let j = r.to_json();
+        let snaps = j.req("snapshots").unwrap().as_array().unwrap();
+        assert_eq!(snaps[0].req_f64("soc").unwrap(), 0.5);
     }
 
     #[test]

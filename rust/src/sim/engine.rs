@@ -45,6 +45,23 @@
 //! start and end timestamps for latency-breakdown analysis. Off by
 //! default; the disabled path costs one branch per terminal.
 //!
+//! # Battery
+//!
+//! When the scenario arms a battery (`Scenario::battery_spec`), the
+//! engine drives a shared [`BatteryState`]: draw is integrated at every
+//! event pop (dynamic power while a machine executes, idle power
+//! otherwise, minus any recharge), the mapper sees the state of charge
+//! (`MappingState::set_soc` → `SchedView::soc`, which `felare-eb` and the
+//! admission-shedding [`EnergyPolicy`](crate::energy::EnergyPolicy) act
+//! on), and the first zero crossing ends the run **at that exact
+//! instant**: running tasks abort (missed, energy wasted), queued and
+//! waiting tasks cancel with `CancelReason::SystemOff`, and arrivals that
+//! never happened are cancelled against a dead system. `lifetime_s`,
+//! `final_soc` and `battery_spent` land in the [`SimResult`]. An infinite
+//! capacity (or no battery) leaves every control-flow decision — and so
+//! every pre-existing result field — bit-identical to the unbatteried
+//! engine (`rust/tests/battery_suite.rs`).
+//!
 //! # Recycled-state API contract (§Perf)
 //!
 //! A [`Simulation`] is an *arena*: machine state, the event queue, the
@@ -80,6 +97,7 @@
 //! sweep hot path except the trace itself — see `benches/bench_stress.rs`
 //! for the measured effect.
 
+use crate::energy::BatteryState;
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
 use crate::model::{ClientPool, EetMatrix, Scenario, Trace};
@@ -217,6 +235,10 @@ pub struct Simulation {
     events: EventQueue,
     mapping: MappingState,
     trace_log: TraceLog,
+    /// The shared battery (`None` = unbatteried: classic infinite-energy
+    /// semantics, zero behavioral change). Advanced at every event pop;
+    /// depletion ends the run at the exact crossing instant (§Battery).
+    battery: Option<BatteryState>,
     // closed-loop scratch (empty on open-loop runs)
     gen_tasks: Vec<Task>,
     client_of: Vec<u32>,
@@ -248,6 +270,9 @@ impl Simulation {
             tracker,
             heuristic,
         );
+        let battery = scenario
+            .battery_spec()
+            .map(|spec| BatteryState::new(&spec, &scenario.machines));
         Self {
             scenario: scenario.clone(),
             record_overhead_samples: false,
@@ -256,6 +281,7 @@ impl Simulation {
             events: EventQueue::new(),
             mapping,
             trace_log: TraceLog::new(),
+            battery,
             gen_tasks: Vec::new(),
             client_of: Vec::new(),
             released: Releases::default(),
@@ -329,6 +355,7 @@ impl Simulation {
             events,
             mapping,
             trace_log,
+            battery,
             gen_tasks,
             client_of,
             released,
@@ -352,6 +379,9 @@ impl Simulation {
         mapping.reset();
         overhead_samples.clear();
         trace_log.clear();
+        if let Some(bat) = battery.as_mut() {
+            bat.reset();
+        }
         gen_tasks.clear();
         client_of.clear();
         released.buf.clear();
@@ -377,7 +407,18 @@ impl Simulation {
         released.on = closed.is_some();
 
         let mut now: Time = 0.0;
+        // event interrupted by battery depletion (system off mid-run)
+        let mut pending: Option<Event> = None;
         while let Some((t, ev)) = events.pop() {
+            // ---- battery: integrate draw up to this event; depletion
+            // ends the run at the exact crossing instant ----------------
+            if let Some(bat) = battery.as_mut() {
+                if let Some(dead) = bat.advance(t) {
+                    now = dead;
+                    pending = Some(ev);
+                    break;
+                }
+            }
             now = t;
             match ev {
                 Event::Arrival { trace_idx } => {
@@ -400,6 +441,7 @@ impl Simulation {
                         mapping,
                         trace_log,
                         released,
+                        battery,
                     );
                 }
                 Event::Expiry => {} // wake-up only; the mapping event below expires
@@ -408,11 +450,14 @@ impl Simulation {
             // start queued work freed by the completion (before mapping so
             // availability estimates are current)
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping, trace_log, released);
+                try_start(m, mi, now, events, &mut result, mapping, trace_log, released, battery);
             }
 
             // ---- the mapping event (shared driver: expiry, snapshots,
             // heuristic, action application — sched::dispatch) -----------
+            if let Some(bat) = battery.as_ref() {
+                mapping.set_soc(Some(bat.soc()));
+            }
             let stats = mapping.mapping_event(now, &mut |d: Dropped| {
                 let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
                 result.record(d.task.type_id.0, &out);
@@ -431,7 +476,7 @@ impl Simulation {
 
             // idle machines may now have work
             for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping, trace_log, released);
+                try_start(m, mi, now, events, &mut result, mapping, trace_log, released, battery);
             }
 
             if let Some(gen) = closed.as_mut() {
@@ -461,17 +506,88 @@ impl Simulation {
             }
         }
 
-        // Anything still waiting dies at its own deadline. (Closed-loop
-        // runs drained the arriving queue through Expiry events above.)
-        mapping.drain_unmapped(&mut |task| {
-            let at = task.deadline.max(now);
-            let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
-            result.record(task.type_id.0, &out);
-            trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
-        });
+        if battery.as_ref().is_some_and(|b| b.is_depleted()) {
+            // ---- system off: the battery hit zero at `now` --------------
+            let t_dead = now;
+            // running work aborts at the crossing; its energy (all wasted)
+            // is accounted up to that instant
+            for (mi, m) in machines.iter_mut().enumerate() {
+                if let Some(r) = m.running.take() {
+                    mapping.mark_idle(mi);
+                    let busy = t_dead - r.start;
+                    let e = m.spec.dyn_energy(busy);
+                    m.energy.dynamic += e;
+                    m.energy.wasted += e;
+                    m.energy.busy_time += busy;
+                    result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
+                    mapping.record_terminal(r.task.type_id, false);
+                    trace_log.push(record_of(
+                        &r.task,
+                        TraceOutcome::Missed,
+                        Some(MachineId(mi)),
+                        Some(r.mapped),
+                        Some(r.start),
+                        t_dead,
+                    ));
+                }
+            }
+            // queued-but-never-started and arriving-queue tasks die in
+            // place, zero energy (one shared sweep — sched::dispatch)
+            mapping.drain_system_off(&mut |d: Dropped| {
+                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
+                result.record(d.task.type_id.0, &out);
+                let (machine, mapped) = d.mapped.unzip();
+                trace_log.push(record_of(
+                    &d.task,
+                    TraceOutcome::SystemOff,
+                    machine,
+                    mapped,
+                    None,
+                    t_dead,
+                ));
+            });
+            // unprocessed events: arrivals hit a dead system (Finish/Expiry
+            // events belong to work already accounted above)
+            let is_closed = closed.is_some();
+            let mut dead_arrival = |task: Task| {
+                if is_closed {
+                    result.arrived[task.type_id.0] += 1;
+                }
+                let at = task.arrival.max(t_dead);
+                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
+            };
+            let drained = pending.into_iter().chain(std::iter::from_fn(|| {
+                events.pop().map(|(_, ev)| ev)
+            }));
+            for ev in drained {
+                if let Event::Arrival { trace_idx } = ev {
+                    let task = match open_trace {
+                        Some(trace) => trace.tasks[trace_idx],
+                        None => gen_tasks[trace_idx],
+                    };
+                    dead_arrival(task);
+                }
+            }
+        } else {
+            // Anything still waiting dies at its own deadline. (Closed-loop
+            // runs drained the arriving queue through Expiry events above.)
+            mapping.drain_unmapped(&mut |task| {
+                let at = task.deadline.max(now);
+                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+            });
+        }
 
         result.makespan = now;
         result.battery = sc.battery_for(now);
+        if let Some(bat) = battery.as_ref() {
+            result.battery_spent = bat.spent();
+            result.depleted_at = bat.depleted_at();
+            result.final_soc = bat.soc();
+        }
         for (mi, m) in machines.iter().enumerate() {
             debug_assert!(m.running.is_none(), "machine {mi} still running at drain");
             debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
@@ -489,6 +605,7 @@ impl Simulation {
 }
 
 /// Account the finished/aborted running task.
+#[allow(clippy::too_many_arguments)]
 fn finish_running(
     m: &mut MachState,
     machine_idx: usize,
@@ -497,10 +614,14 @@ fn finish_running(
     mapping: &mut MappingState,
     trace_log: &mut TraceLog,
     released: &mut Releases,
+    battery: &mut Option<BatteryState>,
 ) {
     let r = m.running.take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
     mapping.mark_idle(machine_idx);
+    if let Some(bat) = battery.as_mut() {
+        bat.set_busy(machine_idx, false);
+    }
     let busy = r.end - r.start;
     let e = m.spec.dyn_energy(busy);
     m.energy.dynamic += e;
@@ -540,6 +661,7 @@ fn try_start(
     mapping: &mut MappingState,
     trace_log: &mut TraceLog,
     released: &mut Releases,
+    battery: &mut Option<BatteryState>,
 ) {
     if m.running.is_some() {
         return;
@@ -564,6 +686,9 @@ fn try_start(
         let end = actual_end.min(q.task.deadline);
         events.push(end, Event::Finish { machine_idx });
         mapping.mark_running(machine_idx, now + q.expected_exec);
+        if let Some(bat) = battery.as_mut() {
+            bat.set_busy(machine_idx, true);
+        }
         m.running = Some(Running { task: q.task, mapped: q.mapped, start: now, end, actual_end });
         return;
     }
@@ -846,6 +971,112 @@ mod tests {
         let n = sim.trace_log().len();
         sim.run(&tr);
         assert_eq!(sim.trace_log().len(), n, "log is per-run, not cumulative");
+    }
+
+    // ---- battery ------------------------------------------------------------
+
+    fn battery_run(capacity: f64, heuristic: &str, rate: f64, n: usize, seed: u64) -> SimResult {
+        let sc = Scenario::paper_synthetic().with_battery(capacity, None);
+        let params = WorkloadParams { n_tasks: n, arrival_rate: rate, ..Default::default() };
+        let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed));
+        Simulation::new(&sc, heuristic_by_name(heuristic, &sc).unwrap()).run(&trace)
+    }
+
+    #[test]
+    fn depleted_run_conserves_and_reports_lifetime() {
+        // a tiny battery dies mid-run; every arrival is still accounted
+        // exactly once and the lifetime is the depletion instant
+        let r = battery_run(30.0, "felare", 5.0, 400, 1);
+        r.check_conservation().unwrap();
+        assert_eq!(r.total_arrived(), 400, "all trace tasks accounted");
+        let dead = r.depleted_at.expect("30 J cannot survive 400 tasks");
+        assert_eq!(r.lifetime_s(), dead);
+        assert_eq!(r.makespan, dead, "run ends at the crossing");
+        assert_eq!(r.final_soc, 0.0);
+        assert!(r.cancelled_systemoff > 0, "waiting work died with the system");
+        assert!((r.battery_spent - 30.0).abs() < 1e-6, "drew exactly the store");
+        let unbatteried = run("felare", 5.0, 400, 1);
+        assert!(r.lifetime_s() < unbatteried.makespan);
+    }
+
+    #[test]
+    fn infinite_battery_is_bit_identical_to_unbatteried() {
+        for h in ["mm", "felare", "elare"] {
+            let unb = run(h, 5.0, 500, 8);
+            let inf = battery_run(f64::INFINITY, h, 5.0, 500, 8);
+            assert_same(&unb, &inf, h);
+            assert!(inf.battery_spent > 0.0, "{h}: debit still tracked");
+            assert!(inf.depleted_at.is_none());
+            assert_eq!(inf.final_soc, 1.0);
+        }
+    }
+
+    #[test]
+    fn battery_debit_matches_energy_accounting() {
+        // an ample battery survives the run; the gross debit must equal the
+        // per-machine dynamic + idle accounting (float-summation tolerance)
+        let r = battery_run(1e7, "felare", 5.0, 600, 3);
+        assert!(r.depleted_at.is_none());
+        let consumed = r.total_energy();
+        let rel = (r.battery_spent - consumed).abs() / consumed.max(1.0);
+        assert!(rel < 1e-9, "debit {} vs accounted {consumed}", r.battery_spent);
+    }
+
+    #[test]
+    fn bigger_battery_lives_longer() {
+        let small = battery_run(20.0, "mm", 5.0, 400, 4);
+        let big = battery_run(60.0, "mm", 5.0, 400, 4);
+        assert!(small.depleted_at.is_some());
+        assert!(big.lifetime_s() > small.lifetime_s());
+    }
+
+    #[test]
+    fn recharge_extends_engine_lifetime() {
+        let params = WorkloadParams { n_tasks: 400, arrival_rate: 5.0, ..Default::default() };
+        let base = Scenario::paper_synthetic();
+        let trace = Trace::generate(&params, &base.eet, &mut Pcg64::new(9));
+        let dark = base.clone().with_battery(30.0, None);
+        let r1 = Simulation::new(&dark, heuristic_by_name("mm", &dark).unwrap()).run(&trace);
+        let lit = base.with_battery(
+            30.0,
+            Some(crate::energy::RechargeProfile::parse("1:5,0:5").unwrap()),
+        );
+        let r2 = Simulation::new(&lit, heuristic_by_name("mm", &lit).unwrap()).run(&trace);
+        assert!(r1.depleted_at.is_some());
+        assert!(
+            r2.lifetime_s() > r1.lifetime_s(),
+            "harvest must extend the lifetime: {} vs {}",
+            r2.lifetime_s(),
+            r1.lifetime_s()
+        );
+        r2.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn recycled_battery_runs_match_fresh() {
+        // the battery participates in the recycled-arena contract
+        let sc = Scenario::paper_synthetic().with_battery(40.0, None);
+        let tr = trace_for(5.0, 400, 77);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        let first = sim.run(&tr);
+        let second = sim.run(&tr);
+        assert_same(&first, &second, "recycled battery run");
+        assert_eq!(first.depleted_at, second.depleted_at);
+        assert_eq!(first.battery_spent, second.battery_spent);
+        let fresh = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&tr);
+        assert_eq!(first.battery_spent, fresh.battery_spent);
+        assert_eq!(first.depleted_at, fresh.depleted_at);
+    }
+
+    #[test]
+    fn closed_loop_depletion_conserves() {
+        let sc = Scenario::paper_synthetic().with_battery(25.0, None);
+        let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        let r = sim.run_closed(ClientPool { n_clients: 6, think_time: 0.1 }, 400, 71);
+        r.check_conservation().unwrap();
+        assert!(r.depleted_at.is_some());
+        assert!(r.total_arrived() > 0);
+        assert!(r.total_arrived() <= 400, "generation stops at system off");
     }
 
     // ---- closed-loop client pool -------------------------------------------

@@ -34,10 +34,20 @@ pub struct SimResult {
     pub cancelled_mapper: u64,
     pub cancelled_victim: u64,
     pub cancelled_expired: u64,
+    /// Tasks cancelled because the battery depleted mid-run (system off).
+    pub cancelled_systemoff: u64,
     /// Per-machine energy.
     pub energy: Vec<MachineEnergy>,
     /// Battery capacity E0 used as the wasted-% denominator.
     pub battery: f64,
+    /// Gross joules drawn from the tracked battery (0 when the scenario is
+    /// unbatteried — use [`SimResult::total_energy`] then).
+    pub battery_spent: f64,
+    /// Instant the battery hit zero; `None` = survived the whole run.
+    pub depleted_at: Option<f64>,
+    /// Battery state of charge at the end of the run (1.0 when unbatteried
+    /// or infinite).
+    pub final_soc: f64,
     /// End of simulation (last event time).
     pub makespan: f64,
     /// Mapper-overhead statistics (seconds).
@@ -143,6 +153,23 @@ impl SimResult {
         jain_index(&rates)
     }
 
+    /// Seconds the system stayed on: the battery-depletion instant for
+    /// runs that died, the full makespan otherwise (the `exp battery`
+    /// lifetime axis).
+    pub fn lifetime_s(&self) -> f64 {
+        self.depleted_at.unwrap_or(self.makespan)
+    }
+
+    /// Completed tasks per joule of total consumed energy — the battery
+    /// subsystem's efficiency headline (`felare-eb` vs stock FELARE).
+    pub fn tasks_per_joule(&self) -> f64 {
+        let e = self.total_energy();
+        if e <= 0.0 {
+            return 0.0;
+        }
+        self.total_completed() as f64 / e
+    }
+
     /// Mean mapper overhead per mapping event, in microseconds (the
     /// paper's "lightweight / no significant overhead" claim).
     pub fn mapper_overhead_us(&self) -> f64 {
@@ -163,7 +190,10 @@ impl SimResult {
                 ));
             }
         }
-        let split = self.cancelled_mapper + self.cancelled_victim + self.cancelled_expired;
+        let split = self.cancelled_mapper
+            + self.cancelled_victim
+            + self.cancelled_expired
+            + self.cancelled_systemoff;
         if split != self.total_cancelled() {
             return Err(format!(
                 "cancel-reason split {split} != total cancelled {}",
@@ -184,6 +214,7 @@ impl SimResult {
                     CancelReason::MapperDropped => self.cancelled_mapper += 1,
                     CancelReason::VictimDropped => self.cancelled_victim += 1,
                     CancelReason::DeadlineExpired => self.cancelled_expired += 1,
+                    CancelReason::SystemOff => self.cancelled_systemoff += 1,
                 }
             }
         }
@@ -200,8 +231,12 @@ impl SimResult {
             cancelled_mapper: 0,
             cancelled_victim: 0,
             cancelled_expired: 0,
+            cancelled_systemoff: 0,
             energy: vec![MachineEnergy::default(); n_machines],
             battery: 1.0,
+            battery_spent: 0.0,
+            depleted_at: None,
+            final_soc: 1.0,
             makespan: 0.0,
             mapping_events: 0,
             mapper_time_total: 0.0,
@@ -224,6 +259,14 @@ impl SimResult {
             .set("wasted_energy", self.wasted_energy())
             .set("wasted_energy_pct", self.wasted_energy_pct())
             .set("battery", self.battery)
+            .set("battery_spent", self.battery_spent)
+            .set("final_soc", self.final_soc)
+            .set("lifetime_s", self.lifetime_s())
+            .set("tasks_per_joule", self.tasks_per_joule())
+            .set(
+                "depleted_at",
+                self.depleted_at.map(Json::Num).unwrap_or(Json::Null),
+            )
             .set("jain", self.jain())
             .set("makespan", self.makespan)
             .set("mapper_overhead_us", self.mapper_overhead_us())
@@ -302,6 +345,27 @@ mod tests {
         let r = sample(); // rates 0.8, 0.4
         let j = r.jain();
         assert!(j < 1.0 && j > 0.5);
+    }
+
+    #[test]
+    fn lifetime_soc_and_tasks_per_joule() {
+        let mut r = sample();
+        r.makespan = 100.0;
+        assert_eq!(r.lifetime_s(), 100.0, "no depletion: lifetime = makespan");
+        r.depleted_at = Some(40.0);
+        r.final_soc = 0.0;
+        assert_eq!(r.lifetime_s(), 40.0);
+        // 12 completed over 33 J total
+        assert!((r.tasks_per_joule() - 12.0 / 33.0).abs() < 1e-12);
+        // system-off cancellations land in their own split bucket
+        r.arrived[0] += 1;
+        r.record(0, &Outcome::Cancelled { reason: CancelReason::SystemOff, at: 40.0 });
+        assert_eq!(r.cancelled_systemoff, 1);
+        r.check_conservation().unwrap();
+        let j = r.to_json();
+        assert_eq!(j.req_f64("lifetime_s").unwrap(), 40.0);
+        assert_eq!(j.req_f64("depleted_at").unwrap(), 40.0);
+        assert_eq!(j.req_f64("final_soc").unwrap(), 0.0);
     }
 
     #[test]

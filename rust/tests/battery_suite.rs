@@ -1,0 +1,213 @@
+//! Battery subsystem acceptance suite.
+//!
+//! Three contracts from the battery ISSUE:
+//!
+//! 1. **Energy conservation** — for any run that survives, the battery's
+//!    gross debit equals the per-machine `dynamic + idle` accounting
+//!    (within float-summation tolerance: the two sides sum the same
+//!    joules in different orders); for any run that depletes, the debit
+//!    equals the capacity exactly (that is what depletion means).
+//! 2. **Infinite battery ≡ unbatteried** — `--battery inf` must be
+//!    bit-identical to today's unbatteried results on both virtual-time
+//!    engines, every deterministic field.
+//! 3. **`felare-eb` earns its keep** — on battery-constrained workloads
+//!    at low-to-moderate rates, the SoC-aware heuristic beats stock
+//!    FELARE on lifetime and tasks-per-joule (paired traces).
+
+use felare::energy::RechargeProfile;
+use felare::model::{Scenario, Trace, WorkloadParams};
+use felare::sched::registry::heuristic_by_name;
+use felare::serve::HeadlessServe;
+use felare::sim::{SimResult, Simulation};
+use felare::util::rng::Pcg64;
+
+fn trace_for(sc: &Scenario, rate: f64, n: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks: n,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+fn sim_run(sc: &Scenario, h: &str, trace: &Trace) -> SimResult {
+    Simulation::new(sc, heuristic_by_name(h, sc).unwrap()).run(trace)
+}
+
+fn assert_identical(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.missed, b.missed, "{tag}: missed");
+    assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+    assert_eq!(a.cancelled_mapper, b.cancelled_mapper, "{tag}: mapper drops");
+    assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victims");
+    assert_eq!(a.cancelled_expired, b.cancelled_expired, "{tag}: expiries");
+    assert_eq!(a.cancelled_systemoff, b.cancelled_systemoff, "{tag}: system-off");
+    assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+    assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    for (ea, eb) in a.energy.iter().zip(&b.energy) {
+        assert_eq!(ea.dynamic, eb.dynamic, "{tag}: dynamic energy");
+        assert_eq!(ea.wasted, eb.wasted, "{tag}: wasted energy");
+        assert_eq!(ea.idle, eb.idle, "{tag}: idle energy");
+        assert_eq!(ea.busy_time, eb.busy_time, "{tag}: busy time");
+    }
+}
+
+// ---- contract 1: energy conservation -----------------------------------
+
+#[test]
+fn debit_equals_accounting_across_scenarios_heuristics_and_rates() {
+    let scenarios = [Scenario::paper_synthetic(), Scenario::aws_two_app(), Scenario::stress(6, 3)];
+    for (si, base) in scenarios.iter().enumerate() {
+        let cap = base.service_capacity();
+        for (ri, rate_frac) in [0.4, 0.9, 1.6].iter().enumerate() {
+            for h in ["mm", "elare", "felare", "felare-eb"] {
+                let sc = base.clone().with_battery(1e9, None); // never depletes
+                let trace =
+                    trace_for(&sc, rate_frac * cap, 300, 1000 + (si * 10 + ri) as u64);
+                let r = sim_run(&sc, h, &trace);
+                assert!(r.depleted_at.is_none(), "{h}: 1 GJ must survive");
+                let consumed = r.total_energy();
+                let rel = (r.battery_spent - consumed).abs() / consumed.max(1.0);
+                assert!(
+                    rel < 1e-9,
+                    "{}/{h}@{rate_frac}cap: debit {} != accounted {consumed}",
+                    base.name,
+                    r.battery_spent
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn recharge_does_not_change_the_gross_debit_accounting() {
+    // the debit is gross draw; harvest only extends how long it can go on
+    let sc = Scenario::paper_synthetic()
+        .with_battery(1e9, Some(RechargeProfile::parse("0.5:10,0:10").unwrap()));
+    let trace = trace_for(&sc, 4.0, 400, 7);
+    let r = sim_run(&sc, "felare", &trace);
+    assert!(r.depleted_at.is_none());
+    let consumed = r.total_energy();
+    let rel = (r.battery_spent - consumed).abs() / consumed.max(1.0);
+    assert!(rel < 1e-9, "debit {} != accounted {consumed}", r.battery_spent);
+}
+
+#[test]
+fn depleted_runs_drew_exactly_the_capacity() {
+    for (cap, seed) in [(25.0, 11u64), (60.0, 12), (140.0, 13)] {
+        let sc = Scenario::paper_synthetic().with_battery(cap, None);
+        let trace = trace_for(&sc, 5.0, 500, seed);
+        let r = sim_run(&sc, "felare", &trace);
+        assert!(r.depleted_at.is_some(), "{cap} J must deplete");
+        r.check_conservation().unwrap();
+        let rel = (r.battery_spent - cap).abs() / cap;
+        assert!(rel < 1e-9, "debit {} != capacity {cap}", r.battery_spent);
+        // the energy accounted up to the crossing matches the debit too
+        let consumed = r.total_energy();
+        let rel = (r.battery_spent - consumed).abs() / consumed.max(1.0);
+        assert!(rel < 1e-9, "debit {} != accounted {consumed}", r.battery_spent);
+    }
+}
+
+// ---- contract 2: infinite battery ≡ unbatteried, both engines ----------
+
+#[test]
+fn infinite_battery_bit_identical_on_sim_and_headless_serve() {
+    let scenarios = [Scenario::paper_synthetic(), Scenario::stress(8, 4)];
+    for base in scenarios {
+        let inf = base.clone().with_battery(f64::INFINITY, None);
+        let cap = base.service_capacity();
+        for rate in [0.5 * cap, 1.2 * cap] {
+            let trace = trace_for(&base, rate, 400, 21);
+            for h in ["mm", "msd", "mmu", "elare", "felare", "felare-novd", "felare-eb"] {
+                let tag = format!("{}/{h}@{rate:.2}", base.name);
+                // simulator: unbatteried vs infinite battery
+                let plain = sim_run(&base, h, &trace);
+                let tracked = sim_run(&inf, h, &trace);
+                assert_identical(&plain, &tracked, &format!("sim {tag}"));
+                assert!(tracked.battery_spent > 0.0, "{tag}: debit tracked");
+                assert_eq!(tracked.final_soc, 1.0, "{tag}");
+                assert!(tracked.depleted_at.is_none(), "{tag}");
+                // headless serve: same contract
+                let plain_hs =
+                    HeadlessServe::new(&base, heuristic_by_name(h, &base).unwrap()).run(&trace);
+                let tracked_hs =
+                    HeadlessServe::new(&inf, heuristic_by_name(h, &inf).unwrap()).run(&trace);
+                assert_identical(&plain_hs, &tracked_hs, &format!("serve {tag}"));
+                // and the two engines agree on the tracked debit bit-for-bit
+                assert_eq!(
+                    tracked.battery_spent, tracked_hs.battery_spent,
+                    "{tag}: engines disagree on the debit"
+                );
+            }
+        }
+    }
+}
+
+// ---- contract 3: felare-eb beats stock FELARE under energy pressure ----
+
+#[test]
+fn felare_eb_beats_felare_on_lifetime_and_tasks_per_joule() {
+    // paired traces at low-to-moderate rates on a battery sized to die
+    // mid-run: the SoC-aware variant must live longer and complete more
+    // per joule, in aggregate over traces.
+    let sc = Scenario::paper_synthetic().with_battery(150.0, None);
+    let mut eb_life = 0.0;
+    let mut fe_life = 0.0;
+    let mut eb_tpj = 0.0;
+    let mut fe_tpj = 0.0;
+    let mut n = 0.0;
+    for rate in [2.0, 3.0] {
+        for seed in [41u64, 42, 43, 44] {
+            let trace = trace_for(&sc, rate, 600, seed);
+            let fe = sim_run(&sc, "felare", &trace);
+            let eb = sim_run(&sc, "felare-eb", &trace);
+            fe.check_conservation().unwrap();
+            eb.check_conservation().unwrap();
+            assert!(fe.depleted_at.is_some(), "λ={rate} seed {seed}: felare must deplete");
+            eb_life += eb.lifetime_s();
+            fe_life += fe.lifetime_s();
+            eb_tpj += eb.tasks_per_joule();
+            fe_tpj += fe.tasks_per_joule();
+            n += 1.0;
+        }
+    }
+    eb_life /= n;
+    fe_life /= n;
+    eb_tpj /= n;
+    fe_tpj /= n;
+    assert!(
+        eb_life > fe_life,
+        "felare-eb mean lifetime {eb_life:.1}s must beat felare's {fe_life:.1}s"
+    );
+    assert!(
+        eb_tpj >= fe_tpj,
+        "felare-eb mean tasks/J {eb_tpj:.5} must not lose to felare's {fe_tpj:.5}"
+    );
+}
+
+// ---- odds and ends ------------------------------------------------------
+
+#[test]
+fn system_off_outcomes_are_traced() {
+    use felare::sched::trace::TraceOutcome;
+    let sc = Scenario::paper_synthetic().with_battery(30.0, None);
+    let trace = trace_for(&sc, 5.0, 300, 51);
+    let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+    sim.set_record_traces(true);
+    let r = sim.run(&trace);
+    assert_eq!(sim.trace_log().len() as u64, r.total_arrived(), "one record per task");
+    let off = sim
+        .trace_log()
+        .iter()
+        .filter(|t| t.outcome == TraceOutcome::SystemOff)
+        .count() as u64;
+    assert_eq!(off, r.cancelled_systemoff, "trace outcomes match the counter");
+    assert!(off > 0);
+    for rec in sim.trace_log() {
+        rec.validate().unwrap();
+    }
+}

@@ -28,6 +28,7 @@ fn tiny_scenario(n_machines: usize, queue_slots: usize) -> Scenario {
         rate_window: RateWindow::Cumulative,
         cv_exec: 0.1,
         battery: None,
+        recharge: None,
     }
 }
 
@@ -230,6 +231,7 @@ fn felare_rescues_starved_type() {
         rate_window: RateWindow::Cumulative,
         cv_exec: 0.05,
         battery: None,
+        recharge: None,
     };
     let params = WorkloadParams { n_tasks: 1500, arrival_rate: 4.0, ..Default::default() };
     let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(13));
@@ -246,4 +248,44 @@ fn felare_rescues_starved_type() {
         gap(&el)
     );
     assert!(fe.jain() >= el.jain());
+}
+
+#[test]
+fn synthetic_engines_ignore_machine_speed() {
+    // Pinned behavior (`MachineSpec::speed` docs): `speed` only scales
+    // PJRT wall time into modeled time; every synthetic path takes
+    // heterogeneity from the EET matrix alone. Scaling synthetic EET
+    // sampling by `speed` too would double-apply the machine's relative
+    // speed (the AWS preset's EET columns already encode the GPU being
+    // faster), so changing `speed` must not move a single float.
+    let base = Scenario::aws_two_app(); // ships speeds 1.0 / 0.35
+    let mut uniform = base.clone();
+    for m in &mut uniform.machines {
+        m.speed = 1.0;
+    }
+    let mut wild = base.clone();
+    wild.machines[0].speed = 50.0;
+    wild.machines[1].speed = 0.01;
+    let params = WorkloadParams { n_tasks: 300, arrival_rate: 3.0, ..Default::default() };
+    let trace = Trace::generate(&params, &base.eet, &mut Pcg64::new(99));
+    for h in ALL_HEURISTICS {
+        let a = run(&base, h, &trace);
+        for other in [&uniform, &wild] {
+            let b = run(other, h, &trace);
+            assert_eq!(a.completed, b.completed, "{h}");
+            assert_eq!(a.missed, b.missed, "{h}");
+            assert_eq!(a.cancelled, b.cancelled, "{h}");
+            assert_eq!(a.makespan, b.makespan, "{h}");
+            for (ea, eb) in a.energy.iter().zip(&b.energy) {
+                assert_eq!(ea.dynamic, eb.dynamic, "{h}: dynamic energy");
+                assert_eq!(ea.busy_time, eb.busy_time, "{h}: busy time");
+            }
+        }
+    }
+    // the headless serve driver's SyntheticBackend path is speed-blind too
+    use felare::serve::HeadlessServe;
+    let a = HeadlessServe::new(&base, heuristic_by_name("felare", &base).unwrap()).run(&trace);
+    let b = HeadlessServe::new(&wild, heuristic_by_name("felare", &wild).unwrap()).run(&trace);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.makespan, b.makespan);
 }

@@ -23,6 +23,7 @@ fn one_machine() -> Scenario {
         rate_window: RateWindow::Cumulative,
         cv_exec: 0.0,
         battery: Some(1000.0),
+        recharge: None,
     }
 }
 
@@ -131,6 +132,7 @@ fn two_machines_elare_picks_cheap_one() {
         rate_window: RateWindow::Cumulative,
         cv_exec: 0.0,
         battery: Some(100.0),
+        recharge: None,
     };
     let trace = Trace { tasks: vec![task(0, 0.0, 10.0, 1.0)], arrival_rate: 1.0 };
     let el = Simulation::new(&sc, heuristic_by_name("elare", &sc).unwrap()).run(&trace);

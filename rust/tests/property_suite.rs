@@ -81,6 +81,7 @@ fn gen_system(rng: &mut Pcg64) -> RandomSystem {
         },
         cv_exec: f64_in(rng, 0.01, 0.5),
         battery: None,
+        recharge: None,
     };
     RandomSystem {
         scenario,

@@ -171,6 +171,58 @@ fn tracing_records_every_request_and_breaks_down_latency() {
     assert!(lean_report.traces.is_empty());
 }
 
+// ---- battery: finite-energy sessions -----------------------------------
+
+#[test]
+fn battery_depletion_shuts_the_session_off_cleanly() {
+    // a battery far too small for the workload: the session must still
+    // reach a terminal state for every issued request, report the
+    // depletion instant, and conserve request accounting.
+    let sc = Scenario::stress(8, 4).with_battery(40.0, None);
+    let rate = 0.8 * sc.service_capacity();
+    let mut cfg = synthetic_config(sc, "felare", rate, 2000);
+    cfg.record_traces = true;
+    cfg.seed = 31;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    let dead = report.depleted_at.expect("40 J cannot serve 2000 requests");
+    assert!(dead > 0.0);
+    assert_eq!(report.battery_capacity, Some(40.0));
+    assert_eq!(report.final_soc, Some(0.0));
+    assert!(report.battery_spent >= 40.0 * 0.99, "drew (almost) the whole store");
+    let issued = report.arrived.iter().sum::<u64>();
+    assert!(issued < 2000, "generation stopped at system off");
+    assert!(issued > 0, "some requests served before depletion");
+    assert_eq!(report.traces.len() as u64, issued, "one record per issued request");
+    assert!(
+        report.traces.iter().any(|r| r.outcome == TraceOutcome::SystemOff),
+        "waiting work cancelled as system-off"
+    );
+    assert!(report.render().contains("DEPLETED"));
+}
+
+#[test]
+fn ample_battery_session_reports_soc_without_depleting() {
+    let sc = Scenario::stress(4, 3).with_battery(1e6, None);
+    let rate = 0.8 * sc.service_capacity();
+    let mut cfg = synthetic_config(sc, "felare-eb", rate, 150);
+    cfg.progress_every = Some(10.0);
+    cfg.seed = 37;
+    let report = serve(&cfg).unwrap();
+    report.check_conservation().unwrap();
+    assert_eq!(report.arrived.iter().sum::<u64>(), 150, "nothing shed at high SoC");
+    assert!(report.depleted_at.is_none());
+    assert!(report.battery_spent > 0.0);
+    let soc = report.final_soc.unwrap();
+    assert!(soc > 0.9 && soc <= 1.0, "1 MJ barely dented: {soc}");
+    // snapshots carry a monotonically non-increasing SoC
+    let socs: Vec<f64> = report.snapshots.iter().filter_map(|s| s.soc).collect();
+    assert!(!socs.is_empty(), "batteried snapshots include SoC");
+    for w in socs.windows(2) {
+        assert!(w[0] >= w[1] - 1e-12, "no recharge: SoC never rises");
+    }
+}
+
 // ---- PJRT backend: needs the feature + built artifacts -----------------
 
 fn have_artifacts() -> bool {

@@ -52,6 +52,11 @@ fn assert_points_bit_identical(sim: &[SweepPoint], serve: &[SweepPoint], tag: &s
             "{cell}: wasted CI"
         );
         assert_eq!(a.victim_drops_per_k, b.victim_drops_per_k, "{cell}: victim drops");
+        // battery metrics are deterministic model state, compared bit-for-bit
+        assert_eq!(a.lifetime_s, b.lifetime_s, "{cell}: lifetime");
+        assert_eq!(a.final_soc, b.final_soc, "{cell}: final SoC");
+        assert_eq!(a.tasks_per_joule, b.tasks_per_joule, "{cell}: tasks/J");
+        assert_eq!(a.depleted_frac, b.depleted_frac, "{cell}: depleted fraction");
         // mapper_overhead_us is wall-clock — deliberately not compared
     }
 }
@@ -73,6 +78,38 @@ fn serve_engine_matches_sim_engine_on_three_scenarios() {
         let sim = run_sweep(&spec_for(scenario.clone(), &rates, EngineKind::Sim));
         let serve = run_sweep(&spec_for(scenario, &rates, EngineKind::Serve));
         assert_points_bit_identical(&sim, &serve, tag);
+    }
+}
+
+/// The `exp battery` acceptance gate: battery-constrained cells — where
+/// depletion cuts runs short and `felare-eb` plans against the SoC — must
+/// also be bit-identical across engines, with and without recharge.
+#[test]
+fn battery_sweeps_match_across_engines() {
+    use felare::energy::RechargeProfile;
+    let cases: Vec<(&str, Scenario)> = vec![
+        ("paper-120J", Scenario::paper_synthetic().with_battery(120.0, None)),
+        (
+            "paper-120J-recharge",
+            Scenario::paper_synthetic()
+                .with_battery(120.0, Some(RechargeProfile::parse("0.8:10,0:20").unwrap())),
+        ),
+        ("stress-8x4-200J", Scenario::stress(8, 4).with_battery(200.0, None)),
+    ];
+    for (tag, scenario) in cases {
+        let rates = vec![2.0, 5.0];
+        let mut sim_spec = spec_for(scenario.clone(), &rates, EngineKind::Sim);
+        sim_spec.heuristics = vec!["mm".into(), "felare".into(), "felare-eb".into()];
+        let mut serve_spec = spec_for(scenario, &rates, EngineKind::Serve);
+        serve_spec.heuristics = sim_spec.heuristics.clone();
+        let sim = run_sweep(&sim_spec);
+        let serve = run_sweep(&serve_spec);
+        assert_points_bit_identical(&sim, &serve, tag);
+        // the battery bites: at least one cell per grid must deplete
+        assert!(
+            sim.iter().any(|p| p.depleted_frac > 0.0),
+            "{tag}: expected depletions in a battery sweep"
+        );
     }
 }
 
