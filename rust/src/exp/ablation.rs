@@ -32,6 +32,7 @@ fn sweep_one(scenario: Scenario, heuristics: &[&str], rates: &[f64], opts: &ExpO
         tasks: opts.tasks(),
         seed: opts.seed,
         engine: opts.engine,
+        closed_loop: None,
     };
     run_sweep(&spec)
 }

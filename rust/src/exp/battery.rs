@@ -69,6 +69,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             tasks,
             seed: opts.seed,
             engine: opts.engine,
+            closed_loop: None,
         };
         let points = run_sweep(&spec);
         for p in &points {

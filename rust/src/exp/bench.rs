@@ -1,0 +1,121 @@
+//! Experiment `bench` — the PR's performance snapshot, written to
+//! `BENCH_PR6.json` at the repo root (CI uploads it as an artifact):
+//!
+//!  * `stress_throughput` — tasks/s of one recycled [`Simulation`] arena
+//!    replaying an oversubscribed stress trace (the single-island hot
+//!    loop);
+//!  * `sweep_cell` — wall time of one full sweep cell through the
+//!    experiment harness (trace generation + run + reduction);
+//!  * `fleet_throughput` — tasks/s of the epoch-parallel [`FleetSim`]
+//!    routing and draining a mixed-battery stress fleet.
+//!
+//! `--quick` shrinks workloads and measurement windows for the CI smoke
+//! run; absolute numbers then mean little, but the file shape is the
+//! same.
+
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::exp::sweep::{run_sweep, SweepSpec};
+use crate::exp::ExpOpts;
+use crate::model::{FleetScenario, Scenario, Trace, WorkloadParams};
+use crate::sched::registry::heuristic_by_name;
+use crate::sched::route::route_policy_by_name;
+use crate::sim::fleet::FleetSim;
+use crate::sim::Simulation;
+use crate::util::bench::{BenchResult, Bencher};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Repo-root output file (the PR's perf artifact).
+pub const OUT_PATH: &str = "BENCH_PR6.json";
+
+fn tuned(name: &str, quick: bool) -> Bencher {
+    if quick {
+        Bencher::new(name)
+            .warmup(Duration::from_millis(50))
+            .measure_time(Duration::from_millis(200))
+            .samples(3)
+    } else {
+        Bencher::new(name)
+            .warmup(Duration::from_millis(200))
+            .measure_time(Duration::from_millis(800))
+            .samples(10)
+    }
+}
+
+fn trace_for(sc: &Scenario, rate: f64, n_tasks: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let quick = opts.quick;
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // 1. single-island hot loop on a recycled arena
+    let sc = Scenario::stress(12, 5);
+    let n_tasks = if quick { 1000 } else { 10_000 };
+    let trace = trace_for(&sc, 1.2 * sc.service_capacity(), n_tasks, 0xBE7C);
+    let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc)?);
+    results.push(
+        tuned("stress_throughput", quick)
+            .throughput_items(n_tasks as u64)
+            .run(|| sim.run(&trace)),
+    );
+
+    // 2. one sweep cell end to end through the harness
+    let mut spec = SweepSpec::paper_default(&["felare"], &[5.0]);
+    spec.traces = 1;
+    spec.tasks = if quick { 300 } else { 1000 };
+    results.push(tuned("sweep_cell", quick).throughput_items(1).run(|| run_sweep(&spec)));
+
+    // 3. the epoch-parallel fleet engine, mixed batteries, SoC routing
+    let k = if quick { 6 } else { 32 };
+    let per_island = if quick { 300 } else { 1000 };
+    let fleet = FleetScenario::stress_fleet(k, 4, 3).with_mixed_batteries(120.0);
+    let fleet_tasks = per_island * k;
+    let fleet_trace =
+        trace_for(&fleet.islands[0], 1.2 * fleet.service_capacity(), fleet_tasks, 0xF1BE);
+    let mut fsim = FleetSim::new(&fleet, "felare", route_policy_by_name("soc-aware", 1)?)?;
+    results.push(
+        tuned("fleet_throughput", quick)
+            .throughput_items(fleet_tasks as u64)
+            .run(|| fsim.run(&fleet_trace)),
+    );
+
+    for r in &results {
+        println!("{}", r.report_line());
+    }
+    let json = Json::Array(results.iter().map(|r| r.to_json()).collect());
+    std::fs::write(OUT_PATH, json.to_string_pretty())?;
+    println!("wrote {} bench entries to {OUT_PATH}", results.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_writes_the_artifact() {
+        let opts = ExpOpts { quick: true, ..Default::default() };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(OUT_PATH).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        let names: Vec<&str> = arr.iter().map(|e| e.req_str("name").unwrap()).collect();
+        assert!(names.contains(&"stress_throughput"));
+        assert!(names.contains(&"sweep_cell"));
+        assert!(names.contains(&"fleet_throughput"));
+        for e in arr {
+            assert!(e.req("items_per_sec").is_ok(), "every entry reports throughput");
+        }
+    }
+}

@@ -62,6 +62,7 @@ fn sweep(sc: Scenario, opts: &ExpOpts) -> (f64, f64, f64) {
         tasks: opts.tasks(),
         seed: opts.seed,
         engine: opts.engine,
+        closed_loop: None,
     };
     let p = &run_sweep(&spec)[0];
     (p.completion_rate, p.total_energy, p.wasted_energy_pct)

@@ -51,6 +51,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         tasks: opts.tasks(),
         seed: opts.seed,
         engine: opts.engine,
+        closed_loop: None,
     };
     let points = run_sweep(&spec);
 

@@ -28,6 +28,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         tasks: opts.tasks(),
         seed: opts.seed,
         engine: opts.engine,
+        closed_loop: None,
     };
     fig7::run_spec(
         spec,

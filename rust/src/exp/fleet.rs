@@ -1,0 +1,234 @@
+//! Experiment `fleet` — the two-level scheduler at fleet scale: sweep
+//! island count × offered load × router policy on heterogeneous
+//! mixed-battery fleets and report the fleet-aggregate metrics the
+//! routing layer actually moves: on-time rate, per-island fairness
+//! spread, fleet lifetime (first/median island depletion) and completed
+//! tasks per joule.
+//!
+//! The claim under test: with per-island FELARE mapping held fixed,
+//! SoC-aware routing steers work away from nearly-dead islands and beats
+//! battery-blind round-robin on fleet lifetime and/or on-time rate —
+//! the per-cell traces are shared across policies, so every comparison
+//! is paired.
+//!
+//! Grid knobs: `--islands 16,64`, `--policies round-robin,soc-aware`,
+//! `--rates` (absolute λ; default is load multiples of fleet capacity),
+//! `--batteries` (base joules of the mixed pattern), `--epoch`, and
+//! `--scenario fleet:K:M:T | fleet.json` to pin one explicit fleet in
+//! place of the island-count axis.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::ExpOpts;
+use crate::model::{FleetScenario, Trace, WorkloadParams};
+use crate::sched::route::{route_policy_by_name, ALL_ROUTE_POLICIES};
+use crate::sim::fleet::FleetSim;
+use crate::util::rng::Pcg64;
+
+/// Default offered-load multiples of the fleet's aggregate service
+/// capacity: under-, at- and over-subscription.
+const LOADS: [f64; 3] = [0.6, 1.0, 1.5];
+
+/// Machines × types per stress island in the default grid.
+const ISLAND_M: usize = 4;
+const ISLAND_T: usize = 3;
+
+/// Base battery joules for the mixed pattern at the 2000-task scale
+/// (scaled by `tasks / 2000` like `exp battery`).
+const BASE_BATTERY: f64 = 150.0;
+
+fn fmt_opt(x: Option<f64>, digits: usize) -> String {
+    match x {
+        Some(v) => fmt_f(v, digits),
+        None => "-".into(),
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let island_counts: Vec<usize> = opts
+        .islands
+        .clone()
+        .unwrap_or_else(|| if opts.quick { vec![4, 16] } else { vec![4, 16, 64] });
+    let policies: Vec<String> = opts
+        .policies
+        .clone()
+        .unwrap_or_else(|| ALL_ROUTE_POLICIES.iter().map(|s| s.to_string()).collect());
+    for p in &policies {
+        route_policy_by_name(p, 0)?; // validate names before the long part
+    }
+    // per-island task budget; the fleet cell offers tasks × islands
+    let tasks_per_island = opts.tasks();
+    let battery_base = match &opts.batteries {
+        Some(caps) => caps[0],
+        None => BASE_BATTERY * tasks_per_island as f64 / 2000.0,
+    };
+    // `--scenario fleet:K:M:T | fleet.json` pins one explicit fleet and
+    // replaces the island-count axis; the shorthand builds an unbatteried
+    // stress fleet, so arm the mixed pattern unless the spec is a JSON
+    // file carrying its own batteries.
+    let pinned: Option<FleetScenario> = match &opts.scenario {
+        Some(spec) => {
+            if opts.islands.is_some() {
+                return Err("--scenario pins the fleet; it conflicts with --islands"
+                    .to_string()
+                    .into());
+            }
+            let f = FleetScenario::from_spec(spec)?;
+            if f.islands.iter().any(|i| i.battery.is_some()) {
+                Some(f)
+            } else {
+                Some(f.with_mixed_batteries(battery_base))
+            }
+        }
+        None => None,
+    };
+
+    let mut t = Table::new(
+        &format!("fleet sweep — islands × load × router (mixed {battery_base:.0} J)"),
+        &[
+            "islands",
+            "policy",
+            "rate",
+            "load",
+            "on_time",
+            "spread",
+            "first_depl",
+            "median_depl",
+            "depleted",
+            "tasks_per_joule",
+        ],
+    );
+
+    let fleets: Vec<FleetScenario> = match pinned {
+        Some(f) => vec![f],
+        None => island_counts
+            .iter()
+            .map(|&k| {
+                FleetScenario::stress_fleet(k, ISLAND_M, ISLAND_T)
+                    .with_mixed_batteries(battery_base)
+            })
+            .collect(),
+    };
+
+    for fleet in &fleets {
+        let k = fleet.n_islands();
+        let capacity = fleet.service_capacity();
+        let rates: Vec<f64> = match &opts.rates {
+            Some(rs) => rs.clone(),
+            None => LOADS.iter().map(|l| l * capacity).collect(),
+        };
+        let n_tasks = tasks_per_island * k;
+        for &rate in &rates {
+            // one shared trace per (islands, rate) cell: every policy
+            // routes the identical arrival sequence
+            let params = WorkloadParams {
+                n_tasks,
+                arrival_rate: rate,
+                cv_exec: fleet.islands[0].cv_exec,
+                type_weights: Vec::new(),
+            };
+            let seed = opts.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ rate.to_bits();
+            let trace = Trace::generate(&params, &fleet.islands[0].eet, &mut Pcg64::new(seed));
+            let mut cell: Vec<(String, f64, Option<f64>)> = Vec::new();
+            for policy in &policies {
+                let router = route_policy_by_name(policy, opts.seed)?;
+                let mut sim = FleetSim::new(fleet, "felare", router)?;
+                if let Some(epoch) = opts.epoch {
+                    sim.set_epoch(epoch);
+                }
+                let r = sim.run(&trace);
+                r.check_conservation(n_tasks as u64)
+                    .map_err(|e| format!("{policy}@{k} islands, λ={rate:.2}: {e}"))?;
+                t.row(vec![
+                    k.to_string(),
+                    policy.clone(),
+                    fmt_f(rate, 2),
+                    fmt_f(rate / capacity, 2),
+                    fmt_f(r.on_time_rate(), 4),
+                    fmt_f(r.fairness_spread(), 4),
+                    fmt_opt(r.first_depletion(), 1),
+                    fmt_opt(r.median_depletion(), 1),
+                    r.depleted_islands().to_string(),
+                    fmt_f(r.tasks_per_joule(), 5),
+                ]);
+                cell.push((policy.clone(), r.on_time_rate(), r.first_depletion()));
+            }
+            let verdict = |name: &str| cell.iter().find(|(p, _, _)| p == name);
+            if let (Some((_, soc_ot, soc_fd)), Some((_, rr_ot, rr_fd))) =
+                (verdict("soc-aware"), verdict("round-robin"))
+            {
+                println!(
+                    "  {k} islands @ λ={rate:.2}: soc-aware on-time {} vs round-robin {} \
+                     (first depletion {} vs {})",
+                    fmt_f(*soc_ot, 4),
+                    fmt_f(*rr_ot, 4),
+                    fmt_opt(*soc_fd, 1),
+                    fmt_opt(*rr_fd, 1),
+                );
+            }
+        }
+    }
+    t.emit("fleet")?;
+    println!(
+        "fleet sweep: {} fleets × {} policies, {} tasks per island, all cells \
+         conservation-checked",
+        fleets.len(),
+        policies.len(),
+        tasks_per_island,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fleet_figure_runs() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(120),
+            islands: Some(vec![2, 3]),
+            policies: Some(vec!["round-robin".into(), "soc-aware".into()]),
+            batteries: Some(vec![80.0]),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+    }
+
+    #[test]
+    fn pinned_fleet_spec_replaces_the_island_axis() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(80),
+            scenario: Some("fleet:3:3:2".into()),
+            policies: Some(vec!["soc-aware".into()]),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+    }
+
+    #[test]
+    fn pinned_fleet_spec_conflicts_with_the_island_axis() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(50),
+            scenario: Some("fleet:3:3:2".into()),
+            islands: Some(vec![2]),
+            ..Default::default()
+        };
+        assert!(run(&opts).is_err());
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected_before_running() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(50),
+            islands: Some(vec![2]),
+            policies: Some(vec!["teleport".into()]),
+            ..Default::default()
+        };
+        assert!(run(&opts).is_err());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod ablation;
 pub mod battery;
+pub mod bench;
 pub mod cloud;
 pub mod fig2;
 pub mod fig3;
@@ -14,6 +15,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fleet;
 pub mod headline;
 pub mod output;
 pub mod overhead;
@@ -41,16 +43,30 @@ pub struct ExpOpts {
     /// Rate-grid override for `exp sweep` (`--rates 2,4,8`).
     pub rates: Option<Vec<f64>>,
     /// Scenario spec for `exp sweep`/`exp battery`
-    /// (`--scenario paper|aws|stress:M:T|path`).
+    /// (`--scenario paper|aws|stress:M:T|path`); `exp fleet` reads it as
+    /// a fleet spec (`fleet:K:M:T|path`) pinning one explicit fleet.
     pub scenario: Option<String>,
     /// Per-request JSONL trace export path for `exp sweep` (`--trace-out`).
     pub trace_out: Option<String>,
     /// Percentile-latency SLO gate for `exp sweep` (`--expect-p99 secs`):
     /// fail unless every cell's p99 completed sojourn is within the limit.
     pub expect_p99: Option<f64>,
-    /// Battery-capacity grid override for `exp battery` (`--batteries
-    /// 200,400,800`, joules).
+    /// Battery-capacity grid override for `exp battery`/`exp fleet`
+    /// (`--batteries 200,400,800`, joules).
     pub batteries: Option<Vec<f64>>,
+    /// Island-count grid for `exp fleet` (`--islands 16,64,256`).
+    pub islands: Option<Vec<usize>>,
+    /// Router-policy subset for `exp fleet` (`--policies
+    /// round-robin,soc-aware`); default: every registered policy.
+    pub policies: Option<Vec<String>>,
+    /// Closed-loop mode for `exp sweep` (`--clients 4,8,16`): the rate
+    /// axis becomes a client-count grid driven by a think-time pool.
+    pub clients: Option<Vec<f64>>,
+    /// Think time (seconds) for `--clients` cells (`--think-time`,
+    /// default 0.5 — the same default as `simulate --clients`).
+    pub think_time: Option<f64>,
+    /// Router epoch length in seconds for `exp fleet` (`--epoch`).
+    pub epoch: Option<f64>,
 }
 
 impl Default for ExpOpts {
@@ -66,6 +82,11 @@ impl Default for ExpOpts {
             trace_out: None,
             expect_p99: None,
             batteries: None,
+            islands: None,
+            policies: None,
+            clients: None,
+            think_time: None,
+            epoch: None,
         }
     }
 }
@@ -98,6 +119,8 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("cloud", "edge-to-cloud continuum RTT sweep (§VIII future work)", cloud::run),
     ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
     ("battery", "lifetime/efficiency sweep: battery capacity × rate, felare-eb vs stock", battery::run),
+    ("fleet", "multi-island fleet: islands × rate × router policy (--islands, --policies)", fleet::run),
+    ("bench", "performance benchmarks → BENCH_PR6.json (stress, sweep cells, fleet)", bench::run),
 ];
 
 pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {
@@ -163,7 +186,9 @@ mod tests {
         assert!(ids.contains(&"fig4"));
         assert!(ids.contains(&"sweep"));
         assert!(ids.contains(&"battery"));
-        assert_eq!(n, 14);
+        assert!(ids.contains(&"fleet"));
+        assert!(ids.contains(&"bench"));
+        assert_eq!(n, 16);
     }
 
     #[test]

@@ -36,7 +36,7 @@
 use crate::error::{Error, Result};
 use crate::exp::output::{fmt_f, Table};
 use crate::exp::ExpOpts;
-use crate::model::{Scenario, Trace, WorkloadParams};
+use crate::model::{ClientPool, Scenario, Trace, WorkloadParams};
 use crate::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
 use crate::sched::trace::TraceRecord;
 use crate::sched::MappingHeuristic;
@@ -57,6 +57,9 @@ pub trait SweepEngine {
     /// Trace records of the latest run.
     fn trace_log(&self) -> &[TraceRecord];
     fn run(&mut self, trace: &Trace) -> SimResult;
+    /// Closed-loop session: `pool.n_clients` clients, `n_tasks` requests
+    /// in total (sweep cells with [`SweepSpec::closed_loop`] set).
+    fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult;
 }
 
 impl SweepEngine for Simulation {
@@ -79,6 +82,10 @@ impl SweepEngine for Simulation {
     fn run(&mut self, trace: &Trace) -> SimResult {
         Simulation::run(self, trace)
     }
+
+    fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
+        Simulation::run_closed(self, pool, n_tasks, seed)
+    }
 }
 
 impl SweepEngine for HeadlessServe {
@@ -100,6 +107,10 @@ impl SweepEngine for HeadlessServe {
 
     fn run(&mut self, trace: &Trace) -> SimResult {
         HeadlessServe::run(self, trace)
+    }
+
+    fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
+        HeadlessServe::run_closed(self, pool, n_tasks, seed)
     }
 }
 
@@ -187,6 +198,13 @@ pub struct SweepSpec {
     pub seed: u64,
     /// Which engine executes the cells (default: the simulator).
     pub engine: EngineKind,
+    /// `Some(think_time)` switches every cell to a closed-loop client
+    /// pool: the `rates` axis is reinterpreted as **client counts** (whole
+    /// numbers ≥ 1), each cell running `tasks` total requests through
+    /// `rate` clients with the given exponential think time (`exp sweep
+    /// --clients 8,16 --think-time 0.3`). `None` (default) keeps the
+    /// classic open-loop Poisson traces.
+    pub closed_loop: Option<f64>,
 }
 
 impl SweepSpec {
@@ -199,6 +217,7 @@ impl SweepSpec {
             tasks: 2000,
             seed: 0x5EED,
             engine: EngineKind::Sim,
+            closed_loop: None,
         }
     }
 
@@ -334,20 +353,36 @@ pub fn run_sweep_traced(
     let n_rates = spec.rates.len();
     let n_items = n_rates * traces;
 
+    if let Some(think) = spec.closed_loop {
+        assert!(think >= 0.0, "think time must be >= 0");
+        for &clients in &spec.rates {
+            assert!(
+                clients >= 1.0 && clients.fract() == 0.0,
+                "closed-loop sweeps read the rate axis as client counts; got {clients}"
+            );
+        }
+    }
+
     // One work item per (rate, trace): generate the workload once, replay
-    // it under every heuristic on one recycled engine arena.
+    // it under every heuristic on one recycled engine arena. Closed-loop
+    // cells generate arrivals inside the engine instead (same cell seed,
+    // so heuristic comparisons stay paired).
     type Item = (Vec<CellMetrics>, Vec<Vec<TraceRecord>>);
     let cells: Vec<Item> = par_map_n(n_items, default_jobs(), |item| {
         let (ri, ti) = (item / traces, item % traces);
         let rate = spec.rates[ri];
-        let params = WorkloadParams {
-            n_tasks: spec.tasks,
-            arrival_rate: rate,
-            cv_exec: spec.scenario.cv_exec,
-            type_weights: Vec::new(),
+        let trace: Option<Trace> = if spec.closed_loop.is_none() {
+            let params = WorkloadParams {
+                n_tasks: spec.tasks,
+                arrival_rate: rate,
+                cv_exec: spec.scenario.cv_exec,
+                type_weights: Vec::new(),
+            };
+            let mut rng = Pcg64::seed_from(cell_seed(spec.seed, rate, ti), 0x7ACE);
+            Some(Trace::generate(&params, &spec.scenario.eet, &mut rng))
+        } else {
+            None
         };
-        let mut rng = Pcg64::seed_from(cell_seed(spec.seed, rate, ti), 0x7ACE);
-        let trace = Trace::generate(&params, &spec.scenario.eet, &mut rng);
         let mut engine: Option<Box<dyn SweepEngine>> = None;
         let mut metrics = Vec::with_capacity(spec.heuristics.len());
         let mut records: Vec<Vec<TraceRecord>> = Vec::new();
@@ -364,7 +399,15 @@ pub fn run_sweep_traced(
                     eng
                 }
             };
-            let r = eng.run(&trace);
+            let r = match (&trace, spec.closed_loop) {
+                (Some(tr), _) => eng.run(tr),
+                (None, Some(think)) => eng.run_closed(
+                    ClientPool { n_clients: rate as usize, think_time: think },
+                    spec.tasks,
+                    cell_seed(spec.seed, rate, ti),
+                ),
+                (None, None) => unreachable!("no trace and no client pool"),
+            };
             r.check_conservation()
                 .unwrap_or_else(|e| panic!("{h}@λ={rate} trace {ti}: {e}"));
             metrics.push(CellMetrics::of(&r));
@@ -467,7 +510,14 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
         Some(spec) => Scenario::from_spec(spec)?,
         None => Scenario::paper_synthetic(),
     };
-    let rates = opts.rates.clone().unwrap_or_else(SweepSpec::paper_rates);
+    // Closed-loop mode (`--clients`): the rate axis becomes a client-count
+    // grid and every cell runs a think-time client pool instead of an open
+    // Poisson trace.
+    let closed_loop = opts.clients.as_ref().map(|_| opts.think_time.unwrap_or(0.5));
+    let rates = match &opts.clients {
+        Some(clients) => clients.clone(),
+        None => opts.rates.clone().unwrap_or_else(SweepSpec::paper_rates),
+    };
     let spec = SweepSpec {
         scenario,
         heuristics: ALL_HEURISTICS.iter().map(|s| s.to_string()).collect(),
@@ -476,17 +526,23 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
         tasks: opts.tasks(),
         seed: opts.seed,
         engine: opts.engine,
+        closed_loop,
     };
     let record = opts.trace_out.is_some() || opts.expect_p99.is_some();
     let (points, cell_traces) = run_sweep_traced(&spec, record);
 
+    let axis = if spec.closed_loop.is_some() { "clients" } else { "λ" };
     let mut t = Table::new(
         &format!(
-            "engine-agnostic sweep [{} engine] — {}",
+            "engine-agnostic sweep [{} engine{}] — {}",
             spec.engine.name(),
+            match spec.closed_loop {
+                Some(think) => format!(", closed-loop think={think}s"),
+                None => String::new(),
+            },
             spec.scenario.name
         ),
-        &["heuristic", "λ", "completion", "miss", "wasted%", "jain", "victims/k"],
+        &["heuristic", axis, "completion", "miss", "wasted%", "jain", "victims/k"],
     );
     for p in &points {
         t.row(vec![
@@ -501,11 +557,12 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
     }
     t.emit(&format!("sweep_{}", spec.engine.name()))?;
     println!(
-        "sweep[{}]: {} points ({} heuristics × {} rates × {} traces of {} tasks, all cells conservation-checked)",
+        "sweep[{}]: {} points ({} heuristics × {} {} × {} traces of {} tasks, all cells conservation-checked)",
         spec.engine.name(),
         points.len(),
         spec.heuristics.len(),
         spec.rates.len(),
+        if spec.closed_loop.is_some() { "client counts" } else { "rates" },
         spec.traces,
         spec.tasks
     );
@@ -757,6 +814,42 @@ mod tests {
         let points = run_sweep(&spec);
         assert_eq!(points.len(), 2);
         assert!(points.iter().all(|p| p.completion_rate > 0.0));
+    }
+
+    #[test]
+    fn closed_loop_sweep_runs_and_matches_direct_engine() {
+        // `--clients` cells must equal a hand-driven run_closed with the
+        // same cell seed — the sweep adds pairing, not new dynamics.
+        let mut spec = SweepSpec::paper_default(&["mm", "felare"], &[4.0, 8.0]);
+        spec.traces = 2;
+        spec.tasks = 120;
+        spec.closed_loop = Some(0.4);
+        let points = run_sweep(&spec);
+        assert_eq!(points.len(), 4);
+        for p in &points {
+            assert!(p.completion_rate > 0.0, "{}: closed loop completes work", p.heuristic);
+        }
+        let reference = {
+            let mut sim = crate::sim::Simulation::new(
+                &spec.scenario,
+                heuristic_by_name("mm", &spec.scenario).unwrap(),
+            );
+            let pool = ClientPool { n_clients: 4, think_time: 0.4 };
+            let a = sim.run_closed(pool, spec.tasks, cell_seed(spec.seed, 4.0, 0));
+            let b = sim.run_closed(pool, spec.tasks, cell_seed(spec.seed, 4.0, 1));
+            (a.collective_completion_rate() + b.collective_completion_rate()) / 2.0
+        };
+        assert_eq!(points[0].completion_rate, reference, "sweep cell ≡ direct run_closed");
+    }
+
+    #[test]
+    #[should_panic(expected = "client counts")]
+    fn closed_loop_rejects_fractional_client_counts() {
+        let mut spec = SweepSpec::paper_default(&["mm"], &[2.5]);
+        spec.traces = 1;
+        spec.tasks = 50;
+        spec.closed_loop = Some(0.2);
+        run_sweep(&spec);
     }
 
     #[test]

@@ -181,6 +181,7 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             .opt("tasks", "2000", "tasks per trace")
             .opt_optional("clients", "closed-loop: N clients instead of open-loop Poisson")
             .opt_optional("think-time", "closed-loop mean think time in seconds [default: 0.5]")
+            .opt_optional("trace-in", "replay a gen-trace JSON file (ignores --rate/--tasks/--seed)")
             .opt("seed", "42", "PRNG seed")
             .opt_optional("scenario", "paper | aws | stress:M:T | path/to/scenario.json")
             .opt_optional("battery", "battery capacity in joules (depletion = system off)")
@@ -196,13 +197,29 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     let n_tasks = positive_count("tasks", &args.str("tasks"))?;
     let seed = args.u64("seed")?;
     let pool = parse_client_pool(&args)?;
+    let trace_in = args.get("trace-in").map(String::from);
+    if pool.is_some() && trace_in.is_some() {
+        return Err(fail!(
+            "--trace-in (replay a fixed open-loop trace) conflicts with --clients (closed loop); \
+             pick one model"
+        ));
+    }
     let trace_out = args.get("trace-out").map(String::from);
     let h = heuristic_by_name(&args.str("heuristic"), &sc)?;
     let mut sim = Simulation::new(&sc, h);
     sim.set_record_traces(trace_out.is_some());
-    let result = match pool {
-        Some(pool) => sim.run_closed(pool, n_tasks, seed),
-        None => {
+    let result = match (pool, &trace_in) {
+        (Some(pool), _) => sim.run_closed(pool, n_tasks, seed),
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| fail!("--trace-in: reading {path}: {e}"))?;
+            let json = felare::util::json::Json::parse(&text)
+                .map_err(|e| fail!("--trace-in: parsing {path}: {e}"))?;
+            let trace = Trace::from_json(&json).map_err(|e| fail!("--trace-in: {path}: {e}"))?;
+            eprintln!("replaying {} tasks from {path}", trace.tasks.len());
+            sim.run(&trace)
+        }
+        (None, None) => {
             let params = WorkloadParams {
                 n_tasks,
                 arrival_rate: args.f64("rate")?,
@@ -560,10 +577,15 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("tasks", "tasks per trace (paper: 2000)")
             .opt("engine", "sim", "sweep engine: sim | serve (headless live driver)")
             .opt_optional("rates", "rate grid override for `exp sweep`/`exp battery`, e.g. 2,4,8")
-            .opt_optional("scenario", "`exp sweep`/`exp battery` system: paper | aws | stress:M:T | path.json")
+            .opt_optional("scenario", "system under test: paper | aws | stress:M:T | path.json; `exp fleet`: fleet:K:M:T | fleet.json")
             .opt_optional("trace-out", "`exp sweep`: JSONL per-request trace export path")
             .opt_optional("expect-p99", "`exp sweep`: fail unless every cell's p99 sojourn ≤ this (s)")
-            .opt_optional("batteries", "`exp battery`: capacity grid in joules, e.g. 400,800,1600")
+            .opt_optional("batteries", "`exp battery`/`exp fleet`: capacities in joules, e.g. 400,800")
+            .opt_optional("islands", "`exp fleet`: island-count grid, e.g. 16,64,256")
+            .opt_optional("policies", "`exp fleet`: router policies, e.g. round-robin,soc-aware")
+            .opt_optional("epoch", "`exp fleet`: router sync epoch in virtual seconds")
+            .opt_optional("clients", "`exp sweep`: closed-loop client-count grid, e.g. 4,8,16")
+            .opt_optional("think-time", "`exp sweep`: mean think time for --clients [default: 0.5]")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -575,11 +597,16 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
     // per-experiment knobs — passing them to another figure would silently
     // run the default setup under a mislabeled flag
     let allowed: &[(&str, &[&str])] = &[
-        ("scenario", &["sweep", "battery"]),
-        ("rates", &["sweep", "battery"]),
+        ("scenario", &["sweep", "battery", "fleet"]),
+        ("rates", &["sweep", "battery", "fleet"]),
         ("trace-out", &["sweep"]),
         ("expect-p99", &["sweep"]),
-        ("batteries", &["battery"]),
+        ("batteries", &["battery", "fleet"]),
+        ("islands", &["fleet"]),
+        ("policies", &["fleet"]),
+        ("epoch", &["fleet"]),
+        ("clients", &["sweep"]),
+        ("think-time", &["sweep"]),
     ];
     for (flag, exps) in allowed {
         if args.get(flag).is_some() && !exps.contains(&name.as_str()) {
@@ -644,6 +671,82 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         }
         None => None,
     };
+    let islands = match args.get("islands") {
+        Some(_) => {
+            let mut ks = Vec::new();
+            for s in args.list("islands") {
+                let k: usize = s
+                    .parse()
+                    .map_err(|_| fail!("--islands: '{s}' is not an island count"))?;
+                if k == 0 {
+                    return Err(fail!("--islands entries must be at least 1"));
+                }
+                ks.push(k);
+            }
+            if ks.is_empty() {
+                return Err(fail!("--islands needs at least one count"));
+            }
+            Some(ks)
+        }
+        None => None,
+    };
+    let policies = match args.get("policies") {
+        Some(_) => {
+            let ps = args.list("policies");
+            if ps.is_empty() {
+                return Err(fail!("--policies needs at least one router policy"));
+            }
+            Some(ps)
+        }
+        None => None,
+    };
+    let clients = match args.get("clients") {
+        Some(_) => {
+            let cs = args.f64_list("clients")?;
+            if cs.is_empty() {
+                return Err(fail!("--clients needs at least one count"));
+            }
+            for &c in &cs {
+                if !(c >= 1.0 && c.fract() == 0.0) {
+                    return Err(fail!("--clients entries must be whole counts >= 1 (got {c})"));
+                }
+            }
+            Some(cs)
+        }
+        None => None,
+    };
+    if clients.is_some() && rates.is_some() {
+        return Err(fail!(
+            "--clients (closed loop) conflicts with --rates (open loop); pick one sweep axis"
+        ));
+    }
+    let think_time = match args.get("think-time") {
+        Some(s) => {
+            let t: f64 = s
+                .parse()
+                .map_err(|_| fail!("--think-time expects seconds, got '{s}'"))?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(fail!("--think-time must be finite and >= 0 (got {s})"));
+            }
+            Some(t)
+        }
+        None => None,
+    };
+    if think_time.is_some() && clients.is_none() {
+        return Err(fail!("--think-time requires --clients"));
+    }
+    let epoch = match args.get("epoch") {
+        Some(s) => {
+            let e: f64 = s
+                .parse()
+                .map_err(|_| fail!("--epoch expects seconds, got '{s}'"))?;
+            if !(e > 0.0 && e.is_finite()) {
+                return Err(fail!("--epoch must be positive seconds (got {s})"));
+            }
+            Some(e)
+        }
+        None => None,
+    };
     let opts = ExpOpts {
         quick: args.is_set("quick"),
         traces,
@@ -655,6 +758,11 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         trace_out: args.get("trace-out").map(String::from),
         expect_p99,
         batteries,
+        islands,
+        policies,
+        clients,
+        think_time,
+        epoch,
     };
     run_by_name(&name, &opts)?;
     Ok(())

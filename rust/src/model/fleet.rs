@@ -1,0 +1,239 @@
+//! Fleet = many islands. A [`FleetScenario`] is an ordered list of
+//! per-island [`Scenario`]s — each island is one full HEC system (its own
+//! machine park, EET matrix and optional battery), and the fleet engine
+//! (`sim::fleet`) runs them as independent event loops under an
+//! inter-island router (`sched::route`).
+//!
+//! Islands may be fully heterogeneous: [`FleetScenario::stress_fleet`]
+//! draws a distinct CVB EET per island (same dimensions, different
+//! capabilities), and [`FleetScenario::with_mixed_batteries`] gives the
+//! fleet a mix of unbatteried, full-battery and half-battery islands —
+//! the setting where SoC-aware routing separates from round-robin.
+//!
+//! The one structural invariant is a shared task-type space: every island
+//! must have the same number of task types, because the router places an
+//! arriving task on *any* island and the task's type must mean the same
+//! thing everywhere.
+
+use crate::model::Scenario;
+use crate::util::json::Json;
+
+/// N islands × per-island scenario (module docs).
+#[derive(Clone, Debug)]
+pub struct FleetScenario {
+    pub name: String,
+    pub islands: Vec<Scenario>,
+}
+
+/// Per-island seed salt for the heterogeneous stress fleet: golden-ratio
+/// stride so island EET draws are decorrelated but reproducible.
+const FLEET_SEED: u64 = 0xF1EE7;
+const SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+impl FleetScenario {
+    /// `k` identical copies of one scenario — the degenerate fleet used by
+    /// the 1-island ≡ `Simulation` equivalence tests.
+    pub fn uniform(name: &str, k: usize, island: Scenario) -> FleetScenario {
+        assert!(k > 0, "fleet needs at least one island");
+        FleetScenario { name: name.to_string(), islands: vec![island; k] }
+    }
+
+    /// `k` heterogeneous stress islands, each `m` machines × `t` types
+    /// with its own deterministic CVB EET draw (island i is
+    /// `Scenario::stress_with_seed(m, t, FLEET_SEED ^ i·stride)`).
+    pub fn stress_fleet(k: usize, m: usize, t: usize) -> FleetScenario {
+        assert!(k > 0, "fleet needs at least one island");
+        let islands = (0..k)
+            .map(|i| {
+                Scenario::stress_with_seed(m, t, FLEET_SEED ^ (i as u64).wrapping_mul(SEED_STRIDE))
+            })
+            .collect();
+        FleetScenario { name: format!("fleet-{k}x{m}x{t}"), islands }
+    }
+
+    /// Arm a battery mix across the fleet: island i%3==0 stays unbatteried
+    /// (mains-powered), i%3==1 gets `base` joules, i%3==2 gets `base/2`.
+    /// This is the heterogeneity the SoC-aware router exploits — and the
+    /// round-robin strawman ignores.
+    pub fn with_mixed_batteries(mut self, base: f64) -> FleetScenario {
+        for (i, island) in self.islands.iter_mut().enumerate() {
+            match i % 3 {
+                0 => {}
+                1 => island.battery = Some(base),
+                _ => island.battery = Some(base * 0.5),
+            }
+        }
+        self
+    }
+
+    /// Parse a CLI fleet spec: `fleet:<islands>:<machines>:<types>` | a
+    /// path to a fleet JSON file.
+    pub fn from_spec(spec: &str) -> Result<FleetScenario, String> {
+        match spec {
+            s if s.starts_with("fleet:") => {
+                let dims: Vec<&str> = s["fleet:".len()..].split(':').collect();
+                if dims.len() != 3 {
+                    return Err(format!("expected fleet:<islands>:<machines>:<types>, got '{s}'"));
+                }
+                let parse = |what: &str, v: &str| -> Result<usize, String> {
+                    let n: usize =
+                        v.parse().map_err(|_| format!("bad {what} count '{v}' in '{s}'"))?;
+                    if n == 0 {
+                        return Err(format!("fleet needs >=1 {what}"));
+                    }
+                    Ok(n)
+                };
+                let k = parse("island", dims[0])?;
+                let m = parse("machine", dims[1])?;
+                let t = parse("type", dims[2])?;
+                Ok(FleetScenario::stress_fleet(k, m, t))
+            }
+            path => FleetScenario::load(path),
+        }
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.islands.len()
+    }
+
+    /// Shared task-type count (validated invariant).
+    pub fn n_types(&self) -> usize {
+        self.islands.first().map_or(0, |s| s.n_types())
+    }
+
+    /// Aggregate service capacity of the fleet in tasks/second: the sum of
+    /// per-island capacities. `exp fleet` sizes arrival rates against it.
+    pub fn service_capacity(&self) -> f64 {
+        self.islands.iter().map(|s| s.service_capacity()).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.islands.is_empty() {
+            return Err("fleet has no islands".into());
+        }
+        let n_types = self.islands[0].n_types();
+        for (i, island) in self.islands.iter().enumerate() {
+            island.validate().map_err(|e| format!("island {i}: {e}"))?;
+            if island.n_types() != n_types {
+                return Err(format!(
+                    "island {i} has {} task types, island 0 has {n_types} — the fleet \
+                     shares one type space",
+                    island.n_types()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON ----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::object()
+            .set("name", self.name.as_str())
+            .set("islands", Json::Array(self.islands.iter().map(|s| s.to_json()).collect()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetScenario, String> {
+        let name = j.req_str("name")?.to_string();
+        let islands = j
+            .req("islands")?
+            .as_array()
+            .ok_or("islands not array")?
+            .iter()
+            .map(Scenario::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let fleet = FleetScenario { name, islands };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+
+    pub fn load(path: &str) -> Result<FleetScenario, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        FleetScenario::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("writing {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stress_fleet_is_heterogeneous_and_deterministic() {
+        let f = FleetScenario::stress_fleet(4, 6, 3);
+        f.validate().unwrap();
+        assert_eq!(f.n_islands(), 4);
+        assert_eq!(f.n_types(), 3);
+        assert_ne!(
+            f.islands[0].eet.flat(),
+            f.islands[1].eet.flat(),
+            "each island draws its own EET"
+        );
+        let g = FleetScenario::stress_fleet(4, 6, 3);
+        for (a, b) in f.islands.iter().zip(&g.islands) {
+            assert_eq!(a.eet.flat(), b.eet.flat(), "fleet builds replay");
+        }
+        assert!(f.service_capacity() > f.islands[0].service_capacity());
+    }
+
+    #[test]
+    fn mixed_batteries_pattern() {
+        let f = FleetScenario::stress_fleet(7, 4, 3).with_mixed_batteries(100.0);
+        f.validate().unwrap();
+        let caps: Vec<Option<f64>> = f.islands.iter().map(|s| s.battery).collect();
+        assert_eq!(caps[0], None, "island 0 is mains-powered");
+        assert_eq!(caps[1], Some(100.0));
+        assert_eq!(caps[2], Some(50.0));
+        assert_eq!(caps[3], None);
+        assert_eq!(caps[6], None);
+    }
+
+    #[test]
+    fn from_spec_grammar() {
+        let f = FleetScenario::from_spec("fleet:8:4:3").unwrap();
+        assert_eq!(f.n_islands(), 8);
+        assert_eq!(f.islands[0].n_machines(), 4);
+        assert_eq!(f.n_types(), 3);
+        assert!(FleetScenario::from_spec("fleet:0:4:3").is_err());
+        assert!(FleetScenario::from_spec("fleet:8:4").is_err());
+        assert!(FleetScenario::from_spec("fleet:a:b:c").is_err());
+        assert!(FleetScenario::from_spec("/no/such/fleet.json").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = FleetScenario::stress_fleet(3, 4, 2).with_mixed_batteries(80.0);
+        let back =
+            FleetScenario::from_json(&Json::parse(&f.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.name, f.name);
+        assert_eq!(back.n_islands(), 3);
+        for (a, b) in back.islands.iter().zip(&f.islands) {
+            assert_eq!(a.eet.flat(), b.eet.flat(), "EETs survive the round trip bit-exactly");
+            assert_eq!(a.battery, b.battery);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_type_spaces() {
+        let mut f = FleetScenario::uniform("bad", 2, Scenario::stress(4, 3));
+        f.islands[1] = Scenario::stress(4, 2);
+        assert!(f.validate().is_err());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let f = FleetScenario::stress_fleet(2, 3, 2);
+        let path = std::env::temp_dir().join("felare_fleet_test.json");
+        let path = path.to_str().unwrap();
+        f.save(path).unwrap();
+        let back = FleetScenario::load(path).unwrap();
+        assert_eq!(back.name, f.name);
+        assert_eq!(back.n_islands(), 2);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -4,12 +4,14 @@
 pub mod cloud;
 pub mod cvb;
 pub mod eet;
+pub mod fleet;
 pub mod machine;
 pub mod scenario;
 pub mod task;
 pub mod workload;
 
 pub use eet::EetMatrix;
+pub use fleet::FleetScenario;
 pub use machine::{MachineId, MachineSpec};
 pub use scenario::Scenario;
 pub use task::{CancelReason, Outcome, Task, TaskTypeId, Time};

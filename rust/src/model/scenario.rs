@@ -11,6 +11,10 @@ use crate::model::machine::{aws_machines, paper_machines, MachineSpec};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
+/// Default CVB seed for the stress preset: every (machines, types) pair
+/// names exactly one reproducible system.
+const STRESS_SEED: u64 = 0x57E55;
+
 /// Completion-rate monitoring mode for the fairness tracker (§V).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum RateWindow {
@@ -100,6 +104,14 @@ impl Scenario {
     /// pair names exactly one reproducible system. Drive it with
     /// `felare stress` or `benches/bench_stress.rs`.
     pub fn stress(n_machines: usize, n_types: usize) -> Scenario {
+        Scenario::stress_with_seed(n_machines, n_types, STRESS_SEED)
+    }
+
+    /// [`Scenario::stress`] with an explicit CVB seed: same machine park
+    /// and knobs, different EET draw per seed. The fleet builder
+    /// (`model::fleet`) uses this to give every island its own
+    /// heterogeneous capability matrix while staying fully reproducible.
+    pub fn stress_with_seed(n_machines: usize, n_types: usize, seed: u64) -> Scenario {
         assert!(n_machines > 0 && n_types > 0, "stress scenario needs machines and types");
         const POWERS: [f64; 4] = [1.6, 3.0, 1.8, 1.5];
         let machines: Vec<MachineSpec> = (0..n_machines)
@@ -112,11 +124,15 @@ impl Scenario {
             v_task: 0.3,
             v_mach: 0.6,
         };
-        let mut rng =
-            Pcg64::seed_from(0x57E55, ((n_machines as u64) << 32) | n_types as u64);
+        let mut rng = Pcg64::seed_from(seed, ((n_machines as u64) << 32) | n_types as u64);
         let eet = cvb_generate(&params, &mut rng);
+        let name = if seed == STRESS_SEED {
+            format!("stress-{n_machines}x{n_types}")
+        } else {
+            format!("stress-{n_machines}x{n_types}-s{seed:x}")
+        };
         Scenario {
-            name: format!("stress-{n_machines}x{n_types}"),
+            name,
             machines,
             task_type_names: (0..n_types).map(|i| format!("S{i}")).collect(),
             eet,
@@ -387,6 +403,23 @@ mod tests {
         // capacity tracks machine count at fixed mean-EET scale
         let big = Scenario::stress(64, 8);
         assert!(big.service_capacity() > a.service_capacity());
+    }
+
+    #[test]
+    fn stress_with_seed_varies_only_the_eet_draw() {
+        let a = Scenario::stress_with_seed(8, 4, 1);
+        let b = Scenario::stress_with_seed(8, 4, 2);
+        assert!(a.validate().is_ok() && b.validate().is_ok());
+        assert_ne!(a.eet.flat(), b.eet.flat(), "distinct seeds draw distinct EETs");
+        assert_ne!(a.name, b.name);
+        let a2 = Scenario::stress_with_seed(8, 4, 1);
+        assert_eq!(a.eet.flat(), a2.eet.flat(), "same seed replays");
+        // the default seed IS the stress preset
+        assert_eq!(
+            Scenario::stress_with_seed(8, 4, 0x57E55).eet.flat(),
+            Scenario::stress(8, 4).eet.flat()
+        );
+        assert_eq!(Scenario::stress_with_seed(8, 4, 0x57E55).name, "stress-8x4");
     }
 
     #[test]

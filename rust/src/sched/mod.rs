@@ -28,6 +28,7 @@ pub mod mm;
 pub mod mmu;
 pub mod msd;
 pub mod registry;
+pub mod route;
 pub mod trace;
 
 use crate::energy::{EnergyPolicy, NoEnergyPolicy};
@@ -38,6 +39,7 @@ use fairness::FairnessSnapshot;
 
 pub use dispatch::{DropKind, Dropped, MappingState, MappingStats, QueuedTask};
 pub use feasibility::FeasibilityCache;
+pub use route::{IslandView, RoutePolicy, ALL_ROUTE_POLICIES};
 pub use trace::{LatencyBreakdown, TraceLog, TraceOutcome, TraceRecord};
 
 /// One entry of a machine's bounded FCFS local queue, as the mapper sees it.

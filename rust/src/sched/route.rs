@@ -1,0 +1,386 @@
+//! Inter-island routing: the fleet's first scheduling level.
+//!
+//! The fleet engine (`sim::fleet`) schedules in two levels. At arrival
+//! time a [`RoutePolicy`] picks the *island* (device) a task lands on,
+//! reading only cheap per-island [`IslandView`] snapshots; inside the
+//! island the unchanged per-device FELARE mapper places the task on a
+//! machine at the next mapping event. Routing is deliberately myopic —
+//! a router never sees per-machine queues or EETs, only aggregate load
+//! and state of charge — which is what keeps islands embarrassingly
+//! parallel between synchronization epochs.
+//!
+//! Policies are deterministic functions of `(views, task, internal
+//! state)` so fleet runs replay exactly per seed, mirroring the
+//! [`MappingHeuristic`](crate::sched::MappingHeuristic) contract one
+//! level down.
+
+use crate::model::task::Task;
+use crate::util::rng::Pcg64;
+
+/// Router-visible snapshot of one island, refreshed at every
+/// synchronization epoch (and incremented optimistically as the router
+/// assigns arrivals within an epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct IslandView {
+    /// Tasks waiting anywhere on the island: the arriving queue plus all
+    /// per-machine local queues.
+    pub queued: usize,
+    /// Tasks currently executing on the island's machines.
+    pub running: usize,
+    pub n_machines: usize,
+    /// Total work the island can hold: one running task per machine plus
+    /// its bounded local-queue slots.
+    pub slots: usize,
+    /// Battery state of charge in [0, 1]; `None` on unbatteried islands
+    /// (treated as fully charged by SoC-aware policies).
+    pub soc: Option<f64>,
+    /// The island's battery crossed zero — it completes nothing anymore;
+    /// every task routed here is dead on arrival.
+    pub depleted: bool,
+}
+
+impl IslandView {
+    /// Whether the island can still complete work.
+    pub fn live(&self) -> bool {
+        !self.depleted
+    }
+
+    /// Outstanding work per machine — the load signal shared by the
+    /// queue-aware policies.
+    pub fn load(&self) -> f64 {
+        (self.queued + self.running) as f64 / self.n_machines.max(1) as f64
+    }
+
+    /// Whether the island holds as much work as it has capacity for.
+    pub fn saturated(&self) -> bool {
+        self.queued + self.running >= self.slots
+    }
+}
+
+/// An inter-island placement policy. `route` must return an index into
+/// `views` (the fleet engine asserts this); implementations must be
+/// deterministic given their seed so fleet runs are replayable.
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Reset internal state (cursors, RNG) for a fresh fleet run — the
+    /// router participates in the recycled-arena contract.
+    fn reset(&mut self);
+
+    fn route(&mut self, views: &[IslandView], task: &Task) -> usize;
+}
+
+/// Uniform choice among live islands (all islands when none are live).
+/// The fleet baseline: load- and SoC-blind but at least corpse-avoiding.
+pub struct Random {
+    seed: u64,
+    rng: Pcg64,
+}
+
+impl Random {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, rng: Pcg64::seed_from(seed, 0xF0E7) }
+    }
+}
+
+impl RoutePolicy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn reset(&mut self) {
+        self.rng = Pcg64::seed_from(self.seed, 0xF0E7);
+    }
+
+    fn route(&mut self, views: &[IslandView], _task: &Task) -> usize {
+        let live = views.iter().filter(|v| v.live()).count();
+        if live == 0 {
+            return self.rng.index(views.len());
+        }
+        // pick the k-th live island without allocating
+        let k = self.rng.index(live);
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.live())
+            .nth(k)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Naive rotation over ALL islands, depleted or not — the strawman the
+/// SoC-aware policy is measured against: it keeps feeding dead islands.
+#[derive(Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    fn route(&mut self, views: &[IslandView], _task: &Task) -> usize {
+        let i = self.cursor % views.len();
+        self.cursor = self.cursor.wrapping_add(1);
+        i
+    }
+}
+
+/// Least outstanding work per machine among live islands (lowest index
+/// wins ties); falls back to all islands when none are live.
+#[derive(Default)]
+pub struct LeastQueued;
+
+fn least_queued(views: &[IslandView]) -> usize {
+    let pick = |live_only: bool| {
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !live_only || v.live())
+            .min_by(|(_, a), (_, b)| a.load().total_cmp(&b.load()))
+            .map(|(i, _)| i)
+    };
+    pick(true).or_else(|| pick(false)).expect("route over empty fleet")
+}
+
+impl RoutePolicy for LeastQueued {
+    fn name(&self) -> &'static str {
+        "least-queued"
+    }
+
+    fn reset(&mut self) {}
+
+    fn route(&mut self, views: &[IslandView], _task: &Task) -> usize {
+        least_queued(views)
+    }
+}
+
+/// Weights each live island by state of charge over load: score =
+/// soc / (1 + load), argmax wins (lowest index on ties). Unbatteried
+/// islands count as fully charged. Never routes to a depleted island
+/// while a live one exists; with the whole fleet dead it degrades to
+/// least-queued over everything.
+#[derive(Default)]
+pub struct SocAware;
+
+impl RoutePolicy for SocAware {
+    fn name(&self) -> &'static str {
+        "soc-aware"
+    }
+
+    fn reset(&mut self) {}
+
+    fn route(&mut self, views: &[IslandView], _task: &Task) -> usize {
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.live())
+            .max_by(|(_, a), (_, b)| {
+                let sa = a.soc.unwrap_or(1.0) / (1.0 + a.load());
+                let sb = b.soc.unwrap_or(1.0) / (1.0 + b.load());
+                // max_by keeps the LAST max; invert ties so the lowest
+                // index wins, matching the other policies
+                sa.total_cmp(&sb).then(std::cmp::Ordering::Greater)
+            })
+            .map(|(i, _)| i)
+            .unwrap_or_else(|| least_queued(views))
+    }
+}
+
+/// Rotates like round-robin, but when the primary pick is depleted or
+/// already holds as much work as it has slots, spills to the least-loaded
+/// live island instead of queueing behind the hot spot.
+#[derive(Default)]
+pub struct Spillover {
+    cursor: usize,
+}
+
+impl RoutePolicy for Spillover {
+    fn name(&self) -> &'static str {
+        "spillover"
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    fn route(&mut self, views: &[IslandView], _task: &Task) -> usize {
+        let primary = self.cursor % views.len();
+        self.cursor = self.cursor.wrapping_add(1);
+        let v = &views[primary];
+        if v.live() && !v.saturated() {
+            return primary;
+        }
+        least_queued(views)
+    }
+}
+
+/// Every built-in policy name, in the order `exp fleet` sweeps them.
+pub const ALL_ROUTE_POLICIES: [&str; 5] =
+    ["random", "round-robin", "least-queued", "soc-aware", "spillover"];
+
+/// Look up a policy by CLI name. `seed` feeds the stochastic policies
+/// (only `random` today); deterministic policies ignore it.
+pub fn route_policy_by_name(name: &str, seed: u64) -> Result<Box<dyn RoutePolicy>, String> {
+    match name {
+        "random" => Ok(Box::new(Random::new(seed))),
+        "round-robin" => Ok(Box::new(RoundRobin::default())),
+        "least-queued" => Ok(Box::new(LeastQueued)),
+        "soc-aware" => Ok(Box::new(SocAware)),
+        "spillover" => Ok(Box::new(Spillover::default())),
+        other => Err(format!(
+            "unknown route policy '{other}' (known: {})",
+            ALL_ROUTE_POLICIES.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::task::TaskTypeId;
+
+    fn task() -> Task {
+        Task { id: 0, type_id: TaskTypeId(0), arrival: 0.0, deadline: 10.0, size_factor: 1.0 }
+    }
+
+    fn view(queued: usize, soc: Option<f64>, depleted: bool) -> IslandView {
+        IslandView { queued, running: 0, n_machines: 4, slots: 12, soc, depleted }
+    }
+
+    #[test]
+    fn round_robin_assigns_uniformly() {
+        let mut rr = RoundRobin::default();
+        let views: Vec<IslandView> = (0..5).map(|_| view(0, None, false)).collect();
+        let mut counts = [0u32; 5];
+        let t = task();
+        for _ in 0..100 {
+            counts[rr.route(&views, &t)] += 1;
+        }
+        assert_eq!(counts, [20; 5], "5 islands × 100 tasks rotate exactly");
+    }
+
+    #[test]
+    fn round_robin_does_not_skip_depleted() {
+        // the strawman property the soc-aware comparison relies on
+        let mut rr = RoundRobin::default();
+        let views = vec![view(0, Some(0.0), true), view(0, Some(1.0), false)];
+        let t = task();
+        let hits: Vec<usize> = (0..4).map(|_| rr.route(&views, &t)).collect();
+        assert_eq!(hits, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn soc_aware_never_routes_to_depleted_while_live_exists() {
+        let mut p = SocAware;
+        let t = task();
+        // exhaustive over which single island is live, with varied loads
+        for live_idx in 0..6 {
+            let views: Vec<IslandView> = (0..6)
+                .map(|i| {
+                    if i == live_idx {
+                        view(i, Some(0.2), false)
+                    } else {
+                        view(0, Some(0.0), true)
+                    }
+                })
+                .collect();
+            assert_eq!(p.route(&views, &t), live_idx);
+        }
+        // and with several live islands, the pick is always live
+        let views = vec![
+            view(9, Some(0.0), true),
+            view(3, Some(0.5), false),
+            view(0, Some(0.0), true),
+            view(7, Some(0.9), false),
+        ];
+        for _ in 0..8 {
+            let dst = p.route(&views, &t);
+            assert!(views[dst].live(), "routed to depleted island {dst}");
+        }
+    }
+
+    #[test]
+    fn soc_aware_prefers_charged_idle_islands() {
+        let mut p = SocAware;
+        let views = vec![view(6, Some(0.3), false), view(0, Some(0.9), false)];
+        assert_eq!(p.route(&views, &task()), 1);
+        // unbatteried counts as fully charged
+        let views = vec![view(2, Some(0.4), false), view(2, None, false)];
+        assert_eq!(p.route(&views, &task()), 1);
+    }
+
+    #[test]
+    fn soc_aware_whole_fleet_dead_falls_back() {
+        let mut p = SocAware;
+        let views = vec![view(5, Some(0.0), true), view(1, Some(0.0), true)];
+        assert_eq!(p.route(&views, &task()), 1, "least-queued over the corpses");
+    }
+
+    #[test]
+    fn least_queued_picks_argmin_lowest_index_ties() {
+        let mut p = LeastQueued;
+        let t = task();
+        let views = vec![view(4, None, false), view(1, None, false), view(1, None, false)];
+        assert_eq!(p.route(&views, &t), 1);
+        // depleted islands only considered when nothing is live
+        let views = vec![view(0, Some(0.0), true), view(9, None, false)];
+        assert_eq!(p.route(&views, &t), 1);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed_in_bounds_and_live() {
+        let t = task();
+        let views = vec![
+            view(0, None, false),
+            view(0, Some(0.0), true),
+            view(0, None, false),
+            view(0, None, false),
+        ];
+        let seq = |seed: u64| -> Vec<usize> {
+            let mut p = Random::new(seed);
+            (0..50).map(|_| p.route(&views, &t)).collect()
+        };
+        let a = seq(7);
+        assert_eq!(a, seq(7), "same seed replays");
+        assert_ne!(a, seq(8), "different seeds diverge");
+        for &i in &a {
+            assert!(i < views.len());
+            assert!(views[i].live(), "random avoids corpses while live exist");
+        }
+        // reset restores the original stream
+        let mut p = Random::new(7);
+        let first: Vec<usize> = (0..50).map(|_| p.route(&views, &t)).collect();
+        p.reset();
+        let second: Vec<usize> = (0..50).map(|_| p.route(&views, &t)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn spillover_avoids_saturated_and_dead_primaries() {
+        let mut p = Spillover::default();
+        let t = task();
+        let mut views = vec![view(0, None, false), view(0, None, false)];
+        views[0].queued = views[0].slots; // island 0 saturated
+        assert_eq!(p.route(&views, &t), 1, "primary 0 saturated → spill");
+        assert_eq!(p.route(&views, &t), 1, "primary 1 healthy → keep");
+        views[0].queued = 0;
+        views[0].depleted = true;
+        assert_eq!(p.route(&views, &t), 1, "primary 0 dead → spill");
+    }
+
+    #[test]
+    fn registry_resolves_every_policy() {
+        for name in ALL_ROUTE_POLICIES {
+            let p = route_policy_by_name(name, 1).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(route_policy_by_name("nope", 1).is_err());
+    }
+}

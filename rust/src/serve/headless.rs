@@ -3,20 +3,22 @@
 //! and the session becomes exactly replayable.
 //!
 //! This is the second [`SweepEngine`](crate::exp::sweep::SweepEngine)
-//! implementation behind `felare exp sweep --engine serve`: it drives the
-//! shared [`MappingState`] the way the live coordinator's workers do —
-//! each machine pulls from its local queue the moment it goes idle
-//! (`pop_queued`/`mark_running`), executes through a pluggable
-//! [`InferenceBackend`], reports terminals (`mark_idle`/`record_terminal`)
-//! and fires a completion-triggered mapping event — but time advances by
-//! event, not by wall clock, so results are deterministic per trace.
+//! implementation behind `felare exp sweep --engine serve`. Since the
+//! fleet refactor it is a thin driver over the shared per-device
+//! [`Island`] core (`sim::island`), run with
+//! [`ExecModel::synthetic`](crate::sim::island::ExecModel): service times
+//! come from a pluggable per-machine
+//! [`InferenceBackend`](crate::runtime::InferenceBackend) — exactly like
+//! the live coordinator's thread-local worker backends — instead of the
+//! EET matrix the pure simulator reads.
 //!
 //! # Bit-identity contract
 //!
 //! A `HeadlessServe` run over a trace produces a [`SimResult`] whose
 //! deterministic fields (outcome counters, per-machine energies, makespan,
 //! deferrals — everything except the wall-clock mapper-latency
-//! measurements) are **bit-identical** to [`Simulation`]'s over the same
+//! measurements) are **bit-identical** to
+//! [`Simulation`](crate::sim::Simulation)'s over the same
 //! scenario + heuristic + trace. That is the acceptance gate for live
 //! heuristic sweeps: a serve-engine sweep cell must equal its sim-engine
 //! cell float for float (`rust/tests/sweep_engine_equivalence.rs`). The
@@ -24,7 +26,9 @@
 //! in the same order:
 //!
 //! * service time = `backend.infer(type, machine).modeled × size_factor`,
-//!   with the per-machine [`SyntheticBackend`] in deterministic mode
+//!   with the per-machine
+//!   [`SyntheticBackend`](crate::runtime::SyntheticBackend) in
+//!   deterministic mode
 //!   (`cv_exec = 0`, so `modeled` is the frozen EET entry). The trace
 //!   *already* carries each task's Gamma service-time draw in
 //!   `size_factor`; sampling again in the backend — what the live
@@ -36,381 +40,65 @@
 //! * mapping decisions all live in the shared dispatch layer, and events
 //!   pop in the same deterministic order (time, then FIFO).
 //!
+//! Both properties now hold *by construction*: the event loop is the one
+//! `Island` implementation, and the only divergence point between the
+//! engines is the `ExecModel` service-time source.
+//!
 //! Like [`Simulation`], a `HeadlessServe` is a recycled arena: `run` may
 //! be called repeatedly and `set_heuristic` swaps mappers between runs,
 //! which is what lets the sweep replay one generated trace under every
-//! heuristic on a single engine.
+//! heuristic on a single engine. [`HeadlessServe::run_closed`] drives the
+//! same closed-loop client pool as the simulator, so closed-loop sweep
+//! cells pair across engines too.
 
-use crate::energy::BatteryState;
-use crate::model::machine::MachineId;
-use crate::model::task::{CancelReason, Outcome, Task, Time};
-use crate::model::{Scenario, Trace};
-use crate::runtime::{InferenceBackend, SyntheticBackend};
-use crate::sched::dispatch::{Dropped, MappingState};
-use crate::sched::fairness::FairnessTracker;
-use crate::sched::trace::{record_of, TraceLog, TraceOutcome, TraceRecord};
+use crate::model::{ClientPool, Scenario, Trace};
+use crate::sched::trace::TraceRecord;
 use crate::sched::MappingHeuristic;
-use crate::sim::event::{Event, EventQueue};
-use crate::sim::result::{MachineEnergy, SimResult};
-
-struct LiveRunning {
-    task: Task,
-    mapped: Time,
-    start: Time,
-    /// Scheduled release = min(actual finish, deadline) — the worker
-    /// aborts at the deadline (Eq. 1 middle case).
-    end: Time,
-    actual_end: Time,
-}
+use crate::sim::island::{ExecModel, Island};
+use crate::sim::result::SimResult;
 
 /// The coordinator's worker loop, replayed in virtual time (module docs).
 pub struct HeadlessServe {
-    scenario: Scenario,
-    // ---- recycled arena state (reset at the top of every run) ----------
-    mapping: MappingState,
-    /// One execution substrate per machine, exactly like the live
-    /// coordinator's thread-local worker backends.
-    backends: Vec<Box<dyn InferenceBackend>>,
-    events: EventQueue,
-    running: Vec<Option<LiveRunning>>,
-    energy: Vec<MachineEnergy>,
-    trace_log: TraceLog,
-    /// The shared battery (`None` = unbatteried). Driven at the same event
-    /// boundaries as the simulator's, so battery-constrained cells stay
-    /// bit-identical across engines.
-    battery: Option<BatteryState>,
+    island: Island,
 }
 
 impl HeadlessServe {
     pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>) -> Self {
-        scenario.validate().expect("invalid scenario");
-        let tracker = FairnessTracker::new(
-            scenario.n_types(),
-            scenario.fairness_factor,
-            scenario.fairness_min_samples,
-            scenario.rate_window,
-        );
-        let mapping = MappingState::new(
-            scenario.eet.clone(),
-            scenario.machines.iter().map(|m| m.dyn_power).collect(),
-            scenario.queue_slots,
-            tracker,
-            heuristic,
-        );
-        let n_machines = scenario.n_machines();
-        // deterministic mode: the trace's size_factor carries the
-        // service-time draw — module docs §Bit-identity contract
-        let backends: Vec<Box<dyn InferenceBackend>> = (0..n_machines)
-            .map(|_| {
-                Box::new(SyntheticBackend::deterministic(scenario.eet.clone()))
-                    as Box<dyn InferenceBackend>
-            })
-            .collect();
-        let battery = scenario
-            .battery_spec()
-            .map(|spec| BatteryState::new(&spec, &scenario.machines));
-        Self {
-            scenario: scenario.clone(),
-            mapping,
-            backends,
-            events: EventQueue::new(),
-            running: (0..n_machines).map(|_| None).collect(),
-            energy: vec![MachineEnergy::default(); n_machines],
-            trace_log: TraceLog::new(),
-            battery,
-        }
+        Self { island: Island::new(scenario, heuristic, ExecModel::synthetic(scenario)) }
     }
 
     /// Swap the mapping heuristic, keeping the recycled arena.
     pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
-        self.mapping.set_heuristic(heuristic);
+        self.island.set_heuristic(heuristic);
     }
 
     pub fn heuristic_name(&self) -> &'static str {
-        self.mapping.heuristic_name()
+        self.island.heuristic_name()
     }
 
     /// Emit one [`TraceRecord`] per request at its terminal event.
     pub fn set_record_traces(&mut self, on: bool) {
-        self.trace_log.on = on;
+        self.island.set_record_traces(on);
     }
 
     /// Trace records of the latest run.
     pub fn trace_log(&self) -> &[TraceRecord] {
-        &self.trace_log.records
+        self.island.trace_log()
     }
 
     /// Serve the whole trace to a terminal state and report (module docs).
     pub fn run(&mut self, trace: &Trace) -> SimResult {
-        let HeadlessServe {
-            scenario: sc,
-            mapping,
-            backends,
-            events,
-            running,
-            energy,
-            trace_log,
-            battery,
-        } = self;
-
-        let n_types = sc.n_types();
-        let n_machines = sc.n_machines();
-        let mut result =
-            SimResult::empty(mapping.heuristic_name(), trace.arrival_rate, n_types, n_machines);
-        result.arrived = trace.arrivals_per_type(n_types);
-
-        // ---- arena reset ---------------------------------------------------
-        for r in running.iter_mut() {
-            *r = None;
-        }
-        for e in energy.iter_mut() {
-            *e = MachineEnergy::default();
-        }
-        events.clear();
-        mapping.reset();
-        trace_log.clear();
-        if let Some(bat) = battery.as_mut() {
-            bat.reset();
-        }
-
-        for (i, t) in trace.tasks.iter().enumerate() {
-            events.push(t.arrival, Event::Arrival { trace_idx: i });
-        }
-
-        let mut now: Time = 0.0;
-        // event interrupted by battery depletion (system off mid-run)
-        let mut pending: Option<Event> = None;
-        while let Some((t, ev)) = events.pop() {
-            // battery advance at the event boundary — same operands, same
-            // order as the simulator's (bit-identity contract)
-            if let Some(bat) = battery.as_mut() {
-                if let Some(dead) = bat.advance(t) {
-                    now = dead;
-                    pending = Some(ev);
-                    break;
-                }
-            }
-            now = t;
-            match ev {
-                Event::Arrival { trace_idx } => mapping.push_arrival(trace.tasks[trace_idx]),
-                Event::Finish { machine_idx } => {
-                    complete(
-                        machine_idx,
-                        now,
-                        sc,
-                        mapping,
-                        running,
-                        energy,
-                        &mut result,
-                        trace_log,
-                        battery,
-                    );
-                }
-                Event::Expiry => {}
-            }
-
-            // idle workers pull the moment state changes (the live path's
-            // notify_all after completions/arrivals)
-            for m in 0..n_machines {
-                fetch_and_start(
-                    m, now, mapping, backends, running, events, &mut result, trace_log, battery,
-                );
-            }
-
-            // arrival-/completion-triggered mapping event through the
-            // shared dispatch layer — identical to the coordinator's
-            if let Some(bat) = battery.as_ref() {
-                mapping.set_soc(Some(bat.soc()));
-            }
-            let stats = mapping.mapping_event(now, &mut |d: Dropped| {
-                let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
-                result.record(d.task.type_id.0, &out);
-                let (machine, mapped) = d.mapped.unzip();
-                let outcome = d.kind.trace_outcome();
-                trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
-            });
-            result.mapping_events += 1;
-            result.mapper_time_total += stats.mapper_dt;
-            result.mapper_time_max = result.mapper_time_max.max(stats.mapper_dt);
-            result.deferrals += stats.deferrals;
-
-            for m in 0..n_machines {
-                fetch_and_start(
-                    m, now, mapping, backends, running, events, &mut result, trace_log, battery,
-                );
-            }
-        }
-
-        if battery.as_ref().is_some_and(|b| b.is_depleted()) {
-            // ---- system off at `now`: mirror the simulator's sweep ------
-            let t_dead = now;
-            for (mi, slot) in running.iter_mut().enumerate() {
-                if let Some(r) = slot.take() {
-                    mapping.mark_idle(mi);
-                    let busy = t_dead - r.start;
-                    let e = sc.machines[mi].dyn_energy(busy);
-                    energy[mi].dynamic += e;
-                    energy[mi].wasted += e;
-                    energy[mi].busy_time += busy;
-                    result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
-                    mapping.record_terminal(r.task.type_id, false);
-                    trace_log.push(record_of(
-                        &r.task,
-                        TraceOutcome::Missed,
-                        Some(MachineId(mi)),
-                        Some(r.mapped),
-                        Some(r.start),
-                        t_dead,
-                    ));
-                }
-            }
-            // one shared sweep for queued + arriving work (sched::dispatch)
-            mapping.drain_system_off(&mut |d: Dropped| {
-                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
-                result.record(d.task.type_id.0, &out);
-                let (machine, mapped) = d.mapped.unzip();
-                trace_log.push(record_of(
-                    &d.task,
-                    TraceOutcome::SystemOff,
-                    machine,
-                    mapped,
-                    None,
-                    t_dead,
-                ));
-            });
-            let drained = pending
-                .into_iter()
-                .chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
-            for ev in drained {
-                if let Event::Arrival { trace_idx } = ev {
-                    let task = trace.tasks[trace_idx];
-                    let at = task.arrival.max(t_dead);
-                    let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
-                    result.record(task.type_id.0, &out);
-                    trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
-                }
-            }
-        } else {
-            // graceful drain: anything still waiting dies at its own deadline
-            mapping.drain_unmapped(&mut |task| {
-                let at = task.deadline.max(now);
-                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
-                result.record(task.type_id.0, &out);
-                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
-            });
-        }
-
-        result.makespan = now;
-        result.battery = sc.battery_for(now);
-        if let Some(bat) = battery.as_ref() {
-            result.battery_spent = bat.spent();
-            result.depleted_at = bat.depleted_at();
-            result.final_soc = bat.soc();
-        }
-        for (mi, e) in energy.iter().enumerate() {
-            debug_assert!(running[mi].is_none(), "machine {mi} still running at drain");
-            debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
-            let mut e = e.clone();
-            e.idle = sc.machines[mi].idle_energy(now - e.busy_time);
-            result.energy[mi] = e;
-        }
-        debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
-        result
+        self.island.run_open(trace)
     }
-}
 
-/// The worker fetch loop in virtual time: pop FCFS, drop-at-start if the
-/// deadline already passed, otherwise execute through the backend until
-/// min(actual end, deadline).
-#[allow(clippy::too_many_arguments)]
-fn fetch_and_start(
-    m: usize,
-    now: Time,
-    mapping: &mut MappingState,
-    backends: &mut [Box<dyn InferenceBackend>],
-    running: &mut [Option<LiveRunning>],
-    events: &mut EventQueue,
-    result: &mut SimResult,
-    trace_log: &mut TraceLog,
-    battery: &mut Option<BatteryState>,
-) {
-    if running[m].is_some() {
-        return;
+    /// Serve a closed-loop session: `pool.n_clients` clients issue
+    /// `n_tasks` requests in total, each waiting for its previous response
+    /// plus an exponential think time. Deterministic per `seed`, and
+    /// bit-identical to [`Simulation::run_closed`](crate::sim::Simulation::run_closed)
+    /// under the contract above (same arrival generator, same event loop).
+    pub fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
+        self.island.run_closed(pool, n_tasks, seed)
     }
-    while let Some(q) = mapping.pop_queued(m) {
-        if q.task.expired_at(now) {
-            // queued past its deadline: dropped at start, no energy
-            result.record(q.task.type_id.0, &Outcome::Missed { machine: m, at: now });
-            mapping.record_terminal(q.task.type_id, false);
-            trace_log.push(record_of(
-                &q.task,
-                TraceOutcome::DroppedAtStart,
-                Some(MachineId(m)),
-                Some(q.mapped),
-                None,
-                now,
-            ));
-            continue;
-        }
-        let rec = backends[m]
-            .infer(q.task.type_id.0, MachineId(m))
-            .expect("synthetic backend is infallible");
-        let actual_end = now + rec.modeled * q.task.size_factor;
-        let end = actual_end.min(q.task.deadline);
-        events.push(end, Event::Finish { machine_idx: m });
-        mapping.mark_running(m, now + q.expected_exec);
-        if let Some(bat) = battery.as_mut() {
-            bat.set_busy(m, true);
-        }
-        running[m] =
-            Some(LiveRunning { task: q.task, mapped: q.mapped, start: now, end, actual_end });
-        return;
-    }
-}
-
-/// Completion handling: account energy, report the terminal, free the
-/// worker (the live path's post-inference critical section).
-#[allow(clippy::too_many_arguments)]
-fn complete(
-    m: usize,
-    now: Time,
-    sc: &Scenario,
-    mapping: &mut MappingState,
-    running: &mut [Option<LiveRunning>],
-    energy: &mut [MachineEnergy],
-    result: &mut SimResult,
-    trace_log: &mut TraceLog,
-    battery: &mut Option<BatteryState>,
-) {
-    let r = running[m].take().expect("finish event with no running task");
-    debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
-    mapping.mark_idle(m);
-    if let Some(bat) = battery.as_mut() {
-        bat.set_busy(m, false);
-    }
-    let busy = r.end - r.start;
-    let e = sc.machines[m].dyn_energy(busy);
-    energy[m].dynamic += e;
-    energy[m].busy_time += busy;
-    let ty = r.task.type_id;
-    let outcome = if r.actual_end <= r.task.deadline {
-        result.record(ty.0, &Outcome::Completed { machine: m, finish: r.actual_end });
-        mapping.record_terminal(ty, true);
-        TraceOutcome::Completed
-    } else {
-        energy[m].wasted += e;
-        result.record(ty.0, &Outcome::Missed { machine: m, at: r.end });
-        mapping.record_terminal(ty, false);
-        TraceOutcome::Missed
-    };
-    trace_log.push(record_of(
-        &r.task,
-        outcome,
-        Some(MachineId(m)),
-        Some(r.mapped),
-        Some(r.start),
-        r.end,
-    ));
 }
 
 #[cfg(test)]
@@ -534,6 +222,20 @@ mod tests {
         assert_eq!(sim.trace_log(), live.trace_log(), "per-request stories diverge");
         for rec in live.trace_log() {
             rec.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn closed_loop_bit_identical_to_simulator() {
+        let sc = Scenario::paper_synthetic();
+        let pool = ClientPool { n_clients: 6, think_time: 0.3 };
+        for h in ["mm", "felare"] {
+            let sim = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap())
+                .run_closed(pool, 400, 71);
+            let live = HeadlessServe::new(&sc, heuristic_by_name(h, &sc).unwrap())
+                .run_closed(pool, 400, 71);
+            assert_bit_identical(&sim, &live, h);
+            sim.check_conservation().unwrap();
         }
     }
 }

@@ -15,12 +15,15 @@
 //!   start with no dynamic energy spent (Eq. 1 last case);
 //! * energy = Σ dynamic power · busy time + idle power · idle time.
 //!
-//! The mapping-event machinery itself (arriving queue, local queues,
-//! fairness tracker, snapshot building, action application) lives in the
-//! shared [`MappingState`] (`sched::dispatch`) and is driven identically
-//! by this engine and by the live serving coordinator — the simulator
-//! owns only what the mapper must not see: actual service times, the
-//! event queue, and energy accounting.
+//! Since the fleet refactor the event loop itself lives in the per-device
+//! [`Island`] core (`sim::island`): machines, event queue, shared
+//! [`MappingState`](crate::sched::dispatch::MappingState), battery and
+//! trace sink are one reusable bundle, and `Simulation` is the
+//! single-device driver that runs an island with
+//! [`ExecModel::Eet`](crate::sim::island::ExecModel) — service times
+//! straight from the EET matrix. The headless serve driver runs the same
+//! core through per-machine inference backends, and the fleet engine
+//! (`sim::fleet`) runs many islands under an inter-island router.
 //!
 //! The mapper sees only *expected* execution times (the EET matrix);
 //! actual service times are EET · size_factor, revealed only as
@@ -48,19 +51,14 @@
 //! # Battery
 //!
 //! When the scenario arms a battery (`Scenario::battery_spec`), the
-//! engine drives a shared [`BatteryState`]: draw is integrated at every
-//! event pop (dynamic power while a machine executes, idle power
-//! otherwise, minus any recharge), the mapper sees the state of charge
-//! (`MappingState::set_soc` → `SchedView::soc`, which `felare-eb` and the
-//! admission-shedding [`EnergyPolicy`](crate::energy::EnergyPolicy) act
-//! on), and the first zero crossing ends the run **at that exact
-//! instant**: running tasks abort (missed, energy wasted), queued and
-//! waiting tasks cancel with `CancelReason::SystemOff`, and arrivals that
-//! never happened are cancelled against a dead system. `lifetime_s`,
-//! `final_soc` and `battery_spent` land in the [`SimResult`]. An infinite
-//! capacity (or no battery) leaves every control-flow decision — and so
-//! every pre-existing result field — bit-identical to the unbatteried
-//! engine (`rust/tests/battery_suite.rs`).
+//! engine drives a shared [`BatteryState`](crate::energy::BatteryState):
+//! draw is integrated at every event pop, the mapper sees the state of
+//! charge, and the first zero crossing ends the run at that exact instant
+//! (see `sim::island` for the mechanics). `lifetime_s`, `final_soc` and
+//! `battery_spent` land in the [`SimResult`]. An infinite capacity (or no
+//! battery) leaves every control-flow decision — and so every
+//! pre-existing result field — bit-identical to the unbatteried engine
+//! (`rust/tests/battery_suite.rs`).
 //!
 //! # Recycled-state API contract (§Perf)
 //!
@@ -97,194 +95,29 @@
 //! sweep hot path except the trace itself — see `benches/bench_stress.rs`
 //! for the measured effect.
 
-use crate::energy::BatteryState;
-use crate::model::machine::{MachineId, MachineSpec};
-use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
-use crate::model::{ClientPool, EetMatrix, Scenario, Trace};
-use crate::sched::dispatch::{Dropped, MappingState};
-use crate::sched::fairness::FairnessTracker;
-use crate::sched::trace::{record_of, TraceLog, TraceOutcome, TraceRecord};
+use crate::model::{ClientPool, Scenario, Trace};
+use crate::sched::trace::TraceRecord;
 use crate::sched::{Action, MappingHeuristic};
-use crate::sim::event::{Event, EventQueue};
-use crate::sim::result::{MachineEnergy, SimResult};
-use crate::util::rng::{Exponential, Gamma, Pcg64};
-
-struct Running {
-    task: Task,
-    /// When the mapper assigned it (from [`QueuedTask::mapped`]).
-    mapped: Time,
-    start: Time,
-    /// Scheduled end = min(actual finish, deadline).
-    end: Time,
-    /// True finish had it been allowed to run to completion.
-    actual_end: Time,
-}
-
-struct MachState {
-    spec: MachineSpec,
-    running: Option<Running>,
-    energy: MachineEnergy,
-}
-
-impl MachState {
-    /// Reset to the idle state.
-    fn reset(&mut self) {
-        self.running = None;
-        self.energy = MachineEnergy::default();
-    }
-}
-
-/// Terminal notifications for the closed-loop generator: `(task id,
-/// terminal time)` pairs, buffered during an event iteration and drained
-/// into next-arrival scheduling after it. Gated off (one branch per
-/// terminal) on open-loop runs.
-#[derive(Default)]
-struct Releases {
-    on: bool,
-    buf: Vec<(u64, Time)>,
-}
-
-impl Releases {
-    #[inline]
-    fn push(&mut self, task_id: u64, t: Time) {
-        if self.on {
-            self.buf.push((task_id, t));
-        }
-    }
-}
-
-/// In-loop request generator for closed-loop runs: draws think times,
-/// task types and size factors exactly when a client is released, so the
-/// arrival process reacts to system latency. Deterministic per seed —
-/// draws happen in event-loop order.
-struct ClosedGen {
-    rng: Pcg64,
-    think: Option<Exponential>,
-    size_gamma: Option<Gamma>,
-    n_types: usize,
-    /// Tasks still to be generated (counts down from `n_tasks`).
-    remaining: usize,
-}
-
-impl ClosedGen {
-    fn new(pool: &ClientPool, n_tasks: usize, seed: u64, n_types: usize, cv_exec: f64) -> Self {
-        ClosedGen {
-            rng: Pcg64::seed_from(seed, 0xC1053D),
-            think: (pool.think_time > 0.0).then(|| Exponential::new(1.0 / pool.think_time)),
-            size_gamma: (cv_exec > 0.0).then(|| Gamma::from_mean_cv(1.0, cv_exec)),
-            n_types,
-            remaining: n_tasks,
-        }
-    }
-
-    /// Client `client` was released at `release_t`: think, then issue its
-    /// next request (unless the task budget is exhausted).
-    fn schedule(
-        &mut self,
-        client: u32,
-        release_t: Time,
-        eet: &EetMatrix,
-        gen_tasks: &mut Vec<Task>,
-        client_of: &mut Vec<u32>,
-        events: &mut EventQueue,
-    ) {
-        if self.remaining == 0 {
-            return;
-        }
-        self.remaining -= 1;
-        let think = match &self.think {
-            Some(e) => e.sample(&mut self.rng),
-            None => 0.0,
-        };
-        let arrival = release_t + think;
-        let type_id = TaskTypeId(self.rng.index(self.n_types));
-        let size_factor = match &mut self.size_gamma {
-            Some(g) => g.sample(&mut self.rng),
-            None => 1.0,
-        };
-        let id = gen_tasks.len() as u64;
-        let task = Task {
-            id,
-            type_id,
-            arrival,
-            deadline: eet.deadline(type_id, arrival),
-            size_factor,
-        };
-        gen_tasks.push(task);
-        client_of.push(client);
-        events.push(arrival, Event::Arrival { trace_idx: id as usize });
-    }
-}
-
-/// The workload a single engine run executes.
-enum WorkloadRef<'a> {
-    Open(&'a Trace),
-    Closed { pool: ClientPool, n_tasks: usize, seed: u64 },
-}
+use crate::sim::island::{ExecModel, Island};
+use crate::sim::result::SimResult;
 
 /// One simulation engine: scenario + heuristic, reusable across traces
-/// (see the module docs for the recycled-state contract).
+/// (see the module docs for the recycled-state contract). A thin driver
+/// over the per-device [`Island`] core.
 pub struct Simulation {
-    scenario: Scenario,
     /// Collect per-event mapper latencies (used by the overhead study;
     /// off by default — the aggregate total/max are always collected).
     pub record_overhead_samples: bool,
     pub overhead_samples: Vec<f64>,
-    // ---- recycled arena state (reset at the top of every run) ----------
-    machines: Vec<MachState>,
-    events: EventQueue,
-    mapping: MappingState,
-    trace_log: TraceLog,
-    /// The shared battery (`None` = unbatteried: classic infinite-energy
-    /// semantics, zero behavioral change). Advanced at every event pop;
-    /// depletion ends the run at the exact crossing instant (§Battery).
-    battery: Option<BatteryState>,
-    // closed-loop scratch (empty on open-loop runs)
-    gen_tasks: Vec<Task>,
-    client_of: Vec<u32>,
-    released: Releases,
+    island: Island,
 }
 
 impl Simulation {
     pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>) -> Self {
-        scenario.validate().expect("invalid scenario");
-        let machines: Vec<MachState> = scenario
-            .machines
-            .iter()
-            .map(|spec| MachState {
-                spec: spec.clone(),
-                running: None,
-                energy: MachineEnergy::default(),
-            })
-            .collect();
-        let tracker = FairnessTracker::new(
-            scenario.n_types(),
-            scenario.fairness_factor,
-            scenario.fairness_min_samples,
-            scenario.rate_window,
-        );
-        let mapping = MappingState::new(
-            scenario.eet.clone(),
-            scenario.machines.iter().map(|m| m.dyn_power).collect(),
-            scenario.queue_slots,
-            tracker,
-            heuristic,
-        );
-        let battery = scenario
-            .battery_spec()
-            .map(|spec| BatteryState::new(&spec, &scenario.machines));
         Self {
-            scenario: scenario.clone(),
             record_overhead_samples: false,
             overhead_samples: Vec::new(),
-            machines,
-            events: EventQueue::new(),
-            mapping,
-            trace_log: TraceLog::new(),
-            battery,
-            gen_tasks: Vec::new(),
-            client_of: Vec::new(),
-            released: Releases::default(),
+            island: Island::new(scenario, heuristic, ExecModel::Eet),
         }
     }
 
@@ -292,46 +125,49 @@ impl Simulation {
     /// [`Simulation::run`] behaves exactly like a fresh engine built with
     /// this heuristic.
     pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
-        self.mapping.set_heuristic(heuristic);
+        self.island.set_heuristic(heuristic);
     }
 
     pub fn heuristic_name(&self) -> &'static str {
-        self.mapping.heuristic_name()
+        self.island.heuristic_name()
     }
 
     pub fn scenario(&self) -> &Scenario {
-        &self.scenario
+        self.island.scenario()
     }
 
     /// Record every applied mapping [`Action`] of the next runs (golden
     /// sim/serve equivalence tests; off by default on hot paths).
     pub fn set_record_actions(&mut self, on: bool) {
-        self.mapping.record_actions = on;
+        self.island.set_record_actions(on);
     }
 
     /// Actions applied during the latest [`Simulation::run`] (empty unless
     /// [`Simulation::set_record_actions`] was enabled).
     pub fn action_log(&self) -> &[Action] {
-        &self.mapping.action_log
+        self.island.action_log()
     }
 
     /// Emit one [`TraceRecord`] per task at its terminal event (module
     /// docs §Per-request tracing). Off by default.
     pub fn set_record_traces(&mut self, on: bool) {
-        self.trace_log.on = on;
+        self.island.set_record_traces(on);
     }
 
     /// Trace records of the latest run (empty unless
     /// [`Simulation::set_record_traces`] was enabled).
     pub fn trace_log(&self) -> &[TraceRecord] {
-        &self.trace_log.records
+        self.island.trace_log()
     }
 
     /// Run the full trace to completion and report. `&mut self` recycles
     /// the arena: no per-run allocation beyond result counters, and the
     /// outcome is bit-identical to a fresh engine's (module docs).
     pub fn run(&mut self, trace: &Trace) -> SimResult {
-        self.run_impl(WorkloadRef::Open(trace))
+        self.island.record_overhead_samples = self.record_overhead_samples;
+        let result = self.island.run_open(trace);
+        std::mem::swap(&mut self.overhead_samples, &mut self.island.overhead_samples);
+        result
     }
 
     /// Run a closed-loop session: `pool.n_clients` clients issue `n_tasks`
@@ -340,357 +176,10 @@ impl Simulation {
     /// §Workloads). The first request of every client follows one think
     /// draw from t = 0. Deterministic per `seed`.
     pub fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
-        pool.validate().expect("invalid client pool");
-        assert!(n_tasks > 0, "closed-loop run needs at least one task");
-        self.run_impl(WorkloadRef::Closed { pool, n_tasks, seed })
-    }
-
-    fn run_impl(&mut self, workload: WorkloadRef) -> SimResult {
-        // split the borrow: every arena field independently mutable
-        let Simulation {
-            scenario: sc,
-            record_overhead_samples,
-            overhead_samples,
-            machines,
-            events,
-            mapping,
-            trace_log,
-            battery,
-            gen_tasks,
-            client_of,
-            released,
-        } = self;
-
-        let n_types = sc.n_types();
-        let n_machines = sc.n_machines();
-        let arrival_rate = match &workload {
-            WorkloadRef::Open(trace) => trace.arrival_rate,
-            // a closed loop has no offered rate — it is an outcome
-            WorkloadRef::Closed { .. } => f64::NAN,
-        };
-        let mut result =
-            SimResult::empty(mapping.heuristic_name(), arrival_rate, n_types, n_machines);
-
-        // ---- arena reset ---------------------------------------------------
-        for m in machines.iter_mut() {
-            m.reset();
-        }
-        events.clear();
-        mapping.reset();
-        overhead_samples.clear();
-        trace_log.clear();
-        if let Some(bat) = battery.as_mut() {
-            bat.reset();
-        }
-        gen_tasks.clear();
-        client_of.clear();
-        released.buf.clear();
-
-        let mut closed: Option<ClosedGen> = None;
-        let open_trace: Option<&Trace> = match workload {
-            WorkloadRef::Open(trace) => {
-                result.arrived = trace.arrivals_per_type(n_types);
-                for (i, t) in trace.tasks.iter().enumerate() {
-                    events.push(t.arrival, Event::Arrival { trace_idx: i });
-                }
-                Some(trace)
-            }
-            WorkloadRef::Closed { pool, n_tasks, seed } => {
-                let mut gen = ClosedGen::new(&pool, n_tasks, seed, n_types, sc.cv_exec);
-                for c in 0..pool.n_clients as u32 {
-                    gen.schedule(c, 0.0, &sc.eet, gen_tasks, client_of, events);
-                }
-                closed = Some(gen);
-                None
-            }
-        };
-        released.on = closed.is_some();
-
-        let mut now: Time = 0.0;
-        // event interrupted by battery depletion (system off mid-run)
-        let mut pending: Option<Event> = None;
-        while let Some((t, ev)) = events.pop() {
-            // ---- battery: integrate draw up to this event; depletion
-            // ends the run at the exact crossing instant ----------------
-            if let Some(bat) = battery.as_mut() {
-                if let Some(dead) = bat.advance(t) {
-                    now = dead;
-                    pending = Some(ev);
-                    break;
-                }
-            }
-            now = t;
-            match ev {
-                Event::Arrival { trace_idx } => {
-                    let task = match open_trace {
-                        Some(trace) => trace.tasks[trace_idx],
-                        None => gen_tasks[trace_idx],
-                    };
-                    if closed.is_some() {
-                        // open-loop denominators come from the trace upfront
-                        result.arrived[task.type_id.0] += 1;
-                    }
-                    mapping.push_arrival(task);
-                }
-                Event::Finish { machine_idx } => {
-                    finish_running(
-                        &mut machines[machine_idx],
-                        machine_idx,
-                        now,
-                        &mut result,
-                        mapping,
-                        trace_log,
-                        released,
-                        battery,
-                    );
-                }
-                Event::Expiry => {} // wake-up only; the mapping event below expires
-            }
-
-            // start queued work freed by the completion (before mapping so
-            // availability estimates are current)
-            for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping, trace_log, released, battery);
-            }
-
-            // ---- the mapping event (shared driver: expiry, snapshots,
-            // heuristic, action application — sched::dispatch) -----------
-            if let Some(bat) = battery.as_ref() {
-                mapping.set_soc(Some(bat.soc()));
-            }
-            let stats = mapping.mapping_event(now, &mut |d: Dropped| {
-                let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
-                result.record(d.task.type_id.0, &out);
-                let (machine, mapped) = d.mapped.unzip();
-                let outcome = d.kind.trace_outcome();
-                trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
-                released.push(d.task.id, now);
-            });
-            result.mapping_events += 1;
-            result.mapper_time_total += stats.mapper_dt;
-            result.mapper_time_max = result.mapper_time_max.max(stats.mapper_dt);
-            result.deferrals += stats.deferrals;
-            if *record_overhead_samples {
-                overhead_samples.push(stats.mapper_dt);
-            }
-
-            // idle machines may now have work
-            for (mi, m) in machines.iter_mut().enumerate() {
-                try_start(m, mi, now, events, &mut result, mapping, trace_log, released, battery);
-            }
-
-            if let Some(gen) = closed.as_mut() {
-                // terminal responses release their clients: think, then
-                // schedule the next arrivals (swap out the buffer so its
-                // allocation survives; `schedule` never pushes back into it)
-                let mut releases = std::mem::take(&mut released.buf);
-                for &(task_id, t_rel) in &releases {
-                    let client = client_of[task_id as usize];
-                    gen.schedule(client, t_rel, &sc.eet, gen_tasks, client_of, events);
-                }
-                releases.clear();
-                released.buf = releases;
-                // deferred arriving-queue tasks must expire (and release
-                // their clients) at their deadline, not whenever the next
-                // unrelated event happens to fire a mapping event — wake
-                // the mapper at the earliest arriving deadline whenever no
-                // earlier event is already scheduled. The guard keeps this
-                // to one pending wake-up (after a push, the deadline *is*
-                // the queue head), so no duplicate storms.
-                if let Some(d) = mapping.earliest_arriving_deadline() {
-                    let covered = events.peek_time().is_some_and(|t| t <= d);
-                    if !covered {
-                        events.push(d, Event::Expiry);
-                    }
-                }
-            }
-        }
-
-        if battery.as_ref().is_some_and(|b| b.is_depleted()) {
-            // ---- system off: the battery hit zero at `now` --------------
-            let t_dead = now;
-            // running work aborts at the crossing; its energy (all wasted)
-            // is accounted up to that instant
-            for (mi, m) in machines.iter_mut().enumerate() {
-                if let Some(r) = m.running.take() {
-                    mapping.mark_idle(mi);
-                    let busy = t_dead - r.start;
-                    let e = m.spec.dyn_energy(busy);
-                    m.energy.dynamic += e;
-                    m.energy.wasted += e;
-                    m.energy.busy_time += busy;
-                    result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
-                    mapping.record_terminal(r.task.type_id, false);
-                    trace_log.push(record_of(
-                        &r.task,
-                        TraceOutcome::Missed,
-                        Some(MachineId(mi)),
-                        Some(r.mapped),
-                        Some(r.start),
-                        t_dead,
-                    ));
-                }
-            }
-            // queued-but-never-started and arriving-queue tasks die in
-            // place, zero energy (one shared sweep — sched::dispatch)
-            mapping.drain_system_off(&mut |d: Dropped| {
-                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
-                result.record(d.task.type_id.0, &out);
-                let (machine, mapped) = d.mapped.unzip();
-                trace_log.push(record_of(
-                    &d.task,
-                    TraceOutcome::SystemOff,
-                    machine,
-                    mapped,
-                    None,
-                    t_dead,
-                ));
-            });
-            // unprocessed events: arrivals hit a dead system (Finish/Expiry
-            // events belong to work already accounted above)
-            let is_closed = closed.is_some();
-            let mut dead_arrival = |task: Task| {
-                if is_closed {
-                    result.arrived[task.type_id.0] += 1;
-                }
-                let at = task.arrival.max(t_dead);
-                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
-                result.record(task.type_id.0, &out);
-                trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
-            };
-            let drained = pending.into_iter().chain(std::iter::from_fn(|| {
-                events.pop().map(|(_, ev)| ev)
-            }));
-            for ev in drained {
-                if let Event::Arrival { trace_idx } = ev {
-                    let task = match open_trace {
-                        Some(trace) => trace.tasks[trace_idx],
-                        None => gen_tasks[trace_idx],
-                    };
-                    dead_arrival(task);
-                }
-            }
-        } else {
-            // Anything still waiting dies at its own deadline. (Closed-loop
-            // runs drained the arriving queue through Expiry events above.)
-            mapping.drain_unmapped(&mut |task| {
-                let at = task.deadline.max(now);
-                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
-                result.record(task.type_id.0, &out);
-                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
-            });
-        }
-
-        result.makespan = now;
-        result.battery = sc.battery_for(now);
-        if let Some(bat) = battery.as_ref() {
-            result.battery_spent = bat.spent();
-            result.depleted_at = bat.depleted_at();
-            result.final_soc = bat.soc();
-        }
-        for (mi, m) in machines.iter().enumerate() {
-            debug_assert!(m.running.is_none(), "machine {mi} still running at drain");
-            debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
-            let mut e = m.energy.clone();
-            e.idle = m.spec.idle_energy(now - e.busy_time);
-            result.energy[mi] = e;
-        }
-        debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
-        debug_assert!(
-            !trace_log.on || trace_log.records.len() as u64 == result.total_arrived(),
-            "tracing must emit exactly one record per arrival"
-        );
+        self.island.record_overhead_samples = self.record_overhead_samples;
+        let result = self.island.run_closed(pool, n_tasks, seed);
+        std::mem::swap(&mut self.overhead_samples, &mut self.island.overhead_samples);
         result
-    }
-}
-
-/// Account the finished/aborted running task.
-#[allow(clippy::too_many_arguments)]
-fn finish_running(
-    m: &mut MachState,
-    machine_idx: usize,
-    now: Time,
-    result: &mut SimResult,
-    mapping: &mut MappingState,
-    trace_log: &mut TraceLog,
-    released: &mut Releases,
-    battery: &mut Option<BatteryState>,
-) {
-    let r = m.running.take().expect("finish event with no running task");
-    debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
-    mapping.mark_idle(machine_idx);
-    if let Some(bat) = battery.as_mut() {
-        bat.set_busy(machine_idx, false);
-    }
-    let busy = r.end - r.start;
-    let e = m.spec.dyn_energy(busy);
-    m.energy.dynamic += e;
-    m.energy.busy_time += busy;
-    let ty = r.task.type_id;
-    let outcome = if r.actual_end <= r.task.deadline {
-        result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
-        mapping.record_terminal(ty, true);
-        TraceOutcome::Completed
-    } else {
-        // aborted at the deadline; everything it burnt is wasted
-        m.energy.wasted += e;
-        result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
-        mapping.record_terminal(ty, false);
-        TraceOutcome::Missed
-    };
-    trace_log.push(record_of(
-        &r.task,
-        outcome,
-        Some(MachineId(machine_idx)),
-        Some(r.mapped),
-        Some(r.start),
-        r.end,
-    ));
-    released.push(r.task.id, r.end);
-}
-
-/// Start the next queued task if the machine is idle. Tasks whose deadline
-/// already passed are dropped at start (Eq. 1 last case, zero energy).
-#[allow(clippy::too_many_arguments)]
-fn try_start(
-    m: &mut MachState,
-    machine_idx: usize,
-    now: Time,
-    events: &mut EventQueue,
-    result: &mut SimResult,
-    mapping: &mut MappingState,
-    trace_log: &mut TraceLog,
-    released: &mut Releases,
-    battery: &mut Option<BatteryState>,
-) {
-    if m.running.is_some() {
-        return;
-    }
-    while let Some(q) = mapping.pop_queued(machine_idx) {
-        if q.task.expired_at(now) {
-            // assigned but never started: Missed with no dynamic energy
-            result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
-            mapping.record_terminal(q.task.type_id, false);
-            trace_log.push(record_of(
-                &q.task,
-                TraceOutcome::DroppedAtStart,
-                Some(MachineId(machine_idx)),
-                Some(q.mapped),
-                None,
-                now,
-            ));
-            released.push(q.task.id, now);
-            continue;
-        }
-        let actual_end = now + q.expected_exec * q.task.size_factor;
-        let end = actual_end.min(q.task.deadline);
-        events.push(end, Event::Finish { machine_idx });
-        mapping.mark_running(machine_idx, now + q.expected_exec);
-        if let Some(bat) = battery.as_mut() {
-            bat.set_busy(machine_idx, true);
-        }
-        m.running = Some(Running { task: q.task, mapped: q.mapped, start: now, end, actual_end });
-        return;
     }
 }
 
@@ -699,6 +188,7 @@ mod tests {
     use super::*;
     use crate::model::workload::WorkloadParams;
     use crate::sched::registry::heuristic_by_name;
+    use crate::sched::trace::TraceOutcome;
     use crate::util::rng::Pcg64;
 
     fn run(heuristic: &str, rate: f64, n: usize, seed: u64) -> SimResult {

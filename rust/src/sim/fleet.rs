@@ -1,0 +1,348 @@
+//! The fleet engine: many [`Island`]s advancing in parallel under an
+//! inter-island router — the two-level scheduler (ROADMAP north star).
+//!
+//! Level 1 (this file + `sched::route`): at arrival time a
+//! [`RoutePolicy`] picks the destination island from per-island
+//! [`IslandView`] snapshots. Level 2 (unchanged): the island's own
+//! mapping heuristic places the task on a machine at the next mapping
+//! event.
+//!
+//! # Epoch parallelism
+//!
+//! Time is chopped into fixed synchronization epochs. Within one epoch
+//! the engine first routes every arrival of the window (serial — routing
+//! is a trivial table lookup, and the router sees optimistically updated
+//! queue counts as it assigns), then advances all islands to the epoch
+//! boundary **in parallel** with [`par_map`]: islands share no state
+//! between boundaries, so the fleet is embarrassingly parallel. Snapshots
+//! are refreshed at each boundary, which makes the router's knowledge
+//! one epoch stale — exactly the information lag a real fleet dispatcher
+//! operates under.
+//!
+//! Determinism: island event loops are deterministic, routing is
+//! deterministic per policy seed, and `par_map` preserves order — a
+//! fleet run replays bit-for-bit regardless of worker count.
+
+use crate::model::{FleetScenario, Time, Trace};
+use crate::sched::registry::heuristic_by_name;
+use crate::sched::route::{IslandView, RoutePolicy};
+use crate::sim::island::{ExecModel, Island};
+use crate::sim::result::SimResult;
+use crate::util::parallel::{default_jobs, par_map};
+use crate::util::stats::Summary;
+
+/// Default synchronization-epoch length in seconds of virtual time.
+pub const DEFAULT_EPOCH: f64 = 10.0;
+
+/// One fleet run's engine: islands + router, reusable across traces (the
+/// per-island recycled-arena contract carries over).
+pub struct FleetSim {
+    islands: Vec<Island>,
+    router: Box<dyn RoutePolicy>,
+    epoch: Time,
+    jobs: usize,
+}
+
+impl FleetSim {
+    pub fn new(
+        fleet: &FleetScenario,
+        heuristic: &str,
+        router: Box<dyn RoutePolicy>,
+    ) -> Result<FleetSim, String> {
+        fleet.validate()?;
+        let islands = fleet
+            .islands
+            .iter()
+            .map(|sc| Ok(Island::new(sc, heuristic_by_name(heuristic, sc)?, ExecModel::Eet)))
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(FleetSim { islands, router, epoch: DEFAULT_EPOCH, jobs: default_jobs() })
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.islands.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Synchronization-epoch length (virtual seconds). Shorter epochs give
+    /// the router fresher snapshots; longer epochs amortize the sync
+    /// barrier better. Routing outcomes may change — island *dynamics*
+    /// don't (each island's event loop is epoch-agnostic).
+    pub fn set_epoch(&mut self, epoch: Time) {
+        assert!(epoch > 0.0, "epoch must be positive");
+        self.epoch = epoch;
+    }
+
+    /// Worker threads for the parallel island advance (defaults to
+    /// `FELARE_JOBS` / available cores). Purely a throughput knob —
+    /// results are identical for any value.
+    pub fn set_jobs(&mut self, jobs: usize) {
+        assert!(jobs > 0, "need at least one worker");
+        self.jobs = jobs;
+    }
+
+    /// Run one fleet-wide open-loop trace: route every arrival to an
+    /// island, advance islands epoch-parallel, drain, and collect the
+    /// per-island results (module docs).
+    pub fn run(&mut self, trace: &Trace) -> FleetResult {
+        let n = self.islands.len();
+        let policy = self.router.name();
+        self.router.reset();
+        for island in self.islands.iter_mut() {
+            island.begin(trace.arrival_rate);
+        }
+        let mut views: Vec<IslandView> = self.islands.iter().map(|i| i.view()).collect();
+        let mut routed = vec![0u64; n];
+
+        let mut next = 0; // next trace task to route (arrivals are sorted)
+        let mut t_end = self.epoch;
+        while next < trace.tasks.len() {
+            // route this window's arrivals against the boundary snapshots,
+            // optimistically bumping queue counts as we assign
+            while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
+                let task = trace.tasks[next];
+                let dst = self.router.route(&views, &task);
+                assert!(dst < n, "router returned island {dst} of {n}");
+                views[dst].queued += 1;
+                routed[dst] += 1;
+                self.islands[dst].ingest(task);
+                next += 1;
+            }
+            // islands are independent between boundaries: advance them all
+            // in parallel, shipping each whole arena to a worker
+            let islands = std::mem::take(&mut self.islands);
+            self.islands = par_map(islands, self.jobs, |mut isl| {
+                isl.advance_to(t_end);
+                isl
+            });
+            for (v, island) in views.iter_mut().zip(&self.islands) {
+                *v = island.view();
+            }
+            t_end += self.epoch;
+        }
+
+        // every arrival is ingested: drain the islands to quiescence in
+        // parallel and collect their results
+        let islands = std::mem::take(&mut self.islands);
+        let (islands, results): (Vec<Island>, Vec<SimResult>) =
+            par_map(islands, self.jobs, |mut isl| {
+                let r = isl.finish();
+                (isl, r)
+            })
+            .into_iter()
+            .unzip();
+        self.islands = islands;
+        FleetResult { policy: policy.to_string(), routed, islands: results }
+    }
+}
+
+/// Per-island results of one fleet run plus the routing tally, with
+/// fleet-aggregate reductions (`exp fleet` reports these).
+pub struct FleetResult {
+    /// Router policy name the run used.
+    pub policy: String,
+    /// Tasks routed to each island (== that island's arrivals).
+    pub routed: Vec<u64>,
+    /// Per-island [`SimResult`], island order.
+    pub islands: Vec<SimResult>,
+}
+
+impl FleetResult {
+    pub fn total_arrived(&self) -> u64 {
+        self.islands.iter().map(|r| r.total_arrived()).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.islands.iter().map(|r| r.total_completed()).sum()
+    }
+
+    /// Fleet-aggregate on-time completion rate: completed / arrived over
+    /// the whole fleet.
+    pub fn on_time_rate(&self) -> f64 {
+        let arrived = self.total_arrived();
+        if arrived == 0 {
+            return f64::NAN;
+        }
+        self.total_completed() as f64 / arrived as f64
+    }
+
+    /// Per-island fairness spread: max − min collective completion rate
+    /// among islands that received work. 0 = perfectly even fleet.
+    pub fn fairness_spread(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .islands
+            .iter()
+            .filter(|r| r.total_arrived() > 0)
+            .map(|r| r.collective_completion_rate())
+            .collect();
+        match rates.iter().copied().reduce(f64::max) {
+            Some(max) => max - rates.iter().copied().reduce(f64::min).unwrap(),
+            None => 0.0,
+        }
+    }
+
+    /// Earliest island depletion instant (fleet "first light out"), if
+    /// any island depleted.
+    pub fn first_depletion(&self) -> Option<f64> {
+        self.islands.iter().filter_map(|r| r.depleted_at).reduce(f64::min)
+    }
+
+    /// Median depletion instant over the islands that depleted.
+    pub fn median_depletion(&self) -> Option<f64> {
+        let deaths: Vec<f64> = self.islands.iter().filter_map(|r| r.depleted_at).collect();
+        if deaths.is_empty() {
+            return None;
+        }
+        Some(Summary::of(&deaths).median())
+    }
+
+    /// Islands whose battery hit zero during the run.
+    pub fn depleted_islands(&self) -> usize {
+        self.islands.iter().filter(|r| r.depleted_at.is_some()).count()
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.islands.iter().map(|r| r.total_energy()).sum()
+    }
+
+    /// Fleet-wide completed tasks per joule consumed.
+    pub fn tasks_per_joule(&self) -> f64 {
+        let e = self.total_energy();
+        if e <= 0.0 {
+            return f64::NAN;
+        }
+        self.total_completed() as f64 / e
+    }
+
+    /// Fleet conservation: every offered task was routed exactly once,
+    /// every island's arrival tally equals its routing tally, and every
+    /// island conserves internally.
+    pub fn check_conservation(&self, offered: u64) -> Result<(), String> {
+        let routed_total: u64 = self.routed.iter().sum();
+        if routed_total != offered {
+            return Err(format!("routed {routed_total} of {offered} offered tasks"));
+        }
+        if self.total_arrived() != offered {
+            return Err(format!("fleet arrivals {} != offered {offered}", self.total_arrived()));
+        }
+        for (i, (r, &sent)) in self.islands.iter().zip(&self.routed).enumerate() {
+            if r.total_arrived() != sent {
+                return Err(format!(
+                    "island {i}: {} arrivals but {sent} routed to it",
+                    r.total_arrived()
+                ));
+            }
+            r.check_conservation().map_err(|e| format!("island {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::WorkloadParams;
+    use crate::model::Scenario;
+    use crate::sched::route::route_policy_by_name;
+    use crate::util::rng::Pcg64;
+
+    fn trace_for(sc: &Scenario, rate: f64, n: usize, seed: u64) -> Trace {
+        let params = WorkloadParams {
+            n_tasks: n,
+            arrival_rate: rate,
+            cv_exec: sc.cv_exec,
+            type_weights: Vec::new(),
+        };
+        Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+    }
+
+    #[test]
+    fn fleet_conserves_across_policies() {
+        let fleet = FleetScenario::stress_fleet(6, 4, 3);
+        let trace = trace_for(&fleet.islands[0], 2.0 * fleet.service_capacity(), 900, 7);
+        for policy in crate::sched::route::ALL_ROUTE_POLICIES {
+            let router = route_policy_by_name(policy, 0xF1EE7).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            let r = sim.run(&trace);
+            r.check_conservation(900).unwrap_or_else(|e| panic!("{policy}: {e}"));
+            assert!(r.total_completed() > 0, "{policy}: fleet completed nothing");
+        }
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic_and_jobs_invariant() {
+        let fleet = FleetScenario::stress_fleet(5, 4, 3).with_mixed_batteries(120.0);
+        let trace = trace_for(&fleet.islands[0], 1.5 * fleet.service_capacity(), 600, 11);
+        let run_with = |jobs: usize| {
+            let router = route_policy_by_name("soc-aware", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_jobs(jobs);
+            sim.run(&trace)
+        };
+        let a = run_with(1);
+        let b = run_with(4);
+        assert_eq!(a.routed, b.routed, "routing must not depend on worker count");
+        for (ra, rb) in a.islands.iter().zip(&b.islands) {
+            assert_eq!(ra.completed, rb.completed);
+            assert_eq!(ra.missed, rb.missed);
+            assert_eq!(ra.cancelled, rb.cancelled);
+            assert_eq!(ra.makespan, rb.makespan);
+            assert_eq!(ra.depleted_at, rb.depleted_at);
+        }
+    }
+
+    #[test]
+    fn recycled_fleet_runs_match_fresh() {
+        let fleet = FleetScenario::stress_fleet(3, 4, 2);
+        let trace = trace_for(&fleet.islands[0], fleet.service_capacity(), 400, 13);
+        let router = route_policy_by_name("least-queued", 1).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        let first = sim.run(&trace);
+        let second = sim.run(&trace);
+        assert_eq!(first.routed, second.routed);
+        for (ra, rb) in first.islands.iter().zip(&second.islands) {
+            assert_eq!(ra.completed, rb.completed);
+            assert_eq!(ra.makespan, rb.makespan);
+        }
+    }
+
+    #[test]
+    fn mixed_battery_fleet_reports_lifetimes() {
+        // small batteries under sustained load: the battery islands die,
+        // the mains island survives, and the lifetime reductions see it
+        let fleet = FleetScenario::stress_fleet(3, 4, 2).with_mixed_batteries(60.0);
+        let trace = trace_for(&fleet.islands[0], 2.0 * fleet.service_capacity(), 1200, 17);
+        let router = route_policy_by_name("round-robin", 1).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        let r = sim.run(&trace);
+        r.check_conservation(1200).unwrap();
+        assert_eq!(r.depleted_islands(), 2, "both battery islands must deplete");
+        let first = r.first_depletion().unwrap();
+        let median = r.median_depletion().unwrap();
+        assert!(first <= median);
+        assert!(r.islands[0].depleted_at.is_none(), "mains island never depletes");
+        assert!(r.fairness_spread() > 0.0, "dead islands drag their completion rates");
+        assert!(r.tasks_per_joule() > 0.0);
+    }
+
+    #[test]
+    fn epoch_length_does_not_change_island_dynamics() {
+        // a single island receives every task under any router, so the
+        // epoch chop must be invisible in the result
+        let fleet = FleetScenario::uniform("solo", 1, Scenario::stress(4, 3));
+        let trace = trace_for(&fleet.islands[0], fleet.service_capacity(), 500, 19);
+        let run_with = |epoch: f64| {
+            let router = route_policy_by_name("round-robin", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_epoch(epoch);
+            sim.run(&trace)
+        };
+        let a = run_with(2.0);
+        let b = run_with(50.0);
+        assert_eq!(a.islands[0].completed, b.islands[0].completed);
+        assert_eq!(a.islands[0].missed, b.islands[0].missed);
+        assert_eq!(a.islands[0].makespan, b.islands[0].makespan);
+    }
+}

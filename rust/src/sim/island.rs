@@ -1,0 +1,914 @@
+//! The per-device **island**: one complete edge device — machines, the
+//! shared [`MappingState`], battery, per-request trace sink and event
+//! queue — packaged as a reusable engine core.
+//!
+//! Both single-device drivers are thin shells over this type:
+//! [`Simulation`](crate::sim::Simulation) runs an island with
+//! [`ExecModel::Eet`] (service times straight from the EET matrix), the
+//! headless serve driver runs one with [`ExecModel::Backend`] (service
+//! times through per-machine [`InferenceBackend`]s, the live
+//! coordinator's worker substrate). Every float is computed from the same
+//! operands in the same order in both modes, which is what keeps the
+//! sim/serve bit-identity contract intact after the extraction.
+//!
+//! # Run modes
+//!
+//! * [`Island::run_open`] / [`Island::run_closed`] — the monolithic
+//!   single-device event loops (previously `Simulation::run_impl`): the
+//!   whole workload is known up front and the loop runs to drain.
+//! * The **incremental** API — [`Island::begin`], [`Island::ingest`],
+//!   [`Island::advance_to`], [`Island::finish`] — lets an external
+//!   placement layer (the fleet engine, `sim::fleet`) feed arrivals one
+//!   at a time and advance the island's event loop in bounded epochs.
+//!   Between epochs the island is quiescent, so a fleet of islands is
+//!   embarrassingly parallel: the fleet engine ships whole `Island`
+//!   values across worker threads with `par_map` (an `Island` is `Send`;
+//!   backends are `Box<dyn InferenceBackend + Send>`).
+//!
+//! Both paths share the same per-event body ([`mapping_round`],
+//! [`finish_running`], [`try_start`], [`system_off_drain`],
+//! [`finalize`]), so a 1-island fleet reproduces a plain `Simulation`
+//! float for float (`rust/tests/fleet_suite.rs`). The only structural
+//! difference is *when* arrival events enter the queue: the monolithic
+//! path pushes the whole trace up front, the incremental path pushes each
+//! window's arrivals at its epoch boundary. Event order — (time, FIFO) —
+//! only differs if an arrival ties a finish time **exactly** in f64,
+//! a measure-zero coincidence for continuous arrival processes.
+//!
+//! # Recycled-arena contract
+//!
+//! Like the wrappers above it, an `Island` is an arena: every buffer is
+//! allocated in [`Island::new`] and recycled across runs, and every
+//! deterministic result field is bit-identical to a fresh island's
+//! (see `sim::engine` module docs for the full statement).
+
+use crate::energy::BatteryState;
+use crate::model::machine::{MachineId, MachineSpec};
+use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
+use crate::model::{ClientPool, EetMatrix, Scenario, Trace};
+use crate::runtime::{InferenceBackend, SyntheticBackend};
+use crate::sched::dispatch::{Dropped, MappingState};
+use crate::sched::fairness::FairnessTracker;
+use crate::sched::route::IslandView;
+use crate::sched::trace::{record_of, TraceLog, TraceOutcome, TraceRecord};
+use crate::sched::{Action, MappingHeuristic};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::result::{MachineEnergy, SimResult};
+use crate::util::rng::{Exponential, Gamma, Pcg64};
+
+/// How service times are produced when a task starts executing.
+pub enum ExecModel {
+    /// Straight from the EET matrix (`q.expected_exec`): the simulator.
+    Eet,
+    /// Through one [`InferenceBackend`] per machine: the serve drivers.
+    /// With [`SyntheticBackend::deterministic`] the reported `modeled`
+    /// time *is* the frozen EET entry, so both models yield identical
+    /// floats (the sim/serve bit-identity contract).
+    Backend(Vec<Box<dyn InferenceBackend + Send>>),
+}
+
+impl ExecModel {
+    /// One deterministic synthetic backend per machine — the headless
+    /// serve substrate (the trace's `size_factor` already carries the
+    /// service-time draw; sampling again would double-apply it).
+    pub fn synthetic(scenario: &Scenario) -> Self {
+        ExecModel::Backend(
+            (0..scenario.n_machines())
+                .map(|_| {
+                    Box::new(SyntheticBackend::deterministic(scenario.eet.clone()))
+                        as Box<dyn InferenceBackend + Send>
+                })
+                .collect(),
+        )
+    }
+}
+
+pub(crate) struct Running {
+    task: Task,
+    /// When the mapper assigned it (from `QueuedTask::mapped`).
+    mapped: Time,
+    start: Time,
+    /// Scheduled end = min(actual finish, deadline).
+    end: Time,
+    /// True finish had it been allowed to run to completion.
+    actual_end: Time,
+}
+
+pub(crate) struct MachState {
+    spec: MachineSpec,
+    running: Option<Running>,
+    energy: MachineEnergy,
+}
+
+impl MachState {
+    /// Reset to the idle state.
+    fn reset(&mut self) {
+        self.running = None;
+        self.energy = MachineEnergy::default();
+    }
+}
+
+/// Terminal notifications for the closed-loop generator: `(task id,
+/// terminal time)` pairs, buffered during an event iteration and drained
+/// into next-arrival scheduling after it. Gated off (one branch per
+/// terminal) on open-loop runs.
+#[derive(Default)]
+struct Releases {
+    on: bool,
+    buf: Vec<(u64, Time)>,
+}
+
+impl Releases {
+    #[inline]
+    fn push(&mut self, task_id: u64, t: Time) {
+        if self.on {
+            self.buf.push((task_id, t));
+        }
+    }
+}
+
+/// In-loop request generator for closed-loop runs: draws think times,
+/// task types and size factors exactly when a client is released, so the
+/// arrival process reacts to system latency. Deterministic per seed —
+/// draws happen in event-loop order.
+struct ClosedGen {
+    rng: Pcg64,
+    think: Option<Exponential>,
+    size_gamma: Option<Gamma>,
+    n_types: usize,
+    /// Tasks still to be generated (counts down from `n_tasks`).
+    remaining: usize,
+}
+
+impl ClosedGen {
+    fn new(pool: &ClientPool, n_tasks: usize, seed: u64, n_types: usize, cv_exec: f64) -> Self {
+        ClosedGen {
+            rng: Pcg64::seed_from(seed, 0xC1053D),
+            think: (pool.think_time > 0.0).then(|| Exponential::new(1.0 / pool.think_time)),
+            size_gamma: (cv_exec > 0.0).then(|| Gamma::from_mean_cv(1.0, cv_exec)),
+            n_types,
+            remaining: n_tasks,
+        }
+    }
+
+    /// Client `client` was released at `release_t`: think, then issue its
+    /// next request (unless the task budget is exhausted).
+    fn schedule(
+        &mut self,
+        client: u32,
+        release_t: Time,
+        eet: &EetMatrix,
+        gen_tasks: &mut Vec<Task>,
+        client_of: &mut Vec<u32>,
+        events: &mut EventQueue,
+    ) {
+        if self.remaining == 0 {
+            return;
+        }
+        self.remaining -= 1;
+        let think = match &self.think {
+            Some(e) => e.sample(&mut self.rng),
+            None => 0.0,
+        };
+        let arrival = release_t + think;
+        let type_id = TaskTypeId(self.rng.index(self.n_types));
+        let size_factor = match &mut self.size_gamma {
+            Some(g) => g.sample(&mut self.rng),
+            None => 1.0,
+        };
+        let id = gen_tasks.len() as u64;
+        let task = Task {
+            id,
+            type_id,
+            arrival,
+            deadline: eet.deadline(type_id, arrival),
+            size_factor,
+        };
+        gen_tasks.push(task);
+        client_of.push(client);
+        events.push(arrival, Event::Arrival { trace_idx: id as usize });
+    }
+}
+
+/// The workload a single monolithic run executes.
+enum WorkloadRef<'a> {
+    Open(&'a Trace),
+    Closed { pool: ClientPool, n_tasks: usize, seed: u64 },
+}
+
+/// One edge device: scenario + mapper + machines + battery + event queue,
+/// reusable across runs (module docs).
+pub struct Island {
+    scenario: Scenario,
+    /// Collect per-event mapper latencies (used by the overhead study;
+    /// off by default — the aggregate total/max are always collected).
+    pub record_overhead_samples: bool,
+    pub overhead_samples: Vec<f64>,
+    // ---- recycled arena state (reset at the top of every run) ----------
+    machines: Vec<MachState>,
+    events: EventQueue,
+    mapping: MappingState,
+    trace_log: TraceLog,
+    /// The shared battery (`None` = unbatteried: classic infinite-energy
+    /// semantics, zero behavioral change). Advanced at every event pop;
+    /// depletion ends the run at the exact crossing instant.
+    battery: Option<BatteryState>,
+    exec: ExecModel,
+    // closed-loop + incremental task store (empty on monolithic open runs)
+    gen_tasks: Vec<Task>,
+    client_of: Vec<u32>,
+    released: Releases,
+    // ---- incremental-run state (begin/ingest/advance_to/finish) --------
+    now: Time,
+    dead: bool,
+    inflight: Option<SimResult>,
+}
+
+#[allow(dead_code)]
+fn _island_is_send() {
+    fn is_send<T: Send>() {}
+    is_send::<Island>();
+}
+
+impl Island {
+    pub fn new(scenario: &Scenario, heuristic: Box<dyn MappingHeuristic>, exec: ExecModel) -> Self {
+        scenario.validate().expect("invalid scenario");
+        let machines: Vec<MachState> = scenario
+            .machines
+            .iter()
+            .map(|spec| MachState {
+                spec: spec.clone(),
+                running: None,
+                energy: MachineEnergy::default(),
+            })
+            .collect();
+        let tracker = FairnessTracker::new(
+            scenario.n_types(),
+            scenario.fairness_factor,
+            scenario.fairness_min_samples,
+            scenario.rate_window,
+        );
+        let mapping = MappingState::new(
+            scenario.eet.clone(),
+            scenario.machines.iter().map(|m| m.dyn_power).collect(),
+            scenario.queue_slots,
+            tracker,
+            heuristic,
+        );
+        let battery = scenario
+            .battery_spec()
+            .map(|spec| BatteryState::new(&spec, &scenario.machines));
+        Self {
+            scenario: scenario.clone(),
+            record_overhead_samples: false,
+            overhead_samples: Vec::new(),
+            machines,
+            events: EventQueue::new(),
+            mapping,
+            trace_log: TraceLog::new(),
+            battery,
+            exec,
+            gen_tasks: Vec::new(),
+            client_of: Vec::new(),
+            released: Releases::default(),
+            now: 0.0,
+            dead: false,
+            inflight: None,
+        }
+    }
+
+    /// Swap the mapping heuristic, keeping the recycled arena.
+    pub fn set_heuristic(&mut self, heuristic: Box<dyn MappingHeuristic>) {
+        self.mapping.set_heuristic(heuristic);
+    }
+
+    pub fn heuristic_name(&self) -> &'static str {
+        self.mapping.heuristic_name()
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Record every applied mapping [`Action`] of the next runs.
+    pub fn set_record_actions(&mut self, on: bool) {
+        self.mapping.record_actions = on;
+    }
+
+    /// Actions applied during the latest run.
+    pub fn action_log(&self) -> &[Action] {
+        &self.mapping.action_log
+    }
+
+    /// Emit one [`TraceRecord`] per task at its terminal event.
+    pub fn set_record_traces(&mut self, on: bool) {
+        self.trace_log.on = on;
+    }
+
+    /// Trace records of the latest run.
+    pub fn trace_log(&self) -> &[TraceRecord] {
+        &self.trace_log.records
+    }
+
+    /// Run a full open-loop trace to completion (monolithic mode).
+    pub fn run_open(&mut self, trace: &Trace) -> SimResult {
+        self.run_impl(WorkloadRef::Open(trace))
+    }
+
+    /// Run a closed-loop session: `pool.n_clients` clients issue `n_tasks`
+    /// requests in total, each waiting for its previous response plus an
+    /// exponential think time before the next request. Deterministic per
+    /// `seed`.
+    pub fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
+        pool.validate().expect("invalid client pool");
+        assert!(n_tasks > 0, "closed-loop run needs at least one task");
+        self.run_impl(WorkloadRef::Closed { pool, n_tasks, seed })
+    }
+
+    // ---- incremental (fleet) API -------------------------------------------
+
+    /// Start an incremental run: reset the arena and open an empty result
+    /// accumulator. Arrivals are fed with [`Island::ingest`], time is
+    /// advanced with [`Island::advance_to`], and [`Island::finish`]
+    /// drains and returns the result.
+    pub fn begin(&mut self, arrival_rate: f64) {
+        let n_types = self.scenario.n_types();
+        let n_machines = self.scenario.n_machines();
+        for m in self.machines.iter_mut() {
+            m.reset();
+        }
+        self.events.clear();
+        self.mapping.reset();
+        self.overhead_samples.clear();
+        self.trace_log.clear();
+        if let Some(bat) = self.battery.as_mut() {
+            bat.reset();
+        }
+        self.gen_tasks.clear();
+        self.client_of.clear();
+        self.released.buf.clear();
+        self.released.on = false;
+        self.now = 0.0;
+        self.dead = false;
+        self.inflight = Some(SimResult::empty(
+            self.mapping.heuristic_name(),
+            arrival_rate,
+            n_types,
+            n_machines,
+        ));
+    }
+
+    /// Feed one routed arrival. The task is counted as arrived here (the
+    /// island is its terminal owner from this point on — fleet
+    /// conservation); against a depleted island it is cancelled
+    /// `SystemOff` on the spot, like an arrival against a dead system.
+    pub fn ingest(&mut self, task: Task) {
+        let result = self.inflight.as_mut().expect("ingest outside begin/finish");
+        result.arrived[task.type_id.0] += 1;
+        if self.dead {
+            let at = task.arrival.max(self.now);
+            let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
+            result.record(task.type_id.0, &out);
+            self.trace_log
+                .push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
+            return;
+        }
+        let local = self.gen_tasks.len();
+        self.gen_tasks.push(task);
+        self.events.push(task.arrival, Event::Arrival { trace_idx: local });
+    }
+
+    /// Pop and process every event strictly before `t_end`. Identical
+    /// per-event body to the monolithic loop; on battery depletion the
+    /// island dies at the exact crossing instant and drains in place.
+    pub fn advance_to(&mut self, t_end: Time) {
+        if self.dead {
+            return;
+        }
+        let Island {
+            record_overhead_samples,
+            overhead_samples,
+            machines,
+            events,
+            mapping,
+            trace_log,
+            battery,
+            exec,
+            gen_tasks,
+            released,
+            now,
+            dead,
+            inflight,
+            ..
+        } = self;
+        let result = inflight.as_mut().expect("advance_to outside begin/finish");
+
+        let mut pending: Option<Event> = None;
+        while events.peek_time().is_some_and(|t| t < t_end) {
+            let (t, ev) = events.pop().expect("peeked event vanished");
+            if let Some(bat) = battery.as_mut() {
+                if let Some(dead_t) = bat.advance(t) {
+                    *now = dead_t;
+                    pending = Some(ev);
+                    *dead = true;
+                    break;
+                }
+            }
+            *now = t;
+            match ev {
+                Event::Arrival { trace_idx } => mapping.push_arrival(gen_tasks[trace_idx]),
+                Event::Finish { machine_idx } => finish_running(
+                    &mut machines[machine_idx],
+                    machine_idx,
+                    *now,
+                    result,
+                    mapping,
+                    trace_log,
+                    released,
+                    battery,
+                ),
+                Event::Expiry => {}
+            }
+            mapping_round(
+                *now,
+                machines,
+                events,
+                mapping,
+                trace_log,
+                battery,
+                released,
+                exec,
+                result,
+                *record_overhead_samples,
+                overhead_samples,
+            );
+        }
+
+        if *dead {
+            // system off: abort running work, drain queued + arriving, and
+            // cancel every not-yet-processed arrival against a dead system
+            system_off_drain(*now, machines, mapping, trace_log, result);
+            let t_dead = *now;
+            let drained =
+                pending.into_iter().chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
+            for ev in drained {
+                if let Event::Arrival { trace_idx } = ev {
+                    let task = gen_tasks[trace_idx];
+                    let at = task.arrival.max(t_dead);
+                    let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
+                    result.record(task.type_id.0, &out);
+                    trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
+                }
+            }
+        }
+    }
+
+    /// Drain every remaining event, settle waiting work and return the
+    /// run's result. The island is reusable afterwards ([`Island::begin`]).
+    pub fn finish(&mut self) -> SimResult {
+        self.advance_to(f64::INFINITY);
+        let mut result = self.inflight.take().expect("finish outside begin");
+        let Island { scenario: sc, machines, mapping, trace_log, battery, now, dead, .. } = self;
+        if !*dead {
+            // anything still waiting dies at its own deadline
+            let now = *now;
+            mapping.drain_unmapped(&mut |task| {
+                let at = task.deadline.max(now);
+                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+            });
+        }
+        finalize(*now, sc, machines, mapping, battery.as_ref(), trace_log, &mut result);
+        result
+    }
+
+    /// A routing snapshot of this island's state: in-flight work, battery
+    /// state of charge, liveness. The fleet router decides from a vector
+    /// of these (`sched::route`).
+    pub fn view(&self) -> IslandView {
+        IslandView {
+            queued: self.mapping.arriving_len() + self.mapping.queued_total(),
+            running: self.machines.iter().filter(|m| m.running.is_some()).count(),
+            n_machines: self.machines.len(),
+            slots: self.machines.len() * (1 + self.scenario.queue_slots),
+            soc: self.battery.as_ref().map(|b| b.soc()),
+            depleted: self.dead || self.battery.as_ref().is_some_and(|b| b.is_depleted()),
+        }
+    }
+
+    // ---- the monolithic event loop -----------------------------------------
+
+    fn run_impl(&mut self, workload: WorkloadRef) -> SimResult {
+        // split the borrow: every arena field independently mutable
+        let Island {
+            scenario: sc,
+            record_overhead_samples,
+            overhead_samples,
+            machines,
+            events,
+            mapping,
+            trace_log,
+            battery,
+            exec,
+            gen_tasks,
+            client_of,
+            released,
+            inflight,
+            ..
+        } = self;
+        *inflight = None; // monolithic and incremental modes are exclusive
+
+        let n_types = sc.n_types();
+        let n_machines = sc.n_machines();
+        let arrival_rate = match &workload {
+            WorkloadRef::Open(trace) => trace.arrival_rate,
+            // a closed loop has no offered rate — it is an outcome
+            WorkloadRef::Closed { .. } => f64::NAN,
+        };
+        let mut result =
+            SimResult::empty(mapping.heuristic_name(), arrival_rate, n_types, n_machines);
+
+        // ---- arena reset ---------------------------------------------------
+        for m in machines.iter_mut() {
+            m.reset();
+        }
+        events.clear();
+        mapping.reset();
+        overhead_samples.clear();
+        trace_log.clear();
+        if let Some(bat) = battery.as_mut() {
+            bat.reset();
+        }
+        gen_tasks.clear();
+        client_of.clear();
+        released.buf.clear();
+
+        let mut closed: Option<ClosedGen> = None;
+        let open_trace: Option<&Trace> = match workload {
+            WorkloadRef::Open(trace) => {
+                result.arrived = trace.arrivals_per_type(n_types);
+                for (i, t) in trace.tasks.iter().enumerate() {
+                    events.push(t.arrival, Event::Arrival { trace_idx: i });
+                }
+                Some(trace)
+            }
+            WorkloadRef::Closed { pool, n_tasks, seed } => {
+                let mut gen = ClosedGen::new(&pool, n_tasks, seed, n_types, sc.cv_exec);
+                for c in 0..pool.n_clients as u32 {
+                    gen.schedule(c, 0.0, &sc.eet, gen_tasks, client_of, events);
+                }
+                closed = Some(gen);
+                None
+            }
+        };
+        released.on = closed.is_some();
+
+        let mut now: Time = 0.0;
+        // event interrupted by battery depletion (system off mid-run)
+        let mut pending: Option<Event> = None;
+        while let Some((t, ev)) = events.pop() {
+            // ---- battery: integrate draw up to this event; depletion
+            // ends the run at the exact crossing instant ----------------
+            if let Some(bat) = battery.as_mut() {
+                if let Some(dead) = bat.advance(t) {
+                    now = dead;
+                    pending = Some(ev);
+                    break;
+                }
+            }
+            now = t;
+            match ev {
+                Event::Arrival { trace_idx } => {
+                    let task = match open_trace {
+                        Some(trace) => trace.tasks[trace_idx],
+                        None => gen_tasks[trace_idx],
+                    };
+                    if closed.is_some() {
+                        // open-loop denominators come from the trace upfront
+                        result.arrived[task.type_id.0] += 1;
+                    }
+                    mapping.push_arrival(task);
+                }
+                Event::Finish { machine_idx } => {
+                    finish_running(
+                        &mut machines[machine_idx],
+                        machine_idx,
+                        now,
+                        &mut result,
+                        mapping,
+                        trace_log,
+                        released,
+                        battery,
+                    );
+                }
+                Event::Expiry => {} // wake-up only; the mapping event below expires
+            }
+
+            // shared per-event body: start freed work, fire the mapping
+            // event, start newly mapped work
+            mapping_round(
+                now,
+                machines,
+                events,
+                mapping,
+                trace_log,
+                battery,
+                released,
+                exec,
+                &mut result,
+                *record_overhead_samples,
+                overhead_samples,
+            );
+
+            if let Some(gen) = closed.as_mut() {
+                // terminal responses release their clients: think, then
+                // schedule the next arrivals (swap out the buffer so its
+                // allocation survives; `schedule` never pushes back into it)
+                let mut releases = std::mem::take(&mut released.buf);
+                for &(task_id, t_rel) in &releases {
+                    let client = client_of[task_id as usize];
+                    gen.schedule(client, t_rel, &sc.eet, gen_tasks, client_of, events);
+                }
+                releases.clear();
+                released.buf = releases;
+                // deferred arriving-queue tasks must expire (and release
+                // their clients) at their deadline, not whenever the next
+                // unrelated event happens to fire a mapping event — wake
+                // the mapper at the earliest arriving deadline whenever no
+                // earlier event is already scheduled. The guard keeps this
+                // to one pending wake-up (after a push, the deadline *is*
+                // the queue head), so no duplicate storms.
+                if let Some(d) = mapping.earliest_arriving_deadline() {
+                    let covered = events.peek_time().is_some_and(|t| t <= d);
+                    if !covered {
+                        events.push(d, Event::Expiry);
+                    }
+                }
+            }
+        }
+
+        if battery.as_ref().is_some_and(|b| b.is_depleted()) {
+            // ---- system off: the battery hit zero at `now` --------------
+            let t_dead = now;
+            system_off_drain(t_dead, machines, mapping, trace_log, &mut result);
+            // unprocessed events: arrivals hit a dead system (Finish/Expiry
+            // events belong to work already accounted above)
+            let is_closed = closed.is_some();
+            let mut dead_arrival = |task: Task| {
+                if is_closed {
+                    result.arrived[task.type_id.0] += 1;
+                }
+                let at = task.arrival.max(t_dead);
+                let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
+            };
+            let drained =
+                pending.into_iter().chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
+            for ev in drained {
+                if let Event::Arrival { trace_idx } = ev {
+                    let task = match open_trace {
+                        Some(trace) => trace.tasks[trace_idx],
+                        None => gen_tasks[trace_idx],
+                    };
+                    dead_arrival(task);
+                }
+            }
+        } else {
+            // Anything still waiting dies at its own deadline. (Closed-loop
+            // runs drained the arriving queue through Expiry events above.)
+            mapping.drain_unmapped(&mut |task| {
+                let at = task.deadline.max(now);
+                let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
+                result.record(task.type_id.0, &out);
+                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+            });
+        }
+
+        finalize(now, sc, machines, mapping, battery.as_ref(), trace_log, &mut result);
+        result
+    }
+}
+
+/// The shared per-event body: start queued work freed by the event, fire
+/// the mapping event through the shared dispatch layer, then start newly
+/// mapped work. Identical operands in identical order for every run mode
+/// (the bit-identity contracts).
+#[allow(clippy::too_many_arguments)]
+fn mapping_round(
+    now: Time,
+    machines: &mut [MachState],
+    events: &mut EventQueue,
+    mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    battery: &mut Option<BatteryState>,
+    released: &mut Releases,
+    exec: &mut ExecModel,
+    result: &mut SimResult,
+    record_overhead_samples: bool,
+    overhead_samples: &mut Vec<f64>,
+) {
+    // start queued work freed by the event (before mapping so
+    // availability estimates are current)
+    for (mi, m) in machines.iter_mut().enumerate() {
+        try_start(m, mi, now, events, result, mapping, trace_log, released, battery, exec);
+    }
+
+    // the mapping event (shared driver: expiry, snapshots, heuristic,
+    // action application — sched::dispatch)
+    if let Some(bat) = battery.as_ref() {
+        mapping.set_soc(Some(bat.soc()));
+    }
+    let stats = mapping.mapping_event(now, &mut |d: Dropped| {
+        let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
+        result.record(d.task.type_id.0, &out);
+        let (machine, mapped) = d.mapped.unzip();
+        let outcome = d.kind.trace_outcome();
+        trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
+        released.push(d.task.id, now);
+    });
+    result.mapping_events += 1;
+    result.mapper_time_total += stats.mapper_dt;
+    result.mapper_time_max = result.mapper_time_max.max(stats.mapper_dt);
+    result.deferrals += stats.deferrals;
+    if record_overhead_samples {
+        overhead_samples.push(stats.mapper_dt);
+    }
+
+    // idle machines may now have work
+    for (mi, m) in machines.iter_mut().enumerate() {
+        try_start(m, mi, now, events, result, mapping, trace_log, released, battery, exec);
+    }
+}
+
+/// Account the finished/aborted running task.
+#[allow(clippy::too_many_arguments)]
+fn finish_running(
+    m: &mut MachState,
+    machine_idx: usize,
+    now: Time,
+    result: &mut SimResult,
+    mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    released: &mut Releases,
+    battery: &mut Option<BatteryState>,
+) {
+    let r = m.running.take().expect("finish event with no running task");
+    debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
+    mapping.mark_idle(machine_idx);
+    if let Some(bat) = battery.as_mut() {
+        bat.set_busy(machine_idx, false);
+    }
+    let busy = r.end - r.start;
+    let e = m.spec.dyn_energy(busy);
+    m.energy.dynamic += e;
+    m.energy.busy_time += busy;
+    let ty = r.task.type_id;
+    let outcome = if r.actual_end <= r.task.deadline {
+        result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
+        mapping.record_terminal(ty, true);
+        TraceOutcome::Completed
+    } else {
+        // aborted at the deadline; everything it burnt is wasted
+        m.energy.wasted += e;
+        result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
+        mapping.record_terminal(ty, false);
+        TraceOutcome::Missed
+    };
+    trace_log.push(record_of(
+        &r.task,
+        outcome,
+        Some(MachineId(machine_idx)),
+        Some(r.mapped),
+        Some(r.start),
+        r.end,
+    ));
+    released.push(r.task.id, r.end);
+}
+
+/// Start the next queued task if the machine is idle. Tasks whose deadline
+/// already passed are dropped at start (Eq. 1 last case, zero energy).
+#[allow(clippy::too_many_arguments)]
+fn try_start(
+    m: &mut MachState,
+    machine_idx: usize,
+    now: Time,
+    events: &mut EventQueue,
+    result: &mut SimResult,
+    mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    released: &mut Releases,
+    battery: &mut Option<BatteryState>,
+    exec: &mut ExecModel,
+) {
+    if m.running.is_some() {
+        return;
+    }
+    while let Some(q) = mapping.pop_queued(machine_idx) {
+        if q.task.expired_at(now) {
+            // assigned but never started: Missed with no dynamic energy
+            result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
+            mapping.record_terminal(q.task.type_id, false);
+            trace_log.push(record_of(
+                &q.task,
+                TraceOutcome::DroppedAtStart,
+                Some(MachineId(machine_idx)),
+                Some(q.mapped),
+                None,
+                now,
+            ));
+            released.push(q.task.id, now);
+            continue;
+        }
+        // the service-time source is the only thing the exec models differ
+        // in; with the deterministic synthetic backend both yield the same
+        // float (`modeled` is the frozen EET entry)
+        let service = match exec {
+            ExecModel::Eet => q.expected_exec,
+            ExecModel::Backend(backends) => backends[machine_idx]
+                .infer(q.task.type_id.0, MachineId(machine_idx))
+                .expect("inference backend is infallible here")
+                .modeled,
+        };
+        let actual_end = now + service * q.task.size_factor;
+        let end = actual_end.min(q.task.deadline);
+        events.push(end, Event::Finish { machine_idx });
+        mapping.mark_running(machine_idx, now + q.expected_exec);
+        if let Some(bat) = battery.as_mut() {
+            bat.set_busy(machine_idx, true);
+        }
+        m.running = Some(Running { task: q.task, mapped: q.mapped, start: now, end, actual_end });
+        return;
+    }
+}
+
+/// System off at `t_dead`: abort running work (its energy is wasted) and
+/// drain queued + arriving work with zero energy (one shared sweep —
+/// `sched::dispatch`).
+fn system_off_drain(
+    t_dead: Time,
+    machines: &mut [MachState],
+    mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    result: &mut SimResult,
+) {
+    for (mi, m) in machines.iter_mut().enumerate() {
+        if let Some(r) = m.running.take() {
+            mapping.mark_idle(mi);
+            let busy = t_dead - r.start;
+            let e = m.spec.dyn_energy(busy);
+            m.energy.dynamic += e;
+            m.energy.wasted += e;
+            m.energy.busy_time += busy;
+            result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
+            mapping.record_terminal(r.task.type_id, false);
+            trace_log.push(record_of(
+                &r.task,
+                TraceOutcome::Missed,
+                Some(MachineId(mi)),
+                Some(r.mapped),
+                Some(r.start),
+                t_dead,
+            ));
+        }
+    }
+    mapping.drain_system_off(&mut |d: Dropped| {
+        let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
+        result.record(d.task.type_id.0, &out);
+        let (machine, mapped) = d.mapped.unzip();
+        trace_log.push(record_of(&d.task, TraceOutcome::SystemOff, machine, mapped, None, t_dead));
+    });
+}
+
+/// Close out a run: makespan, battery fields, per-machine energies with
+/// idle filled in, conservation checks.
+fn finalize(
+    now: Time,
+    sc: &Scenario,
+    machines: &[MachState],
+    mapping: &MappingState,
+    battery: Option<&BatteryState>,
+    trace_log: &TraceLog,
+    result: &mut SimResult,
+) {
+    result.makespan = now;
+    result.battery = sc.battery_for(now);
+    if let Some(bat) = battery {
+        result.battery_spent = bat.spent();
+        result.depleted_at = bat.depleted_at();
+        result.final_soc = bat.soc();
+    }
+    for (mi, m) in machines.iter().enumerate() {
+        debug_assert!(m.running.is_none(), "machine {mi} still running at drain");
+        debug_assert!(mapping.queue_len(mi) == 0, "machine {mi} queue not drained");
+        let mut e = m.energy.clone();
+        e.idle = m.spec.idle_energy(now - e.busy_time);
+        result.energy[mi] = e;
+    }
+    debug_assert!(result.check_conservation().is_ok(), "{:?}", result.check_conservation());
+    debug_assert!(
+        !trace_log.on || trace_log.records.len() as u64 == result.total_arrived(),
+        "tracing must emit exactly one record per arrival"
+    );
+}

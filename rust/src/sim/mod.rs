@@ -1,10 +1,18 @@
 //! Discrete-event simulator of the HEC system — the substrate behind the
 //! paper's evaluation (their E2C-Sim, rebuilt in rust; see DESIGN.md
 //! §Substitutions).
+//!
+//! The per-device event loop lives in [`island`]; [`engine::Simulation`]
+//! drives one island with EET service times, and [`fleet::FleetSim`]
+//! drives many islands under an inter-island router (`sched::route`).
 
 pub mod engine;
 pub mod event;
+pub mod fleet;
+pub mod island;
 pub mod result;
 
 pub use engine::Simulation;
+pub use fleet::{FleetResult, FleetSim};
+pub use island::{ExecModel, Island};
 pub use result::SimResult;

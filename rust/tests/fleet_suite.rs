@@ -1,0 +1,163 @@
+//! Acceptance gates for the fleet layer (two-level scheduling):
+//!
+//!  * a 1-island fleet is the identity transform — it must reproduce the
+//!    monolithic [`Simulation`] float for float, every heuristic, battery
+//!    on and off (the `Island` extraction changed nothing);
+//!  * fleet conservation — every offered task is routed exactly once and
+//!    every island conserves internally, under every router policy;
+//!  * the pinned fleet-scale run — 100 heterogeneous islands, mixed
+//!    batteries, ≥1M total tasks: conservation holds and SoC-aware
+//!    routing beats battery-blind round-robin on fleet lifetime or
+//!    on-time rate;
+//!  * trace JSON round-trip — `gen-trace → simulate --trace-in` replays
+//!    bit-identically to the in-memory trace (the writer emits shortest
+//!    round-trip floats).
+
+use felare::model::{FleetScenario, Scenario, Trace, WorkloadParams};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::route::{route_policy_by_name, ALL_ROUTE_POLICIES};
+use felare::sim::{FleetSim, SimResult, Simulation};
+use felare::util::json::Json;
+use felare::util::rng::Pcg64;
+
+fn trace_for(sc: &Scenario, rate: f64, n_tasks: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+/// Every deterministic field, compared bit for bit (wall-clock mapper
+/// timings are the documented exception, as in the engine contracts).
+fn assert_same(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.missed, b.missed, "{tag}: missed");
+    assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+    assert_eq!(a.cancelled_mapper, b.cancelled_mapper, "{tag}: mapper drops");
+    assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victim drops");
+    assert_eq!(a.cancelled_expired, b.cancelled_expired, "{tag}: expiries");
+    assert_eq!(a.cancelled_systemoff, b.cancelled_systemoff, "{tag}: system-off");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
+    assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+    assert_eq!(a.battery_spent, b.battery_spent, "{tag}: battery spent");
+    assert_eq!(a.depleted_at, b.depleted_at, "{tag}: depletion instant");
+    assert_eq!(a.final_soc, b.final_soc, "{tag}: final SoC");
+    assert_eq!(a.energy.len(), b.energy.len(), "{tag}: machine count");
+    for (i, (ea, eb)) in a.energy.iter().zip(&b.energy).enumerate() {
+        assert_eq!(ea.dynamic, eb.dynamic, "{tag}: machine {i} dynamic energy");
+        assert_eq!(ea.wasted, eb.wasted, "{tag}: machine {i} wasted energy");
+        assert_eq!(ea.idle, eb.idle, "{tag}: machine {i} idle energy");
+        assert_eq!(ea.busy_time, eb.busy_time, "{tag}: machine {i} busy time");
+    }
+}
+
+#[test]
+fn one_island_fleet_reproduces_the_simulator() {
+    let cases: Vec<(&str, Scenario)> = vec![
+        ("mains", Scenario::stress(5, 3)),
+        ("battery", Scenario::stress(5, 3).with_battery(90.0, None)),
+    ];
+    for (tag, sc) in cases {
+        let trace = trace_for(&sc, 1.2 * sc.service_capacity(), 800, 0x50C0);
+        for h in ALL_HEURISTICS {
+            let mono = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap()).run(&trace);
+            let fleet = FleetScenario::uniform("solo", 1, sc.clone());
+            let router = route_policy_by_name("round-robin", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, h, router).unwrap();
+            let r = sim.run(&trace);
+            assert_eq!(r.routed, vec![800], "{tag}/{h}: all tasks land on the one island");
+            assert_same(&mono, &r.islands[0], &format!("{tag}/{h}"));
+        }
+    }
+}
+
+#[test]
+fn fleet_conserves_under_every_router_policy() {
+    let fleet = FleetScenario::stress_fleet(8, 4, 3).with_mixed_batteries(100.0);
+    let n = 2000;
+    let trace = trace_for(&fleet.islands[0], 1.8 * fleet.service_capacity(), n, 0xC0113);
+    for policy in ALL_ROUTE_POLICIES {
+        let router = route_policy_by_name(policy, 0xF1EE7).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        let r = sim.run(&trace);
+        // routed exactly once: Σ routed == offered == Σ island arrivals,
+        // and each island's terminal tally closes (check_conservation)
+        r.check_conservation(n as u64).unwrap_or_else(|e| panic!("{policy}: {e}"));
+        let terminals: u64 = r
+            .islands
+            .iter()
+            .map(|i| i.total_completed() + i.total_missed() + i.total_cancelled())
+            .sum();
+        assert_eq!(terminals, n as u64, "{policy}: every routed task reaches a terminal state");
+    }
+}
+
+#[test]
+fn round_robin_spreads_the_fleet_evenly() {
+    let fleet = FleetScenario::stress_fleet(5, 4, 3);
+    let trace = trace_for(&fleet.islands[0], fleet.service_capacity(), 1000, 0x5B1D);
+    let router = route_policy_by_name("round-robin", 1).unwrap();
+    let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+    let r = sim.run(&trace);
+    assert_eq!(r.routed, vec![200; 5], "1000 tasks over 5 islands, in arrival order");
+}
+
+/// The fleet-scale acceptance run: 100 heterogeneous islands × 10k tasks
+/// each (1M total), mixed batteries, oversubscribed. Pinned seed; the
+/// routing comparison is paired on one shared trace.
+#[test]
+fn pinned_100_island_million_task_run_soc_aware_beats_round_robin() {
+    let fleet = FleetScenario::stress_fleet(100, 4, 3).with_mixed_batteries(20_000.0);
+    let n = 1_000_000usize;
+    let rate = 1.3 * fleet.service_capacity();
+    let trace = trace_for(&fleet.islands[0], rate, n, 0xF1EE7);
+    let run_policy = |policy: &str| {
+        let router = route_policy_by_name(policy, 97).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        let r = sim.run(&trace);
+        r.check_conservation(n as u64).unwrap_or_else(|e| panic!("{policy}: {e}"));
+        r
+    };
+    let rr = run_policy("round-robin");
+    let soc = run_policy("soc-aware");
+    assert!(rr.on_time_rate() > 0.0 && soc.on_time_rate() > 0.0);
+    // "beats on fleet lifetime or on-time rate" — the paired run must win
+    // at least one axis outright
+    let lifetime_win = match (soc.first_depletion(), rr.first_depletion()) {
+        (None, Some(_)) => true,
+        (Some(a), Some(b)) => a > b,
+        _ => false,
+    };
+    let on_time_win = soc.on_time_rate() > rr.on_time_rate();
+    assert!(
+        lifetime_win || on_time_win,
+        "soc-aware must beat round-robin: on-time {:.4} vs {:.4}, first depletion {:?} vs {:?}",
+        soc.on_time_rate(),
+        rr.on_time_rate(),
+        soc.first_depletion(),
+        rr.first_depletion(),
+    );
+}
+
+#[test]
+fn trace_json_round_trip_replays_bit_identically() {
+    let sc = Scenario::paper_synthetic();
+    let trace = trace_for(&sc, 6.0, 500, 0x7E57);
+    // gen-trace writes to_json(); simulate --trace-in parses it back
+    let text = trace.to_json().to_string_pretty();
+    let back = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.tasks.len(), trace.tasks.len());
+    assert_eq!(back.arrival_rate, trace.arrival_rate, "rate survives");
+    for (a, b) in trace.tasks.iter().zip(&back.tasks) {
+        assert_eq!(a.arrival, b.arrival, "arrival times are bit-exact");
+        assert_eq!(a.deadline, b.deadline, "deadlines are bit-exact");
+    }
+    let direct = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&trace);
+    let replayed = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap()).run(&back);
+    assert_same(&direct, &replayed, "trace-in replay");
+}

@@ -20,6 +20,7 @@ fn spec_for(scenario: Scenario, rates: &[f64], engine: EngineKind) -> SweepSpec 
         tasks: 220,
         seed: 0xE9E9,
         engine,
+        closed_loop: None,
     }
 }
 
@@ -111,6 +112,25 @@ fn battery_sweeps_match_across_engines() {
             "{tag}: expected depletions in a battery sweep"
         );
     }
+}
+
+/// Closed-loop sweeps (`--clients`): the client pool's arrival process is
+/// generated inside the engine, so equivalence here proves both engines
+/// drive the *same* release/think dynamics, not just replay one trace.
+#[test]
+fn closed_loop_sweeps_match_across_engines() {
+    let clients = vec![3.0, 8.0];
+    let mut sim_spec = spec_for(Scenario::paper_synthetic(), &clients, EngineKind::Sim);
+    sim_spec.closed_loop = Some(0.4);
+    let mut serve_spec = spec_for(Scenario::paper_synthetic(), &clients, EngineKind::Serve);
+    serve_spec.closed_loop = Some(0.4);
+    let sim = run_sweep(&sim_spec);
+    let serve = run_sweep(&serve_spec);
+    assert_points_bit_identical(&sim, &serve, "closed-loop");
+    assert!(
+        sim.iter().all(|p| p.completion_rate > 0.0),
+        "closed-loop cells must complete work"
+    );
 }
 
 #[test]
