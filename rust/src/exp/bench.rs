@@ -1,17 +1,29 @@
 //! Experiment `bench` — the PR's performance snapshot, written to
-//! `BENCH_PR6.json` at the repo root (CI uploads it as an artifact):
+//! `BENCH_PR7.json` at the repo root by default (`--out` overrides; CI
+//! uploads the file as an artifact and soft-gates regressions against the
+//! committed copy):
 //!
 //!  * `stress_throughput` — tasks/s of one recycled [`Simulation`] arena
 //!    replaying an oversubscribed stress trace (the single-island hot
-//!    loop);
+//!    loop, with the incremental mapping pass on);
+//!  * `stress_throughput_full_refresh` — the same arena with
+//!    [`Simulation::set_full_refresh`] forcing the brute-force snapshot
+//!    rebuild every mapping event: the in-run baseline that isolates the
+//!    dirty-machine optimisation's win on the same machine, same run;
 //!  * `sweep_cell` — wall time of one full sweep cell through the
 //!    experiment harness (trace generation + run + reduction);
 //!  * `fleet_throughput` — tasks/s of the epoch-parallel [`FleetSim`]
-//!    routing and draining a mixed-battery stress fleet.
+//!    routing and draining a mixed-battery stress fleet;
+//!  * `event_queue_calendar` / `event_queue_heap` — events/s of a
+//!    push-all/pop-all cycle over one pre-generated arrival pattern on
+//!    the calendar [`EventQueue`] vs the PR-1 [`HeapEventQueue`]
+//!    baseline (both recycled via `clear`).
 //!
-//! `--quick` shrinks workloads and measurement windows for the CI smoke
-//! run; absolute numbers then mean little, but the file shape is the
-//! same.
+//! The artifact is an object `{ "meta": {...}, "results": [...] }`; CI's
+//! compare step reads `meta.placeholder` to skip freshly-seeded files and
+//! diffs `stress_throughput` against the committed baseline. `--quick`
+//! shrinks workloads and measurement windows for the CI smoke run;
+//! absolute numbers then mean little, but the file shape is the same.
 
 use std::time::Duration;
 
@@ -21,14 +33,15 @@ use crate::exp::ExpOpts;
 use crate::model::{FleetScenario, Scenario, Trace, WorkloadParams};
 use crate::sched::registry::heuristic_by_name;
 use crate::sched::route::route_policy_by_name;
+use crate::sim::event::{Event, EventQueue, HeapEventQueue};
 use crate::sim::fleet::FleetSim;
 use crate::sim::Simulation;
-use crate::util::bench::{BenchResult, Bencher};
+use crate::util::bench::{black_box, BenchResult, Bencher};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
-/// Repo-root output file (the PR's perf artifact).
-pub const OUT_PATH: &str = "BENCH_PR6.json";
+/// Default repo-root output file (the PR's perf artifact).
+pub const OUT_PATH: &str = "BENCH_PR7.json";
 
 fn tuned(name: &str, quick: bool) -> Bencher {
     if quick {
@@ -56,9 +69,10 @@ fn trace_for(sc: &Scenario, rate: f64, n_tasks: usize, seed: u64) -> Trace {
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
     let quick = opts.quick;
+    let out_path = opts.out.as_deref().unwrap_or(OUT_PATH);
     let mut results: Vec<BenchResult> = Vec::new();
 
-    // 1. single-island hot loop on a recycled arena
+    // 1. single-island hot loop on a recycled arena (incremental pass on)
     let sc = Scenario::stress(12, 5);
     let n_tasks = if quick { 1000 } else { 10_000 };
     let trace = trace_for(&sc, 1.2 * sc.service_capacity(), n_tasks, 0xBE7C);
@@ -69,13 +83,23 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             .run(|| sim.run(&trace)),
     );
 
-    // 2. one sweep cell end to end through the harness
+    // 2. the same arena with the brute-force snapshot rebuild forced on:
+    //    the incremental pass's in-run control group
+    sim.set_full_refresh(true);
+    results.push(
+        tuned("stress_throughput_full_refresh", quick)
+            .throughput_items(n_tasks as u64)
+            .run(|| sim.run(&trace)),
+    );
+    sim.set_full_refresh(false);
+
+    // 3. one sweep cell end to end through the harness
     let mut spec = SweepSpec::paper_default(&["felare"], &[5.0]);
     spec.traces = 1;
     spec.tasks = if quick { 300 } else { 1000 };
     results.push(tuned("sweep_cell", quick).throughput_items(1).run(|| run_sweep(&spec)));
 
-    // 3. the epoch-parallel fleet engine, mixed batteries, SoC routing
+    // 4. the epoch-parallel fleet engine, mixed batteries, SoC routing
     let k = if quick { 6 } else { 32 };
     let per_island = if quick { 300 } else { 1000 };
     let fleet = FleetScenario::stress_fleet(k, 4, 3).with_mixed_batteries(120.0);
@@ -89,12 +113,49 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             .run(|| fsim.run(&fleet_trace)),
     );
 
+    // 5. event-queue microbench: push-all/pop-all over one arrival
+    //    pattern, calendar vs the PR-1 heap it replaced. Same times, same
+    //    recycling; the pop streams are equal by the equivalence suite,
+    //    so this isolates pure queue cost.
+    let n_events = if quick { 2_000 } else { 20_000 };
+    let mut rng = Pcg64::new(0xE0E0);
+    let times: Vec<f64> = (0..n_events).map(|_| rng.range_f64(0.0, 1.0e4)).collect();
+    let mut cal = EventQueue::new();
+    let cal_bench = tuned("event_queue_calendar", quick).throughput_items(n_events as u64);
+    results.push(cal_bench.run(|| {
+        cal.clear();
+        for (i, &t) in times.iter().enumerate() {
+            cal.push(t, Event::Arrival { trace_idx: i });
+        }
+        while let Some(ev) = cal.pop() {
+            black_box(ev);
+        }
+    }));
+    let mut heap = HeapEventQueue::new();
+    let heap_bench = tuned("event_queue_heap", quick).throughput_items(n_events as u64);
+    results.push(heap_bench.run(|| {
+        heap.clear();
+        for (i, &t) in times.iter().enumerate() {
+            heap.push(t, Event::Arrival { trace_idx: i });
+        }
+        while let Some(ev) = heap.pop() {
+            black_box(ev);
+        }
+    }));
+
     for r in &results {
         println!("{}", r.report_line());
     }
-    let json = Json::Array(results.iter().map(|r| r.to_json()).collect());
-    std::fs::write(OUT_PATH, json.to_string_pretty())?;
-    println!("wrote {} bench entries to {OUT_PATH}", results.len());
+    let meta = Json::object()
+        .set("bench_rev", "pr7")
+        .set("profile", "release lto=thin codegen-units=1")
+        .set("quick", quick)
+        .set("placeholder", false);
+    let json = Json::object()
+        .set("meta", meta)
+        .set("results", Json::Array(results.iter().map(|r| r.to_json()).collect()));
+    std::fs::write(out_path, json.to_string_pretty())?;
+    println!("wrote {} bench entries to {out_path}", results.len());
     Ok(())
 }
 
@@ -104,18 +165,34 @@ mod tests {
 
     #[test]
     fn quick_bench_writes_the_artifact() {
-        let opts = ExpOpts { quick: true, ..Default::default() };
+        let out = std::env::temp_dir().join("felare_bench_test.json");
+        let opts = ExpOpts {
+            quick: true,
+            out: Some(out.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
         run(&opts).unwrap();
-        let text = std::fs::read_to_string(OUT_PATH).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
         let j = Json::parse(&text).unwrap();
-        let arr = j.as_array().unwrap();
-        assert_eq!(arr.len(), 3);
+        let meta = j.req("meta").unwrap();
+        assert_eq!(meta.req_str("bench_rev").unwrap(), "pr7");
+        assert!(meta.req("placeholder").is_ok());
+        let arr = j.req("results").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 6);
         let names: Vec<&str> = arr.iter().map(|e| e.req_str("name").unwrap()).collect();
-        assert!(names.contains(&"stress_throughput"));
-        assert!(names.contains(&"sweep_cell"));
-        assert!(names.contains(&"fleet_throughput"));
+        for want in [
+            "stress_throughput",
+            "stress_throughput_full_refresh",
+            "sweep_cell",
+            "fleet_throughput",
+            "event_queue_calendar",
+            "event_queue_heap",
+        ] {
+            assert!(names.contains(&want), "missing bench entry {want}");
+        }
         for e in arr {
             assert!(e.req("items_per_sec").is_ok(), "every entry reports throughput");
         }
+        std::fs::remove_file(&out).ok();
     }
 }

@@ -67,6 +67,9 @@ pub struct ExpOpts {
     pub think_time: Option<f64>,
     /// Router epoch length in seconds for `exp fleet` (`--epoch`).
     pub epoch: Option<f64>,
+    /// Output path override for `exp bench` (`--out`; default
+    /// [`bench::OUT_PATH`]).
+    pub out: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -87,6 +90,7 @@ impl Default for ExpOpts {
             clients: None,
             think_time: None,
             epoch: None,
+            out: None,
         }
     }
 }
@@ -120,7 +124,7 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
     ("battery", "lifetime/efficiency sweep: battery capacity × rate, felare-eb vs stock", battery::run),
     ("fleet", "multi-island fleet: islands × rate × router policy (--islands, --policies)", fleet::run),
-    ("bench", "performance benchmarks → BENCH_PR6.json (stress, sweep cells, fleet)", bench::run),
+    ("bench", "performance benchmarks → BENCH_PR7.json (--out overrides; stress, queues, fleet)", bench::run),
 ];
 
 pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {

@@ -586,6 +586,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("epoch", "`exp fleet`: router sync epoch in virtual seconds")
             .opt_optional("clients", "`exp sweep`: closed-loop client-count grid, e.g. 4,8,16")
             .opt_optional("think-time", "`exp sweep`: mean think time for --clients [default: 0.5]")
+            .opt_optional("out", "`exp bench`: artifact output path [default: BENCH_PR7.json]")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -607,6 +608,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         ("epoch", &["fleet"]),
         ("clients", &["sweep"]),
         ("think-time", &["sweep"]),
+        ("out", &["bench"]),
     ];
     for (flag, exps) in allowed {
         if args.get(flag).is_some() && !exps.contains(&name.as_str()) {
@@ -763,6 +765,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         clients,
         think_time,
         epoch,
+        out: args.get("out").map(String::from),
     };
     run_by_name(&name, &opts)?;
     Ok(())

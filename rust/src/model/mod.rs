@@ -15,4 +15,4 @@ pub use fleet::FleetScenario;
 pub use machine::{MachineId, MachineSpec};
 pub use scenario::Scenario;
 pub use task::{CancelReason, Outcome, Task, TaskTypeId, Time};
-pub use workload::{ArrivalProcess, ClientPool, RateProfile, Trace, WorkloadParams};
+pub use workload::{ArrivalProcess, ClientPool, RateProfile, TaskColumns, Trace, WorkloadParams};

@@ -143,17 +143,34 @@ pub struct MappingState {
     dyn_powers: Vec<f64>,
     queue_slots: usize,
     arriving: Vec<Task>,
+    /// SoA twin of `arriving`: `arriving_deadline[i] == arriving[i].deadline`
+    /// always. The per-event expiry check scans this contiguous column
+    /// (vectorizable, one cache line per 8 tasks) and only falls into the
+    /// strided removal pass when something actually expired.
+    arriving_deadline: Vec<Time>,
     queues: Vec<VecDeque<QueuedTask>>,
     running_expected_end: Vec<Option<Time>>,
     tracker: FairnessTracker,
     // ---- recycled buffers (no per-event allocation) --------------------
     snapshots: Vec<MachineSnapshot>,
+    /// Per-machine dirty bit for the incremental snapshot refresh: set
+    /// when the machine's local queue changed *outside* a mapping event
+    /// (`pop_queued`, system-off drain, reset). Mapping-event mutations
+    /// keep snapshots in lockstep themselves (see `mapping_event`), so a
+    /// clean machine's `queued` column is reused as-is.
+    snap_dirty: Vec<bool>,
     fair_buf: FairnessSnapshot,
     consumed: Vec<bool>,
     /// When set, every applied [`Action`] is appended to [`Self::action_log`]
     /// (golden sim/serve equivalence tests; off on hot paths).
     pub record_actions: bool,
     pub action_log: Vec<Action>,
+    /// Disable the dirty-machine snapshot reuse and rebuild every machine
+    /// on every event — the pre-incremental (PR 6) refresh, kept as the
+    /// in-run comparison baseline for `exp bench` (`stress_throughput`
+    /// vs `stress_throughput_full_refresh`). Identical results either way
+    /// (the debug build asserts it); off by default.
+    pub force_full_refresh: bool,
 }
 
 impl MappingState {
@@ -189,14 +206,17 @@ impl MappingState {
             dyn_powers,
             queue_slots,
             arriving: Vec::new(),
+            arriving_deadline: Vec::new(),
             queues: (0..n_machines).map(|_| VecDeque::with_capacity(queue_slots)).collect(),
             running_expected_end: vec![None; n_machines],
             tracker,
             snapshots,
+            snap_dirty: vec![true; n_machines],
             fair_buf,
             consumed: Vec::new(),
             record_actions: false,
             action_log: Vec::new(),
+            force_full_refresh: false,
         }
     }
 
@@ -205,8 +225,12 @@ impl MappingState {
     /// arena contract, `sim::engine` module docs).
     pub fn reset(&mut self) {
         self.arriving.clear();
+        self.arriving_deadline.clear();
         for q in &mut self.queues {
             q.clear();
+        }
+        for d in &mut self.snap_dirty {
+            *d = true;
         }
         for r in &mut self.running_expected_end {
             *r = None;
@@ -266,10 +290,7 @@ impl MappingState {
     /// which a mapping event could change state with no arrival or
     /// completion (the serve drain loop waits exactly this long).
     pub fn earliest_arriving_deadline(&self) -> Option<Time> {
-        self.arriving
-            .iter()
-            .map(|t| t.deadline)
-            .min_by(|a, b| a.total_cmp(b))
+        self.arriving_deadline.iter().copied().min_by(f64::total_cmp)
     }
 
     /// A task entered the system: count it for fairness and park it in the
@@ -278,6 +299,7 @@ impl MappingState {
     pub fn push_arrival(&mut self, task: Task) {
         self.tracker.on_arrival(task.type_id);
         self.arriving.push(task);
+        self.arriving_deadline.push(task.deadline);
     }
 
     /// Record a terminal execution outcome (completion or miss) for
@@ -290,7 +312,11 @@ impl MappingState {
 
     /// Pop the head of `machine`'s local queue (FCFS).
     pub fn pop_queued(&mut self, machine: usize) -> Option<QueuedTask> {
-        self.queues[machine].pop_front()
+        let popped = self.queues[machine].pop_front();
+        if popped.is_some() {
+            self.snap_dirty[machine] = true;
+        }
+        popped
     }
 
     /// The engine started a task on `machine`; `expected_end` is what the
@@ -309,6 +335,7 @@ impl MappingState {
     /// engines can timestamp the cancellation (its deadline) and emit
     /// trace records.
     pub fn drain_unmapped(&mut self, sink: &mut dyn FnMut(Task)) {
+        self.arriving_deadline.clear();
         for task in self.arriving.drain(..) {
             self.tracker.on_terminal(task.type_id, false);
             sink(task);
@@ -324,6 +351,7 @@ impl MappingState {
     /// tasks in the same order for their shutdowns to stay bit-identical.
     pub fn drain_system_off(&mut self, on_drop: &mut dyn FnMut(Dropped)) {
         for m in 0..self.queues.len() {
+            self.snap_dirty[m] = true;
             while let Some(q) = self.queues[m].pop_front() {
                 self.tracker.on_terminal(q.task.type_id, false);
                 on_drop(Dropped {
@@ -333,6 +361,7 @@ impl MappingState {
                 });
             }
         }
+        self.arriving_deadline.clear();
         for task in self.arriving.drain(..) {
             self.tracker.on_terminal(task.type_id, false);
             on_drop(Dropped { kind: DropKind::SystemOff, task, mapped: None });
@@ -358,64 +387,111 @@ impl MappingState {
             dyn_powers,
             queue_slots,
             arriving,
+            arriving_deadline,
             queues,
             running_expected_end,
             tracker,
             snapshots,
+            snap_dirty,
             fair_buf,
             consumed,
             record_actions,
             action_log,
+            force_full_refresh,
         } = self;
 
         // engine-level expiry: tasks that died waiting in the arriving
-        // queue are cancelled for every heuristic alike
-        arriving.retain(|task| {
-            if task.expired_at(now) {
-                tracker.on_terminal(task.type_id, false);
-                on_drop(Dropped { kind: DropKind::Expired, task: *task, mapped: None });
-                false
-            } else {
-                true
+        // queue are cancelled for every heuristic alike. The contiguous
+        // deadline column answers "anything expired?" in one vector scan;
+        // the common no-expiry event skips the removal pass entirely.
+        debug_assert_eq!(arriving.len(), arriving_deadline.len());
+        if arriving_deadline.iter().any(|&d| now >= d) {
+            let mut w = 0;
+            for r in 0..arriving.len() {
+                let task = arriving[r];
+                if task.expired_at(now) {
+                    tracker.on_terminal(task.type_id, false);
+                    on_drop(Dropped { kind: DropKind::Expired, task, mapped: None });
+                } else {
+                    arriving[w] = task;
+                    arriving_deadline[w] = arriving_deadline[r];
+                    w += 1;
+                }
             }
-        });
+            arriving.truncate(w);
+            arriving_deadline.truncate(w);
+        }
 
         // energy-budget admission shedding: the heuristic's policy may
         // refuse tasks outright at low SoC (reported as proactive mapper
         // drops). One branch on the unbatteried / inert-policy path.
         if energy_policy.active(*soc) {
             let s = soc.unwrap_or(1.0);
-            arriving.retain(|task| {
-                if energy_policy.shed(s, task) {
+            let mut w = 0;
+            for r in 0..arriving.len() {
+                let task = arriving[r];
+                if energy_policy.shed(s, &task) {
                     tracker.on_terminal(task.type_id, false);
-                    on_drop(Dropped { kind: DropKind::MapperDropped, task: *task, mapped: None });
-                    false
+                    on_drop(Dropped { kind: DropKind::MapperDropped, task, mapped: None });
                 } else {
-                    true
+                    arriving[w] = task;
+                    arriving_deadline[w] = arriving_deadline[r];
+                    w += 1;
                 }
-            });
+            }
+            arriving.truncate(w);
+            arriving_deadline.truncate(w);
         }
 
         // refresh the recycled mapper-visible snapshots (expected
         // availability: running task's expected end, optimistically clamped
-        // to `now`, plus the expected execution of everything queued)
+        // to `now`, plus the expected execution of everything queued).
+        // Snapshots mirror the queues exactly between events — the action
+        // pass below mutates both sides in lockstep — so only machines
+        // whose queue changed through the engine (`pop_queued`, drains,
+        // reset) rebuild the `queued` column; a clean machine re-accumulates
+        // `avail` over its cached column with the same operands in the same
+        // order, which keeps every float bit-identical to a full rebuild.
+        let full = *force_full_refresh;
         for (m, snap) in snapshots.iter_mut().enumerate() {
             let mut avail = match running_expected_end[m] {
                 Some(e) => e.max(now),
                 None => now,
             };
-            snap.queued.clear();
-            for q in &queues[m] {
-                avail += q.expected_exec;
-                snap.queued.push(QueuedInfo {
-                    task_id: q.task.id,
-                    type_id: q.task.type_id,
-                    expected_exec: q.expected_exec,
-                });
+            if full || snap_dirty[m] {
+                snap.queued.clear();
+                for q in &queues[m] {
+                    avail += q.expected_exec;
+                    snap.queued.push(QueuedInfo {
+                        task_id: q.task.id,
+                        type_id: q.task.type_id,
+                        expected_exec: q.expected_exec,
+                    });
+                }
+                snap_dirty[m] = false;
+            } else {
+                for q in &snap.queued {
+                    avail += q.expected_exec;
+                }
             }
             snap.dyn_power = dyn_powers[m];
             snap.avail = avail;
             snap.free_slots = queue_slots.saturating_sub(snap.queued.len());
+        }
+
+        // the incremental pass must be indistinguishable from a full
+        // rebuild: verify the mirror entry-for-entry in debug builds
+        #[cfg(debug_assertions)]
+        for (m, snap) in snapshots.iter().enumerate() {
+            assert_eq!(snap.queued.len(), queues[m].len(), "snapshot diverged on machine {m}");
+            for (qi, q) in snap.queued.iter().zip(queues[m].iter()) {
+                assert!(
+                    qi.task_id == q.task.id
+                        && qi.type_id == q.task.type_id
+                        && qi.expected_exec == q.expected_exec,
+                    "snapshot entry diverged on machine {m}"
+                );
+            }
         }
 
         let fair_snap = if heuristic.wants_fairness() {
@@ -473,14 +549,18 @@ impl MappingState {
         if *record_actions {
             action_log.extend(actions.iter().cloned());
         }
-        // compact the arriving queue in place (keeps its allocation)
+        // compact the arriving queue (both columns) in place
         if consumed.iter().any(|&c| c) {
-            let mut i = 0;
-            arriving.retain(|_| {
-                let keep = !consumed[i];
-                i += 1;
-                keep
-            });
+            let mut w = 0;
+            for r in 0..arriving.len() {
+                if !consumed[r] {
+                    arriving[w] = arriving[r];
+                    arriving_deadline[w] = arriving_deadline[r];
+                    w += 1;
+                }
+            }
+            arriving.truncate(w);
+            arriving_deadline.truncate(w);
         }
 
         MappingStats { mapper_dt, deferrals }

@@ -38,7 +38,9 @@
 //!   simulator's exact expressions (`dyn_energy(end − start)`, idle over
 //!   `makespan − busy`);
 //! * mapping decisions all live in the shared dispatch layer, and events
-//!   pop in the same deterministic order (time, then FIFO).
+//!   pop in the same deterministic order (time, then FIFO), with
+//!   same-instant events coalesced into one mapping event identically on
+//!   both engines (`sim::island` module docs).
 //!
 //! Both properties now hold *by construction*: the event loop is the one
 //! `Island` implementation, and the only divergence point between the

@@ -142,6 +142,14 @@ impl Simulation {
         self.island.set_record_actions(on);
     }
 
+    /// Rebuild every machine snapshot on every mapping event instead of
+    /// only the dirty ones — the pre-incremental refresh, kept as the
+    /// `exp bench` comparison baseline. Identical results either way; off
+    /// by default.
+    pub fn set_full_refresh(&mut self, on: bool) {
+        self.island.set_full_refresh(on);
+    }
+
     /// Actions applied during the latest [`Simulation::run`] (empty unless
     /// [`Simulation::set_record_actions`] was enabled).
     pub fn action_log(&self) -> &[Action] {

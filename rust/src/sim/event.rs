@@ -1,10 +1,36 @@
-//! Discrete-event queue: a time-ordered min-heap with deterministic
+//! Discrete-event queue: a bucketed **calendar queue** with deterministic
 //! tie-breaking (sequence numbers), so equal-time events process in
 //! insertion order and runs are exactly replayable.
 //!
+//! # Why a calendar queue
+//!
+//! The event loop is the innermost loop of every engine (sim, headless
+//! serve, fleet islands). A `BinaryHeap` pays `O(log n)` per push *and*
+//! pop with branchy, cache-hostile sift paths. A calendar queue instead
+//! spreads pending events over a bucket array keyed on time: push indexes
+//! straight into a bucket (`O(1)` amortized), pop scans one short bucket.
+//! With the bucket count kept ≥ half the queue length (the array lazily
+//! doubles as the queue grows), buckets hold O(1) events on average, so
+//! both operations are constant-time on the simulator's workloads.
+//!
+//! # Exact ordering, independent of layout
+//!
+//! Pop order is `(f64::total_cmp(time), seq)` — identical to the old
+//! heap. The bucket index `((t - base) / width) as usize` is monotone
+//! non-decreasing in `t` (IEEE subtraction, division and the saturating
+//! float→int cast are all monotone, and `t ≥ base` keeps the operand
+//! non-negative), so an earlier time never lands in a later bucket and
+//! equal times always co-bucket. Entries past the bucketed window go to
+//! an `overflow` list; by the same monotonicity every overflow time sorts
+//! strictly after every bucketed time, and when the window drains the
+//! queue re-buckets around the overflow. Bucket geometry (count, width,
+//! base) therefore affects *performance only, never pop order* — a
+//! recycled queue with a stale window is observationally identical to a
+//! fresh one, which is what the engines' bit-identity contract needs.
+//!
 //! Non-finite event times are rejected unconditionally at `push` — in
 //! release builds a `debug_assert!` would compile out and a NaN would
-//! silently corrupt the heap order (NaN comparisons are never `Less`),
+//! silently corrupt the time order (NaN comparisons are never `Less`),
 //! so the check is a hard `assert!`. Ordering itself uses
 //! `f64::total_cmp`, a total order, as a second line of defence.
 
@@ -37,6 +63,14 @@ struct Entry {
     event: Event,
 }
 
+impl Entry {
+    /// The queue's total order: earliest time first, FIFO within a time.
+    #[inline]
+    fn order(&self, other: &Self) -> Ordering {
+        self.time.total_cmp(&other.time).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
 impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
@@ -50,10 +84,7 @@ impl Ord for Entry {
         // total_cmp is a total order over all f64 bit patterns, so heap
         // invariants hold even for values the push assert should have
         // caught.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
+        other.order(self)
     }
 }
 impl PartialOrd for Entry {
@@ -62,11 +93,32 @@ impl PartialOrd for Entry {
     }
 }
 
-/// Min-heap event queue.
+/// Smallest bucket array worth allocating.
+const MIN_BUCKETS: usize = 16;
+/// Bucket-array ceiling: bounds the resize doubling (1M Vec headers).
+const MAX_BUCKETS: usize = 1 << 20;
+/// Rebuild when the queue outgrows `RESIZE_FACTOR ×` the bucket count;
+/// the rebuilt array has ≥ `len` buckets, so each rebuild is amortized
+/// over at least `len` intervening pushes.
+const RESIZE_FACTOR: usize = 2;
+
+/// Min event queue: calendar buckets + far-future overflow list.
 #[derive(Debug, Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+    /// Bucket `i` covers times `[base + i·width, base + (i+1)·width)`.
+    buckets: Vec<Vec<Entry>>,
+    /// Start of the bucketed window; `≤` every queued time.
+    base: Time,
+    /// Bucket time span; always finite and `> 0` once buckets exist.
+    width: f64,
+    /// Every bucket below this index is empty (monotone pop front).
+    cursor: usize,
+    /// Entries at/after the window end; strictly later than all buckets.
+    overflow: Vec<Entry>,
+    len: usize,
     seq: u64,
+    /// Rebuild staging buffer (recycled).
+    scratch: Vec<Entry>,
 }
 
 impl EventQueue {
@@ -77,8 +129,181 @@ impl EventQueue {
     /// Schedule `event` at `time`.
     ///
     /// Panics on non-finite times (NaN/±inf) in every build profile: a
-    /// corrupted heap order would silently reorder the whole simulation,
+    /// corrupted time order would silently reorder the whole simulation,
     /// which is strictly worse than failing loudly at the injection site.
+    pub fn push(&mut self, time: Time, event: Event) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let entry = Entry { time, seq: self.seq, event };
+        self.seq += 1;
+        self.len += 1;
+        let grown =
+            self.len > self.buckets.len() * RESIZE_FACTOR && self.buckets.len() < MAX_BUCKETS;
+        if self.buckets.is_empty() || time < self.base || grown {
+            // out the left edge of the window, or time to double the
+            // array: re-bucket everything around the new extremes
+            self.overflow.push(entry);
+            self.rebuild(0, f64::INFINITY, f64::NEG_INFINITY);
+        } else {
+            self.place(entry);
+        }
+    }
+
+    /// Bulk-load a trace's arrival column: one `Event::Arrival { trace_idx }`
+    /// per element, FIFO-numbered in order. One min/max pass over the
+    /// contiguous column sizes the window up front, replacing the
+    /// incremental doubling rebuilds a push-per-task loop would trigger.
+    pub fn push_arrivals(&mut self, arrival: &[Time]) {
+        if arrival.is_empty() {
+            return;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &t in arrival {
+            assert!(t.is_finite(), "event time must be finite, got {t}");
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        self.rebuild(arrival.len(), lo, hi);
+        for (i, &t) in arrival.iter().enumerate() {
+            let entry = Entry { time: t, seq: self.seq, event: Event::Arrival { trace_idx: i } };
+            self.seq += 1;
+            self.len += 1;
+            self.place(entry);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            while self.cursor < self.buckets.len() && self.buckets[self.cursor].is_empty() {
+                self.cursor += 1;
+            }
+            if self.cursor == self.buckets.len() {
+                // window drained; re-bucket around the overflow tail
+                debug_assert!(!self.overflow.is_empty());
+                self.rebuild(0, f64::INFINITY, f64::NEG_INFINITY);
+                continue;
+            }
+            let bucket = &mut self.buckets[self.cursor];
+            let k = bucket
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.order(b))
+                .map(|(i, _)| i)
+                .expect("cursor bucket is non-empty");
+            let e = bucket.swap_remove(k);
+            self.len -= 1;
+            return Some((e.time, e.event));
+        }
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        if self.len == 0 {
+            return None;
+        }
+        let live = self.buckets[self.cursor..]
+            .iter()
+            .find(|b| !b.is_empty())
+            .unwrap_or(&self.overflow);
+        live.iter().map(|e| e.time).min_by(f64::total_cmp)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reset for reuse: drop all pending events and restart the FIFO
+    /// tie-break counter, keeping every allocation (bucket array, overflow,
+    /// scratch). A cleared queue is observationally identical to a fresh
+    /// one (engine recycling, §Perf): the retained window geometry only
+    /// shapes bucket placement, never pop order (module docs).
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.overflow.clear();
+        self.scratch.clear();
+        self.cursor = 0;
+        self.len = 0;
+        self.seq = 0;
+    }
+
+    /// Drop `entry` into its bucket, or the overflow list when it lies at
+    /// or past the window end. Requires `entry.time >= self.base` and a
+    /// non-empty bucket array.
+    #[inline]
+    fn place(&mut self, entry: Entry) {
+        debug_assert!(!self.buckets.is_empty() && entry.time >= self.base);
+        let idx = ((entry.time - self.base) / self.width) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow.push(entry);
+        } else {
+            self.buckets[idx].push(entry);
+            self.cursor = self.cursor.min(idx);
+        }
+    }
+
+    /// Re-bucket every queued entry around the current time extremes,
+    /// widened by `[extra_lo, extra_hi]` and sized for `len + extra_len`
+    /// entries (the bulk-load path pre-reserves its window this way; plain
+    /// rebuilds pass an empty hint).
+    fn rebuild(&mut self, extra_len: usize, extra_lo: f64, extra_hi: f64) {
+        self.scratch.clear();
+        for b in &mut self.buckets {
+            self.scratch.append(b);
+        }
+        self.scratch.append(&mut self.overflow);
+        debug_assert_eq!(self.scratch.len(), self.len);
+        let mut lo = extra_lo;
+        let mut hi = extra_hi;
+        for e in &self.scratch {
+            lo = lo.min(e.time);
+            hi = hi.max(e.time);
+        }
+        let target = (self.len + extra_len)
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        if self.buckets.len() < target {
+            self.buckets.resize_with(target, Vec::new);
+        }
+        let span = hi - lo; // ≥ 0; may overflow to +inf for extreme inputs
+        self.width = span / self.buckets.len() as f64;
+        if !(self.width.is_finite() && self.width > 0.0) {
+            // single distinct time (span 0, possibly underflowed) or an
+            // astronomic span: any positive width is *correct* (ordering
+            // is layout-independent); 1.0 keeps the index math finite
+            self.width = 1.0;
+        }
+        self.base = lo; // finite: every caller has ≥ 1 entry or a finite hint
+        self.cursor = 0;
+        while let Some(e) = self.scratch.pop() {
+            self.place(e);
+        }
+    }
+}
+
+/// The PR-1 binary-heap queue, kept verbatim behind the same interface as
+/// the comparison baseline: the property suite cross-checks calendar pop
+/// order against it on random workloads, and `exp bench` reports both
+/// (`event_queue_calendar` vs `event_queue_heap`).
+#[derive(Debug, Default)]
+pub struct HeapEventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl HeapEventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at `time`; panics on non-finite times.
     pub fn push(&mut self, time: Time, event: Event) {
         assert!(time.is_finite(), "event time must be finite, got {time}");
         self.heap.push(Entry { time, seq: self.seq, event });
@@ -101,9 +326,6 @@ impl EventQueue {
         self.heap.is_empty()
     }
 
-    /// Reset for reuse: drop all pending events and restart the FIFO
-    /// tie-break counter, keeping the heap's allocation. A cleared queue is
-    /// observationally identical to a fresh one (engine recycling, §Perf).
     pub fn clear(&mut self) {
         self.heap.clear();
         self.seq = 0;
@@ -113,6 +335,7 @@ impl EventQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn pops_in_time_order() {
@@ -156,7 +379,7 @@ mod tests {
     }
 
     // Regression for the release-mode NaN hole: the old debug_assert!
-    // compiled out under --release, and a NaN time then corrupted heap
+    // compiled out under --release, and a NaN time then corrupted event
     // order silently. These must panic in *every* profile.
     #[test]
     #[should_panic(expected = "event time must be finite")]
@@ -170,6 +393,13 @@ mod tests {
     fn rejects_infinite_time() {
         let mut q = EventQueue::new();
         q.push(f64::INFINITY, Event::Finish { machine_idx: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn bulk_load_rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push_arrivals(&[1.0, f64::NAN]);
     }
 
     #[test]
@@ -198,5 +428,136 @@ mod tests {
         assert_eq!(q.pop().unwrap().0, -1.5);
         assert_eq!(q.pop().unwrap().0, 0.0);
         assert_eq!(q.pop().unwrap().0, f64::MIN_POSITIVE);
+    }
+
+    // ---- calendar-specific coverage ------------------------------------
+
+    /// Drive a calendar queue and the heap baseline with the same script;
+    /// their pop streams must agree event-for-event (times *and* payload —
+    /// the payload check is what pins same-time FIFO stability).
+    fn assert_matches_heap(script: &[(f64, Event)], pop_every: usize) {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        for (i, &(t, ev)) in script.iter().enumerate() {
+            cal.push(t, ev);
+            heap.push(t, ev);
+            if pop_every > 0 && i % pop_every == pop_every - 1 {
+                assert_eq!(cal.peek_time(), heap.peek_time());
+                assert_eq!(cal.pop(), heap.pop(), "mid-script pop {i}");
+            }
+        }
+        assert_eq!(cal.len(), heap.len());
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b, "pop streams diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_heap_on_random_workloads() {
+        // continuous times (ties unlikely): pure ordering across resizes,
+        // overflow spills and mid-stream pops
+        for seed in 0..20 {
+            let mut rng = Pcg64::new(0xCA1E + seed);
+            let n = 1 + rng.index(800);
+            let script: Vec<(f64, Event)> = (0..n)
+                .map(|i| (rng.range_f64(-100.0, 1e4), Event::Arrival { trace_idx: i }))
+                .collect();
+            assert_matches_heap(&script, 1 + rng.index(7));
+        }
+    }
+
+    #[test]
+    fn matches_heap_on_tied_random_workloads() {
+        // times drawn from a tiny discrete set: heavy ties exercise the
+        // same-time FIFO guarantee under every bucket layout
+        for seed in 0..20 {
+            let mut rng = Pcg64::new(0xF1F0 + seed);
+            let n = 1 + rng.index(500);
+            let script: Vec<(f64, Event)> = (0..n)
+                .map(|i| (rng.index(8) as f64 * 2.5, Event::Arrival { trace_idx: i }))
+                .collect();
+            assert_matches_heap(&script, 1 + rng.index(5));
+        }
+    }
+
+    #[test]
+    fn matches_heap_across_bucket_resize_boundaries() {
+        // integer times on a widening range force repeated window
+        // doublings; exact bucket-edge times probe the index rounding
+        let mut script = Vec::new();
+        for i in 0..1500usize {
+            script.push((i as f64, Event::Arrival { trace_idx: i }));
+        }
+        // boundary duplicates, inserted after the window was sized
+        for i in 0..64usize {
+            script.push((i as f64 * 23.4375, Event::Finish { machine_idx: i }));
+        }
+        assert_matches_heap(&script, 3);
+    }
+
+    #[test]
+    fn push_below_window_after_pops() {
+        // popping advances the window cursor; a later push below `base`
+        // must re-bucket, not vanish or reorder
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(100.0 + i as f64, Event::Arrival { trace_idx: i });
+        }
+        for _ in 0..50 {
+            q.pop();
+        }
+        q.push(3.0, Event::Finish { machine_idx: 9 });
+        assert_eq!(q.pop(), Some((3.0, Event::Finish { machine_idx: 9 })));
+        assert_eq!(q.pop().unwrap().0, 150.0);
+    }
+
+    #[test]
+    fn bulk_load_matches_per_push_loads() {
+        // push_arrivals must be observationally identical to the loop it
+        // replaces: same FIFO numbering, same pop stream
+        let mut rng = Pcg64::new(0xB01D);
+        let arrivals: Vec<f64> = (0..400).map(|_| rng.range_f64(0.0, 500.0)).collect();
+        let mut bulk = EventQueue::new();
+        bulk.push_arrivals(&arrivals);
+        let mut single = EventQueue::new();
+        for (i, &t) in arrivals.iter().enumerate() {
+            single.push(t, Event::Arrival { trace_idx: i });
+        }
+        assert_eq!(bulk.len(), single.len());
+        loop {
+            let (a, b) = (bulk.pop(), single.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_queue_matches_fresh_queue() {
+        // a stale window from a previous life must not leak into pop
+        // order (bit-identity of recycled arenas)
+        let mut q = EventQueue::new();
+        q.push_arrivals(&[0.0, 1e6, 17.0, 17.0]);
+        while q.pop().is_some() {}
+        q.clear();
+        let script: Vec<(f64, Event)> =
+            (0..32).map(|i| (i as f64 * 0.125, Event::Arrival { trace_idx: i })).collect();
+        let mut fresh = EventQueue::new();
+        for &(t, ev) in &script {
+            q.push(t, ev);
+            fresh.push(t, ev);
+        }
+        loop {
+            let (a, b) = (q.pop(), fresh.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

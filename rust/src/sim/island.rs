@@ -35,6 +35,14 @@
 //! only differs if an arrival ties a finish time **exactly** in f64,
 //! a measure-zero coincidence for continuous arrival processes.
 //!
+//! Both loops **coalesce same-instant events**: every event at exactly
+//! the same timestamp (by `total_cmp`) is drained into one batch of state
+//! mutations followed by a *single* mapping event — the serve
+//! coordinator's PR-4 semantics, applied engine-side. Tie-free traces get
+//! one event per batch, i.e. the historical one-mapping-event-per-event
+//! behavior, unchanged bit for bit; burst workloads (many arrivals at one
+//! instant) skip the redundant intermediate heuristic passes.
+//!
 //! # Recycled-arena contract
 //!
 //! Like the wrappers above it, an `Island` is an arena: every buffer is
@@ -45,7 +53,7 @@
 use crate::energy::BatteryState;
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
-use crate::model::{ClientPool, EetMatrix, Scenario, Trace};
+use crate::model::{ClientPool, EetMatrix, Scenario, TaskColumns, Trace};
 use crate::runtime::{InferenceBackend, SyntheticBackend};
 use crate::sched::dispatch::{Dropped, MappingState};
 use crate::sched::fairness::FairnessTracker;
@@ -218,6 +226,9 @@ pub struct Island {
     gen_tasks: Vec<Task>,
     client_of: Vec<u32>,
     released: Releases,
+    /// Recycled SoA projection of the current open trace: the bulk
+    /// arrival-scheduling pass reads the contiguous `arrival` column.
+    cols: TaskColumns,
     // ---- incremental-run state (begin/ingest/advance_to/finish) --------
     now: Time,
     dead: bool,
@@ -271,6 +282,7 @@ impl Island {
             gen_tasks: Vec::new(),
             client_of: Vec::new(),
             released: Releases::default(),
+            cols: TaskColumns::default(),
             now: 0.0,
             dead: false,
             inflight: None,
@@ -293,6 +305,15 @@ impl Island {
     /// Record every applied mapping [`Action`] of the next runs.
     pub fn set_record_actions(&mut self, on: bool) {
         self.mapping.record_actions = on;
+    }
+
+    /// Rebuild every machine snapshot on every mapping event instead of
+    /// only the dirty ones — the pre-incremental refresh, kept as the
+    /// `exp bench` comparison baseline
+    /// (see [`MappingState::force_full_refresh`]). Results are identical
+    /// either way; off by default.
+    pub fn set_full_refresh(&mut self, on: bool) {
+        self.mapping.force_full_refresh = on;
     }
 
     /// Actions applied during the latest run.
@@ -415,19 +436,33 @@ impl Island {
                 }
             }
             *now = t;
-            match ev {
-                Event::Arrival { trace_idx } => mapping.push_arrival(gen_tasks[trace_idx]),
-                Event::Finish { machine_idx } => finish_running(
-                    &mut machines[machine_idx],
-                    machine_idx,
-                    *now,
-                    result,
-                    mapping,
-                    trace_log,
-                    released,
-                    battery,
-                ),
-                Event::Expiry => {}
+            // same-instant coalescing: apply the state mutation of every
+            // event at *exactly* this timestamp (FIFO pop order preserved),
+            // then fire one mapping event for the whole batch. Zero-dt
+            // battery advances are explicit no-ops, so skipping them for
+            // the 2nd+ batch member changes nothing.
+            let mut ev = ev;
+            loop {
+                match ev {
+                    Event::Arrival { trace_idx } => mapping.push_arrival(gen_tasks[trace_idx]),
+                    Event::Finish { machine_idx } => finish_running(
+                        &mut machines[machine_idx],
+                        machine_idx,
+                        *now,
+                        result,
+                        mapping,
+                        trace_log,
+                        released,
+                        battery,
+                    ),
+                    Event::Expiry => {}
+                }
+                match events.peek_time() {
+                    Some(pt) if pt.total_cmp(&t).is_eq() => {
+                        ev = events.pop().expect("peeked event vanished").1;
+                    }
+                    _ => break,
+                }
             }
             mapping_round(
                 *now,
@@ -446,12 +481,13 @@ impl Island {
 
         if *dead {
             // system off: abort running work, drain queued + arriving, and
-            // cancel every not-yet-processed arrival against a dead system
+            // cancel every not-yet-processed arrival against a dead system —
+            // the interrupted event first, then the rest of the queue, in
+            // place off the recycled queue (no iterator-chain temporaries)
             system_off_drain(*now, machines, mapping, trace_log, result);
             let t_dead = *now;
-            let drained =
-                pending.into_iter().chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
-            for ev in drained {
+            let mut next = pending;
+            while let Some(ev) = next {
                 if let Event::Arrival { trace_idx } = ev {
                     let task = gen_tasks[trace_idx];
                     let at = task.arrival.max(t_dead);
@@ -459,6 +495,7 @@ impl Island {
                     result.record(task.type_id.0, &out);
                     trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
                 }
+                next = events.pop().map(|(_, ev)| ev);
             }
         }
     }
@@ -514,6 +551,7 @@ impl Island {
             gen_tasks,
             client_of,
             released,
+            cols,
             inflight,
             ..
         } = self;
@@ -548,9 +586,11 @@ impl Island {
         let open_trace: Option<&Trace> = match workload {
             WorkloadRef::Open(trace) => {
                 result.arrived = trace.arrivals_per_type(n_types);
-                for (i, t) in trace.tasks.iter().enumerate() {
-                    events.push(t.arrival, Event::Arrival { trace_idx: i });
-                }
+                // SoA bulk load: one pass over the contiguous arrival
+                // column sizes the queue's window and schedules the whole
+                // trace (identical FIFO numbering to a push-per-task loop)
+                cols.fill(&trace.tasks);
+                events.push_arrivals(&cols.arrival);
                 Some(trace)
             }
             WorkloadRef::Closed { pool, n_tasks, seed } => {
@@ -578,31 +618,47 @@ impl Island {
                 }
             }
             now = t;
-            match ev {
-                Event::Arrival { trace_idx } => {
-                    let task = match open_trace {
-                        Some(trace) => trace.tasks[trace_idx],
-                        None => gen_tasks[trace_idx],
-                    };
-                    if closed.is_some() {
-                        // open-loop denominators come from the trace upfront
-                        result.arrived[task.type_id.0] += 1;
+            // same-instant coalescing: drain every event at *exactly* this
+            // timestamp (FIFO pop order preserved) into one batch of state
+            // mutations, then fire a single mapping event for all of them.
+            // Tie-free traces (continuous arrival processes) see exactly
+            // one event per batch, i.e. the historical behavior; zero-dt
+            // battery advances are explicit no-ops, so skipping them for
+            // the 2nd+ batch member changes nothing.
+            let mut ev = ev;
+            loop {
+                match ev {
+                    Event::Arrival { trace_idx } => {
+                        let task = match open_trace {
+                            Some(trace) => trace.tasks[trace_idx],
+                            None => gen_tasks[trace_idx],
+                        };
+                        if closed.is_some() {
+                            // open-loop denominators come from the trace upfront
+                            result.arrived[task.type_id.0] += 1;
+                        }
+                        mapping.push_arrival(task);
                     }
-                    mapping.push_arrival(task);
+                    Event::Finish { machine_idx } => {
+                        finish_running(
+                            &mut machines[machine_idx],
+                            machine_idx,
+                            now,
+                            &mut result,
+                            mapping,
+                            trace_log,
+                            released,
+                            battery,
+                        );
+                    }
+                    Event::Expiry => {} // wake-up only; the mapping event below expires
                 }
-                Event::Finish { machine_idx } => {
-                    finish_running(
-                        &mut machines[machine_idx],
-                        machine_idx,
-                        now,
-                        &mut result,
-                        mapping,
-                        trace_log,
-                        released,
-                        battery,
-                    );
+                match events.peek_time() {
+                    Some(pt) if pt.total_cmp(&t).is_eq() => {
+                        ev = events.pop().expect("peeked event vanished").1;
+                    }
+                    _ => break,
                 }
-                Event::Expiry => {} // wake-up only; the mapping event below expires
             }
 
             // shared per-event body: start freed work, fire the mapping
@@ -664,9 +720,10 @@ impl Island {
                 result.record(task.type_id.0, &out);
                 trace_log.push(record_of(&task, TraceOutcome::SystemOff, None, None, None, at));
             };
-            let drained =
-                pending.into_iter().chain(std::iter::from_fn(|| events.pop().map(|(_, ev)| ev)));
-            for ev in drained {
+            // the interrupted event first, then the rest of the queue,
+            // straight off the recycled queue (no iterator-chain temporaries)
+            let mut next = pending;
+            while let Some(ev) = next {
                 if let Event::Arrival { trace_idx } = ev {
                     let task = match open_trace {
                         Some(trace) => trace.tasks[trace_idx],
@@ -674,6 +731,7 @@ impl Island {
                     };
                     dead_arrival(task);
                 }
+                next = events.pop().map(|(_, ev)| ev);
             }
         } else {
             // Anything still waiting dies at its own deadline. (Closed-loop

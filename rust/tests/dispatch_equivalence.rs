@@ -9,9 +9,9 @@
 //!   coordinator's control flow — workers pop queued tasks the moment
 //!   they go idle (`pop_queued`/`mark_running`), report completions
 //!   (`mark_idle`/`record_terminal`), and a mapping event fires after
-//!   every arrival and every completion — in virtual time with
-//!   deterministic service times (EET × `size_factor`, exactly what the
-//!   simulator realises).
+//!   every batch of same-instant arrivals/completions (the engines'
+//!   same-time coalescing) — in virtual time with deterministic service
+//!   times (EET × `size_factor`, exactly what the simulator realises).
 //!
 //! Both record every applied mapping [`Action`]. If the sequences (and
 //! the terminal counts) are identical, the mapping semantics live
@@ -92,19 +92,30 @@ fn drive_live(sc: &Scenario, trace: &Trace, heuristic: &str) -> (Vec<Action>, Co
     let mut running: Vec<Option<RunningTask>> = (0..n_machines).map(|_| None).collect();
     let mut counts = Counts::default();
     while let Some((now, ev)) = events.pop() {
-        match ev {
-            Event::Expiry => {}
-            Event::Arrival { trace_idx } => map.push_arrival(trace.tasks[trace_idx]),
-            Event::Finish { machine_idx } => {
-                let r = running[machine_idx].take().expect("finish with no running task");
-                map.mark_idle(machine_idx);
-                let ok = r.actual_end <= r.task.deadline;
-                if ok {
-                    counts.completed += 1;
-                } else {
-                    counts.missed += 1;
+        // coalesce same-instant events into one batch before the single
+        // mapping event, mirroring `sim::island` (same-time coalescing)
+        let mut ev = ev;
+        loop {
+            match ev {
+                Event::Expiry => {}
+                Event::Arrival { trace_idx } => map.push_arrival(trace.tasks[trace_idx]),
+                Event::Finish { machine_idx } => {
+                    let r = running[machine_idx].take().expect("finish with no running task");
+                    map.mark_idle(machine_idx);
+                    let ok = r.actual_end <= r.task.deadline;
+                    if ok {
+                        counts.completed += 1;
+                    } else {
+                        counts.missed += 1;
+                    }
+                    map.record_terminal(r.task.type_id, ok);
                 }
-                map.record_terminal(r.task.type_id, ok);
+            }
+            match events.peek_time() {
+                Some(pt) if pt.total_cmp(&now).is_eq() => {
+                    ev = events.pop().expect("peeked event vanished").1;
+                }
+                _ => break,
             }
         }
         for m in 0..n_machines {
