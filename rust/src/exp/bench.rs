@@ -1,6 +1,6 @@
 //! Experiment `bench` — the PR's performance snapshot, written to
-//! `BENCH_PR7.json` at the repo root by default (`--out` overrides; CI
-//! uploads the file as an artifact and soft-gates regressions against the
+//! `BENCH_PR8.json` at the repo root by default (`--out` overrides; CI
+//! uploads the file as an artifact and gates regressions against the
 //! committed copy):
 //!
 //!  * `stress_throughput` — tasks/s of one recycled [`Simulation`] arena
@@ -12,27 +12,46 @@
 //!    dirty-machine optimisation's win on the same machine, same run;
 //!  * `sweep_cell` — wall time of one full sweep cell through the
 //!    experiment harness (trace generation + run + reduction);
-//!  * `fleet_throughput` — tasks/s of the epoch-parallel [`FleetSim`]
-//!    routing and draining a mixed-battery stress fleet;
+//!  * `fleet_throughput` — tasks/s of the 64-island [`FleetSim`] routing
+//!    and draining a mixed-battery stress fleet on the persistent shard
+//!    pool (1 s epochs, so the epoch machinery is actually exercised);
+//!  * `fleet_throughput_takepar` — the same fleet and trace on the
+//!    pre-PR-8 take+par_map epoch loop
+//!    ([`FleetSim::set_take_par_map`]): the in-run control isolating the
+//!    persistent-shard win;
+//!  * `feasibility_scan` — mapping fixpoints/s of the vectorized
+//!    [`FeasibilityCache`] column scan over one backlogged view;
+//!  * `feasibility_scan_brute` — the same fixpoint through the public
+//!    brute-force `feasible_efficient_pairs` loop (the property-test
+//!    oracle): the control isolating the contiguous-scan win;
 //!  * `event_queue_calendar` / `event_queue_heap` — events/s of a
 //!    push-all/pop-all cycle over one pre-generated arrival pattern on
 //!    the calendar [`EventQueue`] vs the PR-1 [`HeapEventQueue`]
 //!    baseline (both recycled via `clear`).
 //!
 //! The artifact is an object `{ "meta": {...}, "results": [...] }`; CI's
-//! compare step reads `meta.placeholder` to skip freshly-seeded files and
-//! diffs `stress_throughput` against the committed baseline. `--quick`
-//! shrinks workloads and measurement windows for the CI smoke run;
-//! absolute numbers then mean little, but the file shape is the same.
+//! compare step reads `meta.placeholder` to skip freshly-seeded files,
+//! diffs `stress_throughput` against the committed baseline (hard-failing
+//! on >30% regression once a real baseline is committed), and asserts the
+//! three paired in-run claims (`fleet_throughput` vs its takepar control,
+//! incremental vs full refresh, scan vs brute). `--quick` shrinks
+//! workloads and measurement windows for the CI smoke run; absolute
+//! numbers then mean little, but the file shape — and the paired
+//! comparisons, which share a machine and a run — stay meaningful.
 
 use std::time::Duration;
 
 use crate::error::Result;
 use crate::exp::sweep::{run_sweep, SweepSpec};
 use crate::exp::ExpOpts;
+use crate::model::task::{Task, TaskTypeId};
 use crate::model::{FleetScenario, Scenario, Trace, WorkloadParams};
+use crate::sched::feasibility::{
+    assign_winners_per_machine, feasible_efficient_pairs, FeasibilityCache,
+};
 use crate::sched::registry::heuristic_by_name;
 use crate::sched::route::route_policy_by_name;
+use crate::sched::{MachineSnapshot, SchedView};
 use crate::sim::event::{Event, EventQueue, HeapEventQueue};
 use crate::sim::fleet::FleetSim;
 use crate::sim::Simulation;
@@ -41,7 +60,7 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Default repo-root output file (the PR's perf artifact).
-pub const OUT_PATH: &str = "BENCH_PR7.json";
+pub const OUT_PATH: &str = "BENCH_PR8.json";
 
 fn tuned(name: &str, quick: bool) -> Bencher {
     if quick {
@@ -99,21 +118,95 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     spec.tasks = if quick { 300 } else { 1000 };
     results.push(tuned("sweep_cell", quick).throughput_items(1).run(|| run_sweep(&spec)));
 
-    // 4. the epoch-parallel fleet engine, mixed batteries, SoC routing
-    let k = if quick { 6 } else { 32 };
-    let per_island = if quick { 300 } else { 1000 };
+    // 4. the epoch-parallel fleet engine at the CI smoke's 64-island
+    //    scale, mixed batteries, SoC routing, 1 s epochs (short epochs
+    //    put real weight on the per-epoch machinery the persistent pool
+    //    optimizes) — first on the persistent shards, then on the
+    //    take+par_map control, same engine, same trace
+    let k = 64;
+    let per_island = if quick { 50 } else { 1000 };
     let fleet = FleetScenario::stress_fleet(k, 4, 3).with_mixed_batteries(120.0);
     let fleet_tasks = per_island * k;
     let fleet_trace =
         trace_for(&fleet.islands[0], 1.2 * fleet.service_capacity(), fleet_tasks, 0xF1BE);
     let mut fsim = FleetSim::new(&fleet, "felare", route_policy_by_name("soc-aware", 1)?)?;
+    fsim.set_epoch(1.0);
+    if let Some(jobs) = opts.jobs {
+        fsim.set_jobs(jobs);
+    }
     results.push(
         tuned("fleet_throughput", quick)
             .throughput_items(fleet_tasks as u64)
             .run(|| fsim.run(&fleet_trace)),
     );
+    fsim.set_take_par_map(true);
+    results.push(
+        tuned("fleet_throughput_takepar", quick)
+            .throughput_items(fleet_tasks as u64)
+            .run(|| fsim.run(&fleet_trace)),
+    );
+    fsim.set_take_par_map(false);
 
-    // 5. event-queue microbench: push-all/pop-all over one arrival
+    // 5. the mapper's phase-I/II fixpoint over one backlogged view:
+    //    vectorized column scan (recycled cache) vs the brute-force
+    //    element-wise walk it is property-tested equivalent to
+    let scan_sc = Scenario::stress(16, 6);
+    let n_scan_tasks = if quick { 64 } else { 256 };
+    let mut scan_rng = Pcg64::new(0x5CAD);
+    let scan_tasks: Vec<Task> = (0..n_scan_tasks)
+        .map(|i| Task {
+            id: i as u64,
+            type_id: TaskTypeId(scan_rng.index(scan_sc.n_types())),
+            arrival: 0.0,
+            deadline: scan_rng.range_f64(0.5, 12.0),
+            size_factor: 1.0,
+        })
+        .collect();
+    let scan_snaps: Vec<MachineSnapshot> = scan_sc
+        .machines
+        .iter()
+        .map(|m| MachineSnapshot {
+            dyn_power: m.dyn_power,
+            avail: scan_rng.range_f64(0.0, 4.0),
+            free_slots: scan_rng.index(6),
+            queued: vec![],
+        })
+        .collect();
+    let mut cache = FeasibilityCache::new();
+    results.push(
+        tuned("feasibility_scan", quick)
+            .throughput_items(n_scan_tasks as u64)
+            .run(|| {
+                let mut v =
+                    SchedView::new(0.0, &scan_sc.eet, scan_snaps.clone(), &scan_tasks, None);
+                cache.rounds(&mut v, None);
+                black_box(v.actions().len())
+            }),
+    );
+    results.push(
+        tuned("feasibility_scan_brute", quick)
+            .throughput_items(n_scan_tasks as u64)
+            .run(|| {
+                let mut v =
+                    SchedView::new(0.0, &scan_sc.eet, scan_snaps.clone(), &scan_tasks, None);
+                loop {
+                    let (pairs, _) = feasible_efficient_pairs(&v);
+                    if pairs.is_empty() {
+                        break;
+                    }
+                    let n = assign_winners_per_machine(&mut v, &pairs, |a, b, _| {
+                        a.energy < b.energy
+                            || (a.energy == b.energy && a.completion < b.completion)
+                    });
+                    if n == 0 {
+                        break;
+                    }
+                }
+                black_box(v.actions().len())
+            }),
+    );
+
+    // 6. event-queue microbench: push-all/pop-all over one arrival
     //    pattern, calendar vs the PR-1 heap it replaced. Same times, same
     //    recycling; the pop streams are equal by the equivalence suite,
     //    so this isolates pure queue cost.
@@ -147,7 +240,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         println!("{}", r.report_line());
     }
     let meta = Json::object()
-        .set("bench_rev", "pr7")
+        .set("bench_rev", "pr8")
         .set("profile", "release lto=thin codegen-units=1")
         .set("quick", quick)
         .set("placeholder", false);
@@ -175,16 +268,19 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         let j = Json::parse(&text).unwrap();
         let meta = j.req("meta").unwrap();
-        assert_eq!(meta.req_str("bench_rev").unwrap(), "pr7");
+        assert_eq!(meta.req_str("bench_rev").unwrap(), "pr8");
         assert!(meta.req("placeholder").is_ok());
         let arr = j.req("results").unwrap().as_array().unwrap();
-        assert_eq!(arr.len(), 6);
+        assert_eq!(arr.len(), 9);
         let names: Vec<&str> = arr.iter().map(|e| e.req_str("name").unwrap()).collect();
         for want in [
             "stress_throughput",
             "stress_throughput_full_refresh",
             "sweep_cell",
             "fleet_throughput",
+            "fleet_throughput_takepar",
+            "feasibility_scan",
+            "feasibility_scan_brute",
             "event_queue_calendar",
             "event_queue_heap",
         ] {

@@ -136,6 +136,9 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
                 if let Some(epoch) = opts.epoch {
                     sim.set_epoch(epoch);
                 }
+                if let Some(jobs) = opts.jobs {
+                    sim.set_jobs(jobs);
+                }
                 let r = sim.run(&trace);
                 r.check_conservation(n_tasks as u64)
                     .map_err(|e| format!("{policy}@{k} islands, λ={rate:.2}: {e}"))?;

@@ -67,6 +67,10 @@ pub struct ExpOpts {
     pub think_time: Option<f64>,
     /// Router epoch length in seconds for `exp fleet` (`--epoch`).
     pub epoch: Option<f64>,
+    /// Worker threads for the fleet island advance, `exp fleet`/`exp
+    /// bench` (`--jobs`, ≥ 1; default `FELARE_JOBS` / available cores).
+    /// Purely a throughput knob — results are identical for any value.
+    pub jobs: Option<usize>,
     /// Output path override for `exp bench` (`--out`; default
     /// [`bench::OUT_PATH`]).
     pub out: Option<String>,
@@ -90,6 +94,7 @@ impl Default for ExpOpts {
             clients: None,
             think_time: None,
             epoch: None,
+            jobs: None,
             out: None,
         }
     }
@@ -124,7 +129,7 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
     ("battery", "lifetime/efficiency sweep: battery capacity × rate, felare-eb vs stock", battery::run),
     ("fleet", "multi-island fleet: islands × rate × router policy (--islands, --policies)", fleet::run),
-    ("bench", "performance benchmarks → BENCH_PR7.json (--out overrides; stress, queues, fleet)", bench::run),
+    ("bench", "performance benchmarks → BENCH_PR8.json (--out overrides; stress, queues, fleet)", bench::run),
 ];
 
 pub fn run_by_name(name: &str, opts: &ExpOpts) -> Result<()> {

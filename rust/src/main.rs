@@ -584,9 +584,10 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("islands", "`exp fleet`: island-count grid, e.g. 16,64,256")
             .opt_optional("policies", "`exp fleet`: router policies, e.g. round-robin,soc-aware")
             .opt_optional("epoch", "`exp fleet`: router sync epoch in virtual seconds")
+            .opt_optional("jobs", "`exp fleet`/`exp bench`: fleet worker threads (>= 1)")
             .opt_optional("clients", "`exp sweep`: closed-loop client-count grid, e.g. 4,8,16")
             .opt_optional("think-time", "`exp sweep`: mean think time for --clients [default: 0.5]")
-            .opt_optional("out", "`exp bench`: artifact output path [default: BENCH_PR7.json]")
+            .opt_optional("out", "`exp bench`: artifact output path [default: BENCH_PR8.json]")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -606,6 +607,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         ("islands", &["fleet"]),
         ("policies", &["fleet"]),
         ("epoch", &["fleet"]),
+        ("jobs", &["fleet", "bench"]),
         ("clients", &["sweep"]),
         ("think-time", &["sweep"]),
         ("out", &["bench"]),
@@ -749,6 +751,10 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         }
         None => None,
     };
+    let jobs = match args.get("jobs") {
+        Some(s) => Some(positive_count("jobs", s)?),
+        None => None,
+    };
     let opts = ExpOpts {
         quick: args.is_set("quick"),
         traces,
@@ -765,6 +771,7 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         clients,
         think_time,
         epoch,
+        jobs,
         out: args.get("out").map(String::from),
     };
     run_by_name(&name, &opts)?;

@@ -44,7 +44,6 @@
 //! SoC is exposed to the heuristic itself through
 //! [`SchedView::soc`](crate::sched::SchedView::soc) (`felare-eb` reads it).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::energy::EnergyPolicy;
@@ -52,6 +51,7 @@ use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::EetMatrix;
 use crate::sched::fairness::{FairnessSnapshot, FairnessTracker};
+use crate::sched::ring::RingQueues;
 use crate::sched::{Action, MachineSnapshot, MappingHeuristic, QueuedInfo, SchedView};
 
 /// One entry of a machine's bounded FCFS local queue, engine-side: the
@@ -148,7 +148,11 @@ pub struct MappingState {
     /// (vectorizable, one cache line per 8 tasks) and only falls into the
     /// strided removal pass when something actually expired.
     arriving_deadline: Vec<Time>,
-    queues: Vec<VecDeque<QueuedTask>>,
+    /// The bounded FCFS local queues, all machines packed into one
+    /// arena-backed [`RingQueues`] (contiguous slots, per-machine
+    /// head/len windows) so `pop_queued` and the snapshot mirror touch a
+    /// single allocation and scan cache-linearly in machine order.
+    queues: RingQueues<QueuedTask>,
     running_expected_end: Vec<Option<Time>>,
     tracker: FairnessTracker,
     // ---- recycled buffers (no per-event allocation) --------------------
@@ -207,7 +211,21 @@ impl MappingState {
             queue_slots,
             arriving: Vec::new(),
             arriving_deadline: Vec::new(),
-            queues: (0..n_machines).map(|_| VecDeque::with_capacity(queue_slots)).collect(),
+            queues: RingQueues::new(
+                n_machines,
+                queue_slots,
+                QueuedTask {
+                    task: Task {
+                        id: 0,
+                        type_id: TaskTypeId(0),
+                        arrival: 0.0,
+                        deadline: 0.0,
+                        size_factor: 0.0,
+                    },
+                    expected_exec: 0.0,
+                    mapped: 0.0,
+                },
+            ),
             running_expected_end: vec![None; n_machines],
             tracker,
             snapshots,
@@ -226,9 +244,7 @@ impl MappingState {
     pub fn reset(&mut self) {
         self.arriving.clear();
         self.arriving_deadline.clear();
-        for q in &mut self.queues {
-            q.clear();
-        }
+        self.queues.clear();
         for d in &mut self.snap_dirty {
             *d = true;
         }
@@ -278,12 +294,12 @@ impl MappingState {
     }
 
     pub fn queue_len(&self, machine: usize) -> usize {
-        self.queues[machine].len()
+        self.queues.len(machine)
     }
 
     /// Total tasks queued (not running) across all machines.
     pub fn queued_total(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queues.total_len()
     }
 
     /// Earliest deadline among arriving-queue tasks — the next instant at
@@ -312,7 +328,7 @@ impl MappingState {
 
     /// Pop the head of `machine`'s local queue (FCFS).
     pub fn pop_queued(&mut self, machine: usize) -> Option<QueuedTask> {
-        let popped = self.queues[machine].pop_front();
+        let popped = self.queues.pop_front(machine);
         if popped.is_some() {
             self.snap_dirty[machine] = true;
         }
@@ -350,9 +366,9 @@ impl MappingState {
     /// headless serve driver and the live coordinator must cancel the same
     /// tasks in the same order for their shutdowns to stay bit-identical.
     pub fn drain_system_off(&mut self, on_drop: &mut dyn FnMut(Dropped)) {
-        for m in 0..self.queues.len() {
+        for m in 0..self.queues.n_queues() {
             self.snap_dirty[m] = true;
-            while let Some(q) = self.queues[m].pop_front() {
+            while let Some(q) = self.queues.pop_front(m) {
                 self.tracker.on_terminal(q.task.type_id, false);
                 on_drop(Dropped {
                     kind: DropKind::SystemOff,
@@ -460,7 +476,7 @@ impl MappingState {
             };
             if full || snap_dirty[m] {
                 snap.queued.clear();
-                for q in &queues[m] {
+                for q in queues.iter(m) {
                     avail += q.expected_exec;
                     snap.queued.push(QueuedInfo {
                         task_id: q.task.id,
@@ -483,8 +499,8 @@ impl MappingState {
         // rebuild: verify the mirror entry-for-entry in debug builds
         #[cfg(debug_assertions)]
         for (m, snap) in snapshots.iter().enumerate() {
-            assert_eq!(snap.queued.len(), queues[m].len(), "snapshot diverged on machine {m}");
-            for (qi, q) in snap.queued.iter().zip(queues[m].iter()) {
+            assert_eq!(snap.queued.len(), queues.len(m), "snapshot diverged on machine {m}");
+            for (qi, q) in snap.queued.iter().zip(queues.iter(m)) {
                 assert!(
                     qi.task_id == q.task.id
                         && qi.type_id == q.task.type_id
@@ -519,9 +535,8 @@ impl MappingState {
                     consumed[*task_idx] = true;
                     let task = arriving[*task_idx];
                     let e = eet.get(task.type_id, *machine);
-                    let q = &mut queues[machine.0];
-                    debug_assert!(q.len() < *queue_slots, "queue overflow");
-                    q.push_back(QueuedTask { task, expected_exec: e, mapped: now });
+                    debug_assert!(queues.len(machine.0) < *queue_slots, "queue overflow");
+                    queues.push_back(machine.0, QueuedTask { task, expected_exec: e, mapped: now });
                 }
                 Action::Drop { task_idx } => {
                     debug_assert!(!consumed[*task_idx], "task consumed twice");
@@ -531,12 +546,11 @@ impl MappingState {
                     on_drop(Dropped { kind: DropKind::MapperDropped, task, mapped: None });
                 }
                 Action::VictimDrop { machine, task_id } => {
-                    let q = &mut queues[machine.0];
-                    let pos = q
-                        .iter()
+                    let pos = queues
+                        .iter(machine.0)
                         .position(|qt| qt.task.id == *task_id)
                         .expect("victim not in queue");
-                    let victim = q.remove(pos).unwrap();
+                    let victim = queues.remove(machine.0, pos);
                     tracker.on_terminal(victim.task.type_id, false);
                     on_drop(Dropped {
                         kind: DropKind::VictimDropped,

@@ -9,17 +9,24 @@
 //! exploits two structural facts of Eq. 2:
 //!
 //! 1. for a *feasible* pair the expected energy `p_dyn · e_ij` is
-//!    independent of the start time, so the preference order of machines
-//!    per task type is static within a mapping event and can be sorted
-//!    once;
+//!    independent of the start time, so it can be precomputed once per
+//!    mapping event into flat per-type rows mirroring the EET layout;
 //! 2. within a fixpoint (only `Assign` actions), every machine's
 //!    availability is non-decreasing and its free slots non-increasing, so
 //!    a task's feasible candidate set only shrinks — a cached nomination
 //!    stays optimal until *its* machine is assigned to.
 //!
-//! Together these make each round O(assigned-machines' tasks) instead of
-//! O(all tasks × all machines), while producing byte-identical actions
-//! (see `cached_rounds_match_bruteforce`).
+//! Phase-I nomination itself is a **vectorized scan** (`scan_best`): the
+//! per-machine effective starts, the task type's EET row, and its static
+//! energy row are three contiguous `f64` columns walked in lockstep with a
+//! branchless feasibility test (full machines carry `start = ∞`, so
+//! `s + e ≤ d` rejects them with no slot branch) and a strict-`<` argmin
+//! that reproduces the brute-force scan's first-minimal / lowest-index
+//! tie-breaking exactly. Together these make each round
+//! O(assigned-machines' tasks × machines) contiguous flops instead of
+//! pointer-chasing over all tasks × all machines, while producing
+//! byte-identical actions (see `cached_rounds_match_bruteforce` and the
+//! `nominate` property tests in `tests/property_suite.rs`).
 
 use crate::model::machine::MachineId;
 use crate::model::task::{Task, TaskTypeId, Time};
@@ -181,34 +188,34 @@ pub fn assign_winners_per_machine(
     assigned
 }
 
-/// One statically-ranked candidate machine for a task type.
-#[derive(Clone, Copy, Debug)]
-struct Candidate {
-    machine: usize,
-    /// EET entry e_ij.
-    exec: f64,
-    /// Static energy p_dyn · e_ij (exact for feasible pairs, Eq. 2 case 1).
-    energy: f64,
-}
-
 /// Incremental feasible-efficient-pair cache for the ELARE/FELARE rounds.
 ///
 /// Owned by a heuristic and reused across mapping events; all buffers are
 /// recycled, so the steady-state fixpoint allocates nothing. `rounds` is
 /// drop-in equivalent to looping `feasible_efficient_pairs` +
 /// `assign_winners_per_machine` with ELARE's energy-first comparator.
+///
+/// Domain note: the scan encodes "machine rejected" as `∞` in its score,
+/// so finite EET entries (guaranteed by `EetMatrix`) and finite dynamic
+/// powers are assumed — an infinite *feasible* energy cannot occur.
 #[derive(Debug, Default)]
 pub struct FeasibilityCache {
-    /// Per task type: machines sorted by (static energy, machine index).
-    order: Vec<Vec<Candidate>>,
-    /// Fingerprint of the inputs `order` was built from: shape plus every
-    /// EET entry and dynamic power as raw bits. The ranking depends on
+    /// Static energy `p_dyn · e_ij`, flat type-major rows mirroring
+    /// `EetMatrix::flat` (row `ty` = `energy[ty·M .. (ty+1)·M]`).
+    energy: Vec<f64>,
+    /// Fingerprint of the inputs `energy` was built from: shape plus every
+    /// EET entry and dynamic power as raw bits. The rows depend on
     /// nothing else — and those inputs are constant across the mapping
-    /// events of a run — so `prepare` skips the per-type sorts whenever
-    /// the fingerprint matches the previous event's.
+    /// events of a run — so `prepare` skips the rebuild whenever the
+    /// fingerprint matches the previous event's.
     sig: Vec<u64>,
     /// Scratch for the candidate fingerprint (recycled).
     sig_scratch: Vec<u64>,
+    /// Per-machine effective start for NEW work: `start_time(j)`, or `∞`
+    /// when the machine has no free slot (branchless infeasibility).
+    /// Rebuilt per `rounds`/`nominate` call; within a fixpoint only the
+    /// machines assigned-to in a round are refreshed.
+    starts: Vec<f64>,
     /// Per arriving-queue task: current phase-I nomination (`None` =
     /// consumed, filtered out, or infeasible — and infeasibility is
     /// permanent within one `rounds` call, see the module docs).
@@ -221,28 +228,56 @@ pub struct FeasibilityCache {
     pairs: Vec<Pair>,
 }
 
-/// Walk `order[task type]` and return the first feasible candidate with a
-/// free slot — the minimum-energy feasible pair, exactly as the brute-force
-/// scan would pick it (ties in energy resolve to the lower machine index in
-/// both).
-fn best_for(order: &[Vec<Candidate>], view: &SchedView, idx: usize, task: &Task) -> Option<Pair> {
-    for cand in &order[task.type_id.0] {
-        let j = MachineId(cand.machine);
-        if !view.has_free_slot(j) {
-            continue;
-        }
-        let s = view.start_time(j);
-        if !is_feasible(s, cand.exec, task.deadline) {
-            continue;
-        }
-        return Some(Pair {
-            task_idx: idx,
-            machine: j,
-            completion: s + cand.exec,
-            energy: cand.energy,
-        });
+/// Effective start of NEW work on machine `j`: `start_time` while a queue
+/// slot is free, `∞` otherwise — so the scan's `s + e ≤ d` test rejects
+/// full machines with no separate slot branch.
+#[inline]
+fn effective_start(view: &SchedView, j: MachineId) -> f64 {
+    if view.has_free_slot(j) {
+        view.start_time(j)
+    } else {
+        f64::INFINITY
     }
-    None
+}
+
+/// The vectorized phase-I inner loop: walk the three contiguous columns
+/// (effective starts, the type's EET row, its static energy row) in
+/// lockstep and return the minimum-energy feasible pair. Bit-identical to
+/// the brute-force scan: completion is the same `s + e`, energy the same
+/// `p_dyn · e`, and the strict-`<` argmin keeps the first minimum, i.e.
+/// the lowest machine index on ties.
+#[inline]
+fn scan_best(
+    starts: &[f64],
+    eet_row: &[f64],
+    energy_row: &[f64],
+    idx: usize,
+    deadline: Time,
+) -> Option<Pair> {
+    debug_assert_eq!(starts.len(), eet_row.len());
+    debug_assert_eq!(starts.len(), energy_row.len());
+    let mut best_j = usize::MAX;
+    let mut best_energy = f64::INFINITY;
+    for j in 0..starts.len() {
+        let score = if is_feasible(starts[j], eet_row[j], deadline) {
+            energy_row[j]
+        } else {
+            f64::INFINITY
+        };
+        if score < best_energy {
+            best_energy = score;
+            best_j = j;
+        }
+    }
+    if best_j == usize::MAX {
+        return None;
+    }
+    Some(Pair {
+        task_idx: idx,
+        machine: MachineId(best_j),
+        completion: starts[best_j] + eet_row[best_j],
+        energy: best_energy,
+    })
 }
 
 impl FeasibilityCache {
@@ -250,12 +285,11 @@ impl FeasibilityCache {
         Self::default()
     }
 
-    /// Rebuild the static per-type machine ranking from the view's EET and
-    /// dynamic powers. The ranking is a pure function of (EET, powers), so
-    /// the rebuild — O(types × machines log machines) of sorting — only
-    /// runs when those inputs actually changed since the previous call;
-    /// the steady state of a run is one O(types × machines) fingerprint
-    /// compare per mapping event.
+    /// Rebuild the static per-type energy rows from the view's EET and
+    /// dynamic powers. The rows are a pure function of (EET, powers), so
+    /// the rebuild only runs when those inputs actually changed since the
+    /// previous call; the steady state of a run is one O(types × machines)
+    /// fingerprint compare per mapping event.
     fn prepare(&mut self, view: &SchedView) {
         let n_types = view.eet.n_types();
         let n_machines = view.machines.len();
@@ -271,18 +305,54 @@ impl FeasibilityCache {
             self.sig_scratch.push(m.dyn_power.to_bits());
         }
         if self.sig_scratch == self.sig {
-            return; // ranking inputs unchanged: keep the sorted rows
+            return; // energy-row inputs unchanged: keep the rows
         }
         std::mem::swap(&mut self.sig, &mut self.sig_scratch);
-        self.order.resize(n_types, Vec::new());
-        for (ty, row) in self.order.iter_mut().enumerate() {
-            row.clear();
-            for m in 0..n_machines {
-                let exec = view.eet.get(TaskTypeId(ty), MachineId(m));
-                row.push(Candidate { machine: m, exec, energy: view.machines[m].dyn_power * exec });
+        self.energy.clear();
+        self.energy.resize(n_types * n_machines, 0.0);
+        for ty in 0..n_types {
+            let row = &mut self.energy[ty * n_machines..(ty + 1) * n_machines];
+            for (m, e) in row.iter_mut().enumerate() {
+                // same operand order as Eq. 2's feasible case, p_dyn · e
+                *e = view.machines[m].dyn_power * view.eet.get(TaskTypeId(ty), MachineId(m));
             }
-            row.sort_by(|a, b| a.energy.total_cmp(&b.energy).then(a.machine.cmp(&b.machine)));
         }
+    }
+
+    /// Refresh the per-machine effective-start column from the view.
+    fn rebuild_starts(&mut self, view: &SchedView) {
+        let n_machines = view.machines.len();
+        self.starts.clear();
+        self.starts.reserve(n_machines);
+        for j in 0..n_machines {
+            self.starts.push(effective_start(view, MachineId(j)));
+        }
+    }
+
+    /// Vectorized drop-in for [`feasible_efficient_pairs`]: the minimum-
+    /// energy feasible machine per unconsumed task via the contiguous
+    /// column scan, and the indices of infeasible tasks. Bit-identical to
+    /// the brute-force walk (pinned by `tests/property_suite.rs`).
+    pub fn nominate(&mut self, view: &SchedView) -> (Vec<Pair>, Vec<usize>) {
+        self.prepare(view);
+        self.rebuild_starts(view);
+        let n_machines = view.machines.len();
+        let mut pairs = Vec::new();
+        let mut infeasible = Vec::new();
+        for (idx, task) in view.unconsumed() {
+            let row = task.type_id.0 * n_machines;
+            match scan_best(
+                &self.starts,
+                &view.eet.flat()[row..row + n_machines],
+                &self.energy[row..row + n_machines],
+                idx,
+                task.deadline,
+            ) {
+                Some(p) => pairs.push(p),
+                None => infeasible.push(idx),
+            }
+        }
+        (pairs, infeasible)
     }
 
     /// The ELARE phase-I + phase-II fixpoint (Algorithms 2–3), optionally
@@ -291,6 +361,7 @@ impl FeasibilityCache {
     /// tasks whose nominated machine changed are re-evaluated per round.
     pub fn rounds(&mut self, view: &mut SchedView, filter: Option<&[TaskTypeId]>) {
         self.prepare(view);
+        self.rebuild_starts(view);
         let n_tasks = view.n_tasks();
         let n_machines = view.machines.len();
         self.best.clear();
@@ -302,7 +373,15 @@ impl FeasibilityCache {
             }
         }
         for &idx in &self.eligible {
-            self.best[idx] = best_for(&self.order, view, idx, view.task(idx));
+            let task = view.task(idx);
+            let row = task.type_id.0 * n_machines;
+            self.best[idx] = scan_best(
+                &self.starts,
+                &view.eet.flat()[row..row + n_machines],
+                &self.energy[row..row + n_machines],
+                idx,
+                task.deadline,
+            );
         }
         loop {
             self.pairs.clear();
@@ -329,13 +408,28 @@ impl FeasibilityCache {
                     self.best[*task_idx] = None;
                 }
             }
-            // Re-nominate only the tasks whose cached machine was touched:
-            // untouched machines kept their availability and slots, so
-            // every other cached pair is still the minimum (module docs).
+            // Only assigned-to machines moved their availability / slots,
+            // so only their column entries need refreshing…
+            for j in 0..n_machines {
+                if self.dirty[j] {
+                    self.starts[j] = effective_start(view, MachineId(j));
+                }
+            }
+            // …and only the tasks whose cached machine was touched need a
+            // re-scan: every other cached pair is still the minimum
+            // (module docs).
             for &idx in &self.eligible {
                 if let Some(p) = self.best[idx] {
                     if self.dirty[p.machine.0] {
-                        self.best[idx] = best_for(&self.order, view, idx, view.task(idx));
+                        let task = view.task(idx);
+                        let row = task.type_id.0 * n_machines;
+                        self.best[idx] = scan_best(
+                            &self.starts,
+                            &view.eet.flat()[row..row + n_machines],
+                            &self.energy[row..row + n_machines],
+                            idx,
+                            task.deadline,
+                        );
                     }
                 }
             }
@@ -570,6 +664,22 @@ mod tests {
             let mut cached = SchedView::new(now, &eet, snaps, &tasks, None);
             FeasibilityCache::new().rounds(&mut cached, Some(&suffered));
             assert_eq!(brute.actions(), cached.actions(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn nominate_matches_bruteforce_scan() {
+        // the vectorized column scan is a bit-identical drop-in for the
+        // element-wise walk, pair-for-pair and infeasible-for-infeasible
+        for seed in 0..200u64 {
+            let mut rng = crate::util::rng::Pcg64::seed_from(seed, 0x5CA1);
+            let (eet, snaps, tasks, now) = random_case(&mut rng);
+            let v = SchedView::new(now, &eet, snaps, &tasks, None);
+            let (brute_pairs, brute_inf) = feasible_efficient_pairs(&v);
+            let mut cache = FeasibilityCache::new();
+            let (scan_pairs, scan_inf) = cache.nominate(&v);
+            assert_eq!(brute_pairs, scan_pairs, "seed {seed}: pairs diverged");
+            assert_eq!(brute_inf, scan_inf, "seed {seed}: infeasible set diverged");
         }
     }
 

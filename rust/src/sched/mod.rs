@@ -28,6 +28,7 @@ pub mod mm;
 pub mod mmu;
 pub mod msd;
 pub mod registry;
+pub mod ring;
 pub mod route;
 pub mod trace;
 

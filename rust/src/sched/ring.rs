@@ -1,0 +1,258 @@
+//! Arena-backed ring queues — one contiguous slot arena shared by every
+//! per-machine FCFS queue of an island.
+//!
+//! [`MappingState`](crate::sched::dispatch::MappingState) used to hold a
+//! `Vec<VecDeque<QueuedTask>>`: one heap allocation per machine, pointer
+//! chasing per queue, and the PR-7 dirty-bit snapshot rebuild walking M
+//! separate buffers. [`RingQueues`] packs all M queues into **one**
+//! `Vec<T>` arena of `n_queues × stride` slots; queue `q` owns the window
+//! `[q * stride, (q + 1) * stride)` and addresses it as a circular buffer
+//! via a per-queue `head`/`len` pair. `pop_queued` and the snapshot
+//! mirror now touch a single allocation and scan cache-linearly in
+//! machine order — exactly the order the mapping event visits machines.
+//!
+//! Semantics mirror the `VecDeque` operations the dispatch layer used:
+//! `push_back`, `pop_front`, order-preserving `remove(i)` (victim drops),
+//! front-to-back `iter`, and O(1) `clear`. Capacity is per-queue and
+//! grows by doubling the shared stride (all queues at once) so a
+//! transient `queue_slots` bump never reallocates per push. Equivalence
+//! with `VecDeque` over random op-streams — including wrap-around and
+//! grow boundaries — is pinned by `tests/property_suite.rs`.
+
+/// `n_queues` fixed-capacity FCFS ring buffers backed by one slot arena.
+///
+/// `T: Copy` keeps slot recycling trivial: vacated slots retain stale
+/// bits (never read — `len` guards every access) and `clear` is a pure
+/// head/len reset with no per-slot work.
+#[derive(Debug)]
+pub struct RingQueues<T: Copy> {
+    /// The arena: `n_queues * stride` slots, queue-major.
+    slots: Vec<T>,
+    /// Per-queue window width (power-of-two not required; wrap is by
+    /// compare-subtract, not masking, so any stride ≥ 1 works).
+    stride: usize,
+    /// Index of each queue's front element within its window.
+    head: Vec<usize>,
+    /// Live element count per queue (`len[q] <= stride`).
+    len: Vec<usize>,
+    /// Fill value for freshly grown slots (arbitrary; never read).
+    fill: T,
+}
+
+impl<T: Copy> RingQueues<T> {
+    /// A ring arena of `n_queues` queues, each holding up to `capacity`
+    /// elements before the arena grows.
+    pub fn new(n_queues: usize, capacity: usize, fill: T) -> Self {
+        assert!(capacity >= 1, "ring capacity must be at least 1");
+        RingQueues {
+            slots: vec![fill; n_queues * capacity],
+            stride: capacity,
+            head: vec![0; n_queues],
+            len: vec![0; n_queues],
+            fill,
+        }
+    }
+
+    /// Number of queues in the arena.
+    #[inline]
+    pub fn n_queues(&self) -> usize {
+        self.head.len()
+    }
+
+    /// Current per-queue capacity (slots before the next grow).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.stride
+    }
+
+    /// Live element count of queue `q`.
+    #[inline]
+    pub fn len(&self, q: usize) -> usize {
+        self.len[q]
+    }
+
+    /// Whether queue `q` holds no elements.
+    #[inline]
+    pub fn is_empty(&self, q: usize) -> bool {
+        self.len[q] == 0
+    }
+
+    /// Total live elements across all queues.
+    #[inline]
+    pub fn total_len(&self) -> usize {
+        self.len.iter().sum()
+    }
+
+    /// Arena index of logical position `i` (0 = front) of queue `q`.
+    #[inline]
+    fn slot(&self, q: usize, i: usize) -> usize {
+        let off = self.head[q] + i;
+        let off = if off >= self.stride { off - self.stride } else { off };
+        q * self.stride + off
+    }
+
+    /// Append `v` at the back of queue `q`, growing the arena if the
+    /// queue is at capacity.
+    pub fn push_back(&mut self, q: usize, v: T) {
+        if self.len[q] == self.stride {
+            self.grow();
+        }
+        let at = self.slot(q, self.len[q]);
+        self.slots[at] = v;
+        self.len[q] += 1;
+    }
+
+    /// Remove and return the front element of queue `q`.
+    pub fn pop_front(&mut self, q: usize) -> Option<T> {
+        if self.len[q] == 0 {
+            return None;
+        }
+        let v = self.slots[self.slot(q, 0)];
+        self.head[q] += 1;
+        if self.head[q] == self.stride {
+            self.head[q] = 0;
+        }
+        self.len[q] -= 1;
+        Some(v)
+    }
+
+    /// Remove and return the element at logical position `i` of queue
+    /// `q`, preserving the order of the remainder (`VecDeque::remove`
+    /// semantics). Panics if `i >= len(q)`.
+    pub fn remove(&mut self, q: usize, i: usize) -> T {
+        assert!(i < self.len[q], "ring remove out of bounds");
+        let v = self.slots[self.slot(q, i)];
+        for k in i + 1..self.len[q] {
+            let src = self.slot(q, k);
+            let dst = self.slot(q, k - 1);
+            self.slots[dst] = self.slots[src];
+        }
+        self.len[q] -= 1;
+        v
+    }
+
+    /// Front-to-back iterator over queue `q`.
+    #[inline]
+    pub fn iter(&self, q: usize) -> impl Iterator<Item = &T> + '_ {
+        (0..self.len[q]).map(move |i| &self.slots[self.slot(q, i)])
+    }
+
+    /// Empty every queue. O(n_queues): slots keep their stale bits.
+    pub fn clear(&mut self) {
+        for h in &mut self.head {
+            *h = 0;
+        }
+        for l in &mut self.len {
+            *l = 0;
+        }
+    }
+
+    /// Double the shared stride, relocating every queue's live elements
+    /// to the front of its widened window (heads reset to 0).
+    fn grow(&mut self) {
+        let n = self.n_queues();
+        let new_stride = self.stride * 2;
+        let mut slots = vec![self.fill; n * new_stride];
+        for q in 0..n {
+            for i in 0..self.len[q] {
+                slots[q * new_stride + i] = self.slots[self.slot(q, i)];
+            }
+            self.head[q] = 0;
+        }
+        self.slots = slots;
+        self.stride = new_stride;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_per_queue() {
+        let mut r = RingQueues::new(2, 3, 0u64);
+        r.push_back(0, 1);
+        r.push_back(0, 2);
+        r.push_back(1, 10);
+        r.push_back(0, 3);
+        assert_eq!(r.len(0), 3);
+        assert_eq!(r.len(1), 1);
+        assert_eq!(r.total_len(), 4);
+        assert_eq!(r.pop_front(0), Some(1));
+        assert_eq!(r.pop_front(0), Some(2));
+        assert_eq!(r.pop_front(1), Some(10));
+        assert_eq!(r.pop_front(0), Some(3));
+        assert_eq!(r.pop_front(0), None);
+        assert_eq!(r.pop_front(1), None);
+    }
+
+    #[test]
+    fn wraps_around_the_window_boundary() {
+        let mut r = RingQueues::new(1, 3, 0u64);
+        r.push_back(0, 1);
+        r.push_back(0, 2);
+        assert_eq!(r.pop_front(0), Some(1));
+        assert_eq!(r.pop_front(0), Some(2));
+        // head is now mid-window; the next three pushes wrap.
+        r.push_back(0, 3);
+        r.push_back(0, 4);
+        r.push_back(0, 5);
+        assert_eq!(r.len(0), 3);
+        assert_eq!(r.capacity(), 3, "no grow needed at exactly capacity");
+        let got: Vec<u64> = r.iter(0).copied().collect();
+        assert_eq!(got, vec![3, 4, 5]);
+        assert_eq!(r.pop_front(0), Some(3));
+    }
+
+    #[test]
+    fn grows_when_a_queue_overflows() {
+        let mut r = RingQueues::new(2, 2, 0u64);
+        r.push_back(1, 7);
+        r.pop_front(1); // leave queue 1 with a non-zero head
+        r.push_back(1, 8);
+        r.push_back(0, 1);
+        r.push_back(0, 2);
+        r.push_back(0, 3); // overflow queue 0 → arena doubles
+        assert_eq!(r.capacity(), 4);
+        let q0: Vec<u64> = r.iter(0).copied().collect();
+        let q1: Vec<u64> = r.iter(1).copied().collect();
+        assert_eq!(q0, vec![1, 2, 3]);
+        assert_eq!(q1, vec![8], "grow relocates wrapped queues intact");
+    }
+
+    #[test]
+    fn remove_preserves_order() {
+        let mut r = RingQueues::new(1, 2, 0u64);
+        // force a wrapped layout first
+        r.push_back(0, 0);
+        r.pop_front(0);
+        for v in [1, 2, 3, 4] {
+            r.push_back(0, v);
+        }
+        assert_eq!(r.remove(0, 1), 2);
+        let got: Vec<u64> = r.iter(0).copied().collect();
+        assert_eq!(got, vec![1, 3, 4]);
+        assert_eq!(r.remove(0, 2), 4);
+        assert_eq!(r.remove(0, 0), 1);
+        let got: Vec<u64> = r.iter(0).copied().collect();
+        assert_eq!(got, vec![3]);
+    }
+
+    #[test]
+    fn clear_resets_without_shrinking() {
+        let mut r = RingQueues::new(3, 1, 0u64);
+        r.push_back(0, 1);
+        r.push_back(0, 2); // grow to stride 2
+        r.push_back(2, 9);
+        assert_eq!(r.capacity(), 2);
+        r.clear();
+        assert_eq!(r.total_len(), 0);
+        assert_eq!(r.capacity(), 2, "clear keeps the grown arena");
+        for q in 0..3 {
+            assert!(r.is_empty(q));
+            assert_eq!(r.pop_front(q), None);
+        }
+        r.push_back(1, 5);
+        assert_eq!(r.iter(1).copied().collect::<Vec<_>>(), vec![5]);
+    }
+}

@@ -7,40 +7,90 @@
 //! mapping heuristic places the task on a machine at the next mapping
 //! event.
 //!
-//! # Epoch parallelism
+//! # Epoch parallelism: persistent shards
 //!
 //! Time is chopped into fixed synchronization epochs. Within one epoch
 //! the engine first routes every arrival of the window (serial — routing
 //! is a trivial table lookup, and the router sees optimistically updated
 //! queue counts as it assigns), then advances all islands to the epoch
-//! boundary **in parallel** with [`par_map`]: islands share no state
-//! between boundaries, so the fleet is embarrassingly parallel. Snapshots
-//! are refreshed at each boundary, which makes the router's knowledge
-//! one epoch stale — exactly the information lag a real fleet dispatcher
-//! operates under.
+//! boundary **in parallel**: islands share no state between boundaries,
+//! so the fleet is embarrassingly parallel. Snapshots are refreshed at
+//! each boundary, which makes the router's knowledge one epoch stale —
+//! exactly the information lag a real fleet dispatcher operates under.
+//!
+//! The parallel advance runs on a **persistent worker pool**: each worker
+//! owns a fixed contiguous shard of the island arena for the whole run
+//! (claimed once via `&mut` slice split — no `Vec` churn, no arena
+//! shipping per epoch). Per epoch the main thread stages each shard's
+//! routed arrivals into its **mailbox**, publishes the boundary time, and
+//! crosses an epoch barrier; workers drain their mailbox, ingest, advance
+//! only the islands with pending events (a quiet island's advance is a
+//! guaranteed no-op — [`Island::has_event_before`]), push refreshed
+//! [`IslandView`]s for every island that moved or received work, and meet
+//! the second barrier. The pre-PR-8 path — `mem::take` the island vec and
+//! re-ship every arena through [`par_map`] each epoch with a full view
+//! refresh — is kept behind [`FleetSim::set_take_par_map`] as the bench
+//! control group (`fleet_throughput_takepar`), mirroring
+//! `Simulation::set_full_refresh`.
 //!
 //! Determinism: island event loops are deterministic, routing is
-//! deterministic per policy seed, and `par_map` preserves order — a
-//! fleet run replays bit-for-bit regardless of worker count.
+//! deterministic per policy seed, per-island ingestion order is preserved
+//! through the mailboxes, and view updates are keyed by island index — a
+//! fleet run replays **bit-for-bit** regardless of worker count, epoch
+//! path (sharded / serial / take+par_map), or recycling (the module tests
+//! pin all three).
 
-use crate::model::{FleetScenario, Time, Trace};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::model::{FleetScenario, Task, Time, Trace};
 use crate::sched::registry::heuristic_by_name;
 use crate::sched::route::{IslandView, RoutePolicy};
 use crate::sim::island::{ExecModel, Island};
 use crate::sim::result::SimResult;
-use crate::util::parallel::{default_jobs, par_map};
+use crate::util::parallel::{default_jobs, par_map, with_worker_pool};
 use crate::util::stats::Summary;
 
 /// Default synchronization-epoch length in seconds of virtual time.
 pub const DEFAULT_EPOCH: f64 = 10.0;
 
+/// Per-shard communication channels between the routing thread and one
+/// persistent shard worker. Each mutex is uncontended by construction:
+/// the main thread touches `inbox` only before the epoch-start barrier
+/// and `updates`/`results` only after the epoch-end barrier, while the
+/// worker touches them strictly between the two.
+#[derive(Default)]
+struct ShardComm {
+    /// Routed arrivals staged for this shard's islands (global island
+    /// index + task), per-island order preserved.
+    inbox: Mutex<Vec<(usize, Task)>>,
+    /// Boundary view refreshes for the islands that moved or received
+    /// work this epoch (global island index + view).
+    updates: Mutex<Vec<(usize, IslandView)>>,
+    /// Per-island results of the finish pass, shard-internal order.
+    results: Mutex<Vec<SimResult>>,
+}
+
 /// One fleet run's engine: islands + router, reusable across traces (the
-/// per-island recycled-arena contract carries over).
+/// per-island recycled-arena contract carries over — `views`, `routed`,
+/// staging buffers and shard channels are all recycled too, so a repeat
+/// `run` allocates nothing at the fleet layer).
 pub struct FleetSim {
     islands: Vec<Island>,
     router: Box<dyn RoutePolicy>,
     epoch: Time,
     jobs: usize,
+    /// Use the pre-PR-8 take+par_map epoch loop (bench control group).
+    take_par_map: bool,
+    // ---- recycled buffers (no per-run allocation) ----------------------
+    /// Master routing snapshots, island order.
+    views: Vec<IslandView>,
+    /// Tasks routed to each island this run.
+    routed: Vec<u64>,
+    /// Per-shard staging for the current epoch's routed arrivals.
+    staged: Vec<Vec<(usize, Task)>>,
+    /// Per-shard worker channels.
+    comms: Vec<ShardComm>,
 }
 
 impl FleetSim {
@@ -55,7 +105,17 @@ impl FleetSim {
             .iter()
             .map(|sc| Ok(Island::new(sc, heuristic_by_name(heuristic, sc)?, ExecModel::Eet)))
             .collect::<Result<Vec<_>, String>>()?;
-        Ok(FleetSim { islands, router, epoch: DEFAULT_EPOCH, jobs: default_jobs() })
+        Ok(FleetSim {
+            islands,
+            router,
+            epoch: DEFAULT_EPOCH,
+            jobs: default_jobs(),
+            take_par_map: false,
+            views: Vec::new(),
+            routed: Vec::new(),
+            staged: Vec::new(),
+            comms: Vec::new(),
+        })
     }
 
     pub fn n_islands(&self) -> usize {
@@ -83,6 +143,16 @@ impl FleetSim {
         self.jobs = jobs;
     }
 
+    /// Run epochs on the pre-PR-8 take+par_map loop (fresh threads and
+    /// full arena shipping every epoch boundary) instead of the
+    /// persistent shard pool — the in-run comparison baseline for `exp
+    /// bench` (`fleet_throughput` vs `fleet_throughput_takepar`).
+    /// Identical results either way (module tests pin it); off by
+    /// default.
+    pub fn set_take_par_map(&mut self, on: bool) {
+        self.take_par_map = on;
+    }
+
     /// Run one fleet-wide open-loop trace: route every arrival to an
     /// island, advance islands epoch-parallel, drain, and collect the
     /// per-island results (module docs).
@@ -93,9 +163,24 @@ impl FleetSim {
         for island in self.islands.iter_mut() {
             island.begin(trace.arrival_rate);
         }
-        let mut views: Vec<IslandView> = self.islands.iter().map(|i| i.view()).collect();
-        let mut routed = vec![0u64; n];
+        self.views.clear();
+        self.views.extend(self.islands.iter().map(|i| i.view()));
+        self.routed.clear();
+        self.routed.resize(n, 0);
 
+        let results = if self.take_par_map {
+            self.run_epochs_takepar(trace)
+        } else {
+            self.run_epochs_sharded(trace)
+        };
+        FleetResult { policy: policy.to_string(), routed: self.routed.clone(), islands: results }
+    }
+
+    /// The pre-PR-8 epoch loop, verbatim: `mem::take` the island vec and
+    /// ship every arena through [`par_map`]'s fresh thread pool at every
+    /// boundary, then refresh every view. Kept as the bench control group.
+    fn run_epochs_takepar(&mut self, trace: &Trace) -> Vec<SimResult> {
+        let n = self.islands.len();
         let mut next = 0; // next trace task to route (arrivals are sorted)
         let mut t_end = self.epoch;
         while next < trace.tasks.len() {
@@ -103,10 +188,10 @@ impl FleetSim {
             // optimistically bumping queue counts as we assign
             while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
                 let task = trace.tasks[next];
-                let dst = self.router.route(&views, &task);
+                let dst = self.router.route(&self.views, &task);
                 assert!(dst < n, "router returned island {dst} of {n}");
-                views[dst].queued += 1;
-                routed[dst] += 1;
+                self.views[dst].queued += 1;
+                self.routed[dst] += 1;
                 self.islands[dst].ingest(task);
                 next += 1;
             }
@@ -117,7 +202,7 @@ impl FleetSim {
                 isl.advance_to(t_end);
                 isl
             });
-            for (v, island) in views.iter_mut().zip(&self.islands) {
+            for (v, island) in self.views.iter_mut().zip(&self.islands) {
                 *v = island.view();
             }
             t_end += self.epoch;
@@ -134,7 +219,182 @@ impl FleetSim {
             .into_iter()
             .unzip();
         self.islands = islands;
-        FleetResult { policy: policy.to_string(), routed, islands: results }
+        results
+    }
+
+    /// The persistent-shard epoch loop (module docs): each worker owns a
+    /// fixed contiguous `&mut` shard of the island arena for the whole
+    /// run, fed through per-shard mailboxes and two barriers per epoch.
+    /// Bit-identical to the take+par_map loop — same routing decisions
+    /// (an island's master view only changes when its state did; a quiet
+    /// island's `view()` is a pure function of unchanged state), same
+    /// per-island ingestion order, same event-loop floats.
+    fn run_epochs_sharded(&mut self, trace: &Trace) -> Vec<SimResult> {
+        let n = self.islands.len();
+        let jobs = self.jobs.min(n).max(1);
+        if jobs == 1 {
+            return self.run_epochs_serial(trace);
+        }
+        // balanced contiguous shards: the first `extra` shards take one
+        // extra island, so shard membership is pure index arithmetic
+        let base = n / jobs;
+        let extra = n % jobs;
+        let shard_of = move |dst: usize| {
+            let big = (base + 1) * extra;
+            if dst < big {
+                dst / (base + 1)
+            } else {
+                extra + (dst - big) / base
+            }
+        };
+
+        self.comms.clear();
+        self.comms.resize_with(jobs, ShardComm::default);
+        self.staged.clear();
+        self.staged.resize_with(jobs, Vec::new);
+
+        let epoch = self.epoch;
+        let FleetSim { islands, router, views, routed, staged, comms, .. } = self;
+        let comms: &[ShardComm] = comms; // shared by workers and main alike
+
+        // carve the arena into per-shard &mut slices; each worker claims
+        // its slice once and keeps it for the run's lifetime
+        let mut chunks: Vec<Mutex<Option<(usize, &mut [Island])>>> = Vec::with_capacity(jobs);
+        let mut rest: &mut [Island] = islands;
+        let mut lo = 0usize;
+        for w in 0..jobs {
+            let size = base + usize::from(w < extra);
+            let (head, tail) = rest.split_at_mut(size);
+            chunks.push(Mutex::new(Some((lo, head))));
+            lo += size;
+            rest = tail;
+        }
+
+        let barrier = Barrier::new(jobs + 1);
+        let t_end_bits = AtomicU64::new(0);
+        let finishing = AtomicBool::new(false);
+
+        with_worker_pool(
+            jobs,
+            |w| {
+                let (lo, shard) =
+                    chunks[w].lock().unwrap().take().expect("shard claimed twice");
+                let comm = &comms[w];
+                let mut buf: Vec<(usize, Task)> = Vec::new();
+                let mut touched = vec![false; shard.len()];
+                loop {
+                    barrier.wait(); // epoch start (or finish signal)
+                    if finishing.load(Ordering::Acquire) {
+                        let mut res = comm.results.lock().unwrap();
+                        for isl in shard.iter_mut() {
+                            res.push(isl.finish());
+                        }
+                        drop(res);
+                        barrier.wait(); // results published
+                        return;
+                    }
+                    let t_end = f64::from_bits(t_end_bits.load(Ordering::Acquire));
+                    std::mem::swap(&mut *comm.inbox.lock().unwrap(), &mut buf);
+                    for &(dst, task) in buf.iter() {
+                        touched[dst - lo] = true;
+                        shard[dst - lo].ingest(task);
+                    }
+                    buf.clear();
+                    // advance only islands with pending events (a quiet
+                    // island's advance is a no-op — skip it entirely), but
+                    // refresh the view of every island whose state moved,
+                    // including dead islands that merely absorbed ingests:
+                    // the router's optimistic `queued` bump must be
+                    // corrected exactly as a full refresh would.
+                    let mut updates = comm.updates.lock().unwrap();
+                    for (i, isl) in shard.iter_mut().enumerate() {
+                        let pending = isl.has_event_before(t_end);
+                        if pending {
+                            isl.advance_to(t_end);
+                        }
+                        if pending || touched[i] {
+                            updates.push((lo + i, isl.view()));
+                            touched[i] = false;
+                        }
+                    }
+                    drop(updates);
+                    barrier.wait(); // epoch end: updates published
+                }
+            },
+            || {
+                let mut next = 0; // next trace task to route (sorted arrivals)
+                let mut t_end = epoch;
+                while next < trace.tasks.len() {
+                    // route against the boundary snapshots, optimistically
+                    // bumping queue counts, staging per shard
+                    while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
+                        let task = trace.tasks[next];
+                        let dst = router.route(views, &task);
+                        assert!(dst < n, "router returned island {dst} of {n}");
+                        views[dst].queued += 1;
+                        routed[dst] += 1;
+                        staged[shard_of(dst)].push((dst, task));
+                        next += 1;
+                    }
+                    for (w, s) in staged.iter_mut().enumerate() {
+                        if !s.is_empty() {
+                            comms[w].inbox.lock().unwrap().append(s);
+                        }
+                    }
+                    t_end_bits.store(t_end.to_bits(), Ordering::Release);
+                    barrier.wait(); // epoch start: workers ingest + advance
+                    barrier.wait(); // epoch end: all updates published
+                    for comm in comms.iter() {
+                        for (idx, v) in comm.updates.lock().unwrap().drain(..) {
+                            views[idx] = v;
+                        }
+                    }
+                    t_end += epoch;
+                }
+                finishing.store(true, Ordering::Release);
+                barrier.wait(); // release workers into the finish pass
+                barrier.wait(); // finish results published
+                let mut results = Vec::with_capacity(n);
+                for comm in comms.iter() {
+                    results.append(&mut comm.results.lock().unwrap());
+                }
+                results
+            },
+        )
+    }
+
+    /// The single-worker epoch loop: the sharded loop's semantics with no
+    /// threads, barriers or mailboxes at all (ingest directly, advance in
+    /// place, refresh only moved islands).
+    fn run_epochs_serial(&mut self, trace: &Trace) -> Vec<SimResult> {
+        let n = self.islands.len();
+        let mut touched = vec![false; n];
+        let mut next = 0; // next trace task to route (sorted arrivals)
+        let mut t_end = self.epoch;
+        while next < trace.tasks.len() {
+            while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
+                let task = trace.tasks[next];
+                let dst = self.router.route(&self.views, &task);
+                assert!(dst < n, "router returned island {dst} of {n}");
+                self.views[dst].queued += 1;
+                self.routed[dst] += 1;
+                self.islands[dst].ingest(task);
+                touched[dst] = true;
+                next += 1;
+            }
+            for (i, island) in self.islands.iter_mut().enumerate() {
+                let pending = island.has_event_before(t_end);
+                if pending {
+                    island.advance_to(t_end);
+                }
+                if pending || touched[i] {
+                    self.views[i] = island.view();
+                    touched[i] = false;
+                }
+            }
+            t_end += self.epoch;
+        }
+        self.islands.iter_mut().map(|isl| isl.finish()).collect()
     }
 }
 
@@ -258,6 +518,20 @@ mod tests {
         Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
     }
 
+    fn assert_islands_match(a: &FleetResult, b: &FleetResult, tag: &str) {
+        assert_eq!(a.routed, b.routed, "{tag}: routing diverged");
+        for (i, (ra, rb)) in a.islands.iter().zip(&b.islands).enumerate() {
+            assert_eq!(ra.arrived, rb.arrived, "{tag}: island {i}");
+            assert_eq!(ra.completed, rb.completed, "{tag}: island {i}");
+            assert_eq!(ra.missed, rb.missed, "{tag}: island {i}");
+            assert_eq!(ra.cancelled, rb.cancelled, "{tag}: island {i}");
+            assert_eq!(ra.makespan, rb.makespan, "{tag}: island {i}");
+            assert_eq!(ra.depleted_at, rb.depleted_at, "{tag}: island {i}");
+            assert_eq!(ra.final_soc, rb.final_soc, "{tag}: island {i}");
+            assert_eq!(ra.battery_spent, rb.battery_spent, "{tag}: island {i}");
+        }
+    }
+
     #[test]
     fn fleet_conserves_across_policies() {
         let fleet = FleetScenario::stress_fleet(6, 4, 3);
@@ -281,16 +555,30 @@ mod tests {
             sim.set_jobs(jobs);
             sim.run(&trace)
         };
+        // jobs=1 exercises the serial loop, 2/4 the shard pool with
+        // uneven and even shard splits
         let a = run_with(1);
         let b = run_with(4);
-        assert_eq!(a.routed, b.routed, "routing must not depend on worker count");
-        for (ra, rb) in a.islands.iter().zip(&b.islands) {
-            assert_eq!(ra.completed, rb.completed);
-            assert_eq!(ra.missed, rb.missed);
-            assert_eq!(ra.cancelled, rb.cancelled);
-            assert_eq!(ra.makespan, rb.makespan);
-            assert_eq!(ra.depleted_at, rb.depleted_at);
-        }
+        let c = run_with(2);
+        assert_islands_match(&a, &b, "jobs 1 vs 4");
+        assert_islands_match(&a, &c, "jobs 1 vs 2");
+    }
+
+    #[test]
+    fn persistent_and_takepar_paths_are_bit_identical() {
+        let fleet = FleetScenario::stress_fleet(5, 4, 3).with_mixed_batteries(90.0);
+        let trace = trace_for(&fleet.islands[0], 1.8 * fleet.service_capacity(), 800, 23);
+        let run_with = |takepar: bool| {
+            let router = route_policy_by_name("soc-aware", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_take_par_map(takepar);
+            sim.set_jobs(3);
+            sim.run(&trace)
+        };
+        let shard = run_with(false);
+        let takepar = run_with(true);
+        assert_islands_match(&shard, &takepar, "shard vs take+par_map");
+        shard.check_conservation(800).unwrap();
     }
 
     #[test]
@@ -301,11 +589,26 @@ mod tests {
         let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
         let first = sim.run(&trace);
         let second = sim.run(&trace);
-        assert_eq!(first.routed, second.routed);
-        for (ra, rb) in first.islands.iter().zip(&second.islands) {
-            assert_eq!(ra.completed, rb.completed);
-            assert_eq!(ra.makespan, rb.makespan);
-        }
+        assert_islands_match(&first, &second, "recycled same-trace");
+    }
+
+    #[test]
+    fn recycled_fleet_is_bit_identical_to_fresh_across_traces() {
+        // run trace A, then trace B on the same (recycled) engine: B must
+        // match a fresh engine's B float-for-float — the fleet-layer
+        // buffers (views, routed, mailboxes) must carry nothing across
+        let fleet = FleetScenario::stress_fleet(4, 4, 3).with_mixed_batteries(120.0);
+        let trace_a = trace_for(&fleet.islands[0], 2.0 * fleet.service_capacity(), 700, 29);
+        let trace_b = trace_for(&fleet.islands[0], 1.3 * fleet.service_capacity(), 500, 31);
+        let mk = || {
+            let router = route_policy_by_name("soc-aware", 1).unwrap();
+            FleetSim::new(&fleet, "felare", router).unwrap()
+        };
+        let mut recycled = mk();
+        recycled.run(&trace_a);
+        let b_recycled = recycled.run(&trace_b);
+        let b_fresh = mk().run(&trace_b);
+        assert_islands_match(&b_recycled, &b_fresh, "recycled vs fresh");
     }
 
     #[test]

@@ -520,6 +520,16 @@ impl Island {
         result
     }
 
+    /// Whether advancing to `t` would process at least one event — i.e.
+    /// whether [`Island::advance_to`]`(t)` could mutate any state. Dead
+    /// islands never process events; a live island with no event before
+    /// `t` is a guaranteed no-op (the battery only advances at event
+    /// pops), which is what lets the fleet engine skip its advance and
+    /// view refresh for quiet islands without changing a single float.
+    pub fn has_event_before(&self, t: Time) -> bool {
+        !self.dead && self.events.peek_time().is_some_and(|pt| pt < t)
+    }
+
     /// A routing snapshot of this island's state: in-flight work, battery
     /// state of charge, liveness. The fleet router decides from a vector
     /// of these (`sched::route`).

@@ -1,8 +1,13 @@
-//! Scoped-thread parallel map (substrate for `rayon`'s `par_iter`).
+//! Scoped-thread parallel map (substrate for `rayon`'s `par_iter`), plus
+//! a persistent scoped worker pool for long-lived shard workers.
 //!
 //! The experiment sweeps run hundreds of independent simulations (30
-//! traces × rates × heuristics); this fans them across a fixed worker pool
-//! with `std::thread::scope`, preserving input order in the output.
+//! traces × rates × heuristics); [`par_map`]/[`par_map_n`] fan them across
+//! a fixed worker pool with `std::thread::scope`, preserving input order
+//! in the output. [`with_worker_pool`] instead keeps the workers alive
+//! for the whole closure — the fleet engine parks one worker per island
+//! shard across every epoch of a run instead of respawning threads per
+//! epoch.
 
 /// Number of workers: FELARE_JOBS env var, else available parallelism.
 pub fn default_jobs() -> usize {
@@ -102,6 +107,29 @@ where
         .collect()
 }
 
+/// Run `main` on the calling thread while `jobs` persistent workers run
+/// `worker(w)` (worker index `0..jobs`) on scoped threads. Returns
+/// `main`'s value after every worker has returned.
+///
+/// This is the persistent-pool dual of [`par_map`]: the workers live for
+/// the whole call instead of one batch, so `worker` and `main` must agree
+/// on their own handshake (the fleet engine uses epoch barriers plus a
+/// `finishing` flag). `worker` MUST terminate once `main` signals
+/// shutdown — the scope join blocks until every worker returns.
+pub fn with_worker_pool<R, W, M>(jobs: usize, worker: W, main: M) -> R
+where
+    W: Fn(usize) + Sync,
+    M: FnOnce() -> R,
+{
+    std::thread::scope(|scope| {
+        for w in 0..jobs {
+            let worker = &worker;
+            scope.spawn(move || worker(w));
+        }
+        main()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +171,32 @@ mod tests {
     #[test]
     fn jobs_clamped_to_items() {
         assert_eq!(par_map(vec![1, 2], 64, |x: u64| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_workers_and_returns_main_value() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        let stop = AtomicBool::new(false);
+        let hits = AtomicUsize::new(0);
+        let got = with_worker_pool(
+            4,
+            |_w| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            },
+            || {
+                // workers are concurrent with main: wait until all checked in
+                while hits.load(Ordering::SeqCst) < 4 {
+                    std::thread::yield_now();
+                }
+                stop.store(true, Ordering::SeqCst);
+                42u64
+            },
+        );
+        assert_eq!(got, 42);
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
     }
 
     #[test]

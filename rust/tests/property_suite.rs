@@ -14,6 +14,9 @@
 //!  * closed-loop client pools: conservation and the ≤ n_clients
 //!    outstanding-requests cap;
 //!  * Eq. 1/2 algebraic relations; fairness-limit algebra (ε ≤ μ);
+//!  * substrate equivalence: the vectorized feasibility scan nominates
+//!    exactly the brute-force pairs, and the arena-backed ring queues
+//!    mirror Vec<VecDeque> under random op streams;
 //!  * determinism: same seed ⇒ identical results.
 
 use felare::model::cvb::{generate, CvbParams};
@@ -449,6 +452,148 @@ fn prop_felare_without_suffered_types_equals_elare() {
         }
         if vf.deferrals != ve.deferrals {
             return Err(format!("deferrals {} vs {}", vf.deferrals, ve.deferrals));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// mapper substrate: vectorized scan ≡ brute-force pair enumeration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_nominate_equals_bruteforce_pairs() {
+    use felare::sched::feasibility::{feasible_efficient_pairs, FeasibilityCache};
+    // The arena-recycled column scan (`FeasibilityCache::nominate`) must
+    // produce the exact nominations of the brute-force element-wise walk
+    // it replaced on the hot path — same winners (first-minimal, lowest
+    // machine index on energy ties), same infeasible set, bit-identical
+    // completion/energy floats. gen_event covers zero-free-slot machines
+    // (n_queued can hit queue_slots) and all-infeasible task sets
+    // (deadlines range below now).
+    check("nominate-equals-bruteforce", gen_event, |ev| {
+        let view = SchedView::new(
+            ev.now,
+            &ev.scenario.eet,
+            ev.snaps.clone(),
+            &ev.tasks,
+            ev.rates.as_ref(),
+        );
+        let (brute_pairs, brute_inf) = feasible_efficient_pairs(&view);
+        let mut cache = FeasibilityCache::new();
+        let (scan_pairs, scan_inf) = cache.nominate(&view);
+        if scan_pairs != brute_pairs {
+            return Err(format!("pairs diverged: scan {scan_pairs:?} vs brute {brute_pairs:?}"));
+        }
+        if scan_inf != brute_inf {
+            return Err(format!("infeasible diverged: {scan_inf:?} vs {brute_inf:?}"));
+        }
+        // a recycled cache must nominate identically (arena reuse is
+        // invisible — the fleet recycles one cache across every epoch)
+        let (again_pairs, again_inf) = cache.nominate(&view);
+        if again_pairs != scan_pairs || again_inf != scan_inf {
+            return Err("recycled cache diverged from its own fresh pass".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// queue substrate: arena-backed ring ≡ Vec<VecDeque> under random op streams
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RingCase {
+    n_queues: usize,
+    capacity: usize,
+    /// (op, queue, value): op 0‥=5 = push/pop/remove/iter-check/clear/drain.
+    ops: Vec<(u8, usize, u64)>,
+}
+
+fn gen_ring_case(rng: &mut Pcg64) -> RingCase {
+    let n_queues = small_usize(rng, 1, 6);
+    // tiny capacities force wrap-around and arena growth early
+    let capacity = small_usize(rng, 1, 4);
+    let ops = vec_of(rng, 1, 120, |rng| {
+        // weight pushes so queues actually fill, wrap and grow
+        let op = *pick(rng, &[0u8, 0, 0, 1, 2, 3, 4, 5][..]);
+        (op, rng.index(n_queues), rng.next_u64() % 1000)
+    });
+    RingCase { n_queues, capacity, ops }
+}
+
+#[test]
+fn prop_ring_queues_match_vecdeque() {
+    use felare::sched::ring::RingQueues;
+    use std::collections::VecDeque;
+    // MappingState's queue arena must be observationally identical to the
+    // Vec<VecDeque> it replaced: FIFO order per queue, order-preserving
+    // mid-queue removal (victim drops), O(1) clear, and growth that
+    // relocates wrapped windows intact.
+    check("ring-equals-vecdeque", gen_ring_case, |case| {
+        let mut ring = RingQueues::new(case.n_queues, case.capacity, 0u64);
+        let mut model: Vec<VecDeque<u64>> = vec![VecDeque::new(); case.n_queues];
+        for &(op, q, v) in &case.ops {
+            match op {
+                0 => {
+                    ring.push_back(q, v);
+                    model[q].push_back(v);
+                }
+                1 => {
+                    if ring.pop_front(q) != model[q].pop_front() {
+                        return Err(format!("pop_front({q}) diverged"));
+                    }
+                }
+                2 => {
+                    if !model[q].is_empty() {
+                        let i = (v as usize) % model[q].len();
+                        let got = ring.remove(q, i);
+                        let want = model[q].remove(i).unwrap();
+                        if got != want {
+                            return Err(format!("remove({q}, {i}): {got} != {want}"));
+                        }
+                    }
+                }
+                3 => {
+                    let got: Vec<u64> = ring.iter(q).copied().collect();
+                    let want: Vec<u64> = model[q].iter().copied().collect();
+                    if got != want {
+                        return Err(format!("iter({q}): {got:?} != {want:?}"));
+                    }
+                }
+                4 => {
+                    ring.clear();
+                    for m in &mut model {
+                        m.clear();
+                    }
+                }
+                _ => {
+                    while let Some(got) = ring.pop_front(q) {
+                        if model[q].pop_front() != Some(got) {
+                            return Err(format!("drain({q}) diverged at {got}"));
+                        }
+                    }
+                    if !model[q].is_empty() {
+                        return Err(format!("drain({q}) ended early"));
+                    }
+                }
+            }
+            // cheap global invariants after every op
+            if ring.len(q) != model[q].len() {
+                return Err(format!("len({q}): {} != {}", ring.len(q), model[q].len()));
+            }
+            let total: usize = model.iter().map(|m| m.len()).sum();
+            if ring.total_len() != total {
+                return Err(format!("total_len {} != {total}", ring.total_len()));
+            }
+        }
+        // final deep comparison across every queue
+        for q in 0..case.n_queues {
+            let got: Vec<u64> = ring.iter(q).copied().collect();
+            let want: Vec<u64> = model[q].iter().copied().collect();
+            if got != want {
+                return Err(format!("final iter({q}): {got:?} != {want:?}"));
+            }
         }
         Ok(())
     });
