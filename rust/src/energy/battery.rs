@@ -271,6 +271,27 @@ impl BatteryState {
         None
     }
 
+    /// Debit `joules` straight off the store at instant `now` — the fleet
+    /// router's migration radio cost, a lump sum outside the
+    /// piecewise-linear machine draw. Advances the integration to `now`
+    /// first, then subtracts, counting the joules toward the gross
+    /// `spent` debit. Returns the depletion instant if the store was (or
+    /// becomes) empty — idempotent like [`Self::advance`].
+    pub fn debit(&mut self, joules: f64, now: Time) -> Option<Time> {
+        debug_assert!(joules >= 0.0 && joules.is_finite(), "bad debit {joules}");
+        if let Some(dead) = self.advance(now) {
+            return Some(dead);
+        }
+        self.spent += joules;
+        self.level -= joules; // infinite stores stay infinite
+        if self.level <= 0.0 {
+            self.level = 0.0;
+            self.depleted_at = Some(now);
+            return Some(now);
+        }
+        None
+    }
+
     /// State of charge in [0, 1]; 1.0 for an infinite battery.
     pub fn soc(&self) -> f64 {
         if self.capacity.is_finite() {
@@ -492,6 +513,26 @@ mod tests {
         // busy flags cleared too: drains at idle rate again
         b.advance(1.0);
         assert!((b.spent() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn debit_subtracts_joules_and_can_deplete() {
+        let mut b = state(10.0);
+        assert_eq!(b.debit(1.0, 5.0), None); // idle draw 1 J + debit 1 J
+        assert!((b.level() - (10.0 - 0.2 * 5.0 - 1.0)).abs() < 1e-12);
+        assert!((b.spent() - 2.0).abs() < 1e-12);
+        // a debit larger than the remaining store empties it on the spot
+        let dead = b.debit(100.0, 6.0).unwrap();
+        assert_eq!(dead, 6.0);
+        assert_eq!(b.level(), 0.0);
+        assert!(b.is_depleted());
+        // idempotent afterwards: a depleted battery reports, not drains
+        assert_eq!(b.debit(1.0, 7.0), Some(dead));
+        // infinite stores absorb debits forever (still counted as spent)
+        let mut inf = state(f64::INFINITY);
+        assert_eq!(inf.debit(1e9, 1.0), None);
+        assert!(inf.spent() > 1e9);
+        assert!(!inf.is_depleted());
     }
 
     #[test]

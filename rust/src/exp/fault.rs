@@ -1,0 +1,218 @@
+//! Experiment `fault` — fault injection & recovery at fleet scale: sweep
+//! fault intensity × mapping heuristic × router policy on an unbatteried
+//! stress fleet, every cell paired with a no-migration control, and
+//! report what the recovery machinery buys: on-time rate, recovered
+//! completions, crash aborts, migrations and their radio-energy bill.
+//!
+//! The claim under test: deadline-aware retry plus brown-out migration
+//! turns a fault-degraded fleet back into a working one — at any fault
+//! intensity the migration run must complete no less (within 5%) than
+//! its paired no-migration control, and at intensity 0 both must agree
+//! with migration armed (zero-cost-when-off). Every cell is
+//! conservation-checked.
+//!
+//! Grid knobs: `--islands K` (first value; default 6), `--policies`,
+//! `--rates` (absolute λ, first value; default 1.3× fleet capacity),
+//! `--epoch` (default 0.5 s — migration drains happen at epoch
+//! boundaries, so they must sit well inside the ~2·ē deadline slack),
+//! `--faults <spec>` to pin one explicit plan in place of the intensity
+//! axis, `--tasks`, `--jobs` and `--seed`.
+
+use crate::error::Result;
+use crate::exp::output::{fmt_f, Table};
+use crate::exp::ExpOpts;
+use crate::model::{FaultPlan, FleetScenario, Trace, WorkloadParams};
+use crate::sched::route::route_policy_by_name;
+use crate::sim::fleet::FleetSim;
+use crate::util::rng::Pcg64;
+
+/// Fault-intensity axis: the fraction of machines crashed / slowed and
+/// islands browned out ([`FaultPlan::random`]).
+const INTENSITIES: [(&str, f64); 3] = [("none", 0.0), ("light", 0.15), ("heavy", 0.4)];
+
+/// Per-island level-2 mappers under test.
+const HEURISTICS: [&str; 3] = ["felare", "felare-eb", "mm"];
+
+/// Default router subset: the liveness-aware policy vs the blind strawman.
+const POLICIES: [&str; 2] = ["soc-aware", "round-robin"];
+
+/// Machines × types per stress island.
+const ISLAND_M: usize = 4;
+const ISLAND_T: usize = 3;
+
+/// Epoch default: boundary drains must land inside the deadline slack.
+const FAULT_EPOCH: f64 = 0.5;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let k = match &opts.islands {
+        Some(v) => v[0],
+        None if opts.quick => 3,
+        None => 6,
+    };
+    let fleet = FleetScenario::stress_fleet(k, ISLAND_M, ISLAND_T);
+    let capacity = fleet.service_capacity();
+    let rate = match &opts.rates {
+        Some(rs) => rs[0],
+        None => 1.3 * capacity,
+    };
+    let n_tasks = opts.tasks() * k;
+    let horizon = n_tasks as f64 / rate;
+    let n_machines: usize = fleet.islands.iter().map(|s| s.n_machines()).sum();
+    let policies: Vec<String> = match &opts.policies {
+        Some(ps) => ps.clone(),
+        None => POLICIES.iter().map(|s| s.to_string()).collect(),
+    };
+    for p in &policies {
+        route_policy_by_name(p, 0)?; // validate names before the long part
+    }
+
+    // the intensity axis, or one pinned plan from --faults
+    let mut plans: Vec<(String, Option<FaultPlan>)> = Vec::new();
+    match &opts.faults {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec)?;
+            plan.validate_targets(n_machines, Some(k))?;
+            plans.push(("pinned".into(), Some(plan)));
+        }
+        None => {
+            for (name, intensity) in INTENSITIES {
+                let plan = if intensity == 0.0 {
+                    None
+                } else {
+                    let mut rng = Pcg64::seed_from(opts.seed, 0xFA17 ^ intensity.to_bits());
+                    Some(FaultPlan::random(&mut rng, n_machines, Some(k), intensity, horizon))
+                };
+                plans.push((name.to_string(), plan));
+            }
+        }
+    }
+
+    // one shared trace: every (plan, heuristic, policy, migration) cell
+    // routes the identical arrival sequence, so comparisons are paired
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: fleet.islands[0].cv_exec,
+        type_weights: Vec::new(),
+    };
+    let trace = Trace::generate(&params, &fleet.islands[0].eet, &mut Pcg64::new(opts.seed));
+    let epoch = opts.epoch.unwrap_or(FAULT_EPOCH);
+
+    let mut t = Table::new(
+        &format!("fault sweep — {k} islands @ λ={rate:.2} ({n_tasks} tasks)"),
+        &[
+            "faults",
+            "heuristic",
+            "policy",
+            "migrate",
+            "on_time",
+            "recovered",
+            "crash_aborts",
+            "migrations",
+            "mig_J",
+        ],
+    );
+
+    for (fname, plan) in &plans {
+        for heuristic in HEURISTICS {
+            for policy in &policies {
+                // (completed, migrations) for migrate = off, then on
+                let mut pair: Vec<(u64, u64)> = Vec::new();
+                for migrate in [false, true] {
+                    let router = route_policy_by_name(policy, opts.seed)?;
+                    let mut sim = FleetSim::new(&fleet, heuristic, router)?;
+                    sim.set_epoch(epoch);
+                    if let Some(jobs) = opts.jobs {
+                        sim.set_jobs(jobs);
+                    }
+                    sim.set_fault_plan(plan.clone())?;
+                    sim.set_migration(migrate);
+                    let r = sim.run(&trace);
+                    r.check_conservation(n_tasks as u64).map_err(|e| {
+                        format!("{fname}/{heuristic}/{policy} migrate={migrate}: {e}")
+                    })?;
+                    let arrived = r.total_arrived().max(1) as f64;
+                    t.row(vec![
+                        fname.clone(),
+                        heuristic.to_string(),
+                        policy.clone(),
+                        if migrate { "on".into() } else { "off".into() },
+                        fmt_f(r.on_time_rate(), 4),
+                        fmt_f(r.total_recovered() as f64 / arrived, 4),
+                        r.total_crash_aborts().to_string(),
+                        r.migrations.to_string(),
+                        fmt_f(r.migration_energy, 2),
+                    ]);
+                    pair.push((r.total_completed(), r.migrations));
+                }
+                // paired gates (module docs)
+                let (off, on) = (pair[0], pair[1]);
+                if plan.is_none() {
+                    if off.0 != on.0 || on.1 != 0 {
+                        return Err(format!(
+                            "{heuristic}/{policy}: fault-free runs diverged with migration armed"
+                        )
+                        .into());
+                    }
+                } else if on.0 + on.0 / 20 < off.0 {
+                    return Err(format!(
+                        "{fname}/{heuristic}/{policy}: migration lost completions ({} vs {})",
+                        on.0, off.0
+                    )
+                    .into());
+                }
+            }
+        }
+    }
+    t.emit("fault")?;
+    println!(
+        "fault sweep: {} plans × {} heuristics × {} policies × migration on/off, \
+         all cells conservation-checked",
+        plans.len(),
+        HEURISTICS.len(),
+        policies.len(),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fault_figure_runs() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(100),
+            islands: Some(vec![2]),
+            policies: Some(vec!["round-robin".into()]),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+    }
+
+    #[test]
+    fn pinned_fault_spec_replaces_the_intensity_axis() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(80),
+            islands: Some(vec![2]),
+            policies: Some(vec!["least-queued".into()]),
+            faults: Some("brownout:i1@10+10".into()),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+    }
+
+    #[test]
+    fn bad_fault_spec_is_rejected() {
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(50),
+            islands: Some(vec![2]),
+            faults: Some("crash:m99@5+5".into()),
+            ..Default::default()
+        };
+        assert!(run(&opts).is_err());
+    }
+}

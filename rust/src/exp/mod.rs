@@ -8,6 +8,7 @@ pub mod ablation;
 pub mod battery;
 pub mod bench;
 pub mod cloud;
+pub mod fault;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
@@ -74,6 +75,12 @@ pub struct ExpOpts {
     /// Output path override for `exp bench` (`--out`; default
     /// [`bench::OUT_PATH`]).
     pub out: Option<String>,
+    /// Fault-plan spec for `exp fault` (`--faults "crash:m2@40+10,..."`):
+    /// pins one explicit plan in place of the intensity axis.
+    pub faults: Option<String>,
+    /// Replay a recorded trace JSON for `exp sweep` (`--trace-in path`):
+    /// replaces the rate axis with the file's single workload.
+    pub trace_in: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -96,6 +103,8 @@ impl Default for ExpOpts {
             epoch: None,
             jobs: None,
             out: None,
+            faults: None,
+            trace_in: None,
         }
     }
 }
@@ -129,6 +138,7 @@ pub const EXPERIMENTS: &[(&str, &str, Runner)] = &[
     ("sweep", "engine-agnostic heuristic sweep (--engine sim|serve, --trace-out)", sweep::run_exp),
     ("battery", "lifetime/efficiency sweep: battery capacity × rate, felare-eb vs stock", battery::run),
     ("fleet", "multi-island fleet: islands × rate × router policy (--islands, --policies)", fleet::run),
+    ("fault", "fault injection & recovery: intensity × heuristic × router, migration paired (--faults)", fault::run),
     ("bench", "performance benchmarks → BENCH_PR8.json (--out overrides; stress, queues, fleet)", bench::run),
 ];
 
@@ -197,7 +207,8 @@ mod tests {
         assert!(ids.contains(&"battery"));
         assert!(ids.contains(&"fleet"));
         assert!(ids.contains(&"bench"));
-        assert_eq!(n, 16);
+        assert!(ids.contains(&"fault"));
+        assert_eq!(n, 17);
     }
 
     #[test]

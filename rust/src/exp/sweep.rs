@@ -42,6 +42,7 @@ use crate::sched::trace::TraceRecord;
 use crate::sched::MappingHeuristic;
 use crate::serve::HeadlessServe;
 use crate::sim::{SimResult, Simulation};
+use crate::util::json::Json;
 use crate::util::parallel::{default_jobs, par_map_n};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -506,6 +507,9 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
 /// sim|serve`), on any scenario (`--scenario paper|aws|stress:M:T|path`),
 /// with optional per-request JSONL trace export (`--trace-out`).
 pub fn run_exp(opts: &ExpOpts) -> Result<()> {
+    if let Some(path) = &opts.trace_in {
+        return run_replay(opts, path);
+    }
     let scenario = match &opts.scenario {
         Some(spec) => Scenario::from_spec(spec)?,
         None => Scenario::paper_synthetic(),
@@ -572,6 +576,101 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
     }
     if let Some(limit) = opts.expect_p99 {
         check_p99(limit, &cell_traces)?;
+        println!("p99 sojourn SLO: every cell within {limit}s");
+    }
+    Ok(())
+}
+
+/// `felare exp sweep --trace-in path` — replay one recorded workload (a
+/// `gen-trace` / `simulate --trace-out`-compatible trace JSON) under
+/// every heuristic on the chosen engine. The rate axis collapses to the
+/// file's single workload, so the grid is heuristics × one trace;
+/// `--trace-out` and `--expect-p99` compose as in the generated sweep.
+/// `--rates`/`--clients` conflict and are rejected up front.
+fn run_replay(opts: &ExpOpts, path: &str) -> Result<()> {
+    if opts.clients.is_some() {
+        return Err(Error::Experiment(
+            "--trace-in (fixed open-loop replay) conflicts with --clients (closed loop)".into(),
+        ));
+    }
+    if opts.rates.is_some() {
+        return Err(Error::Experiment(
+            "--trace-in replaces the rate axis; drop --rates".into(),
+        ));
+    }
+    let scenario = match &opts.scenario {
+        Some(spec) => Scenario::from_spec(spec)?,
+        None => Scenario::paper_synthetic(),
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Experiment(format!("--trace-in: reading {path}: {e}")))?;
+    let json = Json::parse(&text)
+        .map_err(|e| Error::Experiment(format!("--trace-in: parsing {path}: {e}")))?;
+    let trace =
+        Trace::from_json(&json).map_err(|e| Error::Experiment(format!("--trace-in: {path}: {e}")))?;
+    if trace.tasks.is_empty() {
+        return Err(Error::Experiment(format!("--trace-in: {path} has no tasks")));
+    }
+    for t in &trace.tasks {
+        if t.type_id.0 >= scenario.n_types() {
+            return Err(Error::Experiment(format!(
+                "--trace-in: task {} has type {} but scenario '{}' has {} types",
+                t.id,
+                t.type_id.0,
+                scenario.name,
+                scenario.n_types()
+            )));
+        }
+    }
+    let record = opts.trace_out.is_some() || opts.expect_p99.is_some();
+    let mut cells: Vec<CellTraces> = Vec::new();
+    let mut t = Table::new(
+        &format!(
+            "sweep replay [{} engine] — {} ({} recorded tasks)",
+            opts.engine.name(),
+            scenario.name,
+            trace.tasks.len()
+        ),
+        &["heuristic", "completion", "miss", "wasted%", "jain", "victims/k"],
+    );
+    for h in ALL_HEURISTICS {
+        let heuristic = heuristic_by_name(h, &scenario)?;
+        let mut eng = opts.engine.build(&scenario, heuristic);
+        eng.set_record_traces(record);
+        let r = eng.run(&trace);
+        r.check_conservation()
+            .map_err(|e| Error::Experiment(format!("{h}: {e}")))?;
+        let m = CellMetrics::of(&r);
+        t.row(vec![
+            h.to_string(),
+            fmt_f(m.completion_rate, 4),
+            fmt_f(m.miss_rate, 4),
+            fmt_f(m.wasted_energy_pct, 3),
+            fmt_f(m.jain, 3),
+            fmt_f(m.victim_drops_per_k, 2),
+        ]);
+        if record {
+            cells.push(CellTraces {
+                heuristic: h.to_string(),
+                rate: trace.arrival_rate,
+                trace_i: 0,
+                records: eng.trace_log().to_vec(),
+            });
+        }
+    }
+    t.emit(&format!("sweep_replay_{}", opts.engine.name()))?;
+    println!(
+        "sweep[{} replay]: {} heuristics × 1 recorded workload ({} tasks from {path})",
+        opts.engine.name(),
+        ALL_HEURISTICS.len(),
+        trace.tasks.len()
+    );
+    if let Some(out) = &opts.trace_out {
+        let n = export_cell_traces(out, &cells)?;
+        println!("wrote {n} trace records ({} cells) to {out}", cells.len());
+    }
+    if let Some(limit) = opts.expect_p99 {
+        check_p99(limit, &cells)?;
         println!("p99 sojourn SLO: every cell within {limit}s");
     }
     Ok(())
@@ -850,6 +949,46 @@ mod tests {
         spec.tasks = 50;
         spec.closed_loop = Some(0.2);
         run_sweep(&spec);
+    }
+
+    #[test]
+    fn replay_exp_runs_from_file() {
+        let sc = Scenario::paper_synthetic();
+        let params = WorkloadParams {
+            n_tasks: 120,
+            arrival_rate: 4.0,
+            cv_exec: sc.cv_exec,
+            type_weights: Vec::new(),
+        };
+        let trace = Trace::generate(&params, &sc.eet, &mut Pcg64::new(7));
+        let path = std::env::temp_dir().join("felare_sweep_replay.json");
+        std::fs::write(&path, trace.to_json().to_string_pretty()).unwrap();
+        let opts = ExpOpts {
+            trace_in: Some(path.to_string_lossy().into_owned()),
+            quick: true,
+            ..Default::default()
+        };
+        run_exp(&opts).unwrap();
+    }
+
+    #[test]
+    fn replay_conflicts_and_bad_files_are_rejected() {
+        // conflicts fire before the file is ever touched
+        let opts = ExpOpts {
+            trace_in: Some("nonexistent.json".into()),
+            clients: Some(vec![4.0]),
+            ..Default::default()
+        };
+        assert!(run_exp(&opts).unwrap_err().to_string().contains("--clients"));
+        let opts = ExpOpts {
+            trace_in: Some("nonexistent.json".into()),
+            rates: Some(vec![2.0]),
+            ..Default::default()
+        };
+        assert!(run_exp(&opts).unwrap_err().to_string().contains("rate axis"));
+        // a missing file is a plain error, not a panic
+        let opts = ExpOpts { trace_in: Some("nonexistent.json".into()), ..Default::default() };
+        assert!(run_exp(&opts).unwrap_err().to_string().contains("reading"));
     }
 
     #[test]

@@ -18,7 +18,9 @@ use felare::energy::{BatterySpec, RechargeProfile};
 use felare::exp::sweep::EngineKind;
 use felare::exp::{run_by_name, ExpOpts, EXPERIMENTS};
 use felare::model::machine::aws_machines;
-use felare::model::{ArrivalProcess, ClientPool, RateProfile, Scenario, Trace, WorkloadParams};
+use felare::model::{
+    ArrivalProcess, ClientPool, FaultPlan, RateProfile, Scenario, Trace, WorkloadParams,
+};
 use felare::runtime::{profile_eet, Runtime};
 use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS, EXTENDED_HEURISTICS};
 use felare::sched::trace::write_jsonl;
@@ -182,6 +184,7 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             .opt_optional("clients", "closed-loop: N clients instead of open-loop Poisson")
             .opt_optional("think-time", "closed-loop mean think time in seconds [default: 0.5]")
             .opt_optional("trace-in", "replay a gen-trace JSON file (ignores --rate/--tasks/--seed)")
+            .opt_optional("faults", "fault plan 'crash:mI@T+D,slow:mI@T+Dxα,…' (machine targets)")
             .opt("seed", "42", "PRNG seed")
             .opt_optional("scenario", "paper | aws | stress:M:T | path/to/scenario.json")
             .opt_optional("battery", "battery capacity in joules (depletion = system off)")
@@ -205,9 +208,21 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
         ));
     }
     let trace_out = args.get("trace-out").map(String::from);
+    // --faults is a parse-time error like --rates/--think-time: bad specs
+    // and out-of-range targets never reach the engine
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec).map_err(|e| fail!("--faults: {e}"))?;
+            plan.validate_targets(sc.n_machines(), None)
+                .map_err(|e| fail!("--faults: {e}"))?;
+            Some(plan)
+        }
+        None => None,
+    };
     let h = heuristic_by_name(&args.str("heuristic"), &sc)?;
     let mut sim = Simulation::new(&sc, h);
     sim.set_record_traces(trace_out.is_some());
+    sim.set_fault_plan(faults);
     let result = match (pool, &trace_in) {
         (Some(pool), _) => sim.run_closed(pool, n_tasks, seed),
         (None, Some(path)) => {
@@ -262,6 +277,12 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             result.mapping_events,
             result.makespan
         );
+        if args.get("faults").is_some() {
+            println!(
+                "  faults: {} crash aborts, {} recovered via retry, {} failed after retries",
+                result.crash_aborts, result.recovered, result.cancelled_failedabort
+            );
+        }
         if sc.battery.is_some() {
             match result.depleted_at {
                 Some(dead) => println!(
@@ -391,6 +412,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt_optional("expect-completion", "fail unless completion rate ≥ this fraction")
             .opt_optional("expect-p99", "fail unless the p99 completed sojourn ≤ this (seconds)")
             .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
+            .opt_optional("trace-in", "replay a gen-trace JSON (overrides --requests/--rate)")
             .opt("seed", "42", "PRNG seed")
             .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
             .flag("json", "emit the report as JSON"),
@@ -445,6 +467,29 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     if rate_profile.is_some() && explicit_rate.is_some() {
         return Err(fail!("--rate conflicts with --phases; pass one or the other"));
     }
+    let replay = match args.get("trace-in") {
+        Some(path) => {
+            if pool.is_some() {
+                return Err(fail!(
+                    "--trace-in (replay a fixed open-loop trace) conflicts with --clients \
+                     (closed loop); pick one model"
+                ));
+            }
+            if explicit_rate.is_some() || rate_profile.is_some() || explicit_load.is_some() {
+                return Err(fail!(
+                    "--trace-in replays the file's recorded arrivals; drop --rate/--phases/--load"
+                ));
+            }
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| fail!("--trace-in: reading {path}: {e}"))?;
+            let json = felare::util::json::Json::parse(&text)
+                .map_err(|e| fail!("--trace-in: parsing {path}: {e}"))?;
+            let trace = Trace::from_json(&json).map_err(|e| fail!("--trace-in: {path}: {e}"))?;
+            eprintln!("replaying {} tasks from {path}", trace.tasks.len());
+            Some(trace)
+        }
+        None => None,
+    };
     let trace_out = args.get("trace-out").map(String::from);
     let battery = parse_battery(&args)?.map(|(capacity, recharge)| BatterySpec {
         capacity,
@@ -460,6 +505,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         progress_every,
         record_traces: trace_out.is_some(),
         battery,
+        replay,
         ..Default::default()
     };
     // the arrival process, minus the synthetic default rate (needs capacity)
@@ -588,6 +634,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("clients", "`exp sweep`: closed-loop client-count grid, e.g. 4,8,16")
             .opt_optional("think-time", "`exp sweep`: mean think time for --clients [default: 0.5]")
             .opt_optional("out", "`exp bench`: artifact output path [default: BENCH_PR8.json]")
+            .opt_optional("faults", "`exp fault`: pin one plan 'crash:mI@T+D,…' over the intensity axis")
+            .opt_optional("trace-in", "`exp sweep`: replay a gen-trace JSON (replaces the rate axis)")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -611,6 +659,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         ("clients", &["sweep"]),
         ("think-time", &["sweep"]),
         ("out", &["bench"]),
+        ("faults", &["fault"]),
+        ("trace-in", &["sweep"]),
     ];
     for (flag, exps) in allowed {
         if args.get(flag).is_some() && !exps.contains(&name.as_str()) {
@@ -755,6 +805,21 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         Some(s) => Some(positive_count("jobs", s)?),
         None => None,
     };
+    // --faults syntax is a parse-time error (target ranges are checked by
+    // `exp fault` once the fleet size is known)
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            FaultPlan::parse(spec).map_err(|e| fail!("--faults: {e}"))?;
+            Some(spec.to_string())
+        }
+        None => None,
+    };
+    let trace_in = args.get("trace-in").map(String::from);
+    if trace_in.is_some() && (rates.is_some() || clients.is_some()) {
+        return Err(fail!(
+            "--trace-in replays one fixed workload; it conflicts with --rates/--clients"
+        ));
+    }
     let opts = ExpOpts {
         quick: args.is_set("quick"),
         traces,
@@ -773,6 +838,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         epoch,
         jobs,
         out: args.get("out").map(String::from),
+        faults,
+        trace_in,
     };
     run_by_name(&name, &opts)?;
     Ok(())

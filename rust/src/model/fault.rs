@@ -1,0 +1,679 @@
+//! Deterministic fault injection: a seedable, replayable [`FaultPlan`]
+//! describing when machines crash (and recover), when they transiently
+//! slow down, and when whole islands brown out.
+//!
+//! The plan is pure data — a list of finite time windows — parsed from a
+//! compact spec (`--faults`) or JSON, and *compiled* by the engines into
+//! ordinary calendar-queue events ([`MachineFaultEvent`]), so injection
+//! is bit-deterministic and costs nothing when no plan is set.
+//!
+//! # Spec grammar
+//!
+//! Comma-separated elements, one per fault window (plus an optional
+//! retry-budget override):
+//!
+//! ```text
+//! crash:m<idx>@<start>+<dur>          machine <idx> down for [start, start+dur)
+//! slow:m<idx>@<start>x<scale>+<dur>   machine <idx> runs at <scale>× speed
+//! brownout:i<idx>@<start>+<dur>       island <idx> loses power (fleet runs)
+//! retry:<budget>                      aborted-task retry budget (default 2)
+//! ```
+//!
+//! Example: `crash:m2@40+10,slow:m0@20x0.5+30,brownout:i3@60+20,retry:3`.
+//!
+//! All times are modeled seconds; windows are half-open `[start, end)`,
+//! must be finite, and two windows on the same target must not overlap.
+//! `slow` scales *speed*: `x0.5` doubles the actual execution time of
+//! tasks started inside the window (the mapper's EET expectations are
+//! deliberately left untouched — the slowdown is an unmodeled transient).
+//!
+//! # Semantics (engine side)
+//!
+//! * **Crash** — the machine aborts its running task (energy to the abort
+//!   instant is spent and counted wasted) and freezes its local queue;
+//!   the mapping pass sees it as infeasible (`free_slots = 0`,
+//!   `avail = ∞`). On recovery the machine re-enters nomination and its
+//!   frozen queue drains normally.
+//! * **Retry** — an aborted task re-enters the arriving queue if its
+//!   retry budget allows AND some machine's EET still fits the remaining
+//!   deadline slack; otherwise it terminates as `failed_abort`.
+//! * **Brownout** — at the fleet layer the island is excluded from
+//!   routing and its queued-not-started work migrates at the next epoch
+//!   boundary; inside the island every machine crashes for the window.
+
+use crate::model::task::Time;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Default bounded retry budget for crash-aborted tasks.
+pub const DEFAULT_RETRY_BUDGET: u32 = 2;
+
+/// What a fault window does to its target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Machine down: abort running work, freeze the queue.
+    Crash,
+    /// Machine runs at this speed factor (< 1 slows, > 1 speeds up);
+    /// applied to the *actual* execution of tasks started in the window.
+    Slow(f64),
+    /// Island-wide power loss (fleet runs): machines crash, router
+    /// excludes the island, queued work migrates.
+    Brownout,
+}
+
+impl FaultKind {
+    fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Slow(_) => "slow",
+            FaultKind::Brownout => "brownout",
+        }
+    }
+}
+
+/// One fault window: `target` is a machine index for crash/slow, an
+/// island index for brownout. Half-open `[start, start + duration)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultWindow {
+    pub kind: FaultKind,
+    pub target: usize,
+    pub start: Time,
+    pub duration: Time,
+}
+
+impl FaultWindow {
+    pub fn end(&self) -> Time {
+        self.start + self.duration
+    }
+
+    fn targets_machine(&self) -> bool {
+        !matches!(self.kind, FaultKind::Brownout)
+    }
+
+    fn overlaps(&self, other: &FaultWindow) -> bool {
+        self.start < other.end() && other.start < self.end()
+    }
+
+    fn to_spec(self) -> String {
+        let tag = if self.targets_machine() { 'm' } else { 'i' };
+        match self.kind {
+            FaultKind::Slow(scale) => format!(
+                "slow:{tag}{}@{}x{}+{}",
+                self.target, self.start, scale, self.duration
+            ),
+            _ => format!(
+                "{}:{tag}{}@{}+{}",
+                self.kind.name(),
+                self.target,
+                self.start,
+                self.duration
+            ),
+        }
+    }
+}
+
+/// A deterministic fault schedule (module docs for grammar + semantics).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    pub windows: Vec<FaultWindow>,
+    /// How many times a crash-aborted task may re-enter the arriving
+    /// queue before terminating as `failed_abort`.
+    pub retry_budget: u32,
+}
+
+/// What one compiled fault event does to one machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MachineFaultAction {
+    /// End of a crash window (processed first within a tie so adjacent
+    /// windows hand over cleanly).
+    Up,
+    /// End of a slow window: speed factor back to 1.
+    SlowOff,
+    /// Start of a slow window (speed factor carried by the plan window).
+    SlowOn,
+    /// Start of a crash window.
+    Down,
+}
+
+/// One machine-level fault transition the engine turns into a calendar
+/// event. `scale` is the speed factor for `SlowOn` (1.0 otherwise).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachineFaultEvent {
+    pub time: Time,
+    pub machine: usize,
+    pub action: MachineFaultAction,
+    pub scale: f64,
+}
+
+impl FaultPlan {
+    pub fn new(windows: Vec<FaultWindow>) -> FaultPlan {
+        FaultPlan { windows, retry_budget: DEFAULT_RETRY_BUDGET }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Parse the `--faults` spec (module docs). All validation that does
+    /// not need system dimensions happens here: unknown kinds, malformed
+    /// targets, negative / non-finite / overlapping windows, bad scales.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        if spec.trim().is_empty() {
+            return Err("empty fault spec (expected e.g. 'crash:m2@40+10')".into());
+        }
+        let mut windows = Vec::new();
+        let mut retry_budget = DEFAULT_RETRY_BUDGET;
+        let mut retry_seen = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (kind_s, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{part}': expected '<kind>:<target>@…'"))?;
+            if kind_s == "retry" {
+                if retry_seen {
+                    return Err(format!("fault '{part}': retry budget given twice"));
+                }
+                retry_seen = true;
+                retry_budget = rest
+                    .parse::<u32>()
+                    .map_err(|_| format!("fault '{part}': retry budget must be a whole number"))?;
+                continue;
+            }
+            let (target_s, timing) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': expected '@<start>' after the target"))?;
+            let (tag, idx_s) = target_s.split_at(target_s.len().min(1));
+            let target: usize = idx_s
+                .parse()
+                .map_err(|_| format!("fault '{part}': target '{target_s}' needs an index"))?;
+            let num = |name: &str, s: &str| -> Result<f64, String> {
+                let v: f64 = s
+                    .parse()
+                    .map_err(|_| format!("fault '{part}': {name} '{s}' is not a number"))?;
+                if !v.is_finite() {
+                    return Err(format!("fault '{part}': {name} must be finite (got {s})"));
+                }
+                Ok(v)
+            };
+            let (kind, start, duration) = match kind_s {
+                "crash" | "brownout" => {
+                    let (start_s, dur_s) = timing.split_once('+').ok_or_else(|| {
+                        format!("fault '{part}': expected '<start>+<duration>'")
+                    })?;
+                    let kind =
+                        if kind_s == "crash" { FaultKind::Crash } else { FaultKind::Brownout };
+                    (kind, num("start", start_s)?, num("duration", dur_s)?)
+                }
+                "slow" => {
+                    let (start_s, rest) = timing.split_once('x').ok_or_else(|| {
+                        format!("fault '{part}': slow windows need 'x<scale>' (e.g. @20x0.5+30)")
+                    })?;
+                    let (scale_s, dur_s) = rest.split_once('+').ok_or_else(|| {
+                        format!("fault '{part}': expected '<start>x<scale>+<duration>'")
+                    })?;
+                    let scale = num("scale", scale_s)?;
+                    if !(scale > 0.0) {
+                        return Err(format!(
+                            "fault '{part}': scale must be a positive speed factor (got {scale_s})"
+                        ));
+                    }
+                    (FaultKind::Slow(scale), num("start", start_s)?, num("duration", dur_s)?)
+                }
+                other => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{other}' (crash | slow | brownout | retry)"
+                    ))
+                }
+            };
+            let expect_tag = if matches!(kind, FaultKind::Brownout) { "i" } else { "m" };
+            if tag != expect_tag {
+                return Err(format!(
+                    "fault '{part}': {kind_s} targets '{expect_tag}<idx>' (got '{target_s}')",
+                    kind_s = kind_s
+                ));
+            }
+            if start < 0.0 {
+                return Err(format!("fault '{part}': start must be >= 0 (got {start})"));
+            }
+            if !(duration > 0.0) {
+                return Err(format!("fault '{part}': duration must be positive (got {duration})"));
+            }
+            windows.push(FaultWindow { kind, target, start, duration });
+        }
+        let plan = FaultPlan { windows, retry_budget };
+        plan.check_overlaps()?;
+        Ok(plan)
+    }
+
+    fn check_overlaps(&self) -> Result<(), String> {
+        for (i, a) in self.windows.iter().enumerate() {
+            for b in &self.windows[i + 1..] {
+                if a.targets_machine() == b.targets_machine()
+                    && a.target == b.target
+                    && a.overlaps(b)
+                {
+                    return Err(format!(
+                        "overlapping fault windows on {}{}: [{}, {}) and [{}, {})",
+                        if a.targets_machine() { 'm' } else { 'i' },
+                        a.target,
+                        a.start,
+                        a.end(),
+                        b.start,
+                        b.end()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The round-trippable spec string (`parse(to_spec(p)) == p`).
+    pub fn to_spec(&self) -> String {
+        let mut parts: Vec<String> = self.windows.iter().map(|w| w.to_spec()).collect();
+        if self.retry_budget != DEFAULT_RETRY_BUDGET {
+            parts.push(format!("retry:{}", self.retry_budget));
+        }
+        parts.join(",")
+    }
+
+    /// Validate targets against system dimensions: machine indices must
+    /// fit the (island-local) machine count; island indices need a fleet
+    /// (`n_islands = None` rejects any brownout window).
+    pub fn validate_targets(
+        &self,
+        n_machines: usize,
+        n_islands: Option<usize>,
+    ) -> Result<(), String> {
+        for w in &self.windows {
+            if w.targets_machine() {
+                if w.target >= n_machines {
+                    return Err(format!(
+                        "fault targets machine m{} but the system has {n_machines} machines",
+                        w.target
+                    ));
+                }
+            } else {
+                match n_islands {
+                    None => {
+                        return Err(format!(
+                            "brownout targets island i{} but this is a single-island run \
+                             (island brown-outs apply to fleet runs)",
+                            w.target
+                        ))
+                    }
+                    Some(k) if w.target >= k => {
+                        return Err(format!(
+                            "fault targets island i{} but the fleet has {k} islands",
+                            w.target
+                        ))
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile the machine-level windows into sorted fault transitions
+    /// (brownout windows are a fleet-layer concern and are skipped here).
+    /// Deterministic order: (time, machine, action).
+    pub fn machine_events(&self) -> Vec<MachineFaultEvent> {
+        let mut evs = Vec::with_capacity(2 * self.windows.len());
+        for w in &self.windows {
+            match w.kind {
+                FaultKind::Crash => {
+                    evs.push(MachineFaultEvent {
+                        time: w.start,
+                        machine: w.target,
+                        action: MachineFaultAction::Down,
+                        scale: 1.0,
+                    });
+                    evs.push(MachineFaultEvent {
+                        time: w.end(),
+                        machine: w.target,
+                        action: MachineFaultAction::Up,
+                        scale: 1.0,
+                    });
+                }
+                FaultKind::Slow(scale) => {
+                    evs.push(MachineFaultEvent {
+                        time: w.start,
+                        machine: w.target,
+                        action: MachineFaultAction::SlowOn,
+                        scale,
+                    });
+                    evs.push(MachineFaultEvent {
+                        time: w.end(),
+                        machine: w.target,
+                        action: MachineFaultAction::SlowOff,
+                        scale: 1.0,
+                    });
+                }
+                FaultKind::Brownout => {}
+            }
+        }
+        evs.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then(a.machine.cmp(&b.machine))
+                .then(a.action.cmp(&b.action))
+        });
+        evs
+    }
+
+    /// Brownout windows, `(island, start, end)`.
+    pub fn island_windows(&self) -> impl Iterator<Item = (usize, Time, Time)> + '_ {
+        self.windows.iter().filter_map(|w| match w.kind {
+            FaultKind::Brownout => Some((w.target, w.start, w.end())),
+            _ => None,
+        })
+    }
+
+    /// Is `island` inside a brownout window at time `t`?
+    pub fn island_down(&self, island: usize, t: Time) -> bool {
+        self.island_windows().any(|(i, s, e)| i == island && s <= t && t < e)
+    }
+
+    pub fn has_island_faults(&self) -> bool {
+        self.island_windows().next().is_some()
+    }
+
+    /// The island-local plan for a fleet member owning machines
+    /// `[machine_lo, machine_lo + n_machines)` (global indices): machine
+    /// windows are re-indexed locally, and a brownout on `island`
+    /// becomes a crash window on every local machine (the island-side
+    /// half of the brownout semantics; routing exclusion + migration
+    /// live in the fleet layer). Not overlap-checked — derived crash
+    /// windows may legitimately overlap explicit ones, and the engine's
+    /// down-depth counter handles that.
+    pub fn for_island(&self, island: usize, machine_lo: usize, n_machines: usize) -> FaultPlan {
+        let mut windows = Vec::new();
+        for w in &self.windows {
+            match w.kind {
+                FaultKind::Brownout if w.target == island => {
+                    for m in 0..n_machines {
+                        windows.push(FaultWindow {
+                            kind: FaultKind::Crash,
+                            target: m,
+                            start: w.start,
+                            duration: w.duration,
+                        });
+                    }
+                }
+                FaultKind::Brownout => {}
+                _ => {
+                    if w.target >= machine_lo && w.target < machine_lo + n_machines {
+                        let mut local = *w;
+                        local.target = w.target - machine_lo;
+                        windows.push(local);
+                    }
+                }
+            }
+        }
+        FaultPlan { windows, retry_budget: self.retry_budget }
+    }
+
+    /// A seeded random plan over the given system dimensions — the
+    /// property suite's driver and `exp fault`'s intensity generator.
+    /// `intensity` ∈ [0, 1] sets what fraction of machines crash / slow
+    /// and (when `n_islands` is set) what fraction of islands brown out;
+    /// windows land inside `[0, horizon)` and never overlap on a target.
+    pub fn random(
+        rng: &mut Pcg64,
+        n_machines: usize,
+        n_islands: Option<usize>,
+        intensity: f64,
+        horizon: Time,
+    ) -> FaultPlan {
+        assert!(horizon > 0.0 && horizon.is_finite());
+        let mut windows = Vec::new();
+        let n_crash = ((n_machines as f64) * intensity).round() as usize;
+        let n_slow = ((n_machines as f64) * intensity * 0.5).round() as usize;
+        let mut one_window = |windows: &mut Vec<FaultWindow>, kind: fn(&mut Pcg64) -> FaultKind,
+                              target: usize| {
+            let start = rng.range_f64(0.1 * horizon, 0.6 * horizon);
+            let duration = rng.range_f64(0.05 * horizon, 0.25 * horizon);
+            windows.push(FaultWindow { kind: kind(rng), target, start, duration });
+        };
+        // one window per chosen target keeps the plan trivially
+        // overlap-free; crash targets walk from the front, slow targets
+        // from the back so a machine gets at most one machine window
+        for m in 0..n_crash.min(n_machines) {
+            one_window(&mut windows, |_| FaultKind::Crash, m);
+        }
+        for i in 0..n_slow.min(n_machines.saturating_sub(n_crash)) {
+            one_window(
+                &mut windows,
+                |rng| FaultKind::Slow(rng.range_f64(0.3, 0.8)),
+                n_machines - 1 - i,
+            );
+        }
+        if let Some(k) = n_islands {
+            let n_brown = ((k as f64) * intensity).round() as usize;
+            for i in 0..n_brown.min(k) {
+                one_window(&mut windows, |_| FaultKind::Brownout, i);
+            }
+        }
+        FaultPlan::new(windows)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object()
+            .set("retry_budget", self.retry_budget as f64)
+            .set(
+                "windows",
+                Json::Array(
+                    self.windows
+                        .iter()
+                        .map(|w| {
+                            let j = Json::object()
+                                .set("kind", w.kind.name())
+                                .set("target", w.target as f64)
+                                .set("start", w.start)
+                                .set("duration", w.duration);
+                            match w.kind {
+                                FaultKind::Slow(s) => j.set("scale", s),
+                                _ => j,
+                            }
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let retry_budget = j.req_f64("retry_budget").map_err(|e| e.to_string())? as u32;
+        let mut windows = Vec::new();
+        let arr = j
+            .req("windows")
+            .map_err(|e| e.to_string())?
+            .as_array()
+            .ok_or("fault plan: 'windows' must be an array")?;
+        for w in arr {
+            let kind = match w.req_str("kind").map_err(|e| e.to_string())? {
+                "crash" => FaultKind::Crash,
+                "brownout" => FaultKind::Brownout,
+                "slow" => {
+                    let s = w.req_f64("scale").map_err(|e| e.to_string())?;
+                    if !(s > 0.0 && s.is_finite()) {
+                        return Err(format!("fault plan: slow scale must be positive (got {s})"));
+                    }
+                    FaultKind::Slow(s)
+                }
+                other => return Err(format!("fault plan: unknown kind '{other}'")),
+            };
+            let start = w.req_f64("start").map_err(|e| e.to_string())?;
+            let duration = w.req_f64("duration").map_err(|e| e.to_string())?;
+            if !(start >= 0.0 && start.is_finite() && duration > 0.0 && duration.is_finite()) {
+                return Err(format!(
+                    "fault plan: bad window [{start}, +{duration}) (start >= 0, duration > 0)"
+                ));
+            }
+            windows.push(FaultWindow {
+                kind,
+                target: w.req_f64("target").map_err(|e| e.to_string())? as usize,
+                start,
+                duration,
+            });
+        }
+        let plan = FaultPlan { windows, retry_budget };
+        plan.check_overlaps()?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p = FaultPlan::parse("crash:m2@40+10,slow:m0@20x0.5+30,brownout:i3@60+20").unwrap();
+        assert_eq!(p.windows.len(), 3);
+        assert_eq!(p.retry_budget, DEFAULT_RETRY_BUDGET);
+        assert_eq!(
+            p.windows[0],
+            FaultWindow { kind: FaultKind::Crash, target: 2, start: 40.0, duration: 10.0 }
+        );
+        assert_eq!(p.windows[1].kind, FaultKind::Slow(0.5));
+        assert_eq!(p.windows[2], FaultWindow {
+            kind: FaultKind::Brownout,
+            target: 3,
+            start: 60.0,
+            duration: 20.0
+        });
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in [
+            "crash:m2@40+10,slow:m0@20x0.5+30,brownout:i3@60+20",
+            "crash:m0@0+1",
+            "crash:m1@5+5,crash:m1@10+5", // adjacent, not overlapping
+            "slow:m3@1.5x2+4.25,retry:7",
+        ] {
+            let p = FaultPlan::parse(spec).unwrap();
+            let q = FaultPlan::parse(&p.to_spec()).unwrap();
+            assert_eq!(p, q, "{spec}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = FaultPlan::parse("crash:m2@40+10,slow:m0@20x0.5+30,brownout:i3@60+20,retry:5")
+            .unwrap();
+        let q = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("", "empty"),
+            ("meltdown:m0@1+1", "unknown kind"),
+            ("crash:i0@1+1", "targets 'm<idx>'"),
+            ("brownout:m0@1+1", "targets 'i<idx>'"),
+            ("crash:m0@-1+5", "start must be >= 0"),
+            ("crash:m0@1+0", "duration must be positive"),
+            ("crash:m0@1+-2", "duration must be positive"),
+            ("crash:m0@inf+1", "must be finite"),
+            ("slow:m0@1x0+5", "scale must be a positive"),
+            ("slow:m0@1xnan+5", "scale must be finite"),
+            ("slow:m0@1+5", "need 'x<scale>'"),
+            ("crash:m0@1+5,crash:m0@3+5", "overlapping"),
+            ("brownout:i1@0+10,brownout:i1@5+10", "overlapping"),
+            ("crash:mx@1+1", "needs an index"),
+            ("crash:m0", "expected '@<start>'"),
+            ("retry:2,retry:3", "twice"),
+            ("retry:-1", "whole number"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "spec '{spec}': got '{err}', wanted '{needle}'");
+        }
+    }
+
+    #[test]
+    fn same_target_different_class_may_overlap() {
+        // m1 (machine) and i1 (island) are different targets
+        FaultPlan::parse("crash:m1@0+10,brownout:i1@5+10").unwrap();
+        // crash and slow on the SAME machine may not overlap
+        assert!(FaultPlan::parse("crash:m1@0+10,slow:m1@5x0.5+10").is_err());
+    }
+
+    #[test]
+    fn target_validation_needs_dimensions() {
+        let p = FaultPlan::parse("crash:m2@1+1,brownout:i3@1+1").unwrap();
+        assert!(p.validate_targets(3, Some(4)).is_ok());
+        let err = p.validate_targets(2, Some(4)).unwrap_err();
+        assert!(err.contains("m2"), "{err}");
+        let err = p.validate_targets(3, Some(3)).unwrap_err();
+        assert!(err.contains("i3"), "{err}");
+        let err = p.validate_targets(3, None).unwrap_err();
+        assert!(err.contains("single-island"), "{err}");
+    }
+
+    #[test]
+    fn machine_events_compile_sorted_with_ups_first() {
+        let p = FaultPlan::parse("crash:m1@5+5,crash:m0@10+2,slow:m2@10x0.5+3,brownout:i0@0+50")
+            .unwrap();
+        let evs = p.machine_events();
+        // brownout contributes nothing at machine level here
+        assert_eq!(evs.len(), 6);
+        let times: Vec<f64> = evs.iter().map(|e| e.time).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
+        // at t=10: m1 Up before m0 Down (machine asc within equal action
+        // rank is irrelevant here — Up sorts before Down)
+        let at10: Vec<_> = evs.iter().filter(|e| e.time == 10.0).collect();
+        assert_eq!(at10[0].action, MachineFaultAction::Up);
+        assert_eq!(at10[0].machine, 1);
+    }
+
+    #[test]
+    fn island_windows_and_down_checks() {
+        let p = FaultPlan::parse("brownout:i2@10+5,crash:m0@0+4").unwrap();
+        assert!(p.has_island_faults());
+        assert!(p.island_down(2, 10.0));
+        assert!(p.island_down(2, 14.9));
+        assert!(!p.island_down(2, 15.0), "half-open window");
+        assert!(!p.island_down(1, 12.0));
+        assert!(!FaultPlan::parse("crash:m0@0+4").unwrap().has_island_faults());
+    }
+
+    #[test]
+    fn for_island_localizes_and_expands_brownouts() {
+        let p = FaultPlan::parse("crash:m5@2+3,slow:m1@4x0.5+2,brownout:i1@10+5,retry:4").unwrap();
+        // island 1 owns global machines [4, 8)
+        let local = p.for_island(1, 4, 4);
+        assert_eq!(local.retry_budget, 4);
+        // m5 → local m1; the slow window on global m1 belongs to island 0;
+        // the brownout becomes 4 local crash windows
+        let crashes: Vec<_> = local
+            .windows
+            .iter()
+            .filter(|w| w.kind == FaultKind::Crash)
+            .collect();
+        assert_eq!(crashes.len(), 5);
+        assert!(crashes.iter().any(|w| w.target == 1 && w.start == 2.0));
+        assert_eq!(crashes.iter().filter(|w| w.start == 10.0).count(), 4);
+        assert!(local.windows.iter().all(|w| w.kind != FaultKind::Slow(0.5)));
+        // island 0 gets the slow window and nothing else
+        let other = p.for_island(0, 0, 4);
+        assert_eq!(other.windows.len(), 1);
+        assert_eq!(other.windows[0].kind, FaultKind::Slow(0.5));
+    }
+
+    #[test]
+    fn random_plans_are_valid_and_deterministic() {
+        let mut rng = Pcg64::new(0xFA17);
+        let p = FaultPlan::random(&mut rng, 8, Some(4), 0.5, 100.0);
+        assert!(!p.is_empty());
+        p.check_overlaps().unwrap();
+        p.validate_targets(8, Some(4)).unwrap();
+        assert!(p.windows.iter().all(|w| w.start >= 0.0 && w.end() <= 100.0 + 25.0));
+        let q = FaultPlan::random(&mut Pcg64::new(0xFA17), 8, Some(4), 0.5, 100.0);
+        assert_eq!(p, q, "seeded generation is deterministic");
+        // round-trip the generated plan through the spec grammar too
+        let r = FaultPlan::parse(&p.to_spec()).unwrap();
+        assert_eq!(p, r);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod cloud;
 pub mod cvb;
 pub mod eet;
+pub mod fault;
 pub mod fleet;
 pub mod machine;
 pub mod scenario;
@@ -11,6 +12,7 @@ pub mod task;
 pub mod workload;
 
 pub use eet::EetMatrix;
+pub use fault::{FaultKind, FaultPlan, FaultWindow, MachineFaultAction, MachineFaultEvent};
 pub use fleet::FleetScenario;
 pub use machine::{MachineId, MachineSpec};
 pub use scenario::Scenario;

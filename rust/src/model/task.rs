@@ -68,6 +68,11 @@ pub enum CancelReason {
     /// arrived). No dynamic energy was ever spent on it
     /// (`energy::BatteryState` semantics).
     SystemOff,
+    /// A machine crash aborted the task mid-execution and it could not be
+    /// retried: either the bounded retry budget was spent, or no machine's
+    /// EET fits the remaining deadline slack (`model::FaultPlan`
+    /// semantics). The energy burnt before the abort is counted wasted.
+    FailedAbort,
 }
 
 /// Terminal state of a task.

@@ -154,6 +154,15 @@ pub struct MappingState {
     /// single allocation and scan cache-linearly in machine order.
     queues: RingQueues<QueuedTask>,
     running_expected_end: Vec<Option<Time>>,
+    /// Machines currently crashed by an armed fault plan
+    /// ([`crate::model::FaultPlan`], driven by the engines through
+    /// [`Self::set_down`]): a down machine presents infinite availability
+    /// and zero free slots to the heuristic — the ∞-rejection every
+    /// feasibility check already performs — so no new work lands on it
+    /// while its local queue stays frozen for recovery. All-false (and
+    /// never written) without a fault plan, keeping fault-free runs
+    /// bit-identical.
+    down: Vec<bool>,
     tracker: FairnessTracker,
     // ---- recycled buffers (no per-event allocation) --------------------
     snapshots: Vec<MachineSnapshot>,
@@ -227,6 +236,7 @@ impl MappingState {
                 },
             ),
             running_expected_end: vec![None; n_machines],
+            down: vec![false; n_machines],
             tracker,
             snapshots,
             snap_dirty: vec![true; n_machines],
@@ -250,6 +260,9 @@ impl MappingState {
         }
         for r in &mut self.running_expected_end {
             *r = None;
+        }
+        for d in &mut self.down {
+            *d = false;
         }
         self.tracker.reset();
         self.action_log.clear();
@@ -318,6 +331,15 @@ impl MappingState {
         self.arriving_deadline.push(task.deadline);
     }
 
+    /// Re-admit a crash-aborted task to the arriving queue *without*
+    /// re-counting its arrival for fairness — it already arrived once and
+    /// its aborted attempt reached no terminal outcome. Fault-plan
+    /// engines only ([`crate::model::FaultPlan`] retry semantics).
+    pub fn readmit(&mut self, task: Task) {
+        self.arriving.push(task);
+        self.arriving_deadline.push(task.deadline);
+    }
+
     /// Record a terminal execution outcome (completion or miss) for
     /// fairness. Drops routed through the mapper are recorded internally
     /// by [`Self::mapping_event`]; engines only report what *they*
@@ -344,6 +366,20 @@ impl MappingState {
     /// The running task on `machine` reached a terminal state.
     pub fn mark_idle(&mut self, machine: usize) {
         self.running_expected_end[machine] = None;
+    }
+
+    /// Mark `machine` crashed (`true`) or recovered (`false`) — called
+    /// only by fault-plan engines. The snapshot is rebuilt either way so
+    /// the availability mask appears (or clears) on the very next event.
+    pub fn set_down(&mut self, machine: usize, down: bool) {
+        self.down[machine] = down;
+        self.snap_dirty[machine] = true;
+    }
+
+    /// Whether `machine` is currently crashed (never true without an
+    /// armed fault plan).
+    pub fn is_down(&self, machine: usize) -> bool {
+        self.down[machine]
     }
 
     /// Drain tasks still waiting in the arriving queue at shutdown: each is
@@ -384,6 +420,45 @@ impl MappingState {
         }
     }
 
+    /// Fleet-migration drain (island brown-out): remove every
+    /// queued-but-never-started task — machine order, FCFS within a
+    /// queue, then the arriving queue — whose deadline exceeds
+    /// `min_deadline` (tasks too tight to survive the migration latency
+    /// stay behind and expire locally). Drained tasks are appended to
+    /// `out` and retracted from the fairness tracker: they leave this
+    /// island without a terminal outcome and are re-counted wherever the
+    /// fleet router lands them.
+    pub fn drain_migratable(&mut self, min_deadline: Time, out: &mut Vec<Task>) {
+        for m in 0..self.queues.n_queues() {
+            // pop every entry once; keepers cycle to the back, so FCFS
+            // order among them is preserved
+            for _ in 0..self.queues.len(m) {
+                let q = self.queues.pop_front(m).expect("length-bounded pop");
+                if q.task.deadline > min_deadline {
+                    self.snap_dirty[m] = true;
+                    self.tracker.on_retract(q.task.type_id);
+                    out.push(q.task);
+                } else {
+                    self.queues.push_back(m, q);
+                }
+            }
+        }
+        let mut w = 0;
+        for r in 0..self.arriving.len() {
+            let task = self.arriving[r];
+            if task.deadline > min_deadline {
+                self.tracker.on_retract(task.type_id);
+                out.push(task);
+            } else {
+                self.arriving[w] = task;
+                self.arriving_deadline[w] = self.arriving_deadline[r];
+                w += 1;
+            }
+        }
+        self.arriving.truncate(w);
+        self.arriving_deadline.truncate(w);
+    }
+
     /// One mapping event (paper §III: fired on every task arrival and
     /// every task completion): expire the arriving queue, snapshot the
     /// machines, run the heuristic, apply its actions. Mapper-side drops
@@ -406,6 +481,7 @@ impl MappingState {
             arriving_deadline,
             queues,
             running_expected_end,
+            down,
             tracker,
             snapshots,
             snap_dirty,
@@ -493,6 +569,13 @@ impl MappingState {
             snap.dyn_power = dyn_powers[m];
             snap.avail = avail;
             snap.free_slots = queue_slots.saturating_sub(snap.queued.len());
+            if down[m] {
+                // crashed machine: infinitely late and slot-less, so both
+                // feasibility-filtering and greedy heuristics route around
+                // it (its frozen queue stays mirrored for recovery)
+                snap.avail = f64::INFINITY;
+                snap.free_slots = 0;
+            }
         }
 
         // the incremental pass must be indistinguishable from a full
@@ -742,6 +825,63 @@ mod tests {
         st.mapping_event(0.0, &mut |_| drops += 1);
         assert_eq!(drops, 0);
         assert_eq!(st.queued_total(), 1);
+    }
+
+    #[test]
+    fn down_machines_are_masked_from_the_mapper() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "mm");
+        for m in 0..st.n_machines() {
+            st.set_down(m, true);
+            assert!(st.is_down(m));
+        }
+        st.push_arrival(task(0, 0, 0.0, 100.0));
+        st.mapping_event(0.0, &mut |_| {});
+        assert_eq!(st.queued_total(), 0, "no machine up: nothing assigned");
+        assert_eq!(st.arriving_len(), 1, "task defers in the arriving queue");
+        // recovery restores assignment — and only the recovered machine
+        // is eligible
+        st.set_down(0, false);
+        assert!(!st.is_down(0));
+        st.mapping_event(1.0, &mut |_| {});
+        assert_eq!(st.queued_total(), 1);
+        assert_eq!(st.queue_len(0), 1);
+    }
+
+    #[test]
+    fn reset_clears_down_marks() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "mm");
+        st.set_down(1, true);
+        st.reset();
+        assert!(!st.is_down(1));
+        st.push_arrival(task(0, 0, 0.0, 100.0));
+        st.mapping_event(0.0, &mut |_| {});
+        assert_eq!(st.queued_total(), 1, "all machines eligible again");
+    }
+
+    #[test]
+    fn drain_migratable_respects_min_deadline() {
+        let sc = Scenario::paper_synthetic();
+        let mut st = state_for(&sc, "mm");
+        // two tasks mapped into local queues, two still arriving; one of
+        // each pair has slack beyond the migration horizon
+        st.push_arrival(task(0, 0, 0.0, 100.0));
+        st.push_arrival(task(1, 1, 0.0, 5.0));
+        st.mapping_event(0.5, &mut |_| {});
+        assert_eq!(st.queued_total(), 2);
+        st.push_arrival(task(2, 2, 1.0, 100.0));
+        st.push_arrival(task(3, 3, 1.0, 5.0));
+        let mut out = Vec::new();
+        st.drain_migratable(10.0, &mut out);
+        let ids: Vec<u64> = out.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 2], "queued task drains before arriving task");
+        assert_eq!(st.queued_total(), 1, "tight-deadline queued task stays");
+        assert_eq!(st.arriving_len(), 1, "tight-deadline arriving task stays");
+        // the stayers keep working: the next event can still expire them
+        let mut drops = Vec::new();
+        st.mapping_event(20.0, &mut |d: Dropped| drops.push(d.task.id));
+        assert_eq!(drops, vec![3], "stale arriving task expires normally");
     }
 
     #[test]

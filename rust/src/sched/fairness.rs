@@ -126,6 +126,16 @@ impl FairnessTracker {
         }
     }
 
+    /// A task counted by [`Self::on_arrival`] left this island *without*
+    /// a terminal outcome (fleet brown-out migration): shrink the
+    /// denominator so cr_i keeps ranging over tasks the island actually
+    /// owns. The destination island re-counts the arrival on ingest.
+    pub fn on_retract(&mut self, ty: TaskTypeId) {
+        let s = &mut self.stats[ty.0];
+        debug_assert!(s.arrived > 0, "retract without a matching arrival");
+        s.arrived -= 1;
+    }
+
     /// cr_i under the configured window, or `None` below `min_samples`.
     pub fn rate(&self, ty: TaskTypeId) -> Option<f64> {
         let s = &self.stats[ty.0];

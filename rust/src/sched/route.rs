@@ -34,8 +34,10 @@ pub struct IslandView {
     /// Battery state of charge in [0, 1]; `None` on unbatteried islands
     /// (treated as fully charged by SoC-aware policies).
     pub soc: Option<f64>,
-    /// The island's battery crossed zero — it completes nothing anymore;
-    /// every task routed here is dead on arrival.
+    /// The island completes nothing right now: its battery crossed zero,
+    /// or the fleet engine masked it for an active brown-out window
+    /// (`sim::fleet` §Fault injection) — every task routed here is dead
+    /// on arrival.
     pub depleted: bool,
 }
 

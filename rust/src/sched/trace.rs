@@ -49,6 +49,9 @@ pub enum TraceOutcome {
     /// The battery depleted before the task could start: it was waiting
     /// (mapped or not) or had not even arrived when the system shut off.
     SystemOff,
+    /// A machine crash aborted the execution and the task could not be
+    /// retried (budget spent, or no EET fits the remaining slack).
+    FailedAbort,
 }
 
 impl TraceOutcome {
@@ -62,6 +65,7 @@ impl TraceOutcome {
             TraceOutcome::VictimDropped => "victim_dropped",
             TraceOutcome::Unmapped => "unmapped",
             TraceOutcome::SystemOff => "system_off",
+            TraceOutcome::FailedAbort => "failed_abort",
         }
     }
 
@@ -83,10 +87,14 @@ pub struct TraceRecord {
     pub deadline: Time,
     /// When the mapper assigned it to a local queue.
     pub mapped: Option<Time>,
-    /// When execution began.
+    /// When execution began (the *last* attempt's start for tasks that
+    /// were crash-aborted and retried).
     pub started: Option<Time>,
     /// Terminal time: completion, deadline abort, or drop.
     pub end: Time,
+    /// Crash-abort retries this task went through (0 everywhere unless a
+    /// fault plan is active).
+    pub retries: u32,
 }
 
 impl TraceRecord {
@@ -157,6 +165,8 @@ impl TraceRecord {
             // system-off kills waiting work wherever it sat: mapped-but-
             // queued entries and unmapped (even not-yet-arrived) requests
             TraceOutcome::SystemOff => self.started.is_none(),
+            // failed-abort only arises from a task a crash caught running
+            TraceOutcome::FailedAbort => self.started.is_some(),
         };
         if !phases_ok {
             return fail(format!("phases inconsistent with outcome {:?}", self.outcome));
@@ -181,6 +191,7 @@ impl TraceRecord {
             .set("execution", opt(self.execution()))
             .set("sojourn", self.sojourn())
             .set("slack", self.slack())
+            .set("retries", self.retries as f64)
     }
 }
 
@@ -293,6 +304,7 @@ pub fn record_of(
         mapped,
         started,
         end,
+        retries: 0,
     }
 }
 
@@ -346,6 +358,20 @@ mod tests {
         let mut r = completed();
         r.outcome = TraceOutcome::Expired; // expired records must have no phases
         assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn failed_abort_records_require_a_start_and_carry_retries() {
+        let mut r = completed();
+        r.outcome = TraceOutcome::FailedAbort;
+        r.retries = 2;
+        r.validate().unwrap();
+        assert_eq!(r.to_json().req_f64("retries").unwrap(), 2.0);
+        assert_eq!(r.to_json().req_str("outcome").unwrap(), "failed_abort");
+        r.started = None;
+        r.machine = None;
+        r.mapped = None;
+        assert!(r.validate().is_err(), "failed-abort implies the task ran");
     }
 
     #[test]

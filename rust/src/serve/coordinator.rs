@@ -55,7 +55,7 @@ use crate::error::{Error, Result};
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::scenario::RateWindow;
 use crate::model::task::{Task, TaskTypeId, Time};
-use crate::model::{ArrivalProcess, EetMatrix, RateProfile, Scenario};
+use crate::model::{ArrivalProcess, EetMatrix, RateProfile, Scenario, Trace};
 use crate::runtime::{
     profile_eet, Executor, InferenceBackend, PjrtBackend, Runtime, SyntheticBackend,
 };
@@ -121,6 +121,13 @@ pub struct ServeConfig {
     /// depletion shuts the system off mid-session (waiting requests
     /// cancel, generation stops, workers drain out).
     pub battery: Option<BatterySpec>,
+    /// Replay a recorded trace instead of generating arrivals (`serve
+    /// --trace-in`): the file's arrival times are realised on the session
+    /// clock and each request keeps its recorded slack (deadline −
+    /// arrival, scaled by `deadline_scale`), so wall-clock slip never
+    /// silently strands a request. Overrides `n_requests` and the
+    /// open-loop `arrival` knobs; rejected with closed-loop clients.
+    pub replay: Option<Trace>,
 }
 
 impl Default for ServeConfig {
@@ -143,6 +150,7 @@ impl Default for ServeConfig {
             progress_every: None,
             record_traces: false,
             battery: None,
+            replay: None,
         }
     }
 }
@@ -547,7 +555,31 @@ fn run_worker(
 
 /// Run a full serving session; blocks until every request is terminal.
 pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
-    if config.n_requests == 0 {
+    // a replay session serves exactly the recorded tasks; otherwise the
+    // configured request count
+    let n_requests = match &config.replay {
+        Some(trace) => {
+            if matches!(config.arrival, ArrivalProcess::ClosedLoop(_)) {
+                return Err(Error::Config(
+                    "trace replay (fixed open-loop arrivals) conflicts with closed-loop \
+                     clients"
+                        .into(),
+                ));
+            }
+            let mut prev = 0.0;
+            for t in &trace.tasks {
+                if !t.arrival.is_finite() || t.arrival < prev {
+                    return Err(Error::Config(
+                        "replay trace arrivals must be finite, non-negative and sorted".into(),
+                    ));
+                }
+                prev = t.arrival;
+            }
+            trace.tasks.len()
+        }
+        None => config.n_requests,
+    };
+    if n_requests == 0 {
         return Err(Error::Config("serve needs at least one request".into()));
     }
     if config.time_scale <= 0.0 || !config.time_scale.is_finite() {
@@ -573,6 +605,16 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
     let plan = plan(config)?;
     if let Some(spec) = &plan.battery {
         spec.validate().map_err(Error::Config)?;
+    }
+    if let Some(trace) = &config.replay {
+        for t in &trace.tasks {
+            if t.type_id.0 >= plan.n_types {
+                return Err(Error::Config(format!(
+                    "replay task {} has type {} but the backend serves {} types",
+                    t.id, t.type_id.0, plan.n_types
+                )));
+            }
+        }
     }
     let time_scale = config.time_scale;
     let n_types = plan.n_types;
@@ -602,7 +644,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
             cancelled: vec![0; n_types],
             latencies: Vec::new(),
             terminal: 0,
-            total_expected: config.n_requests,
+            total_expected: n_requests,
             done_generating: false,
             mapper_events: 0,
             mapper_time_total: 0.0,
@@ -687,8 +729,51 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 }
             }
         };
-        match (&config.arrival, &rate_profile) {
-            (ArrivalProcess::ClosedLoop(pool), _) => {
+        match (&config.replay, &config.arrival, &rate_profile) {
+            (Some(trace), _, _) => {
+                // ---- replay: the recorded arrivals realised on the
+                // session clock. Whenever the generator wakes behind
+                // schedule, every recorded arrival already due joins one
+                // batch (one lock acquisition, one mapping event), the
+                // same way the open-loop generator batches. Each request
+                // keeps its recorded slack so a late injection is not a
+                // silently pre-expired one. --------------------------------
+                let tasks = &trace.tasks;
+                let mut issued = 0usize;
+                while issued < tasks.len() {
+                    let due = tasks[issued].arrival;
+                    let t_now = now();
+                    if due > t_now {
+                        std::thread::sleep(Duration::from_secs_f64((due - t_now) * time_scale));
+                    }
+                    let t_arr = now().max(due);
+                    let mut batch = 1usize;
+                    while issued + batch < tasks.len() && tasks[issued + batch].arrival <= t_arr {
+                        batch += 1;
+                    }
+                    let mut st = lock.lock().unwrap();
+                    if st.system_off.is_some() {
+                        break; // battery depleted: no more requests
+                    }
+                    for rec in &tasks[issued..issued + batch] {
+                        let slack = config.deadline_scale * (rec.deadline - rec.arrival);
+                        let task = Task {
+                            id: rec.id,
+                            type_id: rec.type_id,
+                            arrival: t_arr,
+                            deadline: t_arr + slack,
+                            size_factor: rec.size_factor,
+                        };
+                        st.arrived[task.type_id.0] += 1;
+                        st.map.push_arrival(task);
+                    }
+                    st.coordinate(t_arr); // one mapping event for the batch
+                    maybe_snapshot(&mut st, t_arr);
+                    cv.notify_all();
+                    issued += batch;
+                }
+            }
+            (None, ArrivalProcess::ClosedLoop(pool), _) => {
                 // ---- closed loop: arrivals follow responses -------------
                 let think_dist =
                     (pool.think_time > 0.0).then(|| Exponential::new(1.0 / pool.think_time));
@@ -701,8 +786,8 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                     .collect();
                 let mut issued = 0usize;
                 let mut st = lock.lock().unwrap();
-                st.client_of.reserve(config.n_requests);
-                while issued < config.n_requests {
+                st.client_of.reserve(n_requests);
+                while issued < n_requests {
                     if st.system_off.is_some() {
                         break; // battery depleted: no more requests
                     }
@@ -748,7 +833,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                     issued += 1;
                 }
             }
-            (_, Some(rate_profile)) => {
+            (None, _, Some(rate_profile)) => {
                 // ---- open loop: Poisson at the (possibly time-varying)
                 // offered rate, independent of system state. Arrival times
                 // are drawn in modeled time; whenever the generator wakes
@@ -758,7 +843,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                 // batching instead of N lock round-trips. ---------------
                 let mut next_at = Exponential::new(rate_profile.rate_at(0.0)).sample(&mut rng);
                 let mut issued = 0usize;
-                while issued < config.n_requests {
+                while issued < n_requests {
                     let t_now = now();
                     if next_at > t_now {
                         std::thread::sleep(Duration::from_secs_f64(
@@ -770,7 +855,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                     let mut batch = 1usize;
                     next_at +=
                         Exponential::new(rate_profile.rate_at(next_at)).sample(&mut rng);
-                    while issued + batch < config.n_requests && next_at <= t_arr {
+                    while issued + batch < n_requests && next_at <= t_arr {
                         batch += 1;
                         next_at +=
                             Exponential::new(rate_profile.rate_at(next_at)).sample(&mut rng);
@@ -788,7 +873,7 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
                     issued += batch;
                 }
             }
-            (_, None) => unreachable!("open-loop arrivals always have a rate profile"),
+            (None, _, None) => unreachable!("open-loop arrivals always have a rate profile"),
         }
 
         // ---- graceful drain -----------------------------------------------
@@ -856,9 +941,15 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
     let report = ServeReport {
         backend: plan.backend_name.into(),
         heuristic: config.heuristic.clone(),
-        workload: config.arrival.describe(),
-        arrival_rate: config.arrival.mean_rate(),
-        n_requests: config.n_requests,
+        workload: match &config.replay {
+            Some(_) => format!("replay of {n_requests} recorded tasks"),
+            None => config.arrival.describe(),
+        },
+        arrival_rate: match &config.replay {
+            Some(trace) => trace.arrival_rate,
+            None => config.arrival.mean_rate(),
+        },
+        n_requests,
         duration,
         arrived: st.arrived.clone(),
         completed: st.completed.clone(),
@@ -913,6 +1004,58 @@ mod tests {
                 n_clients: 0,
                 think_time: 0.5,
             }),
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+    }
+
+    #[test]
+    fn replay_validation_rejects_conflicts_and_bad_traces() {
+        let mk = |arrivals: &[f64]| Trace {
+            tasks: arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| Task {
+                    id: i as u64,
+                    type_id: TaskTypeId(0),
+                    arrival: a,
+                    deadline: a + 5.0,
+                    size_factor: 1.0,
+                })
+                .collect(),
+            arrival_rate: 2.0,
+        };
+        // closed-loop clients conflict with a fixed replay
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            replay: Some(mk(&[0.0, 1.0])),
+            arrival: ArrivalProcess::ClosedLoop(crate::model::ClientPool {
+                n_clients: 2,
+                think_time: 0.1,
+            }),
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        // unsorted arrivals are rejected before any worker spawns
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            replay: Some(mk(&[1.0, 0.5])),
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        // an empty replay serves nothing
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            replay: Some(mk(&[])),
+            ..Default::default()
+        };
+        assert!(serve(&cfg).is_err());
+        // a task type beyond the backend's model set is rejected
+        let mut bad = mk(&[0.0]);
+        bad.tasks[0].type_id = TaskTypeId(99);
+        let cfg = ServeConfig {
+            backend: ServeBackend::Synthetic,
+            replay: Some(bad),
             ..Default::default()
         };
         assert!(serve(&cfg).is_err());

@@ -83,6 +83,15 @@ impl HeadlessServe {
         self.island.set_record_traces(on);
     }
 
+    /// Install (or clear) a deterministic fault-injection plan for the
+    /// next runs (see [`crate::model::FaultPlan`]). Same contract as
+    /// [`Simulation::set_fault_plan`](crate::sim::Simulation::set_fault_plan):
+    /// with the same plan the serve engine stays bit-identical to the
+    /// simulator, and `None` restores the fault-free engine exactly.
+    pub fn set_fault_plan(&mut self, plan: Option<crate::model::FaultPlan>) {
+        self.island.set_fault_plan(plan);
+    }
+
     /// Trace records of the latest run.
     pub fn trace_log(&self) -> &[TraceRecord] {
         self.island.trace_log()

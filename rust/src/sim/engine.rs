@@ -162,6 +162,15 @@ impl Simulation {
         self.island.set_record_traces(on);
     }
 
+    /// Install (or clear) a deterministic fault-injection plan for the
+    /// next runs (see [`crate::model::FaultPlan`]). Machine targets must
+    /// fit this scenario; island-level windows are rejected — split them
+    /// with [`crate::model::FaultPlan::for_island`] first. `None` (the
+    /// default) keeps every run bit-identical to the fault-free engine.
+    pub fn set_fault_plan(&mut self, plan: Option<crate::model::FaultPlan>) {
+        self.island.set_fault_plan(plan);
+    }
+
     /// Trace records of the latest run (empty unless
     /// [`Simulation::set_record_traces`] was enabled).
     pub fn trace_log(&self) -> &[TraceRecord] {

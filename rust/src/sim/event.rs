@@ -54,6 +54,13 @@ pub enum Event {
     /// the expiry releasing a client); open-loop runs never push one, so
     /// their event sequence is untouched.
     Expiry,
+    /// Injected fault transition: index into the island's compiled
+    /// [`MachineFaultEvent`] list (crash/recover/slow-on/slow-off). Only
+    /// pushed when a `FaultPlan` is armed at `begin`, so fault-free runs
+    /// see exactly the historical event stream.
+    ///
+    /// [`MachineFaultEvent`]: crate::model::fault::MachineFaultEvent
+    Fault { fault_idx: usize },
 }
 
 #[derive(Clone, Debug)]

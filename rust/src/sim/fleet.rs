@@ -39,11 +39,35 @@
 //! fleet run replays **bit-for-bit** regardless of worker count, epoch
 //! path (sharded / serial / take+par_map), or recycling (the module tests
 //! pin all three).
+//!
+//! # Fault injection & queued-work migration
+//!
+//! [`FleetSim::set_fault_plan`] installs a fleet-level
+//! [`FaultPlan`]: machine windows use *global* machine indices
+//! (islands own contiguous ranges, island order) and brown-out windows
+//! target whole islands. The plan is split per island with
+//! [`FaultPlan::for_island`] — a brown-out becomes a crash window on
+//! every machine of its island — so the island event loops replay faults
+//! locally and deterministically. At the fleet level a brown-out also
+//! masks its island from the router (`depleted` in the
+//! [`IslandView`]) at epoch granularity — the same one-epoch
+//! staleness the router already operates under.
+//!
+//! With [`FleetSim::set_migration`] enabled, every epoch boundary drains
+//! the *queued, not-started* work off browned-out (or battery-critical)
+//! islands and re-routes it: each migrated task re-enters routing at the
+//! next window with [`FleetSim::set_migration_cost`]'s latency added to
+//! its arrival and the radio energy debited from the destination's
+//! battery. Tasks whose deadline cannot survive the hop stay put and
+//! expire locally. Runs with island faults or migration use a dedicated
+//! serial epoch loop (fleet-level coordination defeats shard isolation);
+//! plans with only machine-level windows keep every parallel path, and
+//! without a plan the engine is bit-identical to the fault-free build.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
 
-use crate::model::{FleetScenario, Task, Time, Trace};
+use crate::model::{FaultPlan, FleetScenario, Task, Time, Trace};
 use crate::sched::registry::heuristic_by_name;
 use crate::sched::route::{IslandView, RoutePolicy};
 use crate::sim::island::{ExecModel, Island};
@@ -53,6 +77,18 @@ use crate::util::stats::Summary;
 
 /// Default synchronization-epoch length in seconds of virtual time.
 pub const DEFAULT_EPOCH: f64 = 10.0;
+
+/// Default per-task migration latency (virtual seconds): the hop a
+/// migrated task takes before it can arrive at its new island.
+pub const DEFAULT_MIGRATION_LATENCY: f64 = 0.1;
+
+/// Default radio energy debited to the destination island per migrated
+/// task (joules).
+pub const DEFAULT_MIGRATION_ENERGY: f64 = 0.2;
+
+/// State-of-charge floor below which a live batteried island sheds its
+/// queued work at the next epoch boundary (migration only).
+pub const MIGRATION_SOC_FLOOR: f64 = 0.05;
 
 /// Per-shard communication channels between the routing thread and one
 /// persistent shard worker. Each mutex is uncontended by construction:
@@ -82,6 +118,20 @@ pub struct FleetSim {
     jobs: usize,
     /// Use the pre-PR-8 take+par_map epoch loop (bench control group).
     take_par_map: bool,
+    /// Fleet-level fault plan (module docs §Fault injection). `None`
+    /// keeps the engine bit-identical to the fault-free build.
+    fault_plan: Option<FaultPlan>,
+    /// Drain queued work off down islands at epoch boundaries and
+    /// re-route it (module docs §Fault injection). Off by default.
+    migrate: bool,
+    /// Per-task migration hop latency (virtual seconds).
+    migration_latency: Time,
+    /// Per-task radio energy debited to the destination island (joules).
+    migration_energy: f64,
+    /// Migrations performed by the latest run.
+    mig_count: u64,
+    /// Radio energy those migrations debited (joules).
+    mig_energy_spent: f64,
     // ---- recycled buffers (no per-run allocation) ----------------------
     /// Master routing snapshots, island order.
     views: Vec<IslandView>,
@@ -91,6 +141,8 @@ pub struct FleetSim {
     staged: Vec<Vec<(usize, Task)>>,
     /// Per-shard worker channels.
     comms: Vec<ShardComm>,
+    /// Tasks drained off down islands, awaiting re-routing.
+    mig_buf: Vec<Task>,
 }
 
 impl FleetSim {
@@ -111,10 +163,17 @@ impl FleetSim {
             epoch: DEFAULT_EPOCH,
             jobs: default_jobs(),
             take_par_map: false,
+            fault_plan: None,
+            migrate: false,
+            migration_latency: DEFAULT_MIGRATION_LATENCY,
+            migration_energy: DEFAULT_MIGRATION_ENERGY,
+            mig_count: 0,
+            mig_energy_spent: 0.0,
             views: Vec::new(),
             routed: Vec::new(),
             staged: Vec::new(),
             comms: Vec::new(),
+            mig_buf: Vec::new(),
         })
     }
 
@@ -153,6 +212,52 @@ impl FleetSim {
         self.take_par_map = on;
     }
 
+    /// Install (or clear) a fleet-level fault plan (module docs §Fault
+    /// injection). Machine windows use global machine indices over the
+    /// islands' contiguous ranges; brown-outs target island indices. The
+    /// plan is split per island here, so the next `run` replays it
+    /// deterministically. Errors if any target is out of range.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) -> Result<(), String> {
+        match plan {
+            None => {
+                for isl in self.islands.iter_mut() {
+                    isl.set_fault_plan(None);
+                }
+                self.fault_plan = None;
+            }
+            Some(p) => {
+                let total: usize = self.islands.iter().map(|i| i.scenario().n_machines()).sum();
+                p.validate_targets(total, Some(self.islands.len()))?;
+                let mut lo = 0;
+                for (i, isl) in self.islands.iter_mut().enumerate() {
+                    let n_m = isl.scenario().n_machines();
+                    let local = p.for_island(i, lo, n_m);
+                    isl.set_fault_plan(if local.is_empty() { None } else { Some(local) });
+                    lo += n_m;
+                }
+                self.fault_plan = Some(p);
+            }
+        }
+        Ok(())
+    }
+
+    /// Enable queued-work migration off down islands at epoch boundaries
+    /// (module docs §Fault injection). Off by default; forces the serial
+    /// epoch loop while on.
+    pub fn set_migration(&mut self, on: bool) {
+        self.migrate = on;
+    }
+
+    /// Per-task migration cost: hop `latency` (virtual seconds) added to
+    /// a migrated task's arrival, and radio `energy` (joules) debited to
+    /// the destination island's battery.
+    pub fn set_migration_cost(&mut self, latency: Time, energy: f64) {
+        assert!(latency >= 0.0 && latency.is_finite(), "bad migration latency {latency}");
+        assert!(energy >= 0.0 && energy.is_finite(), "bad migration energy {energy}");
+        self.migration_latency = latency;
+        self.migration_energy = energy;
+    }
+
     /// Run one fleet-wide open-loop trace: route every arrival to an
     /// island, advance islands epoch-parallel, drain, and collect the
     /// per-island results (module docs).
@@ -167,13 +272,28 @@ impl FleetSim {
         self.views.extend(self.islands.iter().map(|i| i.view()));
         self.routed.clear();
         self.routed.resize(n, 0);
+        self.mig_count = 0;
+        self.mig_energy_spent = 0.0;
 
-        let results = if self.take_par_map {
+        // island faults and migration need fleet-level coordination every
+        // boundary (routing masks, drains) — a dedicated serial loop.
+        // Machine-only plans ride inside the islands and keep every path.
+        let coordinated =
+            self.migrate || self.fault_plan.as_ref().is_some_and(|p| p.has_island_faults());
+        let results = if coordinated {
+            self.run_epochs_faulty(trace)
+        } else if self.take_par_map {
             self.run_epochs_takepar(trace)
         } else {
             self.run_epochs_sharded(trace)
         };
-        FleetResult { policy: policy.to_string(), routed: self.routed.clone(), islands: results }
+        FleetResult {
+            policy: policy.to_string(),
+            routed: self.routed.clone(),
+            migrations: self.mig_count,
+            migration_energy: self.mig_energy_spent,
+            islands: results,
+        }
     }
 
     /// The pre-PR-8 epoch loop, verbatim: `mem::take` the island vec and
@@ -396,6 +516,95 @@ impl FleetSim {
         }
         self.islands.iter_mut().map(|isl| isl.finish()).collect()
     }
+
+    /// The fault-coordinated serial epoch loop: `run_epochs_serial` plus
+    /// brown-out routing masks and (with migration on) a queued-work
+    /// drain at every boundary (module docs §Fault injection). With no
+    /// island ever down and migration idle it routes and advances
+    /// exactly like the plain serial loop.
+    fn run_epochs_faulty(&mut self, trace: &Trace) -> Vec<SimResult> {
+        let n = self.islands.len();
+        let mut touched = vec![false; n];
+        let mut migrants = std::mem::take(&mut self.mig_buf);
+        let mut next = 0; // next trace task to route (sorted arrivals)
+        let mut t_end = self.epoch;
+        while next < trace.tasks.len() || !migrants.is_empty() {
+            let t_start = t_end - self.epoch;
+            // brown-out mask: a down island takes no new work this
+            // window. Epoch-granular — the same one-epoch staleness the
+            // router's snapshots already have. The mask washes out at the
+            // island's next view refresh (its recovery event guarantees
+            // one).
+            if let Some(p) = &self.fault_plan {
+                for i in 0..n {
+                    if p.island_down(i, t_start) {
+                        self.views[i].depleted = true;
+                    }
+                }
+            }
+            // re-route the tasks drained at the previous boundary: they
+            // already carry the post-hop arrival, and the radio debit
+            // hits the destination battery at send time
+            for task in migrants.drain(..) {
+                let dst = self.router.route(&self.views, &task);
+                assert!(dst < n, "router returned island {dst} of {n}");
+                self.views[dst].queued += 1;
+                self.routed[dst] += 1;
+                self.islands[dst].ingest(task);
+                self.islands[dst].debit_battery(self.migration_energy, t_start);
+                touched[dst] = true;
+                self.mig_count += 1;
+                self.mig_energy_spent += self.migration_energy;
+            }
+            while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
+                let task = trace.tasks[next];
+                let dst = self.router.route(&self.views, &task);
+                assert!(dst < n, "router returned island {dst} of {n}");
+                self.views[dst].queued += 1;
+                self.routed[dst] += 1;
+                self.islands[dst].ingest(task);
+                touched[dst] = true;
+                next += 1;
+            }
+            for (i, island) in self.islands.iter_mut().enumerate() {
+                let pending = island.has_event_before(t_end);
+                if pending {
+                    island.advance_to(t_end);
+                }
+                if pending || touched[i] {
+                    self.views[i] = island.view();
+                    touched[i] = false;
+                }
+            }
+            if self.migrate {
+                // shed the queued, not-started work of down islands; it
+                // re-enters routing at the top of the next window. Tasks
+                // that cannot survive the hop stay put and expire.
+                let min_deadline = t_end + self.migration_latency;
+                for i in 0..n {
+                    let browned =
+                        self.fault_plan.as_ref().is_some_and(|p| p.island_down(i, t_end));
+                    let v = &self.views[i];
+                    let sagging = !v.depleted && v.soc.is_some_and(|s| s < MIGRATION_SOC_FLOOR);
+                    if !(browned || sagging) {
+                        continue;
+                    }
+                    let start = migrants.len();
+                    let drained = self.islands[i].drain_migratable(min_deadline, &mut migrants);
+                    if drained > 0 {
+                        self.routed[i] -= drained as u64;
+                        for t in migrants[start..].iter_mut() {
+                            t.arrival = min_deadline;
+                        }
+                        self.views[i] = self.islands[i].view();
+                    }
+                }
+            }
+            t_end += self.epoch;
+        }
+        self.mig_buf = migrants;
+        self.islands.iter_mut().map(|isl| isl.finish()).collect()
+    }
 }
 
 /// Per-island results of one fleet run plus the routing tally, with
@@ -403,8 +612,14 @@ impl FleetSim {
 pub struct FleetResult {
     /// Router policy name the run used.
     pub policy: String,
-    /// Tasks routed to each island (== that island's arrivals).
+    /// Tasks routed to each island (== that island's arrivals; migration
+    /// moves a task's tally to its final island).
     pub routed: Vec<u64>,
+    /// Queued tasks migrated between islands (0 unless
+    /// [`FleetSim::set_migration`] was on and an island went down).
+    pub migrations: u64,
+    /// Radio energy those migrations debited (joules).
+    pub migration_energy: f64,
     /// Per-island [`SimResult`], island order.
     pub islands: Vec<SimResult>,
 }
@@ -476,10 +691,29 @@ impl FleetResult {
         self.total_completed() as f64 / e
     }
 
+    /// Tasks that completed after surviving at least one crash abort,
+    /// fleet-wide.
+    pub fn total_recovered(&self) -> u64 {
+        self.islands.iter().map(|r| r.recovered).sum()
+    }
+
+    /// Crash-aborted executions across the fleet.
+    pub fn total_crash_aborts(&self) -> u64 {
+        self.islands.iter().map(|r| r.crash_aborts).sum()
+    }
+
     /// Fleet conservation: every offered task was routed exactly once,
-    /// every island's arrival tally equals its routing tally, and every
-    /// island conserves internally.
+    /// every island's arrival tally equals its routing tally (migration
+    /// moves both tallies together, so the equation is migration-proof),
+    /// every island conserves internally, and the migration ledger is
+    /// sane.
     pub fn check_conservation(&self, offered: u64) -> Result<(), String> {
+        if !self.migration_energy.is_finite() || self.migration_energy < 0.0 {
+            return Err(format!("bad migration energy {}", self.migration_energy));
+        }
+        if self.migrations == 0 && self.migration_energy != 0.0 {
+            return Err("migration energy debited without a migration".into());
+        }
         let routed_total: u64 = self.routed.iter().sum();
         if routed_total != offered {
             return Err(format!("routed {routed_total} of {offered} offered tasks"));
@@ -529,6 +763,8 @@ mod tests {
             assert_eq!(ra.depleted_at, rb.depleted_at, "{tag}: island {i}");
             assert_eq!(ra.final_soc, rb.final_soc, "{tag}: island {i}");
             assert_eq!(ra.battery_spent, rb.battery_spent, "{tag}: island {i}");
+            assert_eq!(ra.crash_aborts, rb.crash_aborts, "{tag}: island {i}");
+            assert_eq!(ra.recovered, rb.recovered, "{tag}: island {i}");
         }
     }
 
@@ -628,6 +864,146 @@ mod tests {
         assert!(r.islands[0].depleted_at.is_none(), "mains island never depletes");
         assert!(r.fairness_spread() > 0.0, "dead islands drag their completion rates");
         assert!(r.tasks_per_joule() > 0.0);
+    }
+
+    // ---- faults & migration ------------------------------------------------
+
+    #[test]
+    fn migration_armed_without_faults_is_bit_identical() {
+        // unbatteried fleet, no plan: the fault-coordinated serial loop
+        // must route and advance exactly like the plain paths
+        let fleet = FleetScenario::stress_fleet(4, 4, 3);
+        let trace = trace_for(&fleet.islands[0], 1.5 * fleet.service_capacity(), 600, 37);
+        let run_with = |migrate: bool| {
+            let router = route_policy_by_name("least-queued", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_migration(migrate);
+            sim.run(&trace)
+        };
+        let plain = run_with(false);
+        let armed = run_with(true);
+        assert_islands_match(&plain, &armed, "migration armed, no faults");
+        assert_eq!(armed.migrations, 0);
+        assert_eq!(armed.migration_energy, 0.0);
+        armed.check_conservation(600).unwrap();
+    }
+
+    #[test]
+    fn machine_faults_use_global_indices_and_keep_parallel_paths() {
+        // machine m5 is island 1's local m1 in a 3×4 fleet: crash it
+        // while saturated and only island 1 sees aborts — identically on
+        // the serial, sharded and take+par_map paths (machine-only plans
+        // never force the coordinated loop)
+        let fleet = FleetScenario::stress_fleet(3, 4, 2);
+        let rate = 2.0 * fleet.service_capacity();
+        let trace = trace_for(&fleet.islands[0], rate, 900, 41);
+        let horizon = 900.0 / rate;
+        let spec = format!("crash:m5@{:.1}+{:.1}", 0.3 * horizon, 0.2 * horizon);
+        let plan = crate::model::FaultPlan::parse(&spec).unwrap();
+        let run_with = |jobs: usize, takepar: bool| {
+            let router = route_policy_by_name("least-queued", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_fault_plan(Some(plan.clone())).unwrap();
+            sim.set_jobs(jobs);
+            sim.set_take_par_map(takepar);
+            sim.run(&trace)
+        };
+        let a = run_with(1, false);
+        let b = run_with(3, false);
+        let c = run_with(2, true);
+        assert_islands_match(&a, &b, "serial vs sharded");
+        assert_islands_match(&a, &c, "serial vs take+par_map");
+        a.check_conservation(900).unwrap();
+        assert!(a.islands[1].crash_aborts >= 1, "crashed machine was mid-task");
+        assert_eq!(a.islands[0].crash_aborts, 0, "fault is island 1's alone");
+        assert_eq!(a.islands[2].crash_aborts, 0, "fault is island 1's alone");
+    }
+
+    #[test]
+    fn fleet_fault_plan_rejects_out_of_range_targets() {
+        let fleet = FleetScenario::stress_fleet(2, 4, 2); // 8 machines, 2 islands
+        let router = route_policy_by_name("least-queued", 1).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        let bad_machine = crate::model::FaultPlan::parse("crash:m8@5+5").unwrap();
+        assert!(sim.set_fault_plan(Some(bad_machine)).is_err());
+        let bad_island = crate::model::FaultPlan::parse("brownout:i2@5+5").unwrap();
+        assert!(sim.set_fault_plan(Some(bad_island)).is_err());
+        let ok = crate::model::FaultPlan::parse("crash:m7@5+5,brownout:i1@20+5").unwrap();
+        sim.set_fault_plan(Some(ok)).unwrap();
+    }
+
+    #[test]
+    fn brownout_migration_beats_no_migration() {
+        // three staggered brown-outs, each far longer than the ~2·ē
+        // deadline slack: frozen queued work cannot survive locally, so
+        // shedding it at the boundary must win on completions
+        let fleet = FleetScenario::stress_fleet(4, 4, 3);
+        let rate = 1.3 * fleet.service_capacity();
+        let n = 1200u64;
+        let trace = trace_for(&fleet.islands[0], rate, n as usize, 43);
+        let horizon = n as f64 / rate;
+        let stagger = [(1usize, 0.2), (2usize, 0.45), (3usize, 0.7)];
+        let windows = stagger
+            .iter()
+            .map(|&(isl, frac)| FaultWindow {
+                kind: FaultKind::Brownout,
+                target: isl,
+                start: frac * horizon,
+                duration: 0.2 * horizon,
+            })
+            .collect();
+        let plan = crate::model::FaultPlan::new(windows);
+        let run_with = |migrate: bool| {
+            let router = route_policy_by_name("least-queued", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_epoch(0.25); // drain well inside the deadline slack
+            sim.set_migration_cost(0.05, 0.2);
+            sim.set_fault_plan(Some(plan.clone())).unwrap();
+            sim.set_migration(migrate);
+            sim.run(&trace)
+        };
+        let ctl = run_with(false);
+        let mig = run_with(true);
+        ctl.check_conservation(n).unwrap();
+        mig.check_conservation(n).unwrap();
+        assert_eq!(ctl.migrations, 0, "control must not migrate");
+        assert!(mig.migrations > 0, "brown-outs must shed queued work");
+        assert!(mig.migration_energy > 0.0);
+        assert!(
+            mig.total_completed() > ctl.total_completed(),
+            "migration {} vs control {}",
+            mig.total_completed(),
+            ctl.total_completed()
+        );
+    }
+
+    #[test]
+    fn battery_floor_sheds_queued_work_before_depletion() {
+        // mixed batteries under heavy overload: islands crossing the SoC
+        // floor shed queued work instead of taking it to the grave. The
+        // SoC-blind router keeps feeding the dying islands, so their
+        // queues are provably non-empty at the crossing.
+        let fleet = FleetScenario::stress_fleet(6, 4, 3).with_mixed_batteries(200.0);
+        let rate = 1.8 * fleet.service_capacity();
+        let trace = trace_for(&fleet.islands[0], rate, 1500, 47);
+        let run_with = |migrate: bool| {
+            let router = route_policy_by_name("least-queued", 1).unwrap();
+            let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+            sim.set_epoch(0.25);
+            sim.set_migration(migrate);
+            sim.run(&trace)
+        };
+        let ctl = run_with(false);
+        let mig = run_with(true);
+        ctl.check_conservation(1500).unwrap();
+        mig.check_conservation(1500).unwrap();
+        assert!(mig.migrations > 0, "dying islands must shed queued work");
+        assert!(
+            mig.total_completed() >= ctl.total_completed(),
+            "shedding must not lose completions: {} vs {}",
+            mig.total_completed(),
+            ctl.total_completed()
+        );
     }
 
     #[test]

@@ -50,10 +50,15 @@
 //! deterministic result field is bit-identical to a fresh island's
 //! (see `sim::engine` module docs for the full statement).
 
+use std::collections::HashMap;
+
 use crate::energy::BatteryState;
 use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::task::{CancelReason, Outcome, Task, TaskTypeId, Time};
-use crate::model::{ClientPool, EetMatrix, Scenario, TaskColumns, Trace};
+use crate::model::{
+    ClientPool, EetMatrix, FaultPlan, MachineFaultAction, MachineFaultEvent, Scenario,
+    TaskColumns, Trace,
+};
 use crate::runtime::{InferenceBackend, SyntheticBackend};
 use crate::sched::dispatch::{Dropped, MappingState};
 use crate::sched::fairness::FairnessTracker;
@@ -229,6 +234,24 @@ pub struct Island {
     /// Recycled SoA projection of the current open trace: the bulk
     /// arrival-scheduling pass reads the contiguous `arrival` column.
     cols: TaskColumns,
+    // ---- fault injection (inert without an armed plan) -----------------
+    /// The armed fault plan (`None` = fault-free: no `Event::Fault` ever
+    /// enters the calendar and every fault branch in the loops below is a
+    /// never-taken check — existing runs stay bit-identical).
+    fault_plan: Option<FaultPlan>,
+    /// `fault_plan` compiled to sorted per-machine transitions
+    /// ([`FaultPlan::machine_events`]); `Event::Fault` carries an index
+    /// into this list.
+    fault_events: Vec<MachineFaultEvent>,
+    /// Per-machine crash-window depth — brownout-derived windows may
+    /// overlap explicit crashes on the same machine; it is down while the
+    /// depth is positive.
+    down_depth: Vec<u32>,
+    /// Per-machine speed factor applied to tasks *started* now (slow
+    /// windows; 1.0 = nominal).
+    speed: Vec<f64>,
+    /// Crash-abort count per task id (deadline-aware retry bookkeeping).
+    aborts: HashMap<u64, u32>,
     // ---- incremental-run state (begin/ingest/advance_to/finish) --------
     now: Time,
     dead: bool,
@@ -283,6 +306,11 @@ impl Island {
             client_of: Vec::new(),
             released: Releases::default(),
             cols: TaskColumns::default(),
+            fault_plan: None,
+            fault_events: Vec::new(),
+            down_depth: vec![0; scenario.n_machines()],
+            speed: vec![1.0; scenario.n_machines()],
+            aborts: HashMap::new(),
             now: 0.0,
             dead: false,
             inflight: None,
@@ -324,6 +352,26 @@ impl Island {
     /// Emit one [`TraceRecord`] per task at its terminal event.
     pub fn set_record_traces(&mut self, on: bool) {
         self.trace_log.on = on;
+    }
+
+    /// Arm (or clear) a fault-injection plan for subsequent runs. Island
+    /// brown-out windows must be compiled to per-machine crash windows
+    /// first ([`FaultPlan::for_island`]) — the fleet engine does this when
+    /// splitting a fleet-level plan; single-island drivers reject island
+    /// targets at the CLI. With `None` (the default) the engine is
+    /// bit-identical to one built before fault injection existed.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        if let Some(p) = &plan {
+            p.validate_targets(self.scenario.n_machines(), None)
+                .expect("fault plan does not fit this island");
+        }
+        self.fault_events = plan.as_ref().map(|p| p.machine_events()).unwrap_or_default();
+        self.fault_plan = plan;
+    }
+
+    /// The armed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault_plan.as_ref()
     }
 
     /// Trace records of the latest run.
@@ -369,6 +417,18 @@ impl Island {
         self.client_of.clear();
         self.released.buf.clear();
         self.released.on = false;
+        for d in &mut self.down_depth {
+            *d = 0;
+        }
+        for s in &mut self.speed {
+            *s = 1.0;
+        }
+        self.aborts.clear();
+        // fault transitions enter the calendar before any arrival so they
+        // pop first (lower seq) within same-instant ties
+        for (i, fe) in self.fault_events.iter().enumerate() {
+            self.events.push(fe.time, Event::Fault { fault_idx: i });
+        }
         self.now = 0.0;
         self.dead = false;
         self.inflight = Some(SimResult::empty(
@@ -417,12 +477,19 @@ impl Island {
             exec,
             gen_tasks,
             released,
+            fault_plan,
+            fault_events,
+            down_depth,
+            speed,
+            aborts,
             now,
             dead,
             inflight,
             ..
         } = self;
         let result = inflight.as_mut().expect("advance_to outside begin/finish");
+        let faults_armed = !fault_events.is_empty();
+        let retry_budget = fault_plan.as_ref().map_or(0, |p| p.retry_budget);
 
         let mut pending: Option<Event> = None;
         while events.peek_time().is_some_and(|t| t < t_end) {
@@ -445,17 +512,45 @@ impl Island {
             loop {
                 match ev {
                     Event::Arrival { trace_idx } => mapping.push_arrival(gen_tasks[trace_idx]),
-                    Event::Finish { machine_idx } => finish_running(
-                        &mut machines[machine_idx],
-                        machine_idx,
+                    Event::Finish { machine_idx } => {
+                        // a crash may have aborted the execution this event
+                        // belonged to — skip the stale Finish. Exact f64
+                        // compare: a live finish pops at exactly the end it
+                        // was pushed with.
+                        let stale = faults_armed
+                            && match &machines[machine_idx].running {
+                                Some(r) => r.end != *now,
+                                None => true,
+                            };
+                        if !stale {
+                            finish_running(
+                                &mut machines[machine_idx],
+                                machine_idx,
+                                *now,
+                                result,
+                                mapping,
+                                trace_log,
+                                released,
+                                battery,
+                                aborts,
+                            );
+                        }
+                    }
+                    Event::Expiry => {}
+                    Event::Fault { fault_idx } => apply_fault(
+                        fault_events[fault_idx],
+                        retry_budget,
                         *now,
-                        result,
+                        machines,
+                        down_depth,
+                        speed,
+                        aborts,
                         mapping,
                         trace_log,
-                        released,
                         battery,
+                        released,
+                        result,
                     ),
-                    Event::Expiry => {}
                 }
                 match events.peek_time() {
                     Some(pt) if pt.total_cmp(&t).is_eq() => {
@@ -476,6 +571,8 @@ impl Island {
                 result,
                 *record_overhead_samples,
                 overhead_samples,
+                speed,
+                aborts,
             );
         }
 
@@ -484,7 +581,7 @@ impl Island {
             // cancel every not-yet-processed arrival against a dead system —
             // the interrupted event first, then the rest of the queue, in
             // place off the recycled queue (no iterator-chain temporaries)
-            system_off_drain(*now, machines, mapping, trace_log, result);
+            system_off_drain(*now, machines, mapping, trace_log, result, aborts);
             let t_dead = *now;
             let mut next = pending;
             while let Some(ev) = next {
@@ -505,7 +602,8 @@ impl Island {
     pub fn finish(&mut self) -> SimResult {
         self.advance_to(f64::INFINITY);
         let mut result = self.inflight.take().expect("finish outside begin");
-        let Island { scenario: sc, machines, mapping, trace_log, battery, now, dead, .. } = self;
+        let Island { scenario: sc, machines, mapping, trace_log, battery, aborts, now, dead, .. } =
+            self;
         if !*dead {
             // anything still waiting dies at its own deadline
             let now = *now;
@@ -513,7 +611,9 @@ impl Island {
                 let at = task.deadline.max(now);
                 let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
                 result.record(task.type_id.0, &out);
-                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+                let mut rec = record_of(&task, TraceOutcome::Unmapped, None, None, None, at);
+                rec.retries = retries_of(aborts, task.id);
+                trace_log.push(rec);
             });
         }
         finalize(*now, sc, machines, mapping, battery.as_ref(), trace_log, &mut result);
@@ -544,6 +644,36 @@ impl Island {
         }
     }
 
+    // ---- fleet migration (brown-out work retraction) -----------------------
+
+    /// Drain queued-but-never-started work for fleet migration: every
+    /// task in a local queue or the arriving queue whose deadline exceeds
+    /// `min_deadline` is removed, retracted from this island's arrival
+    /// count and fairness denominators, and appended to `out`. The
+    /// destination island re-counts each task on [`Island::ingest`], so
+    /// every offered task still reaches exactly one terminal outcome
+    /// (fleet conservation). Running tasks never migrate. Returns how
+    /// many tasks were drained.
+    pub fn drain_migratable(&mut self, min_deadline: Time, out: &mut Vec<Task>) -> usize {
+        let start = out.len();
+        self.mapping.drain_migratable(min_deadline, out);
+        let result = self.inflight.as_mut().expect("drain_migratable outside begin/finish");
+        for t in &out[start..] {
+            result.arrived[t.type_id.0] -= 1;
+        }
+        out.len() - start
+    }
+
+    /// Debit `joules` straight off the battery at `now` (migration radio
+    /// cost, landed on the *receiving* island). No-op when unbatteried;
+    /// a debit that empties the store kills the island on its next event
+    /// pop, exactly like any other depletion.
+    pub fn debit_battery(&mut self, joules: f64, now: Time) {
+        if let Some(bat) = self.battery.as_mut() {
+            bat.debit(joules, now);
+        }
+    }
+
     // ---- the monolithic event loop -----------------------------------------
 
     fn run_impl(&mut self, workload: WorkloadRef) -> SimResult {
@@ -562,6 +692,11 @@ impl Island {
             client_of,
             released,
             cols,
+            fault_plan,
+            fault_events,
+            down_depth,
+            speed,
+            aborts,
             inflight,
             ..
         } = self;
@@ -591,6 +726,21 @@ impl Island {
         gen_tasks.clear();
         client_of.clear();
         released.buf.clear();
+        for d in down_depth.iter_mut() {
+            *d = 0;
+        }
+        for s in speed.iter_mut() {
+            *s = 1.0;
+        }
+        aborts.clear();
+        let faults_armed = !fault_events.is_empty();
+        let retry_budget = fault_plan.as_ref().map_or(0, |p| p.retry_budget);
+        // fault transitions enter the calendar before any arrival so they
+        // pop first (lower seq) within same-instant ties (the bulk
+        // arrival load below preserves pre-existing entries)
+        for (i, fe) in fault_events.iter().enumerate() {
+            events.push(fe.time, Event::Fault { fault_idx: i });
+        }
 
         let mut closed: Option<ClosedGen> = None;
         let open_trace: Option<&Trace> = match workload {
@@ -650,18 +800,43 @@ impl Island {
                         mapping.push_arrival(task);
                     }
                     Event::Finish { machine_idx } => {
-                        finish_running(
-                            &mut machines[machine_idx],
-                            machine_idx,
-                            now,
-                            &mut result,
-                            mapping,
-                            trace_log,
-                            released,
-                            battery,
-                        );
+                        // skip Finish events whose execution a crash
+                        // aborted (see `advance_to` for the exact-compare
+                        // rationale)
+                        let stale = faults_armed
+                            && match &machines[machine_idx].running {
+                                Some(r) => r.end != now,
+                                None => true,
+                            };
+                        if !stale {
+                            finish_running(
+                                &mut machines[machine_idx],
+                                machine_idx,
+                                now,
+                                &mut result,
+                                mapping,
+                                trace_log,
+                                released,
+                                battery,
+                                aborts,
+                            );
+                        }
                     }
                     Event::Expiry => {} // wake-up only; the mapping event below expires
+                    Event::Fault { fault_idx } => apply_fault(
+                        fault_events[fault_idx],
+                        retry_budget,
+                        now,
+                        machines,
+                        down_depth,
+                        speed,
+                        aborts,
+                        mapping,
+                        trace_log,
+                        battery,
+                        released,
+                        &mut result,
+                    ),
                 }
                 match events.peek_time() {
                     Some(pt) if pt.total_cmp(&t).is_eq() => {
@@ -685,6 +860,8 @@ impl Island {
                 &mut result,
                 *record_overhead_samples,
                 overhead_samples,
+                speed,
+                aborts,
             );
 
             if let Some(gen) = closed.as_mut() {
@@ -717,7 +894,7 @@ impl Island {
         if battery.as_ref().is_some_and(|b| b.is_depleted()) {
             // ---- system off: the battery hit zero at `now` --------------
             let t_dead = now;
-            system_off_drain(t_dead, machines, mapping, trace_log, &mut result);
+            system_off_drain(t_dead, machines, mapping, trace_log, &mut result, aborts);
             // unprocessed events: arrivals hit a dead system (Finish/Expiry
             // events belong to work already accounted above)
             let is_closed = closed.is_some();
@@ -750,7 +927,9 @@ impl Island {
                 let at = task.deadline.max(now);
                 let out = Outcome::Cancelled { reason: CancelReason::DeadlineExpired, at };
                 result.record(task.type_id.0, &out);
-                trace_log.push(record_of(&task, TraceOutcome::Unmapped, None, None, None, at));
+                let mut rec = record_of(&task, TraceOutcome::Unmapped, None, None, None, at);
+                rec.retries = retries_of(aborts, task.id);
+                trace_log.push(rec);
             });
         }
 
@@ -776,11 +955,26 @@ fn mapping_round(
     result: &mut SimResult,
     record_overhead_samples: bool,
     overhead_samples: &mut Vec<f64>,
+    speed: &[f64],
+    aborts: &HashMap<u64, u32>,
 ) {
     // start queued work freed by the event (before mapping so
     // availability estimates are current)
     for (mi, m) in machines.iter_mut().enumerate() {
-        try_start(m, mi, now, events, result, mapping, trace_log, released, battery, exec);
+        try_start(
+            m,
+            mi,
+            now,
+            events,
+            result,
+            mapping,
+            trace_log,
+            released,
+            battery,
+            exec,
+            speed,
+            aborts,
+        );
     }
 
     // the mapping event (shared driver: expiry, snapshots, heuristic,
@@ -793,7 +987,9 @@ fn mapping_round(
         result.record(d.task.type_id.0, &out);
         let (machine, mapped) = d.mapped.unzip();
         let outcome = d.kind.trace_outcome();
-        trace_log.push(record_of(&d.task, outcome, machine, mapped, None, now));
+        let mut rec = record_of(&d.task, outcome, machine, mapped, None, now);
+        rec.retries = retries_of(aborts, d.task.id);
+        trace_log.push(rec);
         released.push(d.task.id, now);
     });
     result.mapping_events += 1;
@@ -806,7 +1002,126 @@ fn mapping_round(
 
     // idle machines may now have work
     for (mi, m) in machines.iter_mut().enumerate() {
-        try_start(m, mi, now, events, result, mapping, trace_log, released, battery, exec);
+        try_start(
+            m,
+            mi,
+            now,
+            events,
+            result,
+            mapping,
+            trace_log,
+            released,
+            battery,
+            exec,
+            speed,
+            aborts,
+        );
+    }
+}
+
+/// Crash-abort retries `task_id` went through so far. Zero-cost on the
+/// fault-free path: the map is empty and the first branch never misses.
+#[inline]
+fn retries_of(aborts: &HashMap<u64, u32>, task_id: u64) -> u32 {
+    if aborts.is_empty() {
+        0
+    } else {
+        aborts.get(&task_id).copied().unwrap_or(0)
+    }
+}
+
+/// Apply one compiled fault transition (crash / recover / slow-on /
+/// slow-off) to machine state.
+///
+/// A crash aborts the running task mid-execution: the energy burnt so far
+/// is real (and wasted), the machine's local queue freezes in place, and
+/// the mapper sees the machine as infinitely late
+/// ([`MappingState::set_down`]). The aborted task re-enters the arriving
+/// queue — without re-counting its arrival — iff its bounded retry budget
+/// allows it *and* the fastest machine's EET still fits the remaining
+/// deadline slack; otherwise it terminates as `FailedAbort`. Brown-out
+/// windows arrive here pre-compiled to per-machine crashes
+/// ([`FaultPlan::for_island`]); the depth counter makes overlapping
+/// derived and explicit windows compose.
+#[allow(clippy::too_many_arguments)]
+fn apply_fault(
+    fe: MachineFaultEvent,
+    retry_budget: u32,
+    now: Time,
+    machines: &mut [MachState],
+    down_depth: &mut [u32],
+    speed: &mut [f64],
+    aborts: &mut HashMap<u64, u32>,
+    mapping: &mut MappingState,
+    trace_log: &mut TraceLog,
+    battery: &mut Option<BatteryState>,
+    released: &mut Releases,
+    result: &mut SimResult,
+) {
+    let mi = fe.machine;
+    match fe.action {
+        MachineFaultAction::Down => {
+            down_depth[mi] += 1;
+            if down_depth[mi] > 1 {
+                return; // already down (overlapping derived window)
+            }
+            mapping.set_down(mi, true);
+            let m = &mut machines[mi];
+            let Some(r) = m.running.take() else {
+                return;
+            };
+            // abort mid-execution: the partial run's energy is wasted
+            mapping.mark_idle(mi);
+            if let Some(bat) = battery.as_mut() {
+                bat.set_busy(mi, false);
+            }
+            let busy = now - r.start;
+            let e = m.spec.dyn_energy(busy);
+            m.energy.dynamic += e;
+            m.energy.wasted += e;
+            m.energy.busy_time += busy;
+            result.crash_aborts += 1;
+            let attempts = {
+                let k = aborts.entry(r.task.id).or_insert(0);
+                *k += 1;
+                *k
+            };
+            // deadline-aware retry: re-admit only while the budget lasts
+            // and the fastest machine could still make the deadline
+            let ty = r.task.type_id;
+            let min_eet = (0..mapping.n_machines())
+                .map(|j| mapping.eet().get(ty, MachineId(j)))
+                .fold(f64::INFINITY, f64::min);
+            let feasible = now + min_eet * r.task.size_factor <= r.task.deadline;
+            if attempts <= retry_budget && feasible {
+                mapping.readmit(r.task);
+            } else {
+                let out = Outcome::Cancelled { reason: CancelReason::FailedAbort, at: now };
+                result.record(ty.0, &out);
+                mapping.record_terminal(ty, false);
+                let mut rec = record_of(
+                    &r.task,
+                    TraceOutcome::FailedAbort,
+                    Some(MachineId(mi)),
+                    Some(r.mapped),
+                    Some(r.start),
+                    now,
+                );
+                rec.retries = attempts - 1;
+                trace_log.push(rec);
+                released.push(r.task.id, now);
+            }
+        }
+        MachineFaultAction::Up => {
+            down_depth[mi] = down_depth[mi]
+                .checked_sub(1)
+                .expect("fault recovery without a matching crash");
+            if down_depth[mi] == 0 {
+                mapping.set_down(mi, false);
+            }
+        }
+        MachineFaultAction::SlowOn => speed[mi] = fe.scale,
+        MachineFaultAction::SlowOff => speed[mi] = 1.0,
     }
 }
 
@@ -821,6 +1136,7 @@ fn finish_running(
     trace_log: &mut TraceLog,
     released: &mut Releases,
     battery: &mut Option<BatteryState>,
+    aborts: &HashMap<u64, u32>,
 ) {
     let r = m.running.take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
@@ -833,9 +1149,14 @@ fn finish_running(
     m.energy.dynamic += e;
     m.energy.busy_time += busy;
     let ty = r.task.type_id;
+    let retries = retries_of(aborts, r.task.id);
     let outcome = if r.actual_end <= r.task.deadline {
         result.record(ty.0, &Outcome::Completed { machine: machine_idx, finish: r.actual_end });
         mapping.record_terminal(ty, true);
+        if retries > 0 {
+            // completed on time after at least one crash abort
+            result.recovered += 1;
+        }
         TraceOutcome::Completed
     } else {
         // aborted at the deadline; everything it burnt is wasted
@@ -844,14 +1165,16 @@ fn finish_running(
         mapping.record_terminal(ty, false);
         TraceOutcome::Missed
     };
-    trace_log.push(record_of(
+    let mut rec = record_of(
         &r.task,
         outcome,
         Some(MachineId(machine_idx)),
         Some(r.mapped),
         Some(r.start),
         r.end,
-    ));
+    );
+    rec.retries = retries;
+    trace_log.push(rec);
     released.push(r.task.id, r.end);
 }
 
@@ -869,8 +1192,15 @@ fn try_start(
     released: &mut Releases,
     battery: &mut Option<BatteryState>,
     exec: &mut ExecModel,
+    speed: &[f64],
+    aborts: &HashMap<u64, u32>,
 ) {
     if m.running.is_some() {
+        return;
+    }
+    if mapping.is_down(machine_idx) {
+        // crashed machine: its local queue is frozen in place until the
+        // recovery transition (never true without a fault plan)
         return;
     }
     while let Some(q) = mapping.pop_queued(machine_idx) {
@@ -878,14 +1208,16 @@ fn try_start(
             // assigned but never started: Missed with no dynamic energy
             result.record(q.task.type_id.0, &Outcome::Missed { machine: machine_idx, at: now });
             mapping.record_terminal(q.task.type_id, false);
-            trace_log.push(record_of(
+            let mut rec = record_of(
                 &q.task,
                 TraceOutcome::DroppedAtStart,
                 Some(MachineId(machine_idx)),
                 Some(q.mapped),
                 None,
                 now,
-            ));
+            );
+            rec.retries = retries_of(aborts, q.task.id);
+            trace_log.push(rec);
             released.push(q.task.id, now);
             continue;
         }
@@ -899,7 +1231,13 @@ fn try_start(
                 .expect("inference backend is infallible here")
                 .modeled,
         };
-        let actual_end = now + service * q.task.size_factor;
+        let scaled = service * q.task.size_factor;
+        // transient slowdown: a task started inside a slow window runs at
+        // the window's speed for its whole execution. The mapper's EET
+        // expectation is deliberately untouched — faults are surprises.
+        // `factor == 1.0` reproduces the historical float exactly.
+        let factor = speed[machine_idx];
+        let actual_end = if factor != 1.0 { now + scaled / factor } else { now + scaled };
         let end = actual_end.min(q.task.deadline);
         events.push(end, Event::Finish { machine_idx });
         mapping.mark_running(machine_idx, now + q.expected_exec);
@@ -920,6 +1258,7 @@ fn system_off_drain(
     mapping: &mut MappingState,
     trace_log: &mut TraceLog,
     result: &mut SimResult,
+    aborts: &HashMap<u64, u32>,
 ) {
     for (mi, m) in machines.iter_mut().enumerate() {
         if let Some(r) = m.running.take() {
@@ -931,21 +1270,25 @@ fn system_off_drain(
             m.energy.busy_time += busy;
             result.record(r.task.type_id.0, &Outcome::Missed { machine: mi, at: t_dead });
             mapping.record_terminal(r.task.type_id, false);
-            trace_log.push(record_of(
+            let mut rec = record_of(
                 &r.task,
                 TraceOutcome::Missed,
                 Some(MachineId(mi)),
                 Some(r.mapped),
                 Some(r.start),
                 t_dead,
-            ));
+            );
+            rec.retries = retries_of(aborts, r.task.id);
+            trace_log.push(rec);
         }
     }
     mapping.drain_system_off(&mut |d: Dropped| {
         let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
         result.record(d.task.type_id.0, &out);
         let (machine, mapped) = d.mapped.unzip();
-        trace_log.push(record_of(&d.task, TraceOutcome::SystemOff, machine, mapped, None, t_dead));
+        let mut rec = record_of(&d.task, TraceOutcome::SystemOff, machine, mapped, None, t_dead);
+        rec.retries = retries_of(aborts, d.task.id);
+        trace_log.push(rec);
     });
 }
 

@@ -36,6 +36,16 @@ pub struct SimResult {
     pub cancelled_expired: u64,
     /// Tasks cancelled because the battery depleted mid-run (system off).
     pub cancelled_systemoff: u64,
+    /// Tasks aborted by a machine crash that could not be retried
+    /// (`model::FaultPlan`): retry budget spent or no EET fits the
+    /// remaining slack. Always 0 when no fault plan is set.
+    pub cancelled_failedabort: u64,
+    /// Executions aborted by machine crashes (each abort counts, so one
+    /// task retried twice contributes two aborts). Diagnostic; 0 without
+    /// a fault plan.
+    pub crash_aborts: u64,
+    /// Tasks that completed on time after at least one crash-abort retry.
+    pub recovered: u64,
     /// Per-machine energy.
     pub energy: Vec<MachineEnergy>,
     /// Battery capacity E0 used as the wasted-% denominator.
@@ -193,7 +203,8 @@ impl SimResult {
         let split = self.cancelled_mapper
             + self.cancelled_victim
             + self.cancelled_expired
-            + self.cancelled_systemoff;
+            + self.cancelled_systemoff
+            + self.cancelled_failedabort;
         if split != self.total_cancelled() {
             return Err(format!(
                 "cancel-reason split {split} != total cancelled {}",
@@ -215,6 +226,7 @@ impl SimResult {
                     CancelReason::VictimDropped => self.cancelled_victim += 1,
                     CancelReason::DeadlineExpired => self.cancelled_expired += 1,
                     CancelReason::SystemOff => self.cancelled_systemoff += 1,
+                    CancelReason::FailedAbort => self.cancelled_failedabort += 1,
                 }
             }
         }
@@ -232,6 +244,9 @@ impl SimResult {
             cancelled_victim: 0,
             cancelled_expired: 0,
             cancelled_systemoff: 0,
+            cancelled_failedabort: 0,
+            crash_aborts: 0,
+            recovered: 0,
             energy: vec![MachineEnergy::default(); n_machines],
             battery: 1.0,
             battery_spent: 0.0,
@@ -271,6 +286,9 @@ impl SimResult {
             .set("makespan", self.makespan)
             .set("mapper_overhead_us", self.mapper_overhead_us())
             .set("deferrals", self.deferrals)
+            .set("failed_aborts", self.cancelled_failedabort)
+            .set("crash_aborts", self.crash_aborts)
+            .set("recovered", self.recovered)
     }
 }
 
@@ -366,6 +384,17 @@ mod tests {
         assert_eq!(j.req_f64("lifetime_s").unwrap(), 40.0);
         assert_eq!(j.req_f64("depleted_at").unwrap(), 40.0);
         assert_eq!(j.req_f64("final_soc").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn failed_aborts_land_in_their_own_split_bucket() {
+        let mut r = sample();
+        r.arrived[0] += 1;
+        r.record(0, &Outcome::Cancelled { reason: CancelReason::FailedAbort, at: 7.0 });
+        assert_eq!(r.cancelled_failedabort, 1);
+        r.check_conservation().unwrap();
+        r.cancelled_failedabort = 0; // desync the split from the totals
+        assert!(r.check_conservation().is_err());
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Acceptance gates for fault injection & recovery:
+//!
+//!  * unarmed plans are free — no plan, an empty plan, and an
+//!    armed-then-cleared plan are bit-identical on every engine surface
+//!    (Simulation, HeadlessServe, FleetSim with migration armed);
+//!  * the `--faults` grammar round-trips through spec text and JSON, and
+//!    target validation needs the right system dimensions;
+//!  * conservation under fire — random plans × random traces: every task
+//!    reaches exactly one terminal outcome, per-task records validate,
+//!    recorded retries never exceed the budget, replays are bit-exact,
+//!    and the sim and serve engines agree under the same plan;
+//!  * retry semantics pinned end-to-end — a crash mid-execution recovers
+//!    via retry when the budget admits it, and fails outright at budget 0;
+//!  * the pinned brown-out fleet run: queued-work migration must beat the
+//!    no-migration control on completions, through the spec-string path.
+
+use felare::model::{
+    FaultPlan, FleetScenario, MachineId, Scenario, Task, TaskTypeId, Trace, WorkloadParams,
+};
+use felare::sched::registry::heuristic_by_name;
+use felare::sched::route::route_policy_by_name;
+use felare::sched::trace::TraceOutcome;
+use felare::serve::HeadlessServe;
+use felare::sim::{FleetSim, SimResult, Simulation};
+use felare::util::json::Json;
+use felare::util::rng::Pcg64;
+
+fn trace_for(sc: &Scenario, rate: f64, n_tasks: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+/// Every deterministic field, compared bit for bit — including the fault
+/// counters (the fault-free fields mirror `fleet_suite::assert_same`).
+fn assert_same(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.missed, b.missed, "{tag}: missed");
+    assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+    assert_eq!(a.cancelled_mapper, b.cancelled_mapper, "{tag}: mapper drops");
+    assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victim drops");
+    assert_eq!(a.cancelled_expired, b.cancelled_expired, "{tag}: expiries");
+    assert_eq!(a.cancelled_systemoff, b.cancelled_systemoff, "{tag}: system-off");
+    assert_eq!(a.cancelled_failedabort, b.cancelled_failedabort, "{tag}: failed aborts");
+    assert_eq!(a.crash_aborts, b.crash_aborts, "{tag}: crash aborts");
+    assert_eq!(a.recovered, b.recovered, "{tag}: recoveries");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
+    assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+    assert_eq!(a.battery_spent, b.battery_spent, "{tag}: battery spent");
+    assert_eq!(a.depleted_at, b.depleted_at, "{tag}: depletion instant");
+    assert_eq!(a.final_soc, b.final_soc, "{tag}: final SoC");
+    assert_eq!(a.energy.len(), b.energy.len(), "{tag}: machine count");
+    for (i, (ea, eb)) in a.energy.iter().zip(&b.energy).enumerate() {
+        assert_eq!(ea.dynamic, eb.dynamic, "{tag}: machine {i} dynamic energy");
+        assert_eq!(ea.wasted, eb.wasted, "{tag}: machine {i} wasted energy");
+        assert_eq!(ea.idle, eb.idle, "{tag}: machine {i} idle energy");
+        assert_eq!(ea.busy_time, eb.busy_time, "{tag}: machine {i} busy time");
+    }
+}
+
+#[test]
+fn unarmed_plans_change_nothing_on_any_engine() {
+    let sc = Scenario::stress(4, 3);
+    let trace = trace_for(&sc, 1.2 * sc.service_capacity(), 600, 0xFA17);
+    for h in ["felare", "mm"] {
+        let heur = || heuristic_by_name(h, &sc).unwrap();
+        // Simulation: no plan vs empty plan vs armed-then-cleared (a
+        // faulty run in between must not leak state into the next one)
+        let base = Simulation::new(&sc, heur()).run(&trace);
+        let mut sim = Simulation::new(&sc, heur());
+        sim.set_fault_plan(Some(FaultPlan::new(Vec::new())));
+        assert_same(&base, &sim.run(&trace), &format!("{h}/sim empty plan"));
+        sim.set_fault_plan(Some(FaultPlan::parse("crash:m0@1+2").unwrap()));
+        sim.run(&trace);
+        sim.set_fault_plan(None);
+        assert_same(&base, &sim.run(&trace), &format!("{h}/sim cleared plan"));
+        // HeadlessServe under the same contract
+        let mut srv = HeadlessServe::new(&sc, heur());
+        let srv_base = srv.run(&trace);
+        srv.set_fault_plan(Some(FaultPlan::new(Vec::new())));
+        assert_same(&srv_base, &srv.run(&trace), &format!("{h}/serve empty plan"));
+        // 1-island fleet, migration armed with nothing to migrate: the
+        // coordinated epoch path must reproduce the plain fleet run
+        let fleet = FleetScenario::uniform("solo", 1, sc.clone());
+        let mut plain = FleetSim::new(&fleet, h, route_policy_by_name("round-robin", 1).unwrap())
+            .unwrap();
+        let plain_r = plain.run(&trace);
+        let mut armed = FleetSim::new(&fleet, h, route_policy_by_name("round-robin", 1).unwrap())
+            .unwrap();
+        armed.set_fault_plan(Some(FaultPlan::new(Vec::new()))).unwrap();
+        armed.set_migration(true);
+        let armed_r = armed.run(&trace);
+        assert_eq!(armed_r.migrations, 0, "{h}: nothing to migrate without faults");
+        assert_same(&plain_r.islands[0], &armed_r.islands[0], &format!("{h}/fleet empty plan"));
+    }
+}
+
+#[test]
+fn fault_specs_round_trip_through_text_and_json() {
+    let spec = "crash:m2@40+10,slow:m0@20x0.5+30,brownout:i3@60+20,retry:3";
+    let plan = FaultPlan::parse(spec).unwrap();
+    assert_eq!(plan, FaultPlan::parse(&plan.to_spec()).unwrap(), "spec round-trip");
+    let text = plan.to_json().to_string_pretty();
+    let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(plan, back, "json text round-trip");
+    plan.validate_targets(4, Some(4)).unwrap();
+    assert!(plan.validate_targets(2, Some(4)).is_err(), "machine 2 is out of range");
+    assert!(plan.validate_targets(4, None).is_err(), "brownouts need a fleet");
+}
+
+/// Random plans × random traces, the core conservation property: one
+/// terminal outcome per task, valid per-task records, retries within
+/// budget, bit-exact replays, and sim ≡ serve under the same plan.
+#[test]
+fn random_fault_plans_conserve_and_respect_the_retry_budget() {
+    let sc = Scenario::stress(6, 4);
+    let mut saw_aborts = false;
+    for round in 0..6u64 {
+        let mut rng = Pcg64::new(0xFA57 + round);
+        let rate = (1.0 + 0.04 * round as f64) * sc.service_capacity();
+        let n = 400;
+        let trace = trace_for(&sc, rate, n, 0xBEEF ^ round);
+        let intensity = 0.15 + 0.08 * round as f64;
+        let horizon = trace.horizon().max(1.0);
+        let mut plan = FaultPlan::random(&mut rng, sc.n_machines(), None, intensity, horizon);
+        plan.retry_budget = (round % 4) as u32;
+        plan.validate_targets(sc.n_machines(), None).unwrap();
+
+        let run = |plan: &FaultPlan| {
+            let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+            sim.set_record_traces(true);
+            sim.set_fault_plan(Some(plan.clone()));
+            let r = sim.run(&trace);
+            let log = sim.trace_log().to_vec();
+            (r, log)
+        };
+        let (r, log) = run(&plan);
+        r.check_conservation().unwrap_or_else(|e| panic!("round {round}: {e}"));
+        assert_eq!(log.len(), n, "round {round}: one terminal record per task");
+        for rec in &log {
+            rec.validate().unwrap_or_else(|e| panic!("round {round}: {e}"));
+            assert!(
+                rec.retries <= plan.retry_budget,
+                "round {round}: task {} burned {} retries (budget {})",
+                rec.task_id,
+                rec.retries,
+                plan.retry_budget
+            );
+        }
+        assert!(r.cancelled_failedabort <= r.crash_aborts, "round {round}: abort accounting");
+        saw_aborts |= r.crash_aborts > 0;
+
+        // bit-determinism: the same plan replays identically
+        let (r2, log2) = run(&plan);
+        assert_same(&r, &r2, &format!("round {round} replay"));
+        assert_eq!(log, log2, "round {round}: identical records on replay");
+
+        // the serve engine agrees float for float under the same plan
+        let mut srv = HeadlessServe::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+        srv.set_record_traces(true);
+        srv.set_fault_plan(Some(plan.clone()));
+        let rs = srv.run(&trace);
+        assert_same(&r, &rs, &format!("round {round} serve"));
+        assert_eq!(srv.trace_log(), &log[..], "round {round}: identical serve records");
+    }
+    assert!(saw_aborts, "the random plans never caught a running task — property untested");
+}
+
+/// One task, one crash, fully deterministic by construction: the lone
+/// task lands on the fastest machine (min-min placement on an empty
+/// system), the crash catches it mid-execution, and the huge deadline
+/// slack admits a retry anywhere.
+fn lone_task_crash(retry: &str) -> (Simulation, Trace, String) {
+    let sc = Scenario::stress(4, 3);
+    let eet = |j: usize| sc.eet.get(TaskTypeId(0), MachineId(j));
+    let mut best = 0usize;
+    for j in 1..sc.n_machines() {
+        if eet(j) < eet(best) {
+            best = j;
+        }
+    }
+    let task =
+        Task { id: 0, type_id: TaskTypeId(0), arrival: 0.0, deadline: 1_000.0, size_factor: 1.0 };
+    let trace = Trace { tasks: vec![task], arrival_rate: 1.0 };
+    let spec = format!("crash:m{best}@{}+5{retry}", 0.5 * eet(best));
+    let plan = FaultPlan::parse(&spec).unwrap();
+    plan.validate_targets(sc.n_machines(), None).unwrap();
+    let mut sim = Simulation::new(&sc, heuristic_by_name("mm", &sc).unwrap());
+    sim.set_record_traces(true);
+    sim.set_fault_plan(Some(plan));
+    (sim, trace, spec)
+}
+
+#[test]
+fn a_recoverable_abort_retries_and_completes() {
+    let (mut sim, trace, spec) = lone_task_crash("");
+    let r = sim.run(&trace);
+    r.check_conservation().unwrap();
+    assert_eq!(r.crash_aborts, 1, "{spec}: the crash must catch the running task");
+    assert_eq!(r.recovered, 1, "{spec}: the retry must land and finish");
+    assert_eq!(r.cancelled_failedabort, 0, "{spec}");
+    assert_eq!(r.total_completed(), 1, "{spec}");
+    let rec = &sim.trace_log()[0];
+    assert_eq!(rec.outcome, TraceOutcome::Completed, "{spec}");
+    assert_eq!(rec.retries, 1, "{spec}: exactly one retry burned");
+}
+
+#[test]
+fn zero_retry_budget_fails_an_aborted_task_outright() {
+    let (mut sim, trace, spec) = lone_task_crash(",retry:0");
+    let r = sim.run(&trace);
+    r.check_conservation().unwrap();
+    assert_eq!(r.crash_aborts, 1, "{spec}: the crash must catch the running task");
+    assert_eq!(r.recovered, 0, "{spec}: budget 0 leaves nothing to recover");
+    assert_eq!(r.cancelled_failedabort, 1, "{spec}: the abort is terminal");
+    assert_eq!(r.total_completed(), 0, "{spec}");
+    let rec = &sim.trace_log()[0];
+    assert_eq!(rec.outcome, TraceOutcome::FailedAbort, "{spec}");
+    assert_eq!(rec.retries, 0, "{spec}");
+}
+
+/// The pinned brown-out acceptance run, through the user-facing spec
+/// string: three staggered island brown-outs, each far longer than the
+/// ~2·ē deadline slack, so frozen queued work cannot survive locally —
+/// shedding it at the epoch boundary must win on completions.
+#[test]
+fn pinned_brownout_run_migration_beats_no_migration() {
+    let fleet = FleetScenario::stress_fleet(4, 4, 3);
+    let rate = 1.3 * fleet.service_capacity();
+    let n = 1200u64;
+    let trace = trace_for(&fleet.islands[0], rate, n as usize, 43);
+    let horizon = n as f64 / rate;
+    let spec = [(1usize, 0.2f64), (2, 0.45), (3, 0.7)]
+        .iter()
+        .map(|&(isl, frac)| format!("brownout:i{isl}@{}+{}", frac * horizon, 0.2 * horizon))
+        .collect::<Vec<_>>()
+        .join(",");
+    let plan = FaultPlan::parse(&spec).unwrap();
+    let n_machines: usize = fleet.islands.iter().map(|i| i.n_machines()).sum();
+    plan.validate_targets(n_machines, Some(fleet.islands.len())).unwrap();
+    let run_with = |migrate: bool| {
+        let router = route_policy_by_name("least-queued", 1).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        sim.set_epoch(0.25); // drain well inside the deadline slack
+        sim.set_migration_cost(0.05, 0.2);
+        sim.set_fault_plan(Some(plan.clone())).unwrap();
+        sim.set_migration(migrate);
+        let r = sim.run(&trace);
+        r.check_conservation(n).unwrap();
+        r
+    };
+    let ctl = run_with(false);
+    let mig = run_with(true);
+    assert_eq!(ctl.migrations, 0, "control must not migrate");
+    assert!(mig.migrations > 0, "brown-outs must shed queued work");
+    assert!(mig.migration_energy > 0.0, "radio energy is debited per migrated task");
+    assert!(
+        mig.total_completed() > ctl.total_completed(),
+        "migration {} vs control {}",
+        mig.total_completed(),
+        ctl.total_completed()
+    );
+}

@@ -187,7 +187,9 @@ fn check_trace_records(
             TraceOutcome::Expired
             | TraceOutcome::MapperDropped
             | TraceOutcome::VictimDropped
-            | TraceOutcome::Unmapped => cancelled += 1,
+            | TraceOutcome::Unmapped
+            | TraceOutcome::SystemOff
+            | TraceOutcome::FailedAbort => cancelled += 1,
         }
     }
     if completed != r.total_completed() || missed != r.total_missed() || cancelled != r.total_cancelled()
