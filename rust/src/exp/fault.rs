@@ -16,7 +16,9 @@
 //! `--epoch` (default 0.5 s — migration drains happen at epoch
 //! boundaries, so they must sit well inside the ~2·ē deadline slack),
 //! `--faults <spec>` to pin one explicit plan in place of the intensity
-//! axis, `--tasks`, `--jobs` and `--seed`.
+//! axis, `--tasks`, `--jobs` and `--seed`. `--flight-out path.json`
+//! re-runs the first faulty cell with the flight recorder armed and
+//! writes every island's postmortem dumps as one JSON array.
 
 use crate::error::Result;
 use crate::exp::output::{fmt_f, Table};
@@ -24,6 +26,7 @@ use crate::exp::ExpOpts;
 use crate::model::{FaultPlan, FleetScenario, Trace, WorkloadParams};
 use crate::sched::route::route_policy_by_name;
 use crate::sim::fleet::FleetSim;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Fault-intensity axis: the fraction of machines crashed / slowed and
@@ -172,6 +175,29 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         HEURISTICS.len(),
         policies.len(),
     );
+    if let Some(path) = &opts.flight_out {
+        // one instrumented re-run of the first faulty cell: the sweep
+        // cells above stay untouched (the recorder is observation-only,
+        // but re-running keeps the export orthogonal to the gates)
+        match plans.iter().find_map(|(_, p)| p.clone()) {
+            None => crate::log_warn!("--flight-out: no faulty cell in this sweep; nothing to dump"),
+            Some(plan) => {
+                let router = route_policy_by_name(&policies[0], opts.seed)?;
+                let mut sim = FleetSim::new(&fleet, HEURISTICS[0], router)?;
+                sim.set_epoch(epoch);
+                sim.set_fault_plan(Some(plan))?;
+                sim.set_migration(true);
+                sim.set_flight(crate::obs::flight::DEFAULT_CAPACITY);
+                let _ = sim.run(&trace);
+                let mut rows = Vec::new();
+                for i in 0..k {
+                    rows.extend(sim.island_obs(i).flight.dumps_json(i));
+                }
+                std::fs::write(path, Json::Array(rows).to_string_pretty())?;
+                crate::log_info!("wrote flight dumps for {k} islands to {path}");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -202,6 +228,28 @@ mod tests {
             ..Default::default()
         };
         run(&opts).unwrap();
+    }
+
+    #[test]
+    fn flight_out_writes_brownout_dumps() {
+        let path = std::env::temp_dir().join("felare_fault_flight_test.json");
+        let path_s = path.to_str().unwrap().to_string();
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(200),
+            islands: Some(vec![2]),
+            policies: Some(vec!["round-robin".into()]),
+            faults: Some("brownout:i1@1+4".into()),
+            flight_out: Some(path_s),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let dumps = Json::parse(&text).unwrap();
+        let dumps = dumps.as_array().unwrap();
+        assert!(!dumps.is_empty(), "a brown-out must produce a flight dump");
+        assert!(dumps.iter().any(|d| d.req_str("reason").unwrap() == "brownout"));
     }
 
     #[test]

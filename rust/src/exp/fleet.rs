@@ -15,7 +15,10 @@
 //! `--rates` (absolute λ; default is load multiples of fleet capacity),
 //! `--batteries` (base joules of the mixed pattern), `--epoch`, and
 //! `--scenario fleet:K:M:T | fleet.json` to pin one explicit fleet in
-//! place of the island-count axis.
+//! place of the island-count axis. `--metrics-out path.jsonl` re-runs
+//! the first (fleet, rate, policy) cell with telemetry armed and writes
+//! fleet counters, per-boundary fleet samples and every island's
+//! metrics/samples as kind-tagged JSONL.
 
 use crate::error::Result;
 use crate::exp::output::{fmt_f, Table};
@@ -179,6 +182,43 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         policies.len(),
         tasks_per_island,
     );
+    if let Some(path) = &opts.metrics_out {
+        // one instrumented re-run of the first (fleet, rate, policy)
+        // cell: arming fleet metrics forces serial epochs, so the sweep
+        // cells above keep their parallel advance untouched
+        let fleet = &fleets[0];
+        let k = fleet.n_islands();
+        let rate = match &opts.rates {
+            Some(rs) => rs[0],
+            None => LOADS[0] * fleet.service_capacity(),
+        };
+        let params = WorkloadParams {
+            n_tasks: tasks_per_island * k,
+            arrival_rate: rate,
+            cv_exec: fleet.islands[0].cv_exec,
+            type_weights: Vec::new(),
+        };
+        let seed = opts.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ rate.to_bits();
+        let trace = Trace::generate(&params, &fleet.islands[0].eet, &mut Pcg64::new(seed));
+        let router = route_policy_by_name(&policies[0], opts.seed)?;
+        let mut sim = FleetSim::new(fleet, "felare", router)?;
+        if let Some(epoch) = opts.epoch {
+            sim.set_epoch(epoch);
+        }
+        sim.set_metrics(true);
+        let _ = sim.run(&trace);
+        let mut rows = sim.fleet_metrics().json_rows("fleet");
+        rows.extend(sim.fleet_sampler().json_rows());
+        for i in 0..k {
+            rows.extend(sim.island_obs(i).json_rows(&format!("island{i}")));
+        }
+        crate::obs::write_jsonl_rows(path, &rows)?;
+        crate::log_info!(
+            "wrote {} telemetry rows (instrumented {}@{k} islands, λ={rate:.2}) to {path}",
+            rows.len(),
+            policies[0]
+        );
+    }
     Ok(())
 }
 
@@ -197,6 +237,33 @@ mod tests {
             ..Default::default()
         };
         run(&opts).unwrap();
+    }
+
+    #[test]
+    fn metrics_out_writes_fleet_telemetry() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("felare_fleet_metrics_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let opts = ExpOpts {
+            quick: true,
+            tasks: Some(100),
+            islands: Some(vec![2]),
+            policies: Some(vec!["round-robin".into()]),
+            batteries: Some(vec![80.0]),
+            metrics_out: Some(path_s),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let rows: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert!(!rows.is_empty());
+        let scoped =
+            |s: &str| rows.iter().any(|r| r.req_str("scope").map(|v| v == s).unwrap_or(false));
+        assert!(scoped("fleet"));
+        assert!(scoped("island0"));
+        assert!(scoped("island1"));
+        assert!(rows.iter().any(|r| r.req_str("kind").unwrap() == "fleet_sample"));
     }
 
     #[test]

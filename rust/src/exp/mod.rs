@@ -81,6 +81,13 @@ pub struct ExpOpts {
     /// Replay a recorded trace JSON for `exp sweep` (`--trace-in path`):
     /// replaces the rate axis with the file's single workload.
     pub trace_in: Option<String>,
+    /// Telemetry JSONL export for `exp sweep`/`exp fleet`
+    /// (`--metrics-out path`): one extra instrumented run of a
+    /// representative cell, written in the `obs` kind-tagged row schema.
+    pub metrics_out: Option<String>,
+    /// Flight-recorder JSON export for `exp fault` (`--flight-out path`):
+    /// the postmortem dumps of one instrumented faulty cell.
+    pub flight_out: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -105,6 +112,8 @@ impl Default for ExpOpts {
             out: None,
             faults: None,
             trace_in: None,
+            metrics_out: None,
+            flight_out: None,
         }
     }
 }

@@ -4,15 +4,21 @@
 //! The paper requires that the resource-allocation method "should be
 //! lightweight, and its incurred overhead should not worsen the system
 //! performance" — i.e. mapper time ≪ 1/λ.
+//!
+//! Latency columns come from the telemetry registry's [`Span::MapperEvent`]
+//! histogram: the mean is exact (the histogram keeps an exact sum), while
+//! p50/p99/max are log-bucket upper bounds — never understated, overstated
+//! by < 2× (`obs::metrics` module docs). The mean column keeps its
+//! pre-histogram meaning for continuity across result archives.
 
 use crate::error::Result;
 use crate::exp::output::{fmt_f, Table};
 use crate::exp::ExpOpts;
 use crate::model::{Scenario, Trace, WorkloadParams};
+use crate::obs::Span;
 use crate::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
 use crate::sim::Simulation;
 use crate::util::rng::Pcg64;
-use crate::util::stats::Summary;
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
     let sc = Scenario::paper_synthetic();
@@ -34,19 +40,18 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     );
     for h in ALL_HEURISTICS {
         let mut sim = Simulation::new(&sc, heuristic_by_name(h, &sc).unwrap());
-        sim.record_overhead_samples = true;
+        sim.set_metrics(true);
         let res = sim.run(&trace);
-        let s = Summary::of(
-            &sim.overhead_samples.iter().map(|x| x * 1e6).collect::<Vec<_>>(),
-        );
+        let hist = sim.obs().metrics.hist(Span::MapperEvent);
+        let mean_us = hist.mean_secs() * 1e6;
         t.row(vec![
             h.to_string(),
-            fmt_f(s.mean, 2),
-            fmt_f(s.median(), 2),
-            fmt_f(s.percentile(99.0), 2),
-            fmt_f(s.max, 2),
+            fmt_f(mean_us, 2),
+            fmt_f(hist.percentile_secs(50.0) * 1e6, 2),
+            fmt_f(hist.percentile_secs(99.0) * 1e6, 2),
+            fmt_f(hist.max_secs() * 1e6, 2),
             format!("{}", res.mapping_events),
-            fmt_f(100.0 * s.mean / (1e6 / rate), 3),
+            fmt_f(100.0 * mean_us / (1e6 / rate), 3),
         ]);
     }
     t.emit("overhead_mapper")?;

@@ -61,6 +61,11 @@ pub trait SweepEngine {
     /// Closed-loop session: `pool.n_clients` clients, `n_tasks` requests
     /// in total (sweep cells with [`SweepSpec::closed_loop`] set).
     fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult;
+    /// Arm the telemetry registry + time-series sampler (observation-only;
+    /// results are bit-identical either way — `rust/tests/obs_suite.rs`).
+    fn set_metrics(&mut self, on: bool);
+    /// Telemetry rows of the latest run (the `--metrics-out` payload).
+    fn obs_rows(&self, scope: &str) -> Vec<Json>;
 }
 
 impl SweepEngine for Simulation {
@@ -87,6 +92,14 @@ impl SweepEngine for Simulation {
     fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
         Simulation::run_closed(self, pool, n_tasks, seed)
     }
+
+    fn set_metrics(&mut self, on: bool) {
+        Simulation::set_metrics(self, on);
+    }
+
+    fn obs_rows(&self, scope: &str) -> Vec<Json> {
+        self.obs().json_rows(scope)
+    }
 }
 
 impl SweepEngine for HeadlessServe {
@@ -112,6 +125,14 @@ impl SweepEngine for HeadlessServe {
 
     fn run_closed(&mut self, pool: ClientPool, n_tasks: usize, seed: u64) -> SimResult {
         HeadlessServe::run_closed(self, pool, n_tasks, seed)
+    }
+
+    fn set_metrics(&mut self, on: bool) {
+        HeadlessServe::set_metrics(self, on);
+    }
+
+    fn obs_rows(&self, scope: &str) -> Vec<Json> {
+        self.obs().json_rows(scope)
     }
 }
 
@@ -578,7 +599,46 @@ pub fn run_exp(opts: &ExpOpts) -> Result<()> {
         check_p99(limit, &cell_traces)?;
         println!("p99 sojourn SLO: every cell within {limit}s");
     }
+    if let Some(path) = &opts.metrics_out {
+        let n = export_metrics(path, &spec)?;
+        crate::log_info!(
+            "wrote {n} telemetry rows (instrumented {}@{} cell) to {path}",
+            spec.heuristics[0],
+            spec.rates[0]
+        );
+    }
     Ok(())
+}
+
+/// `--metrics-out`: one extra instrumented run of a representative cell
+/// (first heuristic × first rate, trace seed 0) on the sweep engine. The
+/// sweep cells themselves stay un-instrumented — the registry is
+/// observation-only either way, but the export run keeps telemetry
+/// orthogonal to the aggregated table.
+fn export_metrics(path: &str, spec: &SweepSpec) -> Result<usize> {
+    let h = &spec.heuristics[0];
+    let rate = spec.rates[0];
+    let mut eng = spec.engine.build(&spec.scenario, heuristic_by_name(h, &spec.scenario)?);
+    eng.set_metrics(true);
+    match spec.closed_loop {
+        Some(think) => {
+            let pool = ClientPool { n_clients: rate as usize, think_time: think };
+            eng.run_closed(pool, spec.tasks, spec.seed);
+        }
+        None => {
+            let params = WorkloadParams {
+                n_tasks: spec.tasks,
+                arrival_rate: rate,
+                cv_exec: spec.scenario.cv_exec,
+                type_weights: Vec::new(),
+            };
+            let trace = Trace::generate(&params, &spec.scenario.eet, &mut Pcg64::new(spec.seed));
+            eng.run(&trace);
+        }
+    }
+    let rows = eng.obs_rows(&format!("{h}@{rate}"));
+    crate::obs::write_jsonl_rows(path, &rows)?;
+    Ok(rows.len())
 }
 
 /// `felare exp sweep --trace-in path` — replay one recorded workload (a
@@ -672,6 +732,15 @@ fn run_replay(opts: &ExpOpts, path: &str) -> Result<()> {
     if let Some(limit) = opts.expect_p99 {
         check_p99(limit, &cells)?;
         println!("p99 sojourn SLO: every cell within {limit}s");
+    }
+    if let Some(out) = &opts.metrics_out {
+        let h = ALL_HEURISTICS[0];
+        let mut eng = opts.engine.build(&scenario, heuristic_by_name(h, &scenario)?);
+        eng.set_metrics(true);
+        eng.run(&trace);
+        let rows = eng.obs_rows(&format!("{h}@replay"));
+        crate::obs::write_jsonl_rows(out, &rows)?;
+        crate::log_info!("wrote {} telemetry rows (instrumented {h} replay) to {out}", rows.len());
     }
     Ok(())
 }
@@ -969,6 +1038,33 @@ mod tests {
             ..Default::default()
         };
         run_exp(&opts).unwrap();
+    }
+
+    #[test]
+    fn metrics_out_writes_telemetry_rows() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("felare_sweep_metrics_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let opts = ExpOpts {
+            quick: true,
+            traces: Some(2),
+            tasks: Some(120),
+            rates: Some(vec![5.0]),
+            metrics_out: Some(path_s),
+            ..Default::default()
+        };
+        run_exp(&opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let rows: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let kind = |r: &Json, k: &str| r.req_str("kind").map(|v| v == k).unwrap_or(false);
+        assert!(rows.iter().any(|r| kind(r, "counter")), "counter rows present");
+        assert!(rows.iter().any(|r| kind(r, "sample")), "time-series rows present");
+        assert!(
+            rows.iter()
+                .all(|r| r.req_str("scope").map(|s| s == "mm@5").unwrap_or(true)),
+            "all scoped rows carry the instrumented cell's scope"
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod energy;
 pub mod error;
 pub mod exp;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

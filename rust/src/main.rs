@@ -190,6 +190,8 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             .opt_optional("battery", "battery capacity in joules (depletion = system off)")
             .opt_optional("recharge", "harvest schedule 'watts:dur,…' (requires --battery)")
             .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
+            .opt_optional("metrics-out", "write telemetry counters + time-series as JSONL")
+            .opt_optional("flight-out", "write flight-recorder postmortem dumps as JSON")
             .flag("json", "emit the result as JSON"),
         raw,
     )?;
@@ -223,6 +225,12 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     let mut sim = Simulation::new(&sc, h);
     sim.set_record_traces(trace_out.is_some());
     sim.set_fault_plan(faults);
+    let metrics_out = args.get("metrics-out").map(String::from);
+    let flight_out = args.get("flight-out").map(String::from);
+    sim.set_metrics(metrics_out.is_some());
+    if flight_out.is_some() {
+        sim.set_flight(felare::obs::flight::DEFAULT_CAPACITY);
+    }
     let result = match (pool, &trace_in) {
         (Some(pool), _) => sim.run_closed(pool, n_tasks, seed),
         (None, Some(path)) => {
@@ -231,7 +239,7 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
             let json = felare::util::json::Json::parse(&text)
                 .map_err(|e| fail!("--trace-in: parsing {path}: {e}"))?;
             let trace = Trace::from_json(&json).map_err(|e| fail!("--trace-in: {path}: {e}"))?;
-            eprintln!("replaying {} tasks from {path}", trace.tasks.len());
+            felare::log_info!("replaying {} tasks from {path}", trace.tasks.len());
             sim.run(&trace)
         }
         (None, None) => {
@@ -247,7 +255,20 @@ fn cmd_simulate(raw: &[String]) -> Result<()> {
     };
     if let Some(path) = &trace_out {
         write_jsonl(path, sim.trace_log())?;
-        eprintln!("wrote {} trace records to {path}", sim.trace_log().len());
+        felare::log_info!("wrote {} trace records to {path}", sim.trace_log().len());
+    }
+    if let Some(path) = &metrics_out {
+        let rows = sim.obs().json_rows("island0");
+        felare::obs::write_jsonl_rows(path, &rows)?;
+        felare::log_info!("wrote {} metric rows to {path}", rows.len());
+    }
+    if let Some(path) = &flight_out {
+        let dumps = felare::util::json::Json::Array(sim.obs().flight.dumps_json(0));
+        std::fs::write(path, dumps.to_string_pretty())?;
+        felare::log_info!(
+            "wrote {} flight dumps to {path}",
+            sim.obs().flight.dumps().len()
+        );
     }
     if args.is_set("json") {
         println!("{}", result.to_json().to_string_pretty());
@@ -336,7 +357,7 @@ fn cmd_stress(raw: &[String]) -> Result<()> {
     if rate <= 0.0 {
         return Err(fail!("arrival rate must be positive (got {rate})"));
     }
-    eprintln!(
+    felare::log_info!(
         "stress: {} machines × {} types, capacity ≈ {capacity:.1} tasks/s, λ = {rate:.1}",
         sc.n_machines(),
         sc.n_types()
@@ -413,6 +434,9 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt_optional("expect-p99", "fail unless the p99 completed sojourn ≤ this (seconds)")
             .opt_optional("trace-out", "write per-request TraceRecords as JSONL to this path")
             .opt_optional("trace-in", "replay a gen-trace JSON (overrides --requests/--rate)")
+            .opt_optional("metrics-addr", "serve Prometheus text at host:port (e.g. 127.0.0.1:9090)")
+            .opt("metrics-linger", "0.0", "keep /metrics up this many seconds after the report")
+            .opt_optional("metrics-out", "write final counters + progress snapshots as JSONL")
             .opt("seed", "42", "PRNG seed")
             .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
             .flag("json", "emit the report as JSON"),
@@ -485,7 +509,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             let json = felare::util::json::Json::parse(&text)
                 .map_err(|e| fail!("--trace-in: parsing {path}: {e}"))?;
             let trace = Trace::from_json(&json).map_err(|e| fail!("--trace-in: {path}: {e}"))?;
-            eprintln!("replaying {} tasks from {path}", trace.tasks.len());
+            felare::log_info!("replaying {} tasks from {path}", trace.tasks.len());
             Some(trace)
         }
         None => None,
@@ -496,6 +520,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         recharge,
     });
 
+    let metrics_linger = args.f64("metrics-linger")?;
+    if metrics_linger < 0.0 || !metrics_linger.is_finite() {
+        return Err(fail!("--metrics-linger must be finite and >= 0 (got {metrics_linger})"));
+    }
     let common = ServeConfig {
         heuristic: args.str("heuristic"),
         n_requests: positive_count("requests", &args.str("requests"))?,
@@ -506,6 +534,8 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         record_traces: trace_out.is_some(),
         battery,
         replay,
+        metrics_addr: args.get("metrics-addr").map(String::from),
+        metrics_linger,
         ..Default::default()
     };
     // the arrival process, minus the synthetic default rate (needs capacity)
@@ -522,7 +552,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             sc.queue_slots = slots;
         }
         let arrival = arrival_for(explicit_load.unwrap_or(0.8) * sc.service_capacity());
-        eprintln!(
+        felare::log_info!(
             "serve[synthetic]: {} ({} machines × {} types), capacity ≈ {:.1} req/s, workload {}",
             sc.name,
             sc.n_machines(),
@@ -554,7 +584,12 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let report = serve(&config)?;
     if let Some(path) = &trace_out {
         write_jsonl(path, &report.traces)?;
-        eprintln!("wrote {} trace records to {path}", report.traces.len());
+        felare::log_info!("wrote {} trace records to {path}", report.traces.len());
+    }
+    if let Some(path) = args.get("metrics-out") {
+        let rows = report.metrics_rows();
+        felare::obs::write_jsonl_rows(path, &rows)?;
+        felare::log_info!("wrote {} metric rows to {path}", rows.len());
     }
     if args.is_set("json") {
         println!("{}", report.to_json().to_string_pretty());
@@ -636,6 +671,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
             .opt_optional("out", "`exp bench`: artifact output path [default: BENCH_PR8.json]")
             .opt_optional("faults", "`exp fault`: pin one plan 'crash:mI@T+D,…' over the intensity axis")
             .opt_optional("trace-in", "`exp sweep`: replay a gen-trace JSON (replaces the rate axis)")
+            .opt_optional("metrics-out", "`exp sweep`/`exp fleet`: JSONL telemetry export path")
+            .opt_optional("flight-out", "`exp fault`: JSON flight-recorder dump export path")
             .opt("seed", "24397", "sweep base seed"),
         raw,
     )?;
@@ -648,19 +685,21 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
     // run the default setup under a mislabeled flag
     let allowed: &[(&str, &[&str])] = &[
         ("scenario", &["sweep", "battery", "fleet"]),
-        ("rates", &["sweep", "battery", "fleet"]),
+        ("rates", &["sweep", "battery", "fleet", "fault"]),
         ("trace-out", &["sweep"]),
         ("expect-p99", &["sweep"]),
         ("batteries", &["battery", "fleet"]),
-        ("islands", &["fleet"]),
-        ("policies", &["fleet"]),
-        ("epoch", &["fleet"]),
-        ("jobs", &["fleet", "bench"]),
+        ("islands", &["fleet", "fault"]),
+        ("policies", &["fleet", "fault"]),
+        ("epoch", &["fleet", "fault"]),
+        ("jobs", &["fleet", "bench", "fault"]),
         ("clients", &["sweep"]),
         ("think-time", &["sweep"]),
         ("out", &["bench"]),
         ("faults", &["fault"]),
         ("trace-in", &["sweep"]),
+        ("metrics-out", &["sweep", "fleet"]),
+        ("flight-out", &["fault"]),
     ];
     for (flag, exps) in allowed {
         if args.get(flag).is_some() && !exps.contains(&name.as_str()) {
@@ -840,6 +879,8 @@ fn cmd_exp(raw: &[String]) -> Result<()> {
         out: args.get("out").map(String::from),
         faults,
         trace_in,
+        metrics_out: args.get("metrics-out").map(String::from),
+        flight_out: args.get("flight-out").map(String::from),
     };
     run_by_name(&name, &opts)?;
     Ok(())

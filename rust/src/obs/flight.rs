@@ -1,0 +1,295 @@
+//! Flight recorder: a bounded ring buffer of the last N scheduler events
+//! per island, snapshotted ("dumped") at the moment something bad happens
+//! — a machine crash, an island brown-out, or battery depletion — so a
+//! postmortem can see what the scheduler was doing just before the
+//! lights went out.
+//!
+//! The recorder follows the same contracts as the metrics registry
+//! (`obs::metrics` module docs): disarmed it is a strict no-op (one
+//! branch per call site, no memory traffic), armed it never feeds back
+//! into any engine decision, and `reset_run` clears contents while
+//! keeping the arming and capacity so a recycled arena re-runs clean.
+//!
+//! Dumps are bounded too ([`MAX_DUMPS`]): a fault storm keeps the first
+//! dumps — the ones closest to the root cause — and counts the rest, so
+//! a pathological plan cannot balloon memory.
+
+use crate::util::json::Json;
+
+/// Default ring capacity: the last 64 events is enough to reconstruct
+/// several mapping rounds of context around a failure.
+pub const DEFAULT_CAPACITY: usize = 64;
+
+/// Retained postmortem dumps per run; later dumps are counted, not kept.
+pub const MAX_DUMPS: usize = 16;
+
+/// One recorded scheduler event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlightEvent {
+    /// Virtual time of the event.
+    pub t: f64,
+    pub kind: FlightKind,
+    /// Machine index, or `None` for island-level events.
+    pub machine: Option<u32>,
+    /// Task id, or `None` for machine/island-level events.
+    pub task: Option<u64>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightKind {
+    /// A task execution started on a machine.
+    Start,
+    /// A task completed on time.
+    Complete,
+    /// A task missed its deadline (running abort or dropped at start).
+    Miss,
+    /// A task was dropped by the mapper/dispatch layer.
+    Drop,
+    /// A machine went down (crash window opened).
+    MachineDown,
+    /// A machine came back up.
+    MachineUp,
+    /// A machine entered a slow-down window.
+    SlowOn,
+    /// A machine left a slow-down window.
+    SlowOff,
+    /// A crash-aborted task was readmitted for a retry.
+    Retry,
+}
+
+impl FlightKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::Start => "start",
+            FlightKind::Complete => "complete",
+            FlightKind::Miss => "miss",
+            FlightKind::Drop => "drop",
+            FlightKind::MachineDown => "machine_down",
+            FlightKind::MachineUp => "machine_up",
+            FlightKind::SlowOn => "slow_on",
+            FlightKind::SlowOff => "slow_off",
+            FlightKind::Retry => "retry",
+        }
+    }
+}
+
+/// One postmortem snapshot: the ring's contents (oldest first) at the
+/// instant of the trigger.
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    /// Virtual time of the trigger.
+    pub t: f64,
+    /// Trigger reason: `"crash"`, `"brownout"` or `"depletion"`.
+    pub reason: &'static str,
+    /// Events recorded before this dump, oldest first.
+    pub events: Vec<FlightEvent>,
+}
+
+/// The per-island recorder (module docs). Allocated once at arming,
+/// recycled across runs.
+#[derive(Clone, Default)]
+pub struct FlightRecorder {
+    armed: bool,
+    capacity: usize,
+    /// Ring storage; `head` is the next write slot once full.
+    ring: Vec<FlightEvent>,
+    head: usize,
+    /// Total events ever recorded this run (≥ `ring.len()`).
+    recorded: u64,
+    dumps: Vec<FlightDump>,
+    /// Dumps dropped past [`MAX_DUMPS`].
+    dropped_dumps: u64,
+}
+
+impl FlightRecorder {
+    pub fn new() -> Self {
+        FlightRecorder::default()
+    }
+
+    /// Arm with the given ring capacity (0 disarms). The ring is
+    /// allocated here, never on the record path.
+    pub fn arm(&mut self, capacity: usize) {
+        self.armed = capacity > 0;
+        self.capacity = capacity;
+        self.ring = Vec::with_capacity(capacity);
+        self.head = 0;
+        self.recorded = 0;
+        self.dumps.clear();
+        self.dropped_dumps = 0;
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Clear contents, keep arming + capacity (recycled-arena contract).
+    pub fn reset(&mut self) {
+        self.ring.clear();
+        self.head = 0;
+        self.recorded = 0;
+        self.dumps.clear();
+        self.dropped_dumps = 0;
+    }
+
+    #[inline]
+    pub fn record(&mut self, t: f64, kind: FlightKind, machine: Option<u32>, task: Option<u64>) {
+        if !self.armed {
+            return;
+        }
+        let ev = FlightEvent { t, kind, machine, task };
+        if self.ring.len() < self.capacity {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.recorded += 1;
+    }
+
+    /// Events currently in the ring, oldest first.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        if self.ring.len() < self.capacity {
+            out.extend_from_slice(&self.ring);
+        } else {
+            out.extend_from_slice(&self.ring[self.head..]);
+            out.extend_from_slice(&self.ring[..self.head]);
+        }
+        out
+    }
+
+    /// Total events recorded this run (may exceed the ring capacity).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Take a postmortem snapshot of the ring. Returns whether the dump
+    /// was retained (vs counted past [`MAX_DUMPS`]).
+    pub fn dump(&mut self, t: f64, reason: &'static str) -> bool {
+        if !self.armed {
+            return false;
+        }
+        if self.dumps.len() >= MAX_DUMPS {
+            self.dropped_dumps += 1;
+            return false;
+        }
+        let events = self.events();
+        self.dumps.push(FlightDump { t, reason, events });
+        true
+    }
+
+    pub fn dumps(&self) -> &[FlightDump] {
+        &self.dumps
+    }
+
+    pub fn dropped_dumps(&self) -> u64 {
+        self.dropped_dumps
+    }
+
+    /// All dumps as one JSON array (the `--flight-out` payload), tagged
+    /// with an island index for fleet-scale postmortems.
+    pub fn dumps_json(&self, island: usize) -> Vec<Json> {
+        self.dumps
+            .iter()
+            .map(|d| {
+                let events = d
+                    .events
+                    .iter()
+                    .map(|e| {
+                        let mut row = Json::object()
+                            .set("t", e.t)
+                            .set("event", e.kind.name());
+                        if let Some(m) = e.machine {
+                            row = row.set("machine", m as f64);
+                        }
+                        if let Some(id) = e.task {
+                            row = row.set("task", id as f64);
+                        }
+                        row
+                    })
+                    .collect::<Vec<_>>();
+                Json::object()
+                    .set("island", island as f64)
+                    .set("t", d.t)
+                    .set("reason", d.reason)
+                    .set("events", Json::Array(events))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(r: &FlightRecorder) -> Vec<u64> {
+        r.events().iter().map(|e| e.task.unwrap()).collect()
+    }
+
+    #[test]
+    fn disarmed_recorder_is_inert() {
+        let mut r = FlightRecorder::new();
+        r.record(1.0, FlightKind::Start, Some(0), Some(1));
+        assert!(!r.dump(1.0, "crash"));
+        assert!(r.events().is_empty());
+        assert!(r.dumps().is_empty());
+        assert_eq!(r.recorded(), 0);
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n_in_order() {
+        let mut r = FlightRecorder::new();
+        r.arm(4);
+        for i in 0..10u64 {
+            r.record(i as f64, FlightKind::Start, Some(0), Some(i));
+        }
+        assert_eq!(r.recorded(), 10);
+        assert_eq!(ev(&r), vec![6, 7, 8, 9], "last 4, oldest first");
+        // below capacity the ring is the plain prefix
+        let mut s = FlightRecorder::new();
+        s.arm(8);
+        for i in 0..3u64 {
+            s.record(i as f64, FlightKind::Complete, None, Some(i));
+        }
+        assert_eq!(ev(&s), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dumps_snapshot_and_are_bounded() {
+        let mut r = FlightRecorder::new();
+        r.arm(2);
+        r.record(0.0, FlightKind::Start, Some(1), Some(7));
+        assert!(r.dump(0.5, "crash"));
+        r.record(1.0, FlightKind::Miss, Some(1), Some(7));
+        r.record(2.0, FlightKind::Start, Some(0), Some(8));
+        assert!(r.dump(2.5, "depletion"));
+        assert_eq!(r.dumps().len(), 2);
+        assert_eq!(r.dumps()[0].events.len(), 1, "first dump saw one event");
+        assert_eq!(r.dumps()[1].events.len(), 2, "second dump saw the full ring");
+        assert_eq!(r.dumps()[1].events[0].task, Some(7));
+        for _ in 0..(MAX_DUMPS + 5) {
+            r.dump(3.0, "crash");
+        }
+        assert_eq!(r.dumps().len(), MAX_DUMPS);
+        assert!(r.dropped_dumps() > 0);
+        let json = r.dumps_json(3);
+        assert_eq!(json.len(), MAX_DUMPS);
+        assert!(json[0].to_string_compact().contains("\"reason\":\"crash\""));
+    }
+
+    #[test]
+    fn reset_clears_contents_keeps_arming() {
+        let mut r = FlightRecorder::new();
+        r.arm(4);
+        r.record(0.0, FlightKind::Start, Some(0), Some(1));
+        r.dump(0.1, "crash");
+        r.reset();
+        assert!(r.armed());
+        assert!(r.events().is_empty());
+        assert!(r.dumps().is_empty());
+        assert_eq!(r.recorded(), 0);
+        r.record(1.0, FlightKind::Start, Some(0), Some(2));
+        assert_eq!(ev(&r), vec![2]);
+    }
+}

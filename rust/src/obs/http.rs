@@ -1,0 +1,228 @@
+//! Minimal Prometheus-style text exposition over stdlib TCP — the live
+//! coordinator's `serve --metrics-addr HOST:PORT` endpoint.
+//!
+//! No HTTP library: a single background thread accepts connections on a
+//! non-blocking listener (polling a stop flag every ~25 ms), answers
+//! `GET /metrics` with `text/plain; version=0.0.4` rendered by the
+//! caller-supplied closure, and 404s everything else. One request per
+//! connection, `Connection: close` — exactly what a scraper or `curl`
+//! needs and nothing more. [`MetricsServer::stop`] (or drop) joins the
+//! thread; binding to port 0 picks a free port, reported by
+//! [`MetricsServer::addr`].
+//!
+//! [`PromText`] builds the exposition body: `# TYPE` headers plus
+//! `name{label="v"} value` sample lines. [`parse_sample`] reads one back
+//! — the CI smoke and the conservation unit tests use it to gate scraped
+//! counters against `ServeReport` tallies.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Exposition body builder (module docs).
+#[derive(Default)]
+pub struct PromText {
+    buf: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        PromText::default()
+    }
+
+    /// Emit a `# HELP` + `# TYPE` header for a metric family.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) -> &mut Self {
+        self.buf.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        self
+    }
+
+    /// Emit one sample line; `labels` render as `{k="v",…}`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) -> &mut Self {
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(&format!("{k}=\"{v}\""));
+            }
+            self.buf.push('}');
+        }
+        // counters are exact u64s in this stack; print integral values
+        // without a decimal point so scrapes diff cleanly
+        if value.fract() == 0.0 && value.abs() < 1e15 {
+            self.buf.push_str(&format!(" {}\n", value as i64));
+        } else {
+            self.buf.push_str(&format!(" {value}\n"));
+        }
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// Read one sample back from an exposition body: the value of the first
+/// line whose name (and label set, verbatim) matches `series`.
+pub fn parse_sample(body: &str, series: &str) -> Option<f64> {
+    for line in body.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ')?;
+        if name == series {
+            return value.trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// The background exposition server (module docs).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`host:port`; port 0 = ephemeral) and serve
+    /// `render()` on `GET /metrics` until stopped.
+    pub fn start(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("felare-metrics".into())
+            .spawn(move || serve_loop(listener, stop_flag, render))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                // blocking per-connection IO with a short timeout: a stuck
+                // client cannot wedge the poll loop for long
+                let _ = conn.set_nonblocking(false);
+                let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
+                let mut buf = [0u8; 1024];
+                let n = conn.read(&mut buf).unwrap_or(0);
+                let req = String::from_utf8_lossy(&buf[..n]);
+                let path = req.split_whitespace().nth(1).unwrap_or("");
+                let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+                    ("200 OK", render())
+                } else {
+                    ("404 Not Found", "not found\n".to_string())
+                };
+                let resp = format!(
+                    "HTTP/1.1 {status}\r\n\
+                     Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                let _ = conn.write_all(resp.as_bytes());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn prom_text_renders_and_parses_back() {
+        let mut p = PromText::new();
+        p.family("felare_arrived_total", "counter", "requests arrived");
+        p.sample("felare_arrived_total", &[], 42.0);
+        p.sample("felare_arrived_total", &[("type", "1")], 17.0);
+        p.family("felare_soc", "gauge", "state of charge");
+        p.sample("felare_soc", &[], 0.25);
+        let body = p.finish();
+        assert_eq!(parse_sample(&body, "felare_arrived_total"), Some(42.0));
+        assert_eq!(parse_sample(&body, "felare_arrived_total{type=\"1\"}"), Some(17.0));
+        assert_eq!(parse_sample(&body, "felare_soc"), Some(0.25));
+        assert_eq!(parse_sample(&body, "felare_missing"), None);
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let hits2 = Arc::clone(&hits);
+        let server = MetricsServer::start(
+            "127.0.0.1:0",
+            Arc::new(move || {
+                let n = hits2.fetch_add(1, Ordering::Relaxed) + 1;
+                let mut p = PromText::new();
+                p.family("felare_scrapes_total", "counter", "scrapes served");
+                p.sample("felare_scrapes_total", &[], n as f64);
+                p.finish()
+            }),
+        )
+        .unwrap();
+        let addr = server.addr();
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200"), "{ok}");
+        assert!(ok.contains("version=0.0.4"));
+        let body = ok.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(parse_sample(body, "felare_scrapes_total"), Some(1.0));
+        let again = get(addr, "/metrics");
+        let body = again.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(parse_sample(body, "felare_scrapes_total"), Some(2.0));
+        let miss = get(addr, "/other");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+        server.stop();
+    }
+}

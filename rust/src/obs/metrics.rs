@@ -1,0 +1,477 @@
+//! Fixed-slot, allocation-free metrics registry: counters, gauges and
+//! log-bucketed latency histograms, compiled to strict no-ops while
+//! disarmed.
+//!
+//! # Zero-cost-when-disarmed contract
+//!
+//! Every mutating entry point (`inc`, `add`, `set_gauge`, `record_secs`)
+//! is `#[inline]` and opens with `if !self.armed { return; }` — the same
+//! idiom as `Island::retries_of` and the `fault_plan: None` never-taken
+//! branches that keep the PR 7/8 hot-path campaigns intact. A disarmed
+//! registry therefore costs one predictable branch per call site and
+//! touches no memory; `exp bench` runs with the registry disarmed and the
+//! bit-identity suites (`rust/tests/obs_suite.rs`) pin that arming it
+//! changes no deterministic result field either.
+//!
+//! # Fixed slots
+//!
+//! Metric identity is an enum, storage is a fixed array indexed by the
+//! enum discriminant: registering, looking up or recording a metric never
+//! allocates, and the whole set is `Copy`-cheap to reset between runs
+//! (the recycled-arena contract — `reset` clears values, keeps arming).
+//!
+//! # Histogram buckets and the ≤ 2× percentile bound
+//!
+//! [`Hist`] buckets a sample by the position of its highest set bit over
+//! integer nanoseconds: bucket `k ≥ 1` holds `[2^k, 2^(k+1))` ns and
+//! bucket 0 holds `{0, 1}` ns. A percentile query walks the cumulative
+//! counts to the nearest-rank bucket and reports that bucket's **upper
+//! bound** (`2^(k+1) − 1` ns). The approximation error is bounded by
+//! construction: if the exact nearest-rank sample `e ≥ 1` ns lies in
+//! bucket `k`, then `2^k ≤ e` and the reported value `2^(k+1) − 1`
+//! satisfies
+//!
+//! ```text
+//! e  ≤  2^(k+1) − 1  ≤  2·2^k − 1  ≤  2e − 1  <  2e
+//! ```
+//!
+//! i.e. `exact ≤ approx < 2·exact` — the histogram never understates a
+//! percentile and overstates it by strictly less than 2×. The property
+//! test in `rust/tests/obs_suite.rs` pins this bound against the exact
+//! nearest-rank percentile ([`crate::util::stats::Summary`]) on random
+//! samples.
+
+use crate::util::json::Json;
+
+/// Monotonic event counters, one fixed slot each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Mapping events driven through the shared dispatch layer.
+    MappingEvents,
+    /// Tasks deferred (left in the arriving queue) across all events.
+    Deferrals,
+    /// Task executions started on a machine.
+    TasksStarted,
+    /// Tasks completed on time.
+    TasksCompleted,
+    /// Tasks missed (deadline aborts + dropped-at-start).
+    TasksMissed,
+    /// Tasks dropped by the mapper/dispatch layer (all cancel kinds).
+    TasksDropped,
+    /// Executions aborted by an injected machine crash.
+    CrashAborts,
+    /// Crash-aborted tasks readmitted for a retry.
+    Retries,
+    /// Fault-plan events applied (down/up/slow-on/slow-off edges).
+    FaultsApplied,
+    /// Flight-recorder postmortem dumps taken.
+    FlightDumps,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 10] = [
+        Counter::MappingEvents,
+        Counter::Deferrals,
+        Counter::TasksStarted,
+        Counter::TasksCompleted,
+        Counter::TasksMissed,
+        Counter::TasksDropped,
+        Counter::CrashAborts,
+        Counter::Retries,
+        Counter::FaultsApplied,
+        Counter::FlightDumps,
+    ];
+
+    /// Stable exposition name (Prometheus-style `_total` suffix).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::MappingEvents => "mapping_events_total",
+            Counter::Deferrals => "deferrals_total",
+            Counter::TasksStarted => "tasks_started_total",
+            Counter::TasksCompleted => "tasks_completed_total",
+            Counter::TasksMissed => "tasks_missed_total",
+            Counter::TasksDropped => "tasks_dropped_total",
+            Counter::CrashAborts => "crash_aborts_total",
+            Counter::Retries => "retries_total",
+            Counter::FaultsApplied => "faults_applied_total",
+            Counter::FlightDumps => "flight_dumps_total",
+        }
+    }
+}
+
+/// Last-value gauges, one fixed slot each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Tasks sitting in the per-machine local queues.
+    QueuedTotal,
+    /// Tasks waiting in the arriving queue.
+    ArrivingDepth,
+    /// Battery state of charge in [0, 1] (NaN without a battery).
+    Soc,
+    /// Per-type completion-rate spread (max − min) so far.
+    FairnessSpread,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 4] =
+        [Gauge::QueuedTotal, Gauge::ArrivingDepth, Gauge::Soc, Gauge::FairnessSpread];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueuedTotal => "queued_total",
+            Gauge::ArrivingDepth => "arriving_depth",
+            Gauge::Soc => "soc",
+            Gauge::FairnessSpread => "fairness_spread",
+        }
+    }
+}
+
+/// Wall-clock latency-span histograms, one fixed slot each. All values
+/// are recorded in seconds and bucketed over integer nanoseconds; these
+/// spans are measurement-only and sit outside the bit-identity contract
+/// exactly like `mapper_time_total`/`mapper_time_max`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// Full mapping event: scan + heuristic + apply.
+    MapperEvent,
+    /// Pre-heuristic feasibility scan (expiry sweep + snapshot refresh).
+    FeasibilityScan,
+    /// Fleet router: routing one epoch window's arrivals.
+    RouteSpan,
+    /// Fleet epoch: advancing all islands to the boundary.
+    AdvanceSpan,
+}
+
+impl Span {
+    pub const ALL: [Span; 4] =
+        [Span::MapperEvent, Span::FeasibilityScan, Span::RouteSpan, Span::AdvanceSpan];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::MapperEvent => "mapper_event_ns",
+            Span::FeasibilityScan => "feasibility_scan_ns",
+            Span::RouteSpan => "route_span_ns",
+            Span::AdvanceSpan => "advance_span_ns",
+        }
+    }
+}
+
+/// Number of power-of-2 buckets: covers the full `u64` nanosecond range.
+pub const HIST_BUCKETS: usize = 64;
+
+/// One log-bucketed histogram (module docs §Histogram buckets).
+#[derive(Clone)]
+pub struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: [0; HIST_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl Hist {
+    /// Bucket index of a nanosecond value: highest set bit (0 and 1 ns
+    /// share bucket 0).
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        if ns <= 1 {
+            0
+        } else {
+            63 - ns.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of a bucket in nanoseconds.
+    fn bucket_upper(k: usize) -> u64 {
+        if k >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << (k + 1)) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of the recorded samples in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns as f64 * 1e-9
+    }
+
+    /// Exact maximum recorded sample in seconds.
+    pub fn max_secs(&self) -> f64 {
+        self.max_ns as f64 * 1e-9
+    }
+
+    /// Exact mean of the recorded samples in seconds (NaN when empty).
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum_secs() / self.count as f64
+    }
+
+    /// Nearest-rank percentile, reported as the selected bucket's upper
+    /// bound in nanoseconds (module docs: `exact ≤ approx < 2·exact` for
+    /// samples ≥ 1 ns). 0 when empty.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (k, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return Self::bucket_upper(k);
+            }
+        }
+        Self::bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    /// [`Hist::percentile_ns`] in seconds.
+    pub fn percentile_secs(&self, p: f64) -> f64 {
+        self.percentile_ns(p) as f64 * 1e-9
+    }
+
+    fn reset(&mut self) {
+        *self = Hist::default();
+    }
+}
+
+/// The per-engine registry: every slot preallocated, disarmed by default
+/// (module docs).
+#[derive(Clone, Default)]
+pub struct MetricSet {
+    armed: bool,
+    counters: [u64; Counter::ALL.len()],
+    gauges: [f64; Gauge::ALL.len()],
+    hists: [Hist; Span::ALL.len()],
+}
+
+impl MetricSet {
+    pub fn new() -> Self {
+        let mut m = MetricSet::default();
+        for g in m.gauges.iter_mut() {
+            *g = f64::NAN;
+        }
+        m
+    }
+
+    /// Arm or disarm collection. Arming never affects engine decisions —
+    /// the registry is observation-only by construction.
+    pub fn arm(&mut self, on: bool) {
+        self.armed = on;
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Clear every value, keep the arming flag (recycled-arena contract:
+    /// a repeat run starts from a clean registry without reallocating).
+    pub fn reset(&mut self) {
+        self.counters = [0; Counter::ALL.len()];
+        self.gauges = [f64::NAN; Gauge::ALL.len()];
+        for h in self.hists.iter_mut() {
+            h.reset();
+        }
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Counter) {
+        if !self.armed {
+            return;
+        }
+        self.counters[c as usize] += 1;
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        if !self.armed {
+            return;
+        }
+        self.counters[c as usize] += n;
+    }
+
+    #[inline]
+    pub fn set_gauge(&mut self, g: Gauge, v: f64) {
+        if !self.armed {
+            return;
+        }
+        self.gauges[g as usize] = v;
+    }
+
+    /// Record a wall-clock span (seconds) into its histogram. Negative or
+    /// non-finite inputs clamp to 0.
+    #[inline]
+    pub fn record_secs(&mut self, s: Span, secs: f64) {
+        if !self.armed {
+            return;
+        }
+        let ns = if secs.is_finite() && secs > 0.0 { (secs * 1e9) as u64 } else { 0 };
+        self.hists[s as usize].record_ns(ns);
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    pub fn hist(&self, s: Span) -> &Hist {
+        &self.hists[s as usize]
+    }
+
+    /// One JSONL row per non-empty metric: counters with a non-zero
+    /// value, gauges that were ever set, histograms with samples (p50/p99
+    /// in microseconds for direct comparison with `exp overhead`).
+    pub fn json_rows(&self, scope: &str) -> Vec<Json> {
+        let mut rows = Vec::new();
+        for c in Counter::ALL {
+            let v = self.counter(c);
+            if v > 0 {
+                rows.push(
+                    Json::object()
+                        .set("kind", "counter")
+                        .set("scope", scope)
+                        .set("name", c.name())
+                        .set("value", v as f64),
+                );
+            }
+        }
+        for g in Gauge::ALL {
+            let v = self.gauge(g);
+            if !v.is_nan() {
+                rows.push(
+                    Json::object()
+                        .set("kind", "gauge")
+                        .set("scope", scope)
+                        .set("name", g.name())
+                        .set("value", v),
+                );
+            }
+        }
+        for s in Span::ALL {
+            let h = self.hist(s);
+            if h.count() > 0 {
+                rows.push(
+                    Json::object()
+                        .set("kind", "hist")
+                        .set("scope", scope)
+                        .set("name", s.name())
+                        .set("count", h.count() as f64)
+                        .set("mean_us", h.mean_secs() * 1e6)
+                        .set("p50_us", h.percentile_secs(50.0) * 1e6)
+                        .set("p99_us", h.percentile_secs(99.0) * 1e6)
+                        .set("max_us", h.max_secs() * 1e6),
+                );
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_registry_records_nothing() {
+        let mut m = MetricSet::new();
+        m.inc(Counter::MappingEvents);
+        m.add(Counter::Deferrals, 7);
+        m.set_gauge(Gauge::QueuedTotal, 3.0);
+        m.record_secs(Span::MapperEvent, 1e-6);
+        assert_eq!(m.counter(Counter::MappingEvents), 0);
+        assert_eq!(m.counter(Counter::Deferrals), 0);
+        assert!(m.gauge(Gauge::QueuedTotal).is_nan());
+        assert_eq!(m.hist(Span::MapperEvent).count(), 0);
+        assert!(m.json_rows("x").is_empty());
+    }
+
+    #[test]
+    fn armed_registry_accumulates_and_resets() {
+        let mut m = MetricSet::new();
+        m.arm(true);
+        m.inc(Counter::MappingEvents);
+        m.add(Counter::Deferrals, 7);
+        m.set_gauge(Gauge::Soc, 0.5);
+        m.record_secs(Span::MapperEvent, 2e-6);
+        assert_eq!(m.counter(Counter::MappingEvents), 1);
+        assert_eq!(m.counter(Counter::Deferrals), 7);
+        assert_eq!(m.gauge(Gauge::Soc), 0.5);
+        assert_eq!(m.hist(Span::MapperEvent).count(), 1);
+        assert_eq!(m.json_rows("x").len(), 3);
+        m.reset();
+        assert!(m.armed(), "reset keeps arming");
+        assert_eq!(m.counter(Counter::Deferrals), 0);
+        assert_eq!(m.hist(Span::MapperEvent).count(), 0);
+        assert!(m.gauge(Gauge::Soc).is_nan());
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 0);
+        assert_eq!(Hist::bucket_of(2), 1);
+        assert_eq!(Hist::bucket_of(3), 1);
+        assert_eq!(Hist::bucket_of(4), 2);
+        assert_eq!(Hist::bucket_of(1023), 9);
+        assert_eq!(Hist::bucket_of(1024), 10);
+        assert_eq!(Hist::bucket_of(u64::MAX), 63);
+        assert_eq!(Hist::bucket_upper(0), 1);
+        assert_eq!(Hist::bucket_upper(9), 1023);
+        assert_eq!(Hist::bucket_upper(63), u64::MAX);
+    }
+
+    #[test]
+    fn percentile_is_bucket_upper_bound_of_nearest_rank() {
+        let mut h = Hist::default();
+        for ns in [10u64, 20, 100, 1000, 5000] {
+            h.record_ns(ns);
+        }
+        // nearest rank of p50 over 5 samples is the 3rd (100 ns, bucket
+        // 6 = [64, 128)) → upper bound 127
+        assert_eq!(h.percentile_ns(50.0), 127);
+        // p100 → 5000 ns, bucket 12 = [4096, 8192) → 8191
+        assert_eq!(h.percentile_ns(100.0), 8191);
+        assert_eq!(h.max_ns, 5000);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn percentile_bound_holds_on_a_spread() {
+        // exact ≤ approx < 2·exact for every sample ≥ 1 ns
+        let mut h = Hist::default();
+        let mut vals: Vec<u64> = (1..400u64).map(|i| i * i * 37 % 100_000 + 1).collect();
+        for &v in &vals {
+            h.record_ns(v);
+        }
+        vals.sort_unstable();
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let rank = ((p / 100.0) * vals.len() as f64).ceil().max(1.0) as usize;
+            let exact = vals[rank - 1];
+            let approx = h.percentile_ns(p);
+            assert!(approx >= exact, "p{p}: approx {approx} < exact {exact}");
+            assert!(approx < 2 * exact, "p{p}: approx {approx} ≥ 2× exact {exact}");
+        }
+    }
+}

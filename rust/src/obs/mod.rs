@@ -1,0 +1,121 @@
+//! Observability: the telemetry layer every engine threads through.
+//!
+//! Four pieces, one contract:
+//!
+//! * [`metrics`] — fixed-slot counters / gauges / log-bucketed latency
+//!   histograms ([`MetricSet`]), strict no-ops while disarmed;
+//! * [`sampler`] — recycled time-series buffers sampled at mapping-event
+//!   and fleet-epoch boundaries ([`Sampler`], [`FleetSampler`]), written
+//!   as `--metrics-out metrics.jsonl`;
+//! * [`http`] — the Prometheus-style text endpoint behind
+//!   `serve --metrics-addr` ([`MetricsServer`]);
+//! * [`flight`] — a bounded ring of the last scheduler events, dumped on
+//!   crash / brown-out / depletion ([`FlightRecorder`]), written as
+//!   `--flight-out flight.json`.
+//!
+//! **The contract:** observation only. Armed or disarmed, no `obs` type
+//! ever feeds a value back into an engine decision, so every
+//! deterministic result field is bit-identical either way
+//! (`rust/tests/obs_suite.rs` pins this across all three engines and the
+//! fleet, with batteries and faults on). Disarmed, every hook is an
+//! inlined early-return — the PR 7/8 hot-path campaigns lose nothing.
+//! Wall-clock span histograms sit outside the bit-identity contract
+//! exactly like the pre-existing `mapper_time_total`/`mapper_time_max`.
+//!
+//! [`IslandObs`] bundles the three per-island pieces; `sim::Island` owns
+//! one and `Simulation` / `HeadlessServe` / `FleetSim` expose arming
+//! through `set_metrics` / `set_flight`.
+
+pub mod flight;
+pub mod http;
+pub mod metrics;
+pub mod sampler;
+
+pub use flight::{FlightDump, FlightEvent, FlightKind, FlightRecorder};
+pub use http::{parse_sample, MetricsServer, PromText};
+pub use metrics::{Counter, Gauge, Hist, MetricSet, Span};
+pub use sampler::{FleetSampler, Sampler};
+
+use crate::util::json::Json;
+
+/// The per-island observability bundle: one registry, one time-series
+/// sampler, one flight recorder (module docs).
+#[derive(Clone, Default)]
+pub struct IslandObs {
+    pub metrics: MetricSet,
+    pub sampler: Sampler,
+    pub flight: FlightRecorder,
+}
+
+impl IslandObs {
+    pub fn new() -> Self {
+        IslandObs {
+            metrics: MetricSet::new(),
+            sampler: Sampler::new(),
+            flight: FlightRecorder::new(),
+        }
+    }
+
+    /// Clear all collected values, keep arming flags and capacities
+    /// (called from the engines' per-run arena reset).
+    pub fn reset_run(&mut self) {
+        self.metrics.reset();
+        self.sampler.reset();
+        self.flight.reset();
+    }
+
+    /// Metrics + sample rows for one island (`--metrics-out` payload).
+    pub fn json_rows(&self, scope: &str) -> Vec<Json> {
+        let mut rows = self.metrics.json_rows(scope);
+        rows.extend(self.sampler.json_rows(scope));
+        rows
+    }
+}
+
+/// Write JSONL rows (one compact object per line), the `--metrics-out`
+/// format shared with `--trace-out`.
+pub fn write_jsonl_rows(path: &str, rows: &[Json]) -> std::io::Result<()> {
+    use std::io::Write;
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    for row in rows {
+        writeln!(w, "{}", row.to_string_compact())?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn island_obs_resets_everything_keeps_arming() {
+        let mut obs = IslandObs::new();
+        obs.metrics.arm(true);
+        obs.sampler.arm(2);
+        obs.flight.arm(8);
+        obs.metrics.inc(Counter::MappingEvents);
+        obs.flight.record(0.0, FlightKind::Start, Some(0), Some(1));
+        obs.reset_run();
+        assert!(obs.metrics.armed() && obs.sampler.armed() && obs.flight.armed());
+        assert_eq!(obs.metrics.counter(Counter::MappingEvents), 0);
+        assert!(obs.flight.events().is_empty());
+    }
+
+    #[test]
+    fn jsonl_rows_round_trip_through_a_file() {
+        let rows = vec![
+            Json::object().set("kind", "counter").set("name", "x").set("value", 3u64),
+            Json::object().set("kind", "sample").set("t", 1.5),
+        ];
+        let path = std::env::temp_dir().join("felare_obs_rows_test.jsonl");
+        let path = path.to_str().unwrap();
+        write_jsonl_rows(path, &rows).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Json::parse(lines[0]).unwrap().req_f64("value").unwrap(), 3.0);
+        assert_eq!(Json::parse(lines[1]).unwrap().req_str("kind").unwrap(), "sample");
+    }
+}

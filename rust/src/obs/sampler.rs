@@ -1,0 +1,290 @@
+//! Time-series sampling of live scheduler state into recycled
+//! struct-of-arrays buffers — the `--metrics-out metrics.jsonl` payload.
+//!
+//! [`Sampler`] snapshots one island at mapping-event boundaries: arriving
+//! queue depth, total and per-machine local-queue depth, running
+//! executions, battery SoC and the per-type completion-rate spread so
+//! far. Sampling is rate-limited in *virtual* time (`every` seconds
+//! between samples, default 1.0) so a million-task run produces a
+//! bounded series instead of one row per event. [`FleetSampler`]
+//! snapshots every island's routing view at fleet epoch boundaries —
+//! queue depth, running, SoC, and the brown-out mask.
+//!
+//! Both follow the `obs` contracts (see `obs::metrics`): disarmed they
+//! cost one inlined branch per boundary; armed they only *read* engine
+//! state; `reset` clears the series and keeps the arming so recycled
+//! arenas re-run clean. Buffers grow to the high-water mark of the
+//! longest run and are reused thereafter.
+
+use crate::sched::dispatch::MappingState;
+use crate::sched::route::IslandView;
+use crate::util::json::Json;
+
+/// Default virtual seconds between island samples.
+pub const DEFAULT_SAMPLE_EVERY: f64 = 1.0;
+
+/// Per-island time-series sampler (module docs). Columns are SoA so a
+/// long series stays cache-friendly and allocation-free per row.
+#[derive(Clone, Default)]
+pub struct Sampler {
+    armed: bool,
+    /// Minimum virtual seconds between samples.
+    pub every: f64,
+    next_at: f64,
+    n_machines: usize,
+    t: Vec<f64>,
+    arriving: Vec<u32>,
+    queued: Vec<u32>,
+    running: Vec<u32>,
+    soc: Vec<f64>,
+    spread: Vec<f64>,
+    /// Per-machine local-queue depths, flattened with stride `n_machines`.
+    depth: Vec<u16>,
+}
+
+impl Sampler {
+    pub fn new() -> Self {
+        Sampler { every: DEFAULT_SAMPLE_EVERY, ..Sampler::default() }
+    }
+
+    /// Arm for an island with `n_machines` machines.
+    pub fn arm(&mut self, n_machines: usize) {
+        self.armed = true;
+        self.n_machines = n_machines;
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Whether a sample is due at virtual time `t` — the one inlined
+    /// check the mapping hot path pays while armed.
+    #[inline]
+    pub fn due(&self, t: f64) -> bool {
+        self.armed && t >= self.next_at
+    }
+
+    /// Clear the series, keep arming/cadence (recycled-arena contract).
+    pub fn reset(&mut self) {
+        self.next_at = 0.0;
+        self.t.clear();
+        self.arriving.clear();
+        self.queued.clear();
+        self.running.clear();
+        self.soc.clear();
+        self.spread.clear();
+        self.depth.clear();
+    }
+
+    /// Take one sample (callers gate on [`Sampler::due`]). Reads the
+    /// dispatch state only; never mutates engine-visible state.
+    pub fn sample(
+        &mut self,
+        t: f64,
+        mapping: &MappingState,
+        running: u32,
+        soc: Option<f64>,
+        spread: f64,
+    ) {
+        self.next_at = t + self.every;
+        self.t.push(t);
+        self.arriving.push(mapping.arriving_len() as u32);
+        self.queued.push(mapping.queued_total() as u32);
+        self.running.push(running);
+        self.soc.push(soc.unwrap_or(f64::NAN));
+        self.spread.push(spread);
+        for m in 0..self.n_machines {
+            self.depth.push(mapping.queue_len(m).min(u16::MAX as usize) as u16);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// One JSONL row per sample (`kind: "sample"`), per-machine depths as
+    /// an array column.
+    pub fn json_rows(&self, scope: &str) -> Vec<Json> {
+        (0..self.len())
+            .map(|i| {
+                let depths: Vec<Json> = self.depth
+                    [i * self.n_machines..(i + 1) * self.n_machines]
+                    .iter()
+                    .map(|&d| Json::Num(d as f64))
+                    .collect();
+                Json::object()
+                    .set("kind", "sample")
+                    .set("scope", scope)
+                    .set("t", self.t[i])
+                    .set("arriving", self.arriving[i] as u64)
+                    .set("queued", self.queued[i] as u64)
+                    .set("running", self.running[i] as u64)
+                    .set("soc", self.soc[i])
+                    .set("fairness_spread", self.spread[i])
+                    .set("queue_depth", Json::Array(depths))
+            })
+            .collect()
+    }
+}
+
+/// Fleet-level epoch-boundary sampler: one row per island per boundary,
+/// read straight off the router's [`IslandView`] snapshots (module docs).
+#[derive(Clone, Default)]
+pub struct FleetSampler {
+    armed: bool,
+    /// Minimum virtual seconds between boundary samples.
+    pub every: f64,
+    next_at: f64,
+    t: Vec<f64>,
+    island: Vec<u32>,
+    queued: Vec<u32>,
+    running: Vec<u32>,
+    soc: Vec<f64>,
+    down: Vec<bool>,
+}
+
+impl FleetSampler {
+    pub fn new() -> Self {
+        FleetSampler { every: DEFAULT_SAMPLE_EVERY, ..FleetSampler::default() }
+    }
+
+    pub fn arm(&mut self, on: bool) {
+        self.armed = on;
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    #[inline]
+    pub fn due(&self, t: f64) -> bool {
+        self.armed && t >= self.next_at
+    }
+
+    pub fn reset(&mut self) {
+        self.next_at = 0.0;
+        self.t.clear();
+        self.island.clear();
+        self.queued.clear();
+        self.running.clear();
+        self.soc.clear();
+        self.down.clear();
+    }
+
+    /// Sample every island's view at epoch boundary `t`.
+    pub fn sample(&mut self, t: f64, views: &[IslandView]) {
+        self.next_at = t + self.every;
+        for (i, v) in views.iter().enumerate() {
+            self.t.push(t);
+            self.island.push(i as u32);
+            self.queued.push(v.queued.min(u32::MAX as usize) as u32);
+            self.running.push(v.running.min(u32::MAX as usize) as u32);
+            self.soc.push(v.soc.unwrap_or(f64::NAN));
+            self.down.push(v.depleted);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// One JSONL row per (boundary, island) pair (`kind: "fleet_sample"`).
+    pub fn json_rows(&self) -> Vec<Json> {
+        (0..self.len())
+            .map(|i| {
+                Json::object()
+                    .set("kind", "fleet_sample")
+                    .set("t", self.t[i])
+                    .set("island", self.island[i] as u64)
+                    .set("queued", self.queued[i] as u64)
+                    .set("running", self.running[i] as u64)
+                    .set("soc", self.soc[i])
+                    .set("down", self.down[i])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Scenario;
+    use crate::sched::fairness::FairnessTracker;
+    use crate::sched::registry::heuristic_by_name;
+
+    fn mapping_for(sc: &Scenario) -> MappingState {
+        MappingState::new(
+            sc.eet.clone(),
+            sc.machines.iter().map(|m| m.dyn_power).collect(),
+            sc.queue_slots,
+            FairnessTracker::new(
+                sc.n_types(),
+                sc.fairness_factor,
+                sc.fairness_min_samples,
+                sc.rate_window,
+            ),
+            heuristic_by_name("mm", sc).unwrap(),
+        )
+    }
+
+    #[test]
+    fn disarmed_sampler_is_never_due() {
+        let s = Sampler::new();
+        assert!(!s.due(0.0));
+        assert!(!s.due(1e9));
+        let f = FleetSampler::new();
+        assert!(!f.due(0.0));
+    }
+
+    #[test]
+    fn cadence_gates_samples() {
+        let sc = Scenario::paper_synthetic();
+        let mapping = mapping_for(&sc);
+        let mut s = Sampler::new();
+        s.arm(2);
+        s.every = 10.0;
+        assert!(s.due(0.0), "first sample fires immediately");
+        s.sample(0.0, &mapping, 1, None, 0.0);
+        assert!(!s.due(5.0));
+        assert!(s.due(10.0));
+        s.sample(10.0, &mapping, 0, Some(0.5), 0.25);
+        assert_eq!(s.len(), 2);
+        let rows = s.json_rows("island0");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].req_f64("t").unwrap(), 10.0);
+        assert_eq!(rows[1].req_f64("soc").unwrap(), 0.5);
+        assert_eq!(rows[0].get("queue_depth").unwrap().as_array().unwrap().len(), 2);
+        s.reset();
+        assert!(s.armed(), "reset keeps arming");
+        assert!(s.is_empty());
+        assert!(s.due(0.0), "cadence restarts");
+    }
+
+    #[test]
+    fn fleet_sampler_rows_per_island() {
+        let mut f = FleetSampler::new();
+        f.arm(true);
+        let views = vec![
+            IslandView { queued: 3, running: 1, n_machines: 2, slots: 4, soc: Some(0.8), depleted: false },
+            IslandView { queued: 0, running: 0, n_machines: 2, slots: 4, soc: None, depleted: true },
+        ];
+        f.sample(0.0, &views);
+        f.sample(10.0, &views);
+        assert_eq!(f.len(), 4);
+        let rows = f.json_rows();
+        assert_eq!(rows[1].get("down").unwrap().as_bool(), Some(true));
+        assert_eq!(rows[0].req_f64("soc").unwrap(), 0.8);
+        f.reset();
+        assert!(f.is_empty() && f.armed());
+    }
+}

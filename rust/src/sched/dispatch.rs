@@ -124,6 +124,12 @@ pub struct Dropped {
 pub struct MappingStats {
     /// Wall-clock seconds spent inside the heuristic's `map`.
     pub mapper_dt: f64,
+    /// Wall-clock seconds spent in the pre-heuristic passes (arriving
+    /// expiry, energy shedding, snapshot refresh) — the "feasibility
+    /// scan". Always `0.0` unless [`MappingState::time_spans`] is set:
+    /// the extra `Instant` reads are only paid when the telemetry layer
+    /// asked for them.
+    pub scan_dt: f64,
     /// Tasks left unconsumed-but-feasible-later by this event.
     pub deferrals: u64,
 }
@@ -184,6 +190,11 @@ pub struct MappingState {
     /// vs `stress_throughput_full_refresh`). Identical results either way
     /// (the debug build asserts it); off by default.
     pub force_full_refresh: bool,
+    /// Time the pre-heuristic feasibility-scan span on every event
+    /// ([`MappingStats::scan_dt`]) — set by the telemetry layer
+    /// (`Island::set_metrics`), off by default so untimed runs pay no
+    /// extra `Instant` reads. Wall-clock only: never affects results.
+    pub time_spans: bool,
 }
 
 impl MappingState {
@@ -245,6 +256,7 @@ impl MappingState {
             record_actions: false,
             action_log: Vec::new(),
             force_full_refresh: false,
+            time_spans: false,
         }
     }
 
@@ -490,7 +502,10 @@ impl MappingState {
             record_actions,
             action_log,
             force_full_refresh,
+            time_spans,
         } = self;
+
+        let span_t0 = if *time_spans { Some(Instant::now()) } else { None };
 
         // engine-level expiry: tasks that died waiting in the arriving
         // queue are cancelled for every heuristic alike. The contiguous
@@ -599,6 +614,7 @@ impl MappingState {
         } else {
             None
         };
+        let scan_dt = span_t0.map_or(0.0, |t| t.elapsed().as_secs_f64());
         let mut view = SchedView::new(now, eet, std::mem::take(snapshots), arriving, fair_snap);
         view.soc = *soc;
         let t0 = Instant::now();
@@ -660,7 +676,7 @@ impl MappingState {
             arriving_deadline.truncate(w);
         }
 
-        MappingStats { mapper_dt, deferrals }
+        MappingStats { mapper_dt, scan_dt, deferrals }
     }
 }
 

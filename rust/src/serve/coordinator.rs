@@ -56,6 +56,7 @@ use crate::model::machine::{MachineId, MachineSpec};
 use crate::model::scenario::RateWindow;
 use crate::model::task::{Task, TaskTypeId, Time};
 use crate::model::{ArrivalProcess, EetMatrix, RateProfile, Scenario, Trace};
+use crate::obs::{MetricsServer, PromText};
 use crate::runtime::{
     profile_eet, Executor, InferenceBackend, PjrtBackend, Runtime, SyntheticBackend,
 };
@@ -128,6 +129,16 @@ pub struct ServeConfig {
     /// silently strands a request. Overrides `n_requests` and the
     /// open-loop `arrival` knobs; rejected with closed-loop clients.
     pub replay: Option<Trace>,
+    /// Serve a Prometheus-style text endpoint at this `host:port` for the
+    /// whole session (`--metrics-addr`; port 0 picks a free port). The
+    /// counter families mirror the final [`ServeReport`] tallies, so a
+    /// scrape at any instant satisfies arrived = completed + missed +
+    /// cancelled + in-flight.
+    pub metrics_addr: Option<String>,
+    /// Keep the `/metrics` endpoint up this many wall seconds after the
+    /// report is final (`felare_done` flips to 1), so one last scrape can
+    /// observe the terminal tallies (`--metrics-linger`).
+    pub metrics_linger: f64,
 }
 
 impl Default for ServeConfig {
@@ -151,6 +162,8 @@ impl Default for ServeConfig {
             record_traces: false,
             battery: None,
             replay: None,
+            metrics_addr: None,
+            metrics_linger: 0.0,
         }
     }
 }
@@ -372,6 +385,41 @@ impl SharedState {
         }
         self.snapshots.push(snap);
     }
+}
+
+/// Render the Prometheus exposition body from the live shared state.
+/// Pure over `SharedState` so the conservation property — scraped
+/// counters match the final [`ServeReport`] tallies — is unit-testable
+/// without TCP; [`serve`] wraps it in a lock-taking closure for
+/// [`MetricsServer`].
+fn render_prom(st: &SharedState) -> String {
+    let per_type = |p: &mut PromText, name: &str, help: &str, v: &[u64]| {
+        p.family(name, "counter", help);
+        for (i, n) in v.iter().enumerate() {
+            p.sample(name, &[("type", &i.to_string())], *n as f64);
+        }
+    };
+    let arrived: u64 = st.arrived.iter().sum();
+    let mut p = PromText::new();
+    per_type(&mut p, "felare_arrived_total", "requests arrived, by task type", &st.arrived);
+    per_type(&mut p, "felare_completed_total", "requests completed in deadline", &st.completed);
+    per_type(&mut p, "felare_missed_total", "requests missed (deadline abort)", &st.missed);
+    per_type(&mut p, "felare_cancelled_total", "requests cancelled by the mapper", &st.cancelled);
+    p.family("felare_in_flight", "gauge", "arrived but not yet terminal");
+    p.sample("felare_in_flight", &[], (arrived - st.terminal as u64) as f64);
+    p.family("felare_mapper_events_total", "counter", "mapping events fired");
+    p.sample("felare_mapper_events_total", &[], st.mapper_events as f64);
+    p.family("felare_deferrals_total", "counter", "feasible-later deferrals");
+    p.sample("felare_deferrals_total", &[], st.deferrals as f64);
+    p.family("felare_inferences_total", "counter", "backend inferences executed");
+    p.sample("felare_inferences_total", &[], st.inferences as f64);
+    if let Some(bat) = &st.battery {
+        p.family("felare_soc", "gauge", "battery state of charge (0..1)");
+        p.sample("felare_soc", &[], bat.soc());
+    }
+    p.family("felare_done", "gauge", "1 once every request is terminal");
+    p.sample("felare_done", &[], if st.all_done() { 1.0 } else { 0.0 });
+    p.finish()
 }
 
 struct WorkerEnergy {
@@ -663,6 +711,20 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         }),
         Condvar::new(),
     ));
+    // ---- live metrics endpoint (`--metrics-addr`) -------------------------
+    let metrics_server = match &config.metrics_addr {
+        Some(addr) => {
+            let render_state = Arc::clone(&state);
+            let server = MetricsServer::start(
+                addr,
+                Arc::new(move || render_prom(&render_state.0.lock().unwrap())),
+            )
+            .map_err(|e| Error::Config(format!("metrics endpoint {addr}: {e}")))?;
+            crate::log_info!("serve metrics at http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
     let epoch = Instant::now();
     let now = move || epoch.elapsed().as_secs_f64() / time_scale;
 
@@ -971,6 +1033,15 @@ pub fn serve(config: &ServeConfig) -> Result<ServeReport> {
         traces: std::mem::take(&mut st.traces.records),
     };
     report.check_conservation().map_err(Error::Runtime)?;
+    drop(st);
+    if let Some(server) = metrics_server {
+        // hold the endpoint up so a scraper can observe the terminal
+        // tallies (`felare_done 1`) before the process exits
+        if config.metrics_linger > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(config.metrics_linger));
+        }
+        server.stop();
+    }
     Ok(report)
 }
 
@@ -1059,6 +1130,69 @@ mod tests {
             ..Default::default()
         };
         assert!(serve(&cfg).is_err());
+    }
+
+    #[test]
+    fn prom_render_matches_tallies_and_conserves() {
+        use crate::obs::parse_sample;
+        let sc = Scenario::paper_synthetic();
+        let map = MappingState::new(
+            sc.eet.clone(),
+            sc.machines.iter().map(|m| m.dyn_power).collect(),
+            sc.queue_slots,
+            FairnessTracker::new(sc.n_types(), 1.0, 10, sc.rate_window),
+            heuristic_by_name("felare", &sc).unwrap(),
+        );
+        let mut st = SharedState {
+            map,
+            arrived: vec![5, 7],
+            completed: vec![4, 5],
+            missed: vec![1, 1],
+            cancelled: vec![0, 1],
+            latencies: Vec::new(),
+            terminal: 12,
+            total_expected: 12,
+            done_generating: true,
+            mapper_events: 9,
+            mapper_time_total: 0.0,
+            deferrals: 2,
+            inferences: 9,
+            snapshots: Vec::new(),
+            workers_ready: 0,
+            traces: TraceLog { on: false, records: Vec::new() },
+            client_of: Vec::new(),
+            released: Vec::new(),
+            battery: None,
+            system_off: None,
+        };
+        let body = render_prom(&st);
+        assert_eq!(parse_sample(&body, "felare_arrived_total{type=\"0\"}"), Some(5.0));
+        assert_eq!(parse_sample(&body, "felare_completed_total{type=\"1\"}"), Some(5.0));
+        assert_eq!(parse_sample(&body, "felare_mapper_events_total"), Some(9.0));
+        assert_eq!(parse_sample(&body, "felare_inferences_total"), Some(9.0));
+        assert_eq!(parse_sample(&body, "felare_in_flight"), Some(0.0));
+        assert_eq!(parse_sample(&body, "felare_done"), Some(1.0));
+        assert_eq!(parse_sample(&body, "felare_soc"), None, "unbatteried: no soc family");
+        // the conservation gate, on the scrape itself: arrived ==
+        // completed + missed + cancelled + in-flight
+        let total = |body: &str, name: &str| {
+            (0..2)
+                .map(|i| parse_sample(body, &format!("{name}{{type=\"{i}\"}}")).unwrap())
+                .sum::<f64>()
+        };
+        assert_eq!(
+            total(&body, "felare_arrived_total"),
+            total(&body, "felare_completed_total")
+                + total(&body, "felare_missed_total")
+                + total(&body, "felare_cancelled_total")
+                + parse_sample(&body, "felare_in_flight").unwrap()
+        );
+        // mid-session shape: two requests still in flight, not done
+        st.terminal = 10;
+        st.done_generating = false;
+        let body = render_prom(&st);
+        assert_eq!(parse_sample(&body, "felare_in_flight"), Some(2.0));
+        assert_eq!(parse_sample(&body, "felare_done"), Some(0.0));
     }
 
     // End-to-end serving (threads + wall clock) is covered by

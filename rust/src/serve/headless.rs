@@ -97,6 +97,23 @@ impl HeadlessServe {
         self.island.trace_log()
     }
 
+    /// Arm (or disarm) the telemetry registry + time-series sampler for
+    /// the next runs. Observation-only: the sim/serve bit-identity
+    /// contract holds armed or not (`obs` module docs).
+    pub fn set_metrics(&mut self, on: bool) {
+        self.island.set_metrics(on);
+    }
+
+    /// Arm the flight recorder with `capacity` ring slots (0 disarms).
+    pub fn set_flight(&mut self, capacity: usize) {
+        self.island.set_flight(capacity);
+    }
+
+    /// The telemetry bundle (latest run's contents).
+    pub fn obs(&self) -> &crate::obs::IslandObs {
+        self.island.obs()
+    }
+
     /// Serve the whole trace to a terminal state and report (module docs).
     pub fn run(&mut self, trace: &Trace) -> SimResult {
         self.island.run_open(trace)

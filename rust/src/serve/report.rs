@@ -141,6 +141,45 @@ impl ServeReport {
         LatencyBreakdown::of(&self.traces)
     }
 
+    /// `--metrics-out` payload: final counters plus one time-series row
+    /// per progress snapshot, in the same kind-tagged JSONL schema as the
+    /// simulators' [`crate::obs::IslandObs::json_rows`] (counter names
+    /// match the `/metrics` exposition families minus the prefix).
+    pub fn metrics_rows(&self) -> Vec<Json> {
+        let counter = |name: &str, v: u64| {
+            Json::object()
+                .set("kind", "counter")
+                .set("scope", "serve")
+                .set("name", name)
+                .set("value", v)
+        };
+        let mut rows = vec![
+            counter("arrived_total", self.arrived.iter().sum()),
+            counter("completed_total", self.completed.iter().sum()),
+            counter("missed_total", self.missed.iter().sum()),
+            counter("cancelled_total", self.cancelled.iter().sum()),
+            counter("mapping_events_total", self.mapper_events),
+            counter("deferrals_total", self.deferrals),
+            counter("inferences_total", self.inferences),
+        ];
+        for s in &self.snapshots {
+            let mut row = Json::object()
+                .set("kind", "sample")
+                .set("scope", "serve")
+                .set("t", s.t)
+                .set("arrived", s.arrived)
+                .set("completed", s.completed)
+                .set("missed", s.missed)
+                .set("cancelled", s.cancelled)
+                .set("in_flight", s.in_flight);
+            if let Some(soc) = s.soc {
+                row = row.set("soc", soc);
+            }
+            rows.push(row);
+        }
+        rows
+    }
+
     pub fn to_json(&self) -> Json {
         let lat = self.latency_summary();
         let snapshots: Vec<Json> = self
@@ -322,6 +361,20 @@ mod tests {
         assert_eq!(j.req_str("backend").unwrap(), "synthetic");
         assert_eq!(j.req_str("workload").unwrap(), "poisson λ=10/s");
         assert_eq!(j.req("snapshots").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn metrics_rows_cover_counters_and_snapshots() {
+        let r = sample();
+        let rows = r.metrics_rows();
+        assert_eq!(rows.len(), 8, "7 counters + 1 snapshot sample");
+        assert_eq!(rows[0].req_str("kind").unwrap(), "counter");
+        assert_eq!(rows[0].req_str("name").unwrap(), "arrived_total");
+        assert_eq!(rows[0].req_f64("value").unwrap(), 20.0);
+        let last = rows.last().unwrap();
+        assert_eq!(last.req_str("kind").unwrap(), "sample");
+        assert_eq!(last.req_f64("in_flight").unwrap(), 2.0);
+        assert!(last.req_f64("soc").is_err(), "unbatteried snapshot: no soc key");
     }
 
     #[test]

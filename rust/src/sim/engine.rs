@@ -136,6 +136,23 @@ impl Simulation {
         self.island.scenario()
     }
 
+    /// Arm (or disarm) the telemetry registry + time-series sampler for
+    /// the next runs. Observation-only: deterministic results stay
+    /// bit-identical either way (`obs` module docs).
+    pub fn set_metrics(&mut self, on: bool) {
+        self.island.set_metrics(on);
+    }
+
+    /// Arm the flight recorder with `capacity` ring slots (0 disarms).
+    pub fn set_flight(&mut self, capacity: usize) {
+        self.island.set_flight(capacity);
+    }
+
+    /// The telemetry bundle (latest run's contents).
+    pub fn obs(&self) -> &crate::obs::IslandObs {
+        self.island.obs()
+    }
+
     /// Record every applied mapping [`Action`] of the next runs (golden
     /// sim/serve equivalence tests; off by default on hot paths).
     pub fn set_record_actions(&mut self, on: bool) {

@@ -66,8 +66,10 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
+use std::time::Instant;
 
 use crate::model::{FaultPlan, FleetScenario, Task, Time, Trace};
+use crate::obs::{FleetSampler, IslandObs, MetricSet, Span};
 use crate::sched::registry::heuristic_by_name;
 use crate::sched::route::{IslandView, RoutePolicy};
 use crate::sim::island::{ExecModel, Island};
@@ -132,6 +134,17 @@ pub struct FleetSim {
     mig_count: u64,
     /// Radio energy those migrations debited (joules).
     mig_energy_spent: f64,
+    // ---- telemetry (observation-only; `obs` module docs) ---------------
+    /// Fleet-level registry: routing-pass and advance-pass span
+    /// histograms, collected on the single-threaded epoch loops only.
+    fleet_metrics: MetricSet,
+    /// Epoch-boundary sampler over the router's island views.
+    fleet_sampler: FleetSampler,
+    /// Previous epoch's brown-out mask (flight-recorder edge detection).
+    down_prev: Vec<bool>,
+    /// Whether the islands' flight recorders are armed (cached so the
+    /// faulty loop pays one branch per island per boundary).
+    flight_armed: bool,
     // ---- recycled buffers (no per-run allocation) ----------------------
     /// Master routing snapshots, island order.
     views: Vec<IslandView>,
@@ -169,6 +182,10 @@ impl FleetSim {
             migration_energy: DEFAULT_MIGRATION_ENERGY,
             mig_count: 0,
             mig_energy_spent: 0.0,
+            fleet_metrics: MetricSet::new(),
+            fleet_sampler: FleetSampler::new(),
+            down_prev: Vec::new(),
+            flight_armed: false,
             views: Vec::new(),
             routed: Vec::new(),
             staged: Vec::new(),
@@ -258,6 +275,44 @@ impl FleetSim {
         self.migration_energy = energy;
     }
 
+    /// Arm (or disarm) telemetry on every island plus the fleet-level
+    /// registry and epoch sampler. Fleet spans/samples are collected on
+    /// the single-threaded epoch loops only — `run` routes an armed
+    /// fault-free fleet through the serial loop. Observation-only:
+    /// results stay bit-identical either way (`obs` module docs).
+    pub fn set_metrics(&mut self, on: bool) {
+        for isl in self.islands.iter_mut() {
+            isl.set_metrics(on);
+        }
+        self.fleet_metrics.arm(on);
+        self.fleet_sampler.arm(on);
+    }
+
+    /// Arm every island's flight recorder (`capacity` ring slots, 0
+    /// disarms). Fleet brown-out transitions snapshot the affected
+    /// island's ring at the epoch boundary that masked it.
+    pub fn set_flight(&mut self, capacity: usize) {
+        for isl in self.islands.iter_mut() {
+            isl.set_flight(capacity);
+        }
+        self.flight_armed = capacity > 0;
+    }
+
+    /// The fleet-level registry (route/advance span histograms).
+    pub fn fleet_metrics(&self) -> &MetricSet {
+        &self.fleet_metrics
+    }
+
+    /// The fleet-level epoch-boundary sampler.
+    pub fn fleet_sampler(&self) -> &FleetSampler {
+        &self.fleet_sampler
+    }
+
+    /// Island `i`'s telemetry bundle (latest run's contents).
+    pub fn island_obs(&self, i: usize) -> &IslandObs {
+        self.islands[i].obs()
+    }
+
     /// Run one fleet-wide open-loop trace: route every arrival to an
     /// island, advance islands epoch-parallel, drain, and collect the
     /// per-island results (module docs).
@@ -274,6 +329,10 @@ impl FleetSim {
         self.routed.resize(n, 0);
         self.mig_count = 0;
         self.mig_energy_spent = 0.0;
+        self.fleet_metrics.reset();
+        self.fleet_sampler.reset();
+        self.down_prev.clear();
+        self.down_prev.resize(n, false);
 
         // island faults and migration need fleet-level coordination every
         // boundary (routing masks, drains) — a dedicated serial loop.
@@ -284,6 +343,12 @@ impl FleetSim {
             self.run_epochs_faulty(trace)
         } else if self.take_par_map {
             self.run_epochs_takepar(trace)
+        } else if self.fleet_metrics.armed() {
+            // fleet-level telemetry (span timers, the epoch sampler) lives
+            // on the routing thread: collect it on the serial loop, whose
+            // routing decisions and island floats are bit-identical to the
+            // sharded loop's (module tests pin the equivalence)
+            self.run_epochs_serial(trace)
         } else {
             self.run_epochs_sharded(trace)
         };
@@ -488,10 +553,12 @@ impl FleetSim {
     /// place, refresh only moved islands).
     fn run_epochs_serial(&mut self, trace: &Trace) -> Vec<SimResult> {
         let n = self.islands.len();
+        let timed = self.fleet_metrics.armed();
         let mut touched = vec![false; n];
         let mut next = 0; // next trace task to route (sorted arrivals)
         let mut t_end = self.epoch;
         while next < trace.tasks.len() {
+            let route_t0 = timed.then(Instant::now);
             while next < trace.tasks.len() && trace.tasks[next].arrival < t_end {
                 let task = trace.tasks[next];
                 let dst = self.router.route(&self.views, &task);
@@ -502,6 +569,10 @@ impl FleetSim {
                 touched[dst] = true;
                 next += 1;
             }
+            if let Some(t0) = route_t0 {
+                self.fleet_metrics.record_secs(Span::RouteSpan, t0.elapsed().as_secs_f64());
+            }
+            let adv_t0 = timed.then(Instant::now);
             for (i, island) in self.islands.iter_mut().enumerate() {
                 let pending = island.has_event_before(t_end);
                 if pending {
@@ -511,6 +582,12 @@ impl FleetSim {
                     self.views[i] = island.view();
                     touched[i] = false;
                 }
+            }
+            if let Some(t0) = adv_t0 {
+                self.fleet_metrics.record_secs(Span::AdvanceSpan, t0.elapsed().as_secs_f64());
+            }
+            if self.fleet_sampler.due(t_end) {
+                self.fleet_sampler.sample(t_end, &self.views);
             }
             t_end += self.epoch;
         }
@@ -524,6 +601,7 @@ impl FleetSim {
     /// exactly like the plain serial loop.
     fn run_epochs_faulty(&mut self, trace: &Trace) -> Vec<SimResult> {
         let n = self.islands.len();
+        let timed = self.fleet_metrics.armed();
         let mut touched = vec![false; n];
         let mut migrants = std::mem::take(&mut self.mig_buf);
         let mut next = 0; // next trace task to route (sorted arrivals)
@@ -537,11 +615,21 @@ impl FleetSim {
             // one).
             if let Some(p) = &self.fault_plan {
                 for i in 0..n {
-                    if p.island_down(i, t_start) {
+                    let down = p.island_down(i, t_start);
+                    if down {
                         self.views[i].depleted = true;
+                    }
+                    if self.flight_armed {
+                        // flight recorder: snapshot the island's ring on
+                        // the down transition (postmortem context)
+                        if down && !self.down_prev[i] {
+                            self.islands[i].note_brownout(t_start);
+                        }
+                        self.down_prev[i] = down;
                     }
                 }
             }
+            let route_t0 = timed.then(Instant::now);
             // re-route the tasks drained at the previous boundary: they
             // already carry the post-hop arrival, and the radio debit
             // hits the destination battery at send time
@@ -566,6 +654,10 @@ impl FleetSim {
                 touched[dst] = true;
                 next += 1;
             }
+            if let Some(t0) = route_t0 {
+                self.fleet_metrics.record_secs(Span::RouteSpan, t0.elapsed().as_secs_f64());
+            }
+            let adv_t0 = timed.then(Instant::now);
             for (i, island) in self.islands.iter_mut().enumerate() {
                 let pending = island.has_event_before(t_end);
                 if pending {
@@ -575,6 +667,12 @@ impl FleetSim {
                     self.views[i] = island.view();
                     touched[i] = false;
                 }
+            }
+            if let Some(t0) = adv_t0 {
+                self.fleet_metrics.record_secs(Span::AdvanceSpan, t0.elapsed().as_secs_f64());
+            }
+            if self.fleet_sampler.due(t_end) {
+                self.fleet_sampler.sample(t_end, &self.views);
             }
             if self.migrate {
                 // shed the queued, not-started work of down islands; it

@@ -59,6 +59,7 @@ use crate::model::{
     ClientPool, EetMatrix, FaultPlan, MachineFaultAction, MachineFaultEvent, Scenario,
     TaskColumns, Trace,
 };
+use crate::obs::{Counter, FlightKind, Gauge, IslandObs, Sampler, Span};
 use crate::runtime::{InferenceBackend, SyntheticBackend};
 use crate::sched::dispatch::{Dropped, MappingState};
 use crate::sched::fairness::FairnessTracker;
@@ -217,6 +218,13 @@ pub struct Island {
     /// off by default — the aggregate total/max are always collected).
     pub record_overhead_samples: bool,
     pub overhead_samples: Vec<f64>,
+    /// The telemetry bundle: metrics registry, time-series sampler and
+    /// flight recorder. Disarmed by default — every hook below is an
+    /// inlined early-return — and armed or not it is observation-only:
+    /// no `obs` value ever feeds back into a scheduling decision, so
+    /// deterministic results are bit-identical either way (`obs` module
+    /// docs; pinned by `rust/tests/obs_suite.rs`).
+    obs: IslandObs,
     // ---- recycled arena state (reset at the top of every run) ----------
     machines: Vec<MachState>,
     events: EventQueue,
@@ -296,6 +304,7 @@ impl Island {
             scenario: scenario.clone(),
             record_overhead_samples: false,
             overhead_samples: Vec::new(),
+            obs: IslandObs::new(),
             machines,
             events: EventQueue::new(),
             mapping,
@@ -379,6 +388,43 @@ impl Island {
         &self.trace_log.records
     }
 
+    /// Arm (or disarm) the telemetry registry + time-series sampler for
+    /// subsequent runs, and switch the dispatch layer's span timers on
+    /// with them. Observation-only: results stay bit-identical either
+    /// way (`obs` module docs).
+    pub fn set_metrics(&mut self, on: bool) {
+        self.obs.metrics.arm(on);
+        if on {
+            self.obs.sampler.arm(self.scenario.n_machines());
+        } else {
+            self.obs.sampler = Sampler::new();
+        }
+        self.mapping.time_spans = on;
+    }
+
+    /// Arm the flight recorder with `capacity` ring slots (0 disarms).
+    pub fn set_flight(&mut self, capacity: usize) {
+        self.obs.flight.arm(capacity);
+    }
+
+    /// The telemetry bundle (latest run's contents).
+    pub fn obs(&self) -> &IslandObs {
+        &self.obs
+    }
+
+    pub fn obs_mut(&mut self) -> &mut IslandObs {
+        &mut self.obs
+    }
+
+    /// Fleet brown-out notification: snapshot the flight ring at the
+    /// moment the island's power was browned out (the fleet engine calls
+    /// this on the down transition; no-op while disarmed).
+    pub fn note_brownout(&mut self, t: Time) {
+        if self.obs.flight.dump(t, "brownout") {
+            self.obs.metrics.inc(Counter::FlightDumps);
+        }
+    }
+
     /// Run a full open-loop trace to completion (monolithic mode).
     pub fn run_open(&mut self, trace: &Trace) -> SimResult {
         self.run_impl(WorkloadRef::Open(trace))
@@ -409,6 +455,7 @@ impl Island {
         self.events.clear();
         self.mapping.reset();
         self.overhead_samples.clear();
+        self.obs.reset_run();
         self.trace_log.clear();
         if let Some(bat) = self.battery.as_mut() {
             bat.reset();
@@ -469,6 +516,7 @@ impl Island {
         let Island {
             record_overhead_samples,
             overhead_samples,
+            obs,
             machines,
             events,
             mapping,
@@ -533,6 +581,7 @@ impl Island {
                                 released,
                                 battery,
                                 aborts,
+                                obs,
                             );
                         }
                     }
@@ -550,6 +599,7 @@ impl Island {
                         battery,
                         released,
                         result,
+                        obs,
                     ),
                 }
                 match events.peek_time() {
@@ -573,6 +623,7 @@ impl Island {
                 overhead_samples,
                 speed,
                 aborts,
+                obs,
             );
         }
 
@@ -581,7 +632,7 @@ impl Island {
             // cancel every not-yet-processed arrival against a dead system —
             // the interrupted event first, then the rest of the queue, in
             // place off the recycled queue (no iterator-chain temporaries)
-            system_off_drain(*now, machines, mapping, trace_log, result, aborts);
+            system_off_drain(*now, machines, mapping, trace_log, result, aborts, obs);
             let t_dead = *now;
             let mut next = pending;
             while let Some(ev) = next {
@@ -682,6 +733,7 @@ impl Island {
             scenario: sc,
             record_overhead_samples,
             overhead_samples,
+            obs,
             machines,
             events,
             mapping,
@@ -719,6 +771,7 @@ impl Island {
         events.clear();
         mapping.reset();
         overhead_samples.clear();
+        obs.reset_run();
         trace_log.clear();
         if let Some(bat) = battery.as_mut() {
             bat.reset();
@@ -819,6 +872,7 @@ impl Island {
                                 released,
                                 battery,
                                 aborts,
+                                obs,
                             );
                         }
                     }
@@ -836,6 +890,7 @@ impl Island {
                         battery,
                         released,
                         &mut result,
+                        obs,
                     ),
                 }
                 match events.peek_time() {
@@ -862,6 +917,7 @@ impl Island {
                 overhead_samples,
                 speed,
                 aborts,
+                obs,
             );
 
             if let Some(gen) = closed.as_mut() {
@@ -894,7 +950,7 @@ impl Island {
         if battery.as_ref().is_some_and(|b| b.is_depleted()) {
             // ---- system off: the battery hit zero at `now` --------------
             let t_dead = now;
-            system_off_drain(t_dead, machines, mapping, trace_log, &mut result, aborts);
+            system_off_drain(t_dead, machines, mapping, trace_log, &mut result, aborts, obs);
             // unprocessed events: arrivals hit a dead system (Finish/Expiry
             // events belong to work already accounted above)
             let is_closed = closed.is_some();
@@ -957,6 +1013,7 @@ fn mapping_round(
     overhead_samples: &mut Vec<f64>,
     speed: &[f64],
     aborts: &HashMap<u64, u32>,
+    obs: &mut IslandObs,
 ) {
     // start queued work freed by the event (before mapping so
     // availability estimates are current)
@@ -974,6 +1031,7 @@ fn mapping_round(
             exec,
             speed,
             aborts,
+            obs,
         );
     }
 
@@ -982,6 +1040,8 @@ fn mapping_round(
     if let Some(bat) = battery.as_ref() {
         mapping.set_soc(Some(bat.soc()));
     }
+    let obs_metrics = &mut obs.metrics;
+    let obs_flight = &mut obs.flight;
     let stats = mapping.mapping_event(now, &mut |d: Dropped| {
         let out = Outcome::Cancelled { reason: d.kind.cancel_reason(), at: now };
         result.record(d.task.type_id.0, &out);
@@ -991,6 +1051,8 @@ fn mapping_round(
         rec.retries = retries_of(aborts, d.task.id);
         trace_log.push(rec);
         released.push(d.task.id, now);
+        obs_metrics.inc(Counter::TasksDropped);
+        obs_flight.record(now, FlightKind::Drop, machine.map(|m| m.0 as u32), Some(d.task.id));
     });
     result.mapping_events += 1;
     result.mapper_time_total += stats.mapper_dt;
@@ -998,6 +1060,22 @@ fn mapping_round(
     result.deferrals += stats.deferrals;
     if record_overhead_samples {
         overhead_samples.push(stats.mapper_dt);
+    }
+    if obs.metrics.armed() {
+        obs.metrics.inc(Counter::MappingEvents);
+        obs.metrics.add(Counter::Deferrals, stats.deferrals);
+        obs.metrics.record_secs(Span::MapperEvent, stats.mapper_dt);
+        obs.metrics.record_secs(Span::FeasibilityScan, stats.scan_dt);
+    }
+    if obs.sampler.due(now) {
+        let running = machines.iter().filter(|m| m.running.is_some()).count() as u32;
+        let soc = battery.as_ref().map(|b| b.soc());
+        let spread = per_type_spread(result);
+        obs.sampler.sample(now, mapping, running, soc, spread);
+        obs.metrics.set_gauge(Gauge::QueuedTotal, mapping.queued_total() as f64);
+        obs.metrics.set_gauge(Gauge::ArrivingDepth, mapping.arriving_len() as f64);
+        obs.metrics.set_gauge(Gauge::Soc, soc.unwrap_or(f64::NAN));
+        obs.metrics.set_gauge(Gauge::FairnessSpread, spread);
     }
 
     // idle machines may now have work
@@ -1015,7 +1093,27 @@ fn mapping_round(
             exec,
             speed,
             aborts,
+            obs,
         );
+    }
+}
+
+/// Max − min per-type on-time completion rate so far (the fairness gauge
+/// the sampler tracks); 0.0 until at least one type has arrivals.
+fn per_type_spread(result: &SimResult) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (a, c) in result.arrived.iter().zip(&result.completed) {
+        if *a > 0 {
+            let r = *c as f64 / *a as f64;
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+    }
+    if hi >= lo {
+        hi - lo
+    } else {
+        0.0
     }
 }
 
@@ -1057,8 +1155,10 @@ fn apply_fault(
     battery: &mut Option<BatteryState>,
     released: &mut Releases,
     result: &mut SimResult,
+    obs: &mut IslandObs,
 ) {
     let mi = fe.machine;
+    obs.metrics.inc(Counter::FaultsApplied);
     match fe.action {
         MachineFaultAction::Down => {
             down_depth[mi] += 1;
@@ -1066,50 +1166,57 @@ fn apply_fault(
                 return; // already down (overlapping derived window)
             }
             mapping.set_down(mi, true);
+            obs.flight.record(now, FlightKind::MachineDown, Some(mi as u32), None);
             let m = &mut machines[mi];
-            let Some(r) = m.running.take() else {
-                return;
-            };
-            // abort mid-execution: the partial run's energy is wasted
-            mapping.mark_idle(mi);
-            if let Some(bat) = battery.as_mut() {
-                bat.set_busy(mi, false);
+            if let Some(r) = m.running.take() {
+                // abort mid-execution: the partial run's energy is wasted
+                mapping.mark_idle(mi);
+                if let Some(bat) = battery.as_mut() {
+                    bat.set_busy(mi, false);
+                }
+                let busy = now - r.start;
+                let e = m.spec.dyn_energy(busy);
+                m.energy.dynamic += e;
+                m.energy.wasted += e;
+                m.energy.busy_time += busy;
+                result.crash_aborts += 1;
+                obs.metrics.inc(Counter::CrashAborts);
+                let attempts = {
+                    let k = aborts.entry(r.task.id).or_insert(0);
+                    *k += 1;
+                    *k
+                };
+                // deadline-aware retry: re-admit only while the budget lasts
+                // and the fastest machine could still make the deadline
+                let ty = r.task.type_id;
+                let min_eet = (0..mapping.n_machines())
+                    .map(|j| mapping.eet().get(ty, MachineId(j)))
+                    .fold(f64::INFINITY, f64::min);
+                let feasible = now + min_eet * r.task.size_factor <= r.task.deadline;
+                if attempts <= retry_budget && feasible {
+                    mapping.readmit(r.task);
+                    obs.metrics.inc(Counter::Retries);
+                    obs.flight.record(now, FlightKind::Retry, Some(mi as u32), Some(r.task.id));
+                } else {
+                    let out = Outcome::Cancelled { reason: CancelReason::FailedAbort, at: now };
+                    result.record(ty.0, &out);
+                    mapping.record_terminal(ty, false);
+                    let mut rec = record_of(
+                        &r.task,
+                        TraceOutcome::FailedAbort,
+                        Some(MachineId(mi)),
+                        Some(r.mapped),
+                        Some(r.start),
+                        now,
+                    );
+                    rec.retries = attempts - 1;
+                    trace_log.push(rec);
+                    released.push(r.task.id, now);
+                    obs.flight.record(now, FlightKind::Miss, Some(mi as u32), Some(r.task.id));
+                }
             }
-            let busy = now - r.start;
-            let e = m.spec.dyn_energy(busy);
-            m.energy.dynamic += e;
-            m.energy.wasted += e;
-            m.energy.busy_time += busy;
-            result.crash_aborts += 1;
-            let attempts = {
-                let k = aborts.entry(r.task.id).or_insert(0);
-                *k += 1;
-                *k
-            };
-            // deadline-aware retry: re-admit only while the budget lasts
-            // and the fastest machine could still make the deadline
-            let ty = r.task.type_id;
-            let min_eet = (0..mapping.n_machines())
-                .map(|j| mapping.eet().get(ty, MachineId(j)))
-                .fold(f64::INFINITY, f64::min);
-            let feasible = now + min_eet * r.task.size_factor <= r.task.deadline;
-            if attempts <= retry_budget && feasible {
-                mapping.readmit(r.task);
-            } else {
-                let out = Outcome::Cancelled { reason: CancelReason::FailedAbort, at: now };
-                result.record(ty.0, &out);
-                mapping.record_terminal(ty, false);
-                let mut rec = record_of(
-                    &r.task,
-                    TraceOutcome::FailedAbort,
-                    Some(MachineId(mi)),
-                    Some(r.mapped),
-                    Some(r.start),
-                    now,
-                );
-                rec.retries = attempts - 1;
-                trace_log.push(rec);
-                released.push(r.task.id, now);
+            if obs.flight.dump(now, "crash") {
+                obs.metrics.inc(Counter::FlightDumps);
             }
         }
         MachineFaultAction::Up => {
@@ -1118,10 +1225,17 @@ fn apply_fault(
                 .expect("fault recovery without a matching crash");
             if down_depth[mi] == 0 {
                 mapping.set_down(mi, false);
+                obs.flight.record(now, FlightKind::MachineUp, Some(mi as u32), None);
             }
         }
-        MachineFaultAction::SlowOn => speed[mi] = fe.scale,
-        MachineFaultAction::SlowOff => speed[mi] = 1.0,
+        MachineFaultAction::SlowOn => {
+            speed[mi] = fe.scale;
+            obs.flight.record(now, FlightKind::SlowOn, Some(mi as u32), None);
+        }
+        MachineFaultAction::SlowOff => {
+            speed[mi] = 1.0;
+            obs.flight.record(now, FlightKind::SlowOff, Some(mi as u32), None);
+        }
     }
 }
 
@@ -1137,6 +1251,7 @@ fn finish_running(
     released: &mut Releases,
     battery: &mut Option<BatteryState>,
     aborts: &HashMap<u64, u32>,
+    obs: &mut IslandObs,
 ) {
     let r = m.running.take().expect("finish event with no running task");
     debug_assert!((r.end - now).abs() < 1e-9, "finish event time mismatch");
@@ -1157,12 +1272,16 @@ fn finish_running(
             // completed on time after at least one crash abort
             result.recovered += 1;
         }
+        obs.metrics.inc(Counter::TasksCompleted);
+        obs.flight.record(now, FlightKind::Complete, Some(machine_idx as u32), Some(r.task.id));
         TraceOutcome::Completed
     } else {
         // aborted at the deadline; everything it burnt is wasted
         m.energy.wasted += e;
         result.record(ty.0, &Outcome::Missed { machine: machine_idx, at: r.end });
         mapping.record_terminal(ty, false);
+        obs.metrics.inc(Counter::TasksMissed);
+        obs.flight.record(now, FlightKind::Miss, Some(machine_idx as u32), Some(r.task.id));
         TraceOutcome::Missed
     };
     let mut rec = record_of(
@@ -1194,6 +1313,7 @@ fn try_start(
     exec: &mut ExecModel,
     speed: &[f64],
     aborts: &HashMap<u64, u32>,
+    obs: &mut IslandObs,
 ) {
     if m.running.is_some() {
         return;
@@ -1219,6 +1339,8 @@ fn try_start(
             rec.retries = retries_of(aborts, q.task.id);
             trace_log.push(rec);
             released.push(q.task.id, now);
+            obs.metrics.inc(Counter::TasksMissed);
+            obs.flight.record(now, FlightKind::Miss, Some(machine_idx as u32), Some(q.task.id));
             continue;
         }
         // the service-time source is the only thing the exec models differ
@@ -1245,6 +1367,8 @@ fn try_start(
             bat.set_busy(machine_idx, true);
         }
         m.running = Some(Running { task: q.task, mapped: q.mapped, start: now, end, actual_end });
+        obs.metrics.inc(Counter::TasksStarted);
+        obs.flight.record(now, FlightKind::Start, Some(machine_idx as u32), Some(q.task.id));
         return;
     }
 }
@@ -1252,6 +1376,7 @@ fn try_start(
 /// System off at `t_dead`: abort running work (its energy is wasted) and
 /// drain queued + arriving work with zero energy (one shared sweep —
 /// `sched::dispatch`).
+#[allow(clippy::too_many_arguments)]
 fn system_off_drain(
     t_dead: Time,
     machines: &mut [MachState],
@@ -1259,7 +1384,13 @@ fn system_off_drain(
     trace_log: &mut TraceLog,
     result: &mut SimResult,
     aborts: &HashMap<u64, u32>,
+    obs: &mut IslandObs,
 ) {
+    // snapshot the flight ring *before* the sweep rewrites history: the
+    // postmortem wants what the scheduler was doing as the lights went out
+    if obs.flight.dump(t_dead, "depletion") {
+        obs.metrics.inc(Counter::FlightDumps);
+    }
     for (mi, m) in machines.iter_mut().enumerate() {
         if let Some(r) = m.running.take() {
             mapping.mark_idle(mi);
@@ -1280,8 +1411,12 @@ fn system_off_drain(
             );
             rec.retries = retries_of(aborts, r.task.id);
             trace_log.push(rec);
+            obs.metrics.inc(Counter::TasksMissed);
+            obs.flight.record(t_dead, FlightKind::Miss, Some(mi as u32), Some(r.task.id));
         }
     }
+    let obs_metrics = &mut obs.metrics;
+    let obs_flight = &mut obs.flight;
     mapping.drain_system_off(&mut |d: Dropped| {
         let out = Outcome::Cancelled { reason: CancelReason::SystemOff, at: t_dead };
         result.record(d.task.type_id.0, &out);
@@ -1289,6 +1424,8 @@ fn system_off_drain(
         let mut rec = record_of(&d.task, TraceOutcome::SystemOff, machine, mapped, None, t_dead);
         rec.retries = retries_of(aborts, d.task.id);
         trace_log.push(rec);
+        obs_metrics.inc(Counter::TasksDropped);
+        obs_flight.record(t_dead, FlightKind::Drop, machine.map(|m| m.0 as u32), Some(d.task.id));
     });
 }
 

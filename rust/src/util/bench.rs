@@ -172,7 +172,7 @@ pub struct Suite {
 
 impl Suite {
     pub fn new(title: &str) -> Self {
-        eprintln!("\n=== bench suite: {title} ===");
+        crate::log_info!("=== bench suite: {title} ===");
         Self { title: title.to_string(), results: Vec::new() }
     }
 

@@ -1,7 +1,9 @@
 //! Tiny leveled logger (substrate for `log` + `env_logger`).
 //!
 //! Level comes from `FELARE_LOG` (error|warn|info|debug|trace; default
-//! info). Output goes to stderr so experiment CSVs on stdout stay clean.
+//! warn, so experiment stdout/stderr stay machine-parseable —
+//! `FELARE_LOG=info` restores the progress chatter). Output goes to
+//! stderr so experiment CSVs on stdout stay clean.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -56,7 +58,7 @@ pub fn level() -> Level {
     let lvl = std::env::var("FELARE_LOG")
         .ok()
         .and_then(|s| Level::from_str(&s))
-        .unwrap_or(Level::Info);
+        .unwrap_or(Level::Warn);
     LEVEL.store(lvl as u8, Ordering::Relaxed);
     lvl
 }
@@ -110,7 +112,7 @@ mod tests {
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Trace));
-        set_level(Level::Info); // restore default-ish for other tests
+        set_level(Level::Warn); // restore the default for other tests
     }
 
     #[test]

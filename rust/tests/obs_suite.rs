@@ -1,0 +1,222 @@
+//! Acceptance gates for the telemetry subsystem (`obs`):
+//!
+//!  * observation only — arming the metrics registry, the sampler and the
+//!    flight recorder changes no deterministic result field on any engine
+//!    surface (Simulation, HeadlessServe, FleetSim with migration armed),
+//!    with batteries and fault plans on, across every paper heuristic;
+//!  * the armed counters conserve against the engine's own tallies —
+//!    mapping events, deferrals, completions and crash aborts agree
+//!    number for number with the `SimResult`;
+//!  * the log-bucket histogram percentile bound holds against the exact
+//!    nearest-rank percentile ([`Summary`]) on random samples:
+//!    `exact ≤ approx < 2·exact` for every sample ≥ 1 ns;
+//!  * flight dumps taken through a real engine run are bounded by the
+//!    ring capacity, internally time-ordered, counted by the registry,
+//!    and bit-identical on a recycled re-run.
+
+use felare::model::{FaultPlan, FleetScenario, Scenario, Trace, WorkloadParams};
+use felare::obs::flight::DEFAULT_CAPACITY;
+use felare::obs::{Counter, Hist};
+use felare::sched::registry::{heuristic_by_name, ALL_HEURISTICS};
+use felare::sched::route::route_policy_by_name;
+use felare::serve::HeadlessServe;
+use felare::sim::{FleetSim, SimResult, Simulation};
+use felare::util::rng::Pcg64;
+use felare::util::stats::Summary;
+
+fn trace_for(sc: &Scenario, rate: f64, n_tasks: usize, seed: u64) -> Trace {
+    let params = WorkloadParams {
+        n_tasks,
+        arrival_rate: rate,
+        cv_exec: sc.cv_exec,
+        type_weights: Vec::new(),
+    };
+    Trace::generate(&params, &sc.eet, &mut Pcg64::new(seed))
+}
+
+/// Every deterministic field, compared bit for bit (mirrors
+/// `fault_suite::assert_same` — wall-clock span histograms sit outside
+/// this contract exactly like `mapper_time_total`).
+fn assert_same(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.missed, b.missed, "{tag}: missed");
+    assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+    assert_eq!(a.cancelled_mapper, b.cancelled_mapper, "{tag}: mapper drops");
+    assert_eq!(a.cancelled_victim, b.cancelled_victim, "{tag}: victim drops");
+    assert_eq!(a.cancelled_expired, b.cancelled_expired, "{tag}: expiries");
+    assert_eq!(a.cancelled_systemoff, b.cancelled_systemoff, "{tag}: system-off");
+    assert_eq!(a.cancelled_failedabort, b.cancelled_failedabort, "{tag}: failed aborts");
+    assert_eq!(a.crash_aborts, b.crash_aborts, "{tag}: crash aborts");
+    assert_eq!(a.recovered, b.recovered, "{tag}: recoveries");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.mapping_events, b.mapping_events, "{tag}: mapping events");
+    assert_eq!(a.deferrals, b.deferrals, "{tag}: deferrals");
+    assert_eq!(a.battery_spent, b.battery_spent, "{tag}: battery spent");
+    assert_eq!(a.depleted_at, b.depleted_at, "{tag}: depletion instant");
+    assert_eq!(a.final_soc, b.final_soc, "{tag}: final SoC");
+    assert_eq!(a.energy.len(), b.energy.len(), "{tag}: machine count");
+    for (i, (ea, eb)) in a.energy.iter().zip(&b.energy).enumerate() {
+        assert_eq!(ea.dynamic, eb.dynamic, "{tag}: machine {i} dynamic energy");
+        assert_eq!(ea.wasted, eb.wasted, "{tag}: machine {i} wasted energy");
+        assert_eq!(ea.idle, eb.idle, "{tag}: machine {i} idle energy");
+        assert_eq!(ea.busy_time, eb.busy_time, "{tag}: machine {i} busy time");
+    }
+}
+
+/// The core contract on the single-island engines: battery + faults on,
+/// every paper heuristic, metrics and flight armed vs off — bit
+/// identical, and the armed counters conserve against the result.
+#[test]
+fn armed_telemetry_changes_nothing_on_sim_and_serve() {
+    let sc = Scenario::stress(4, 3).with_battery(120.0, None);
+    let trace = trace_for(&sc, 1.2 * sc.service_capacity(), 500, 0x0B5);
+    let plan = FaultPlan::parse("crash:m1@2+3,slow:m0@1x0.5+6,retry:2").unwrap();
+    plan.validate_targets(sc.n_machines(), None).unwrap();
+    for h in ALL_HEURISTICS {
+        let heur = || heuristic_by_name(h, &sc).unwrap();
+        let mut plain = Simulation::new(&sc, heur());
+        plain.set_fault_plan(Some(plan.clone()));
+        let base = plain.run(&trace);
+        let mut armed = Simulation::new(&sc, heur());
+        armed.set_fault_plan(Some(plan.clone()));
+        armed.set_metrics(true);
+        armed.set_flight(DEFAULT_CAPACITY);
+        let r = armed.run(&trace);
+        assert_same(&base, &r, &format!("{h}/sim armed"));
+        let m = &armed.obs().metrics;
+        assert_eq!(m.counter(Counter::MappingEvents), r.mapping_events, "{h}: event count");
+        assert_eq!(m.counter(Counter::Deferrals), r.deferrals, "{h}: deferral count");
+        assert_eq!(m.counter(Counter::TasksCompleted), r.total_completed(), "{h}: completions");
+        assert_eq!(m.counter(Counter::CrashAborts), r.crash_aborts, "{h}: crash aborts");
+        assert!(!armed.obs().sampler.is_empty(), "{h}: armed sampler saw the run");
+        assert!(
+            m.hist(felare::obs::Span::MapperEvent).count() > 0,
+            "{h}: mapper spans recorded"
+        );
+
+        let mut srv_plain = HeadlessServe::new(&sc, heur());
+        srv_plain.set_fault_plan(Some(plan.clone()));
+        let srv_base = srv_plain.run(&trace);
+        assert_same(&base, &srv_base, &format!("{h}: sim ≡ serve baseline"));
+        let mut srv_armed = HeadlessServe::new(&sc, heur());
+        srv_armed.set_fault_plan(Some(plan.clone()));
+        srv_armed.set_metrics(true);
+        srv_armed.set_flight(DEFAULT_CAPACITY);
+        assert_same(&srv_base, &srv_armed.run(&trace), &format!("{h}/serve armed"));
+    }
+}
+
+/// Fleet-scale contract: arming fleet metrics forces the serial epoch
+/// path — the parallel plain run and the serial armed run must still be
+/// bit-identical island for island, under brown-outs + migration, and
+/// the brown-out must land in the flight recorder.
+#[test]
+fn armed_fleet_telemetry_changes_nothing_under_brownout_migration() {
+    let fleet = FleetScenario::stress_fleet(3, 3, 2).with_mixed_batteries(60.0);
+    let rate = 1.2 * fleet.service_capacity();
+    let n = 450usize;
+    let trace = trace_for(&fleet.islands[0], rate, n, 0x0B52);
+    let horizon = n as f64 / rate;
+    let spec = format!("brownout:i1@{}+{},crash:m0@1+3", 0.3 * horizon, 0.2 * horizon);
+    let plan = FaultPlan::parse(&spec).unwrap();
+    let n_machines: usize = fleet.islands.iter().map(|i| i.n_machines()).sum();
+    plan.validate_targets(n_machines, Some(fleet.n_islands())).unwrap();
+    let build = || {
+        let router = route_policy_by_name("soc-aware", 1).unwrap();
+        let mut sim = FleetSim::new(&fleet, "felare", router).unwrap();
+        sim.set_epoch(0.25);
+        sim.set_fault_plan(Some(plan.clone())).unwrap();
+        sim.set_migration(true);
+        sim
+    };
+    let mut plain = build();
+    let base = plain.run(&trace);
+    let mut armed = build();
+    armed.set_metrics(true);
+    armed.set_flight(DEFAULT_CAPACITY);
+    let r = armed.run(&trace);
+    assert_eq!(base.migrations, r.migrations, "migration count");
+    assert_eq!(base.migration_energy, r.migration_energy, "migration energy");
+    for i in 0..fleet.n_islands() {
+        assert_same(&base.islands[i], &r.islands[i], &format!("island {i} armed"));
+    }
+    assert!(
+        armed.island_obs(1).flight.dumps().iter().any(|d| d.reason == "brownout"),
+        "the browned-out island must take a postmortem dump"
+    );
+    assert!(!armed.fleet_sampler().is_empty(), "epoch boundaries sampled");
+    assert!(
+        armed.fleet_metrics().hist(felare::obs::Span::AdvanceSpan).count() > 0,
+        "epoch advance spans recorded"
+    );
+}
+
+/// The documented percentile bound, against the exact nearest-rank
+/// percentile on random samples: `exact ≤ approx < 2·exact` (≥ 1 ns).
+#[test]
+fn hist_percentiles_match_exact_within_the_2x_bound() {
+    let mut rng = Pcg64::new(0x0B5E);
+    for round in 0..20u64 {
+        let n = 50 + (round as usize * 37) % 400;
+        let mut h = Hist::default();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // spread across many buckets, never below 1 ns
+            let v = rng.next_u64() % 10_000_000 + 1;
+            h.record_ns(v);
+            vals.push(v as f64);
+        }
+        let exact = Summary::of(&vals);
+        for p in [1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let e = exact.percentile(p) as u64;
+            let a = h.percentile_ns(p);
+            assert!(a >= e, "round {round} p{p}: approx {a} < exact {e}");
+            assert!(a < 2 * e, "round {round} p{p}: approx {a} ≥ 2× exact {e}");
+        }
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.max_secs(), exact.max * 1e-9, "max is exact");
+        let sum: f64 = vals.iter().sum();
+        assert!((h.sum_secs() - sum * 1e-9).abs() < 1e-12, "sum is exact");
+    }
+}
+
+/// Flight dumps through a real crash plan: bounded by the ring capacity,
+/// time-ordered within and across dumps, counted by the registry, and
+/// identical on a recycled re-run.
+#[test]
+fn crash_dumps_through_the_engine_are_ordered_counted_and_replayable() {
+    let sc = Scenario::stress(4, 3);
+    let trace = trace_for(&sc, 1.2 * sc.service_capacity(), 400, 7);
+    let plan = FaultPlan::parse("crash:m0@1+2,crash:m1@4+2").unwrap();
+    plan.validate_targets(sc.n_machines(), None).unwrap();
+    let capacity = 8usize;
+    let mut sim = Simulation::new(&sc, heuristic_by_name("felare", &sc).unwrap());
+    sim.set_fault_plan(Some(plan));
+    sim.set_metrics(true);
+    sim.set_flight(capacity);
+    sim.run(&trace);
+    let shape = |sim: &Simulation| {
+        let obs = sim.obs();
+        let dumps = obs.flight.dumps();
+        assert!(!dumps.is_empty(), "crashes must dump");
+        assert_eq!(
+            obs.metrics.counter(Counter::FlightDumps),
+            dumps.len() as u64,
+            "every retained dump is counted"
+        );
+        let mut last_t = f64::NEG_INFINITY;
+        for d in dumps {
+            assert!(d.t >= last_t, "dumps are taken in time order");
+            last_t = d.t;
+            assert!(d.events.len() <= capacity, "ring bound respected");
+            for w in d.events.windows(2) {
+                assert!(w[1].t >= w[0].t, "events within a dump are oldest-first");
+            }
+        }
+        dumps.iter().map(|d| (d.t, d.reason, d.events.len())).collect::<Vec<_>>()
+    };
+    let first = shape(&sim);
+    sim.run(&trace); // recycled arena: the re-run must reproduce the dumps
+    assert_eq!(first, shape(&sim), "flight dumps are bit-stable across re-runs");
+}
